@@ -1,0 +1,36 @@
+//! Cluster experiment — the paper's Figs 3–5 at configurable scale via the
+//! library API (the `slaq exp` CLI wraps the same drivers).
+//!
+//! Run with:  cargo run --release --example cluster_experiment [jobs]
+
+use slaq::cluster::ClusterSpec;
+use slaq::exp::{fig3_allocation, fig4_avg_loss, fig5_time_to, run_sim_trace, SimConfig};
+use slaq::workload::TraceConfig;
+
+fn main() {
+    let jobs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(80);
+    let cfg = SimConfig {
+        trace: TraceConfig { jobs, mean_interarrival: 15.0, seed: 20818 },
+        cluster: ClusterSpec::paper_testbed(),
+        epoch_secs: 3.0,
+        duration: 1800.0,
+    };
+    println!(
+        "simulating {} jobs on {} cores under slaq + fair…",
+        jobs,
+        cfg.cluster.capacity()
+    );
+    let slaq_trace = run_sim_trace(&cfg, "slaq");
+    let fair_trace = run_sim_trace(&cfg, "fair");
+
+    for out in [
+        fig3_allocation(&slaq_trace),
+        fig4_avg_loss(&slaq_trace, &fair_trace),
+        fig5_time_to(&slaq_trace, &fair_trace),
+    ] {
+        println!("{}", out.summary);
+    }
+}

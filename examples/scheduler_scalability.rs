@@ -1,0 +1,11 @@
+//! Scheduler scalability — the paper's Fig 6: SLAQ allocation decision
+//! time for thousands of jobs across thousands of cores.
+//!
+//! Run with:  cargo run --release --example scheduler_scalability
+
+use slaq::exp::fig6_sched_time;
+
+fn main() {
+    let out = fig6_sched_time(3);
+    println!("{}", out.summary);
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX models (L2) + Pallas kernels (L1).
+
+Nothing in this package is imported at runtime; `aot.py` lowers every model
+to HLO text under `artifacts/`, and the Rust coordinator loads those.
+"""

@@ -1,0 +1,91 @@
+"""AOT lowering: JAX train steps -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--small]
+
+Writes one `<name>_n<N>_d<D>.hlo.txt` per registry entry plus a
+`manifest.json` describing every artifact's argument/output layout, which
+the Rust `mltrain` engine reads to drive training generically.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import model_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, n: int, d: int, k: int, h: int, variant: str) -> dict:
+    """Lower every registry model; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    registry = model_registry(n=n, d=d, k=k, h=h)
+    manifest = {
+        "variant": variant,
+        "n": n,
+        "d": d,
+        "k": k,
+        "h": h,
+        "models": {},
+    }
+    for name, (fn, example_args, param_count) in registry.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        artifact = f"{name}_{variant}"
+        path = os.path.join(out_dir, f"{artifact}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["models"][name] = {
+            "artifact": artifact,
+            "param_count": param_count,
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+            ],
+            "num_outputs": param_count + 1,  # new params + loss
+        }
+        print(f"  {artifact}: {len(text)} chars, {len(example_args)} args")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=2048, help="batch rows")
+    ap.add_argument("--d", type=int, default=32, help="feature dim")
+    ap.add_argument("--k", type=int, default=8, help="clusters/components")
+    ap.add_argument("--h", type=int, default=16, help="MLP hidden width")
+    ap.add_argument(
+        "--small",
+        action="store_true",
+        help="also emit a small (n=256) variant used by fast tests",
+    )
+    args = ap.parse_args()
+
+    manifests = [lower_all(args.out_dir, args.n, args.d, args.k, args.h, "base")]
+    if args.small:
+        manifests.append(lower_all(args.out_dir, 256, args.d, args.k, args.h, "small"))
+
+    merged = {"variants": {m["variant"]: m for m in manifests}}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

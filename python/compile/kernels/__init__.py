@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (interpret=True for CPU-PJRT execution)."""
+
+from .glm_grad import glm_grad
+from .kmeans import kmeans_assign
+
+__all__ = ["glm_grad", "kmeans_assign"]

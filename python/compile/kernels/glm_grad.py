@@ -1,0 +1,123 @@
+"""Fused GLM gradient kernel (Pallas, Layer 1).
+
+Computes, in a single pass over the data, the mean gradient and mean loss of
+a generalized linear model:
+
+    z = X @ w
+    linear:    r = z - y            loss = 0.5 (z - y)^2          (linreg)
+    logistic:  r = sigmoid(z) - y   loss = BCE(sigmoid(z), y)     (logreg)
+    hinge:     r = -y * 1[y z < 1]  loss = max(0, 1 - y z)        (SVM)
+
+    grad = X^T r / n,   loss = sum(loss_i) / n
+
+This is the compute hot-spot of every class-I (first-order) workload in the
+paper's algorithm zoo. The TPU mapping (DESIGN.md §3): X is tiled into
+(block_rows, d) row blocks streamed HBM→VMEM over a 1-D grid; `z = X_blk @ w`
+runs on the MXU; the activation runs on the VPU; `X_blk^T r` accumulates into
+a VMEM-resident (d,) accumulator. VMEM footprint per step is
+`block_rows*d + 2*d + 2*block_rows` floats (~1.1 MB at 4096x64 f32).
+
+Lowered with `interpret=True`: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACTIVATIONS = ("linear", "logistic", "hinge")
+
+
+def _residual_and_loss(z, y, activation):
+    """Per-example residual (dL/dz) and loss for the given activation."""
+    if activation == "linear":
+        r = z - y
+        loss = 0.5 * (z - y) ** 2
+    elif activation == "logistic":
+        p = jax.nn.sigmoid(z)
+        r = p - y
+        # Numerically stable BCE in terms of logits.
+        loss = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    elif activation == "hinge":
+        margin = y * z
+        active = (margin < 1.0).astype(z.dtype)
+        r = -y * active
+        loss = jnp.maximum(0.0, 1.0 - margin)
+    else:  # pragma: no cover - guarded by the public wrapper
+        raise ValueError(f"unknown activation {activation!r}")
+    return r, loss
+
+
+def _glm_grad_kernel(x_ref, w_ref, y_ref, grad_ref, loss_ref, *, activation, n_total):
+    step = pl.program_id(0)
+    x = x_ref[...]  # (bm, d)
+    w = w_ref[...]  # (d,)
+    y = y_ref[...]  # (bm,)
+
+    z = x @ w
+    r, loss = _residual_and_loss(z, y, activation)
+    grad_contrib = x.T @ r / n_total
+    loss_contrib = jnp.sum(loss) / n_total
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = grad_contrib
+        loss_ref[...] = jnp.full((1,), loss_contrib, dtype=loss_ref.dtype)
+
+    @pl.when(step != 0)
+    def _accumulate():
+        grad_ref[...] += grad_contrib
+        loss_ref[...] += loss_contrib
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_rows"))
+def glm_grad(x, w, y, *, activation="logistic", block_rows=512):
+    """Mean GLM gradient and loss in one fused pass.
+
+    Args:
+      x: (n, d) design matrix.
+      w: (d,) weights.
+      y: (n,) targets ({0,1} for logistic, {-1,+1} for hinge, reals for
+        linear).
+      activation: one of "linear" | "logistic" | "hinge".
+      block_rows: row-tile size (the HBM->VMEM streaming granularity).
+
+    Returns:
+      (grad, loss): (d,) mean gradient and scalar-shaped (1,) mean loss.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    n, d = x.shape
+    if w.shape != (d,):
+        raise ValueError(f"w shape {w.shape} incompatible with x {x.shape}")
+    if y.shape != (n,):
+        raise ValueError(f"y shape {y.shape} incompatible with x {x.shape}")
+    bm = min(block_rows, n)
+    if n % bm != 0:
+        raise ValueError(f"n={n} must be divisible by block_rows={bm}")
+    grid = (n // bm,)
+
+    kernel = functools.partial(
+        _glm_grad_kernel, activation=activation, n_total=float(n)
+    )
+    grad, loss = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, w, y)
+    return grad, loss

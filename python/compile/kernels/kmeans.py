@@ -1,0 +1,95 @@
+"""K-Means assignment + accumulation kernel (Pallas, Layer 1).
+
+One fused pass over the points computes, per row tile:
+
+    dists    = ||x_i - c_j||^2          (via the expanded form, MXU matmul)
+    assign_i = argmin_j dists
+    sums    += onehot(assign)^T @ X_blk
+    counts  += sum(onehot(assign))
+    loss    += sum_i min_j dists
+
+The (k, d) center matrix stays VMEM-resident across the whole grid; only the
+point tiles stream. The caller turns (sums, counts) into the Lloyd update
+`centers' = sums / counts` (keeping old centers for empty clusters).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(x_ref, c_ref, sums_ref, counts_ref, loss_ref):
+    step = pl.program_id(0)
+    x = x_ref[...]  # (bm, d)
+    c = c_ref[...]  # (k, d)
+    k = c.shape[0]
+
+    x_sq = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    c_sq = jnp.sum(c * c, axis=1)[None, :]  # (1, k)
+    dists = x_sq - 2.0 * (x @ c.T) + c_sq  # (bm, k)
+    assign = jnp.argmin(dists, axis=1)  # (bm,)
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (bm, k)
+    min_dist = jnp.min(dists, axis=1)
+
+    sums_contrib = onehot.T @ x  # (k, d)
+    counts_contrib = jnp.sum(onehot, axis=0)  # (k,)
+    # Clamp: the expanded-form distance can go slightly negative in f32.
+    loss_contrib = jnp.sum(jnp.maximum(min_dist, 0.0))
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = sums_contrib
+        counts_ref[...] = counts_contrib
+        loss_ref[...] = jnp.full((1,), loss_contrib, dtype=loss_ref.dtype)
+
+    @pl.when(step != 0)
+    def _accumulate():
+        sums_ref[...] += sums_contrib
+        counts_ref[...] += counts_contrib
+        loss_ref[...] += loss_contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def kmeans_assign(x, centers, *, block_rows=512):
+    """Assignment step of Lloyd's algorithm, fused with accumulation.
+
+    Args:
+      x: (n, d) points.
+      centers: (k, d) current centers.
+      block_rows: row-tile size.
+
+    Returns:
+      (sums, counts, loss): (k, d) per-cluster coordinate sums, (k,) member
+      counts, and (1,) total within-cluster squared distance.
+    """
+    n, d = x.shape
+    k, dc = centers.shape
+    if dc != d:
+        raise ValueError(f"centers dim {dc} != points dim {d}")
+    bm = min(block_rows, n)
+    if n % bm != 0:
+        raise ValueError(f"n={n} must be divisible by block_rows={bm}")
+    grid = (n // bm,)
+
+    sums, counts, loss = pl.pallas_call(
+        _kmeans_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), x.dtype),
+            jax.ShapeDtypeStruct((k,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=True,
+    )(x, centers)
+    return sums, counts, loss

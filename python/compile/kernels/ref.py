@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately written in the most obvious vectorized style, with no
+tiling and no fusion, so a mismatch can only come from the kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def glm_grad_ref(x, w, y, *, activation="logistic"):
+    """Reference for `kernels.glm_grad`: mean gradient + (1,) mean loss."""
+    n = x.shape[0]
+    z = x @ w
+    if activation == "linear":
+        r = z - y
+        loss = 0.5 * (z - y) ** 2
+    elif activation == "logistic":
+        p = jax.nn.sigmoid(z)
+        r = p - y
+        loss = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    elif activation == "hinge":
+        margin = y * z
+        active = (margin < 1.0).astype(z.dtype)
+        r = -y * active
+        loss = jnp.maximum(0.0, 1.0 - margin)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    grad = x.T @ r / n
+    return grad, jnp.sum(loss, keepdims=True) / n
+
+
+def kmeans_assign_ref(x, centers):
+    """Reference for `kernels.kmeans_assign`: (sums, counts, (1,) loss)."""
+    dists = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=2)
+    assign = jnp.argmin(dists, axis=1)
+    k = centers.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    loss = jnp.sum(jnp.min(dists, axis=1), keepdims=True)
+    return sums, counts, loss

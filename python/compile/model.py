@@ -1,0 +1,221 @@
+"""Layer-2 JAX train steps: the paper's algorithm zoo.
+
+Each function performs ONE BSP training iteration (one full pass over the
+batch) and returns `(new_params..., loss)`. Shapes are static so every
+function lowers to a single HLO module; hyperparameters (learning rate,
+regularization) are traced scalars so one artifact serves many job configs.
+
+Convergence classes (paper §2):
+
+  class I  (sublinear, first-order): linreg_gd, logreg_gd, svm_gd,
+           svm_poly_gd, mlp_gd
+  class II (linear / superlinear):   kmeans_step, gmm_em_step (EM family,
+           substitutes the paper's LDA), newton_logreg_step (substitutes
+           the paper's L-BFGS / GBT entries — same convergence class)
+
+Substitutions are documented in DESIGN.md §2.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import glm_grad, kmeans_assign
+
+# ---------------------------------------------------------------------------
+# Class I — first-order gradient methods (use the fused Pallas GLM kernel)
+# ---------------------------------------------------------------------------
+
+
+def linreg_gd(w, x, y, lr, reg):
+    """Linear regression, one GD step on 0.5*MSE + 0.5*reg*|w|^2."""
+    grad, loss = glm_grad(x, w, y, activation="linear")
+    grad = grad + reg * w
+    loss = loss + 0.5 * reg * jnp.sum(w * w)
+    return w - lr * grad, loss
+
+
+def logreg_gd(w, x, y, lr, reg):
+    """Logistic regression (y in {0,1}), one GD step on BCE + L2."""
+    grad, loss = glm_grad(x, w, y, activation="logistic")
+    grad = grad + reg * w
+    loss = loss + 0.5 * reg * jnp.sum(w * w)
+    return w - lr * grad, loss
+
+
+def svm_gd(w, x, y, lr, reg):
+    """Linear SVM (y in {-1,+1}), one subgradient step on hinge + L2."""
+    grad, loss = glm_grad(x, w, y, activation="hinge")
+    grad = grad + reg * w
+    loss = loss + 0.5 * reg * jnp.sum(w * w)
+    return w - lr * grad, loss
+
+
+def poly_expand(x):
+    """Degree-2 feature map: [x, x^2, 1] (the SVM polynomial-kernel
+    stand-in, intercept included).
+
+    The paper extends Spark MLlib with SVM polynomial kernels; an explicit
+    low-degree feature map exercises the same compute pattern (a wider GLM)
+    while keeping shapes static for AOT.
+    """
+    ones = jnp.ones((x.shape[0], 1), dtype=x.dtype)
+    return jnp.concatenate([x, x * x, ones], axis=1)
+
+
+def svm_poly_gd(w, x, y, lr, reg):
+    """Polynomial-kernel SVM via explicit degree-2 feature expansion.
+
+    `w` has dimension `2 d + 1`; the expansion happens inside the step so
+    the artifact consumes the raw (n, d) batch.
+    """
+    phi = poly_expand(x)
+    grad, loss = glm_grad(phi, w, y, activation="hinge")
+    grad = grad + reg * w
+    loss = loss + 0.5 * reg * jnp.sum(w * w)
+    return w - lr * grad, loss
+
+
+def mlp_gd(w1, b1, w2, b2, x, y, lr, reg):
+    """One-hidden-layer MLP classifier (MLPC stand-in), one GD step on BCE.
+
+    tanh hidden layer, sigmoid output; autodiff through the whole graph.
+    """
+
+    def bce(params, x, y):
+        w1, b1, w2, b2 = params
+        h = jnp.tanh(x @ w1 + b1)
+        z = h @ w2 + b2
+        loss = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        l2 = 0.5 * reg * (jnp.sum(w1 * w1) + jnp.sum(w2 * w2))
+        return jnp.mean(loss) + l2
+
+    params = (w1, b1, w2, b2)
+    loss, grads = jax.value_and_grad(bce)(params, x, y)
+    new = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new, jnp.reshape(loss, (1,)))
+
+
+# ---------------------------------------------------------------------------
+# Class II — linear/superlinear methods
+# ---------------------------------------------------------------------------
+
+
+def kmeans_step(centers, x):
+    """One Lloyd iteration (uses the fused Pallas assignment kernel).
+
+    Empty clusters keep their previous center. Loss is the mean
+    within-cluster squared distance.
+    """
+    sums, counts, loss = kmeans_assign(x, centers)
+    n = x.shape[0]
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_centers = jnp.where(counts[:, None] > 0.0, sums / safe, centers)
+    return new_centers, loss / n
+
+
+def gmm_em_step(means, log_weights, x):
+    """One EM iteration of a spherical (unit-variance) Gaussian mixture.
+
+    Substitutes the paper's LDA workload: LDA's variational EM and GMM EM
+    are the same algorithmic family with the same (linear-rate) convergence
+    behaviour. Loss is the mean negative log-likelihood.
+    """
+    # E-step: responsibilities (n, k).
+    d = x.shape[1]
+    sq = jnp.sum((x[:, None, :] - means[None, :, :]) ** 2, axis=2)
+    log_p = log_weights[None, :] - 0.5 * sq - 0.5 * d * jnp.log(2.0 * jnp.pi)
+    log_norm = jax.scipy.special.logsumexp(log_p, axis=1, keepdims=True)
+    resp = jnp.exp(log_p - log_norm)
+    # M-step.
+    nk = jnp.sum(resp, axis=0)  # (k,)
+    safe = jnp.maximum(nk, 1e-6)
+    new_means = (resp.T @ x) / safe[:, None]
+    new_log_weights = jnp.log(safe / x.shape[0])
+    loss = -jnp.mean(log_norm)
+    return new_means, new_log_weights, jnp.reshape(loss, (1,))
+
+
+def _cg_solve(a_mat, b, iters):
+    """Conjugate gradients for SPD `a_mat x = b`, unrolled `iters` steps.
+
+    Pure jnp dataflow (no LAPACK custom calls): xla_extension 0.5.1 — the
+    XLA behind the Rust runtime — rejects the typed-FFI custom-call that
+    `jax.scipy.linalg.solve` lowers to. CG on an SPD d×d system converges
+    in at most d steps in exact arithmetic.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rs = jnp.dot(r, r)
+    for _ in range(iters):
+        ap = a_mat @ p
+        alpha = rs / jnp.maximum(jnp.dot(p, ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        rs = rs_new
+    return x
+
+
+def newton_logreg_step(w, x, y, reg):
+    """One Newton–Raphson step for L2-regularized logistic regression.
+
+    Class II (quadratic convergence): stands in for the paper's L-BFGS and
+    GBT workloads, which share the linear/superlinear convergence category.
+    The gradient reuses the fused Pallas kernel; the d×d Newton system
+    `(X^T D X / n + reg I) δ = grad` is solved with unrolled CG.
+    """
+    n = x.shape[0]
+    d = x.shape[1]
+    grad, loss = glm_grad(x, w, y, activation="logistic")
+    grad = grad + reg * w
+    loss = loss + 0.5 * reg * jnp.sum(w * w)
+    z = x @ w
+    p = jax.nn.sigmoid(z)
+    dvec = p * (1.0 - p) / n  # (n,)
+    hess = x.T @ (dvec[:, None] * x) + reg * jnp.eye(d, dtype=x.dtype)
+    step = _cg_solve(hess, grad, iters=d)
+    return w - step, loss
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def model_registry(n=2048, d=32, k=8, h=16):
+    """All lowering targets: name -> (fn, example_args, param_count).
+
+    `param_count` is the number of leading arguments that are trainable
+    state (fed back between iterations); the remainder are data + hypers.
+    Outputs are always `(*new_params, loss)`.
+    """
+    scalar = _f32()
+    return {
+        "linreg_gd": (linreg_gd, [_f32(d), _f32(n, d), _f32(n), scalar, scalar], 1),
+        "logreg_gd": (logreg_gd, [_f32(d), _f32(n, d), _f32(n), scalar, scalar], 1),
+        "svm_gd": (svm_gd, [_f32(d), _f32(n, d), _f32(n), scalar, scalar], 1),
+        "svm_poly_gd": (
+            svm_poly_gd,
+            [_f32(2 * d + 1), _f32(n, d), _f32(n), scalar, scalar],
+            1,
+        ),
+        "mlp_gd": (
+            mlp_gd,
+            [_f32(d, h), _f32(h), _f32(h), scalar, _f32(n, d), _f32(n), scalar, scalar],
+            4,
+        ),
+        "kmeans_step": (kmeans_step, [_f32(k, d), _f32(n, d)], 1),
+        "gmm_em_step": (gmm_em_step, [_f32(k, d), _f32(k), _f32(n, d)], 2),
+        "newton_logreg_step": (
+            newton_logreg_step,
+            [_f32(d), _f32(n, d), _f32(n), scalar],
+            1,
+        ),
+    }

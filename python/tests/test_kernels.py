@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the compiled compute path: the same
+kernels, lowered to HLO, are what the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import glm_grad, kmeans_assign
+from compile.kernels.ref import glm_grad_ref, kmeans_assign_ref
+
+ACTIVATIONS = ["linear", "logistic", "hinge"]
+
+
+def _data(n, d, seed=0, labels="pm1"):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=(d,)).astype(np.float32) * 0.1
+    if labels == "pm1":
+        y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    elif labels == "01":
+        y = rng.choice([0.0, 1.0], size=n).astype(np.float32)
+    else:
+        y = rng.normal(size=n).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w), jnp.asarray(y)
+
+
+class TestGlmGrad:
+    @pytest.mark.parametrize("activation", ACTIVATIONS)
+    def test_matches_ref_single_block(self, activation):
+        x, w, y = _data(128, 8, labels="01" if activation == "logistic" else "pm1")
+        grad, loss = glm_grad(x, w, y, activation=activation, block_rows=128)
+        g_ref, l_ref = glm_grad_ref(x, w, y, activation=activation)
+        assert_allclose(np.asarray(grad), np.asarray(g_ref), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(loss), np.asarray(l_ref), rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("activation", ACTIVATIONS)
+    def test_matches_ref_multi_block(self, activation):
+        """Tiled accumulation across the grid must equal one big pass."""
+        x, w, y = _data(512, 16, seed=1, labels="01" if activation == "logistic" else "pm1")
+        grad, loss = glm_grad(x, w, y, activation=activation, block_rows=64)
+        g_ref, l_ref = glm_grad_ref(x, w, y, activation=activation)
+        assert_allclose(np.asarray(grad), np.asarray(g_ref), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(loss), np.asarray(l_ref), rtol=1e-5, atol=1e-6)
+
+    def test_loss_shape_is_one(self):
+        x, w, y = _data(64, 4)
+        _, loss = glm_grad(x, w, y, activation="hinge", block_rows=64)
+        assert loss.shape == (1,)
+
+    def test_gradient_is_autodiff_gradient(self):
+        """The fused logistic gradient equals jax.grad of the BCE loss."""
+        x, w, y = _data(256, 8, seed=3, labels="01")
+
+        def bce(w):
+            z = x @ w
+            return jnp.mean(
+                jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+            )
+
+        grad, _ = glm_grad(x, w, y, activation="logistic", block_rows=128)
+        assert_allclose(np.asarray(grad), np.asarray(jax.grad(bce)(w)), rtol=1e-4, atol=1e-6)
+
+    def test_rejects_bad_shapes(self):
+        x, w, y = _data(64, 4)
+        with pytest.raises(ValueError):
+            glm_grad(x, w[:-1], y, activation="linear")
+        with pytest.raises(ValueError):
+            glm_grad(x, w, y[:-1], activation="linear")
+        with pytest.raises(ValueError):
+            glm_grad(x, w, y, activation="nope")
+        with pytest.raises(ValueError):
+            glm_grad(x, w, y, activation="linear", block_rows=48)  # 64 % 48 != 0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        bm=st.sampled_from([32, 64, 128]),
+        d=st.integers(2, 24),
+        activation=st.sampled_from(ACTIVATIONS),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n_blocks, bm, d, activation, seed):
+        n = n_blocks * bm
+        labels = "01" if activation == "logistic" else "pm1"
+        x, w, y = _data(n, d, seed=seed, labels=labels)
+        grad, loss = glm_grad(x, w, y, activation=activation, block_rows=bm)
+        g_ref, l_ref = glm_grad_ref(x, w, y, activation=activation)
+        assert_allclose(np.asarray(grad), np.asarray(g_ref), rtol=2e-4, atol=1e-5)
+        assert_allclose(np.asarray(loss), np.asarray(l_ref), rtol=2e-4, atol=1e-5)
+
+
+class TestKmeansAssign:
+    def _points(self, n, d, k, seed=0):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        c = rng.normal(size=(k, d)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(c)
+
+    def test_matches_ref_single_block(self):
+        x, c = self._points(128, 8, 5)
+        out = kmeans_assign(x, c, block_rows=128)
+        ref = kmeans_assign_ref(x, c)
+        for got, want in zip(out, ref):
+            assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_matches_ref_multi_block(self):
+        x, c = self._points(512, 12, 7, seed=2)
+        out = kmeans_assign(x, c, block_rows=64)
+        ref = kmeans_assign_ref(x, c)
+        for got, want in zip(out, ref):
+            assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_counts_sum_to_n(self):
+        x, c = self._points(256, 6, 4, seed=3)
+        _, counts, _ = kmeans_assign(x, c, block_rows=64)
+        assert float(jnp.sum(counts)) == 256.0
+
+    def test_rejects_dim_mismatch(self):
+        x, c = self._points(64, 4, 3)
+        with pytest.raises(ValueError):
+            kmeans_assign(x, c[:, :-1])
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        bm=st.sampled_from([32, 64]),
+        d=st.integers(2, 16),
+        k=st.integers(2, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n_blocks, bm, d, k, seed):
+        n = n_blocks * bm
+        x, c = self._points(n, d, k, seed=seed)
+        out = kmeans_assign(x, c, block_rows=bm)
+        ref = kmeans_assign_ref(x, c)
+        for got, want in zip(out, ref):
+            assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)

@@ -1,0 +1,183 @@
+"""L2 correctness: every train step decreases its loss on a learnable
+synthetic problem, preserves shapes, and (where applicable) matches a
+from-scratch jnp reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+N, D, K, H = 256, 8, 4, 8
+
+
+def _separable(seed=0, n=N, d=D, labels="01"):
+    """Linearly separable-ish classification data."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    x = rng.normal(size=(n, d))
+    logits = x @ w_true + 0.5 * rng.normal(size=n)
+    if labels == "01":
+        y = (logits > 0).astype(np.float32)
+    else:
+        y = np.where(logits > 0, 1.0, -1.0).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def _blobs(seed=0, n=N, d=D, k=K):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 4.0
+    assign = rng.integers(0, k, size=n)
+    x = centers[assign] + rng.normal(size=(n, d))
+    return jnp.asarray(x, jnp.float32)
+
+
+def _run(step, params, args, iters):
+    losses = []
+    for _ in range(iters):
+        out = step(*params, *args)
+        params = out[:-1]
+        losses.append(float(out[-1][0]) if out[-1].shape else float(out[-1]))
+    return params, losses
+
+
+lr = jnp.float32(0.5)
+reg = jnp.float32(1e-4)
+
+
+class TestClassOne:
+    def test_linreg_converges(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+        w_true = jnp.asarray(rng.normal(size=D), jnp.float32)
+        y = x @ w_true
+        w = jnp.zeros(D, jnp.float32)
+        (_w,), losses = _run(M.linreg_gd, (w,), (x, y, jnp.float32(0.2), reg), 60)
+        assert losses[-1] < 0.05 * losses[0]
+        assert all(b <= a + 1e-6 for a, b in zip(losses, losses[1:]))
+
+    def test_logreg_converges(self):
+        x, y = _separable(labels="01")
+        w = jnp.zeros(D, jnp.float32)
+        _, losses = _run(M.logreg_gd, (w,), (x, y, lr, reg), 80)
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_svm_converges(self):
+        x, y = _separable(labels="pm1")
+        w = jnp.zeros(D, jnp.float32)
+        _, losses = _run(M.svm_gd, (w,), (x, y, jnp.float32(0.1), reg), 80)
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_svm_poly_converges_on_quadratic_boundary(self):
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(N, D)).astype(np.float32)
+        # Label depends on squared features: linear SVM can't separate,
+        # the degree-2 map can.
+        y = np.where((x**2).sum(axis=1) > D, 1.0, -1.0).astype(np.float32)
+        w = jnp.zeros(2 * D + 1, jnp.float32)
+        _, losses = _run(
+            M.svm_poly_gd, (w,), (jnp.asarray(x), jnp.asarray(y), jnp.float32(0.05), reg), 120
+        )
+        assert losses[-1] < 0.6 * losses[0]
+
+    def test_logreg_step_matches_manual_grad(self):
+        x, y = _separable(labels="01", seed=7)
+        w = jnp.asarray(np.random.default_rng(8).normal(size=D) * 0.1, jnp.float32)
+        w2, _ = M.logreg_gd(w, x, y, lr, reg)
+
+        def bce(w):
+            z = x @ w
+            return (
+                jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+                + 0.5 * reg * jnp.sum(w * w)
+            )
+
+        w2_ref = w - lr * jax.grad(bce)(w)
+        assert_allclose(np.asarray(w2), np.asarray(w2_ref), rtol=1e-4, atol=1e-6)
+
+    def test_mlp_converges_and_preserves_shapes(self):
+        x, y = _separable(labels="01", seed=9)
+        rng = np.random.default_rng(10)
+        params = (
+            jnp.asarray(rng.normal(size=(D, H)) * 0.3, jnp.float32),
+            jnp.zeros(H, jnp.float32),
+            jnp.asarray(rng.normal(size=H) * 0.3, jnp.float32),
+            jnp.float32(0.0),
+        )
+        out = M.mlp_gd(*params, x, y, lr, reg)
+        assert out[0].shape == (D, H)
+        assert out[1].shape == (H,)
+        assert out[2].shape == (H,)
+        assert out[3].shape == ()
+        assert out[4].shape == (1,)
+        _, losses = _run(M.mlp_gd, params, (x, y, lr, reg), 120)
+        assert losses[-1] < 0.7 * losses[0]
+
+
+class TestClassTwo:
+    def test_kmeans_monotone_decrease(self):
+        x = _blobs(seed=2)
+        rng = np.random.default_rng(3)
+        centers = jnp.asarray(x[rng.choice(N, K, replace=False)])
+        _, losses = _run(M.kmeans_step, (centers,), (x,), 20)
+        # Lloyd's algorithm is monotonically non-increasing.
+        assert all(b <= a + 1e-4 for a, b in zip(losses, losses[1:]))
+        assert losses[-1] < losses[0]
+
+    def test_kmeans_keeps_empty_cluster_centers(self):
+        x = _blobs(seed=4)
+        far = jnp.full((1, D), 1e6, jnp.float32)  # never owns a point
+        centers = jnp.concatenate([jnp.asarray(x[:K - 1]), far])
+        new_centers, _ = M.kmeans_step(centers, x)
+        assert_allclose(np.asarray(new_centers[-1]), np.asarray(far[0]))
+
+    def test_gmm_em_loglik_improves(self):
+        x = _blobs(seed=6)
+        rng = np.random.default_rng(7)
+        means = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+        log_w = jnp.full(K, -np.log(K), jnp.float32)
+        (_, _), losses = _run(M.gmm_em_step, (means, log_w), (x,), 25)
+        # EM is monotone in log-likelihood (loss = negative mean ll).
+        assert all(b <= a + 1e-4 for a, b in zip(losses, losses[1:]))
+        assert losses[-1] < losses[0]
+
+    def test_gmm_weights_stay_normalized(self):
+        x = _blobs(seed=8)
+        means = jnp.asarray(np.random.default_rng(9).normal(size=(K, D)), jnp.float32)
+        log_w = jnp.full(K, -np.log(K), jnp.float32)
+        for _ in range(5):
+            means, log_w, _ = M.gmm_em_step(means, log_w, x)
+        assert abs(float(jnp.sum(jnp.exp(log_w))) - 1.0) < 1e-4
+
+    def test_newton_converges_quadratically(self):
+        x, y = _separable(labels="01", seed=11)
+        w = jnp.zeros(D, jnp.float32)
+        _, losses = _run(M.newton_logreg_step, (w,), (x, y, jnp.float32(1e-3)), 8)
+        # Newton should essentially converge within a handful of steps.
+        assert losses[-1] < 0.6 * losses[0]
+        tail_delta = abs(losses[-1] - losses[-2]) / max(losses[0], 1e-9)
+        assert tail_delta < 1e-4
+
+    def test_newton_beats_gd_per_iteration(self):
+        x, y = _separable(labels="01", seed=12)
+        w0 = jnp.zeros(D, jnp.float32)
+        _, newton_losses = _run(M.newton_logreg_step, (w0,), (x, y, jnp.float32(1e-3)), 5)
+        _, gd_losses = _run(M.logreg_gd, (w0,), (x, y, lr, jnp.float32(1e-3)), 5)
+        assert newton_losses[-1] < gd_losses[-1]
+
+
+class TestRegistry:
+    def test_registry_entries_lower_and_shapes_match(self):
+        reg = M.model_registry(n=64, d=4, k=3, h=4)
+        assert len(reg) == 8
+        for name, (fn, args, param_count) in reg.items():
+            out_avals = jax.eval_shape(fn, *args)
+            assert len(out_avals) == param_count + 1, name
+            # New params must have the same shapes as the old ones.
+            for i in range(param_count):
+                assert out_avals[i].shape == args[i].shape, f"{name} param {i}"
+            # Loss is () or (1,).
+            assert out_avals[-1].shape in [(), (1,)], name

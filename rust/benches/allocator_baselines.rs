@@ -1,0 +1,36 @@
+//! Bench (ablation): SLAQ's greedy allocator vs the fair / FIFO / static
+//! baselines at identical scale — quantifies the cost of quality-driven
+//! scheduling over quality-agnostic policies.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{bench, black_box};
+use slaq::sched::{policy_by_name, JobRequest};
+use slaq::util::rng::Rng;
+use slaq::workload::SyntheticGain;
+
+fn main() {
+    let jobs = 2000usize;
+    let cores = 8192u32;
+    let mut rng = Rng::new(11);
+    let gains: Vec<SyntheticGain> = (0..jobs)
+        .map(|_| SyntheticGain {
+            scale: rng.range_f64(0.01, 2.0),
+            rate: rng.range_f64(0.02, 0.5),
+        })
+        .collect();
+    let caps: Vec<u32> = (0..jobs).map(|_| rng.range_u64(32, 129) as u32).collect();
+    let requests: Vec<JobRequest<'_>> = gains
+        .iter()
+        .enumerate()
+        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+        .collect();
+
+    for name in ["slaq", "fair", "fifo", "static"] {
+        let mut policy = policy_by_name(name).unwrap();
+        bench(&format!("allocate_{name}_{jobs}x{cores}"), 3, 30, || {
+            black_box(policy.allocate(&requests, cores));
+        });
+    }
+}

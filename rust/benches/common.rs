@@ -1,0 +1,45 @@
+//! Shared micro-benchmark harness (criterion is not available in the
+//! offline build; this reproduces the part we need: warmup, repeated
+//! timing, and robust summary statistics).
+
+use std::time::Instant;
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls; prints
+/// mean / p50 / p95 per-iteration latency.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p50 = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+    println!(
+        "{name:<44} mean {:>10} p50 {:>10} p95 {:>10} (n={iters})",
+        fmt(mean),
+        fmt(p50),
+        fmt(p95)
+    );
+}
+
+fn fmt(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.1} µs", secs * 1e6)
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[allow(dead_code)] // not every bench needs it
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,46 @@
+//! Bench: full coordinator epochs — the end-to-end scheduling path
+//! (activate → gain oracles → allocate → place → advance → trace) on the
+//! paper-scale simulated cluster.
+
+#[path = "common.rs"]
+mod common;
+
+use common::bench;
+use slaq::cluster::ClusterSpec;
+use slaq::coordinator::{Coordinator, CoordinatorConfig};
+use slaq::sched::policy_by_name;
+use slaq::util::rng::Rng;
+use slaq::workload::{paper_trace, TraceConfig};
+
+fn build(jobs: usize, policy: &str) -> Coordinator {
+    let cfg = CoordinatorConfig {
+        cluster: ClusterSpec::paper_testbed(),
+        epoch_secs: 3.0,
+        cold_start_optimism: true,
+    };
+    let mut coord = Coordinator::new(cfg, policy_by_name(policy).unwrap());
+    let mut rng = Rng::new(0xBEEF);
+    for mut t in paper_trace(&TraceConfig {
+        jobs,
+        mean_interarrival: 0.1, // all active almost immediately
+        seed: 7,
+    }) {
+        t.spec.arrival = 0.0;
+        let src = t.make_source(&mut rng);
+        coord.submit(t.spec, src);
+    }
+    // Warm up: activate everyone and accumulate history for the fits.
+    coord.run_until(30.0);
+    coord
+}
+
+fn main() {
+    for policy in ["slaq", "fair"] {
+        for jobs in [40usize, 160, 640] {
+            let mut coord = build(jobs, policy);
+            bench(&format!("epoch_{policy}_{jobs}_jobs"), 2, 50, || {
+                coord.step_epoch();
+            });
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: online predictor — curve fitting and gain evaluation, the two
+//! per-epoch costs of the SLAQ coordinator (fits happen per completed
+//! iteration; gain evaluations per allocation step).
+
+#[path = "common.rs"]
+mod common;
+
+use common::{bench, black_box};
+use slaq::predictor::{fit_history, CurveKind, FitConfig, OnlinePredictor};
+use slaq::quality::LossHistory;
+use slaq::util::rng::Rng;
+
+fn history(n: u64, kind: CurveKind, rng: &mut Rng) -> LossHistory {
+    let mut h = LossHistory::new();
+    for k in 0..n {
+        let kf = k as f64;
+        let clean = match kind {
+            CurveKind::Sublinear => 1.0 / (0.1 * kf + 0.5) + 0.2,
+            CurveKind::Exponential => 4.0 * 0.9f64.powf(kf) + 0.5,
+        };
+        h.push(k, clean * (1.0 + 0.005 * rng.normal()), kf);
+    }
+    h
+}
+
+fn main() {
+    let cfg = FitConfig::default();
+    let mut rng = Rng::new(3);
+    for kind in [CurveKind::Sublinear, CurveKind::Exponential] {
+        for n in [16u64, 64, 256] {
+            let h = history(n, kind, &mut rng);
+            bench(&format!("fit_{kind:?}_{n}_samples"), 5, 200, || {
+                black_box(fit_history(&h, kind, &cfg));
+            });
+        }
+    }
+
+    // Gain-oracle evaluation (the inner loop of Fig 6).
+    let mut pred = OnlinePredictor::new(CurveKind::Exponential);
+    for k in 0..64u64 {
+        pred.observe(k, 4.0 * 0.9f64.powf(k as f64) + 0.5, k as f64);
+    }
+    bench("predicted_normalized_reduction", 100, 10_000, || {
+        black_box(pred.predicted_normalized_reduction(2.5));
+    });
+
+    // Full observe (fit refresh included) — per-iteration coordinator cost.
+    bench("observe_with_refit_64_window", 5, 500, || {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        for k in 0..64u64 {
+            p.observe(k, 4.0 * 0.9f64.powf(k as f64) + 0.5, k as f64);
+        }
+        black_box(p.current_loss());
+    });
+}

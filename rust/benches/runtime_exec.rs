@@ -1,0 +1,30 @@
+//! Bench: PJRT step-execution latency per algorithm — the runtime overhead
+//! (literal upload + execute + tuple decode) that real-mode training pays
+//! per BSP iteration, for both artifact shape variants.
+
+#[path = "common.rs"]
+mod common;
+
+use common::bench;
+use slaq::mltrain::{TrainSession, ALL_ALGOS};
+use slaq::runtime::{Manifest, Runtime, RuntimeConfig};
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu(RuntimeConfig::default()).unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    for variant in ["small", "base"] {
+        println!("== variant {variant} ==");
+        for algo in ALL_ALGOS {
+            let mut sess = TrainSession::new(&rt, &manifest, variant, algo, 1).unwrap();
+            bench(&format!("step_{}_{variant}", algo.model_name()), 3, 30, || {
+                sess.step().unwrap();
+            });
+        }
+    }
+}

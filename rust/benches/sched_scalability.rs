@@ -1,0 +1,38 @@
+//! Bench: Fig 6 — SLAQ allocation decision time at scale, plus the
+//! jobs×cores sweep the paper plots.
+
+#[path = "common.rs"]
+mod common;
+
+use common::bench;
+use slaq::exp::fig6_sched_time;
+use slaq::sched::{JobRequest, Policy, SlaqPolicy};
+use slaq::util::rng::Rng;
+use slaq::workload::SyntheticGain;
+
+fn main() {
+    println!("== Fig 6: full sweep (1000-4000 jobs × 4k-16k cores) ==");
+    let out = fig6_sched_time(5);
+    println!("{}", out.summary);
+
+    println!("== single-cell latency distribution ==");
+    let mut rng = Rng::new(1);
+    for (jobs, cores) in [(1000usize, 4096u32), (4000, 16384)] {
+        let gains: Vec<SyntheticGain> = (0..jobs)
+            .map(|_| SyntheticGain {
+                scale: rng.range_f64(0.01, 2.0),
+                rate: rng.range_f64(0.02, 0.5),
+            })
+            .collect();
+        let caps: Vec<u32> = (0..jobs).map(|_| rng.range_u64(32, 129) as u32).collect();
+        let requests: Vec<JobRequest<'_>> = gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect();
+        let mut policy = SlaqPolicy::new();
+        bench(&format!("slaq_allocate_{jobs}x{cores}"), 2, 20, || {
+            common::black_box(policy.allocate(&requests, cores));
+        });
+    }
+}

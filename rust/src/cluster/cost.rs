@@ -1,0 +1,125 @@
+//! BSP iteration cost model.
+
+/// Cost of one training iteration as a function of allocated cores.
+///
+/// `t(a) = serial_secs + work_core_secs / a + overhead_per_core * a`
+///
+/// * `serial_secs` — driver-side work, barrier synchronization, model
+///   update: does not parallelize (Amdahl floor).
+/// * `work_core_secs` — the data-parallel part (gradient computation over
+///   all partitions), in core-seconds.
+/// * `overhead_per_core` — per-task scheduling/merge overhead that grows
+///   with the number of tasks; keeps speedup curves realistic (adding the
+///   1000th core to a small job hurts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Non-parallelizable seconds per iteration.
+    pub serial_secs: f64,
+    /// Parallelizable core-seconds per iteration.
+    pub work_core_secs: f64,
+    /// Extra seconds per allocated core (task overhead).
+    pub overhead_per_core: f64,
+}
+
+impl CostModel {
+    /// Convenience constructor with zero per-core overhead.
+    pub fn new(serial_secs: f64, work_core_secs: f64) -> Self {
+        Self { serial_secs, work_core_secs, overhead_per_core: 0.0 }
+    }
+
+    /// Wall-clock seconds for one iteration with `cores` cores.
+    pub fn iter_time(&self, cores: u32) -> f64 {
+        assert!(cores > 0, "iteration with zero cores");
+        self.serial_secs
+            + self.work_core_secs / cores as f64
+            + self.overhead_per_core * cores as f64
+    }
+
+    /// Iterations completable in a window of `secs` seconds at `cores`
+    /// cores, given `credit` seconds of leftover partial progress.
+    /// Returns `(completed_iterations, new_credit)`.
+    pub fn iterations_in_window(&self, secs: f64, cores: u32, credit: f64) -> (u64, f64) {
+        let t = self.iter_time(cores);
+        let total = credit + secs;
+        let n = (total / t).floor();
+        // Clamp: floating-point cancellation can leave a tiny negative.
+        (n as u64, (total - n * t).max(0.0))
+    }
+
+    /// The core count beyond which adding a core no longer reduces
+    /// iteration time (only meaningful when `overhead_per_core > 0`).
+    pub fn efficiency_cap(&self) -> u32 {
+        if self.overhead_per_core <= 0.0 {
+            u32::MAX
+        } else {
+            // d/da (W/a + o*a) = 0  =>  a = sqrt(W/o)
+            ((self.work_core_secs / self.overhead_per_core).sqrt().floor() as u32).max(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn iter_time_amdahl() {
+        let c = CostModel::new(1.0, 8.0);
+        assert!((c.iter_time(1) - 9.0).abs() < 1e-12);
+        assert!((c.iter_time(8) - 2.0).abs() < 1e-12);
+        assert!((c.iter_time(u32::MAX) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_core_overhead_penalizes_wide_allocations() {
+        let c = CostModel { serial_secs: 0.1, work_core_secs: 10.0, overhead_per_core: 0.01 };
+        let cap = c.efficiency_cap();
+        assert!(cap >= 1);
+        assert!(c.iter_time(cap) <= c.iter_time(cap * 4));
+    }
+
+    #[test]
+    fn window_accumulates_credit() {
+        let c = CostModel::new(0.0, 2.0); // 2s per iter at 1 core
+        let (n, credit) = c.iterations_in_window(3.0, 1, 0.0);
+        assert_eq!(n, 1);
+        assert!((credit - 1.0).abs() < 1e-12);
+        let (n2, credit2) = c.iterations_in_window(3.0, 1, credit);
+        assert_eq!(n2, 2);
+        assert!(credit2.abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_with_more_cores_completes_more() {
+        let c = CostModel::new(0.1, 4.0);
+        let (n1, _) = c.iterations_in_window(10.0, 1, 0.0);
+        let (n8, _) = c.iterations_in_window(10.0, 8, 0.0);
+        assert!(n8 > n1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_cores_rejected() {
+        CostModel::new(1.0, 1.0).iter_time(0);
+    }
+
+    #[test]
+    fn monotone_in_cores_without_overhead() {
+        forall("iter_time decreasing in cores", 100, |g| {
+            let c = CostModel::new(g.f64_in(0.0, 2.0), g.f64_in(0.1, 50.0));
+            let a = g.usize_in(1, 64) as u32;
+            assert!(c.iter_time(a + 1) <= c.iter_time(a) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn credit_always_less_than_iter_time() {
+        forall("leftover credit bounded", 100, |g| {
+            let c = CostModel::new(g.f64_in(0.0, 1.0), g.f64_in(0.1, 10.0));
+            let cores = g.usize_in(1, 32) as u32;
+            let (_, credit) = c.iterations_in_window(g.f64_in(0.0, 100.0), cores, 0.0);
+            assert!(credit >= 0.0 && credit < c.iter_time(cores));
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Cluster substrate: topology, core placement and the BSP iteration cost
+//! model.
+//!
+//! The paper ran on Spark over 20 EC2 nodes; SLAQ itself only depends on two
+//! properties of that substrate, which this module reproduces:
+//!
+//! 1. a pool of interchangeable CPU cores spread over worker nodes, granted
+//!    to jobs in integer units and re-balanced each epoch;
+//! 2. iterative BSP execution: one training iteration processes the whole
+//!    (partitioned) dataset, so its wall time scales like
+//!    `t(a) = t_serial + W / a` for `a` allocated cores.
+
+mod cost;
+mod nodes;
+
+pub use cost::CostModel;
+pub use nodes::{ClusterSpec, NodePool, Placement};

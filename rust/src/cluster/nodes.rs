@@ -1,0 +1,277 @@
+//! Worker-node topology and core placement.
+//!
+//! Allocation decisions are made in core counts (see [`crate::sched`]);
+//! this module maps those counts onto concrete worker nodes, mirroring how
+//! a cluster manager hands executors to Spark jobs. Placement uses a
+//! pack-first strategy (fill partially-used nodes before opening new ones)
+//! to keep per-job locality, and supports incremental re-balancing: when an
+//! epoch shrinks a job, cores are released from its most-fragmented node
+//! first.
+
+use std::collections::BTreeMap;
+
+/// Static description of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterSpec {
+    /// Number of worker nodes.
+    pub nodes: u32,
+    /// Cores per worker node.
+    pub cores_per_node: u32,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed: 20 × c3.8xlarge (32 vCPUs each) = 640 cores.
+    pub fn paper_testbed() -> Self {
+        Self { nodes: 20, cores_per_node: 32 }
+    }
+
+    /// Total schedulable cores.
+    pub fn capacity(&self) -> u32 {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// Where a job's cores live: `node -> cores held on that node`.
+pub type Placement = BTreeMap<u32, u32>;
+
+/// Tracks free cores per node and per-job placements.
+#[derive(Debug, Clone)]
+pub struct NodePool {
+    spec: ClusterSpec,
+    free: Vec<u32>,
+    placements: BTreeMap<u64, Placement>,
+}
+
+impl NodePool {
+    /// Fresh pool with all cores free.
+    pub fn new(spec: ClusterSpec) -> Self {
+        Self {
+            spec,
+            free: vec![spec.cores_per_node; spec.nodes as usize],
+            placements: BTreeMap::new(),
+        }
+    }
+
+    /// Cluster description.
+    pub fn spec(&self) -> ClusterSpec {
+        self.spec
+    }
+
+    /// Total free cores.
+    pub fn free_cores(&self) -> u32 {
+        self.free.iter().sum()
+    }
+
+    /// Current placement of a job (empty if none).
+    pub fn placement(&self, job: u64) -> Placement {
+        self.placements.get(&job).cloned().unwrap_or_default()
+    }
+
+    /// Cores currently held by a job.
+    pub fn held(&self, job: u64) -> u32 {
+        self.placements
+            .get(&job)
+            .map(|p| p.values().sum())
+            .unwrap_or(0)
+    }
+
+    /// Adjust `job`'s grant to exactly `target` cores, growing or shrinking
+    /// incrementally. Returns `false` (and changes nothing) if the pool
+    /// cannot satisfy a grow request.
+    pub fn resize(&mut self, job: u64, target: u32) -> bool {
+        let current = self.held(job);
+        if target > current {
+            let need = target - current;
+            if need > self.free_cores() {
+                return false;
+            }
+            self.grow(job, need);
+        } else if target < current {
+            self.shrink(job, current - target);
+        }
+        if target == 0 {
+            self.placements.remove(&job);
+        }
+        true
+    }
+
+    /// Release all cores of a job (job completion).
+    pub fn release_all(&mut self, job: u64) {
+        if let Some(p) = self.placements.remove(&job) {
+            for (node, cores) in p {
+                self.free[node as usize] += cores;
+            }
+        }
+    }
+
+    fn grow(&mut self, job: u64, mut need: u32) {
+        let placement = self.placements.entry(job).or_default();
+        // Pack-first: prefer nodes where the job already has cores, then
+        // the fullest (least-free, non-empty) nodes.
+        let mut order: Vec<u32> = (0..self.spec.nodes).collect();
+        order.sort_by_key(|&n| {
+            let has_job = placement.contains_key(&n);
+            let free = self.free[n as usize];
+            // Nodes with the job first, then less free space first.
+            (if has_job { 0u32 } else { 1 }, free)
+        });
+        for node in order {
+            if need == 0 {
+                break;
+            }
+            let take = self.free[node as usize].min(need);
+            if take > 0 {
+                self.free[node as usize] -= take;
+                *placement.entry(node).or_insert(0) += take;
+                need -= take;
+            }
+        }
+        debug_assert_eq!(need, 0, "grow called without checking free_cores");
+    }
+
+    fn shrink(&mut self, job: u64, mut excess: u32) {
+        let placement = match self.placements.get_mut(&job) {
+            Some(p) => p,
+            None => return,
+        };
+        // Release from the job's most fragmented (smallest) holdings first.
+        let mut order: Vec<u32> = placement.keys().cloned().collect();
+        order.sort_by_key(|n| placement[n]);
+        for node in order {
+            if excess == 0 {
+                break;
+            }
+            let held = placement[&node];
+            let give = held.min(excess);
+            self.free[node as usize] += give;
+            excess -= give;
+            if give == held {
+                placement.remove(&node);
+            } else {
+                placement.insert(node, held - give);
+            }
+        }
+    }
+
+    /// Number of distinct nodes the job spans (locality metric).
+    pub fn span(&self, job: u64) -> usize {
+        self.placements.get(&job).map(|p| p.len()).unwrap_or(0)
+    }
+
+    /// Internal consistency: free + held == capacity, no node oversubscribed.
+    pub fn check_invariants(&self) {
+        let mut used = vec![0u32; self.spec.nodes as usize];
+        for p in self.placements.values() {
+            for (&node, &cores) in p {
+                used[node as usize] += cores;
+            }
+        }
+        for n in 0..self.spec.nodes as usize {
+            assert!(
+                used[n] + self.free[n] == self.spec.cores_per_node,
+                "node {n}: used {} + free {} != {}",
+                used[n],
+                self.free[n],
+                self.spec.cores_per_node
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn pool4x8() -> NodePool {
+        NodePool::new(ClusterSpec { nodes: 4, cores_per_node: 8 })
+    }
+
+    #[test]
+    fn capacity_math() {
+        assert_eq!(ClusterSpec::paper_testbed().capacity(), 640);
+    }
+
+    #[test]
+    fn grow_packs_one_node_first() {
+        let mut p = pool4x8();
+        assert!(p.resize(1, 6));
+        assert_eq!(p.held(1), 6);
+        assert_eq!(p.span(1), 1, "6 cores should fit one node");
+    }
+
+    #[test]
+    fn grow_spills_to_second_node() {
+        let mut p = pool4x8();
+        assert!(p.resize(1, 12));
+        assert_eq!(p.held(1), 12);
+        assert_eq!(p.span(1), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn resize_down_releases_cores() {
+        let mut p = pool4x8();
+        p.resize(1, 12);
+        p.resize(1, 3);
+        assert_eq!(p.held(1), 3);
+        assert_eq!(p.free_cores(), 29);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn resize_to_zero_removes_placement() {
+        let mut p = pool4x8();
+        p.resize(1, 5);
+        p.resize(1, 0);
+        assert_eq!(p.held(1), 0);
+        assert_eq!(p.free_cores(), 32);
+        assert_eq!(p.span(1), 0);
+    }
+
+    #[test]
+    fn grow_beyond_capacity_fails_atomically() {
+        let mut p = pool4x8();
+        p.resize(1, 30);
+        assert!(!p.resize(2, 5));
+        assert_eq!(p.held(2), 0);
+        assert_eq!(p.free_cores(), 2);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn release_all_returns_everything() {
+        let mut p = pool4x8();
+        p.resize(1, 10);
+        p.resize(2, 10);
+        p.release_all(1);
+        assert_eq!(p.free_cores(), 22);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn random_resizes_keep_invariants() {
+        forall("node pool invariants", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 8) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let mut pool = NodePool::new(spec);
+            let jobs = g.usize_in(1, 6) as u64;
+            for _ in 0..40 {
+                let job = g.usize_in(0, jobs as usize) as u64;
+                let target = g.usize_in(0, (spec.capacity() + 2) as usize) as u32;
+                let before_free = pool.free_cores();
+                let before_held = pool.held(job);
+                let ok = pool.resize(job, target);
+                if ok {
+                    assert_eq!(pool.held(job), target);
+                } else {
+                    assert_eq!(pool.held(job), before_held);
+                    assert_eq!(pool.free_cores(), before_free);
+                }
+                pool.check_invariants();
+            }
+        });
+    }
+}

@@ -1,0 +1,449 @@
+//! The epoch-driven scheduling loop.
+
+use super::job::{Job, JobSpec, JobState};
+use super::source::LossSource;
+use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
+use crate::cluster::{ClusterSpec, NodePool};
+use crate::sched::{GainModel, JobRequest, Policy};
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Cluster topology.
+    pub cluster: ClusterSpec,
+    /// Scheduling epoch length `T` (virtual seconds). The paper uses
+    /// short epochs (a few seconds) for continuous rebalancing.
+    pub epoch_secs: f64,
+    /// Treat jobs with almost no loss history optimistically (every
+    /// achievable iteration worth the maximum normalized delta). Disable
+    /// only for the cold-start ablation.
+    pub cold_start_optimism: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterSpec::paper_testbed(),
+            epoch_secs: 3.0,
+            cold_start_optimism: true,
+        }
+    }
+}
+
+/// Gain oracle the coordinator exposes to the policy for one job.
+///
+/// `gain(a)` = predicted normalized loss reduction over the next epoch with
+/// `a` cores = `f(k) − f(k + Δk(a))` where `Δk(a)` comes from the job's BSP
+/// cost model and `f` from its fitted convergence curve.
+///
+/// Cold start: a job with fewer than 3 loss observations has no usable fit;
+/// SLAQ treats it optimistically (every achievable iteration is worth the
+/// maximum normalized delta of 1.0), which front-loads resources into new
+/// jobs — exactly the behaviour the paper wants for fresh arrivals.
+struct JobGain<'a> {
+    job: &'a Job,
+    window: f64,
+    cold_start_optimism: bool,
+}
+
+impl GainModel for JobGain<'_> {
+    fn gain(&self, cores: u32) -> f64 {
+        let dk = self.job.iterations_achievable_f(self.window, cores);
+        if dk <= 0.0 {
+            return 0.0;
+        }
+        if self.cold_start_optimism && self.job.predictor.history().len() < 3 {
+            return dk;
+        }
+        self.job.predictor.predicted_normalized_reduction(dk)
+    }
+}
+
+/// The SLAQ coordinator: owns the jobs, the node pool and the policy.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    policy: Box<dyn Policy>,
+    pool: NodePool,
+    jobs: Vec<Job>,
+    time: f64,
+    epochs: Vec<EpochRecord>,
+    activated_at: Vec<f64>,
+}
+
+impl Coordinator {
+    /// New coordinator with the given policy.
+    pub fn new(cfg: CoordinatorConfig, policy: Box<dyn Policy>) -> Self {
+        let pool = NodePool::new(cfg.cluster);
+        Self { cfg, policy, pool, jobs: Vec::new(), time: 0.0, epochs: Vec::new(), activated_at: Vec::new() }
+    }
+
+    /// Submit a job (may arrive in the future).
+    pub fn submit(&mut self, spec: JobSpec, source: Box<dyn LossSource>) {
+        self.jobs.push(Job::new(spec, source));
+        self.activated_at.push(f64::NAN);
+    }
+
+    /// Current virtual time.
+    pub fn time(&self) -> f64 {
+        self.time
+    }
+
+    /// Policy name in use.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Number of jobs in each state: (pending, running, completed).
+    pub fn job_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for j in &self.jobs {
+            match j.state {
+                JobState::Pending => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Completed => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Run one scheduling epoch.
+    pub fn step_epoch(&mut self) {
+        let t0 = self.time;
+        let window = self.cfg.epoch_secs;
+
+        // 1. Activate arrivals.
+        for (i, job) in self.jobs.iter_mut().enumerate() {
+            if job.state == JobState::Pending && job.spec.arrival <= t0 {
+                job.activate(t0);
+                self.activated_at[i] = t0;
+            }
+        }
+
+        // 2. Collect active jobs and build gain oracles.
+        let active: Vec<usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|(_, j)| j.state == JobState::Running)
+            .map(|(i, _)| i)
+            .collect();
+
+        // Sync point for the lazy predictors: one refit per active job per
+        // epoch, no matter how many iterations completed since the last one.
+        for &i in &active {
+            self.jobs[i].predictor.refresh_fit();
+        }
+
+        let sched_nanos;
+        let allocation;
+        {
+            let gains: Vec<JobGain<'_>> = active
+                .iter()
+                .map(|&i| JobGain {
+                    job: &self.jobs[i],
+                    window,
+                    cold_start_optimism: self.cfg.cold_start_optimism,
+                })
+                .collect();
+            let requests: Vec<JobRequest<'_>> = active
+                .iter()
+                .zip(&gains)
+                .map(|(&i, g)| JobRequest {
+                    id: self.jobs[i].spec.id,
+                    max_cores: self.jobs[i].spec.max_cores,
+                    gain: g,
+                })
+                .collect();
+
+            // 3. Allocate (this is the decision Fig 6 times).
+            let start = Instant::now();
+            allocation = self.policy.allocate(&requests, self.cfg.cluster.capacity());
+            sched_nanos = start.elapsed().as_nanos() as u64;
+        }
+
+        // 4. Apply placements: shrink first to free cores, then grow.
+        for (&i, &cores) in active.iter().zip(&allocation.cores) {
+            let id = self.jobs[i].spec.id;
+            if cores < self.pool.held(id) {
+                assert!(self.pool.resize(id, cores));
+            }
+        }
+        for (&i, &cores) in active.iter().zip(&allocation.cores) {
+            let id = self.jobs[i].spec.id;
+            if cores > self.pool.held(id) {
+                assert!(
+                    self.pool.resize(id, cores),
+                    "placement failed for job {id}: {cores} cores"
+                );
+            }
+        }
+
+        // 5. Record the epoch before advancing (losses at epoch start).
+        let entries: Vec<EpochEntry> = active
+            .iter()
+            .zip(&allocation.cores)
+            .map(|(&i, &cores)| EpochEntry {
+                job: self.jobs[i].spec.id,
+                cores,
+                loss: self.jobs[i].current_loss(),
+            })
+            .collect();
+        self.epochs.push(EpochRecord {
+            time: t0,
+            sched_nanos,
+            active_jobs: active.len(),
+            entries,
+        });
+
+        // 6. Advance jobs through the window.
+        for (&i, &cores) in active.iter().zip(&allocation.cores) {
+            let job = &mut self.jobs[i];
+            job.advance(t0, window, cores);
+            if job.state == JobState::Completed {
+                self.pool.release_all(job.spec.id);
+            }
+        }
+
+        self.time = t0 + window;
+    }
+
+    /// Run epochs until virtual time reaches `t_end`.
+    pub fn run_until(&mut self, t_end: f64) {
+        while self.time < t_end {
+            self.step_epoch();
+        }
+    }
+
+    /// Run until every submitted job completes (with an epoch safety cap).
+    pub fn run_to_completion(&mut self, max_epochs: usize) {
+        for _ in 0..max_epochs {
+            let (pending, running, _) = self.job_counts();
+            if pending == 0 && running == 0 {
+                return;
+            }
+            self.step_epoch();
+        }
+    }
+
+    /// Immutable view of the jobs.
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Node pool (placement state).
+    pub fn pool(&self) -> &NodePool {
+        &self.pool
+    }
+
+    /// Extract the full trace (consumes the coordinator).
+    pub fn into_trace(self) -> Trace {
+        let jobs = self
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| JobTrace {
+                id: j.spec.id,
+                name: j.spec.name.clone(),
+                arrival: j.spec.arrival,
+                activated: self.activated_at[i],
+                completion: j.completion_time,
+                floor: j.source.known_floor(),
+                initial_loss: j.initial_loss,
+                samples: j.loss_trace.clone(),
+            })
+            .collect();
+        Trace { epochs: self.epochs, jobs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::coordinator::source::SyntheticSource;
+    use crate::predictor::{CurveKind, CurveModel};
+    use crate::sched::{FairPolicy, SlaqPolicy};
+    use crate::util::rng::Rng;
+
+    fn mk_spec(id: u64, arrival: f64, kind: CurveKind) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("job-{id}"),
+            kind,
+            cost: CostModel::new(0.05, 4.0),
+            max_cores: 32,
+            arrival,
+            target_fraction: 0.95,
+            max_iterations: 5_000,
+            target_hint: None,
+        }
+    }
+
+    fn exp_source(seed: u64, mu: f64) -> Box<dyn LossSource> {
+        Box::new(SyntheticSource::new(
+            CurveModel::Exponential { m: 4.0, mu, c: 1.0 },
+            0.0,
+            Rng::new(seed),
+        ))
+    }
+
+    fn small_cluster() -> CoordinatorConfig {
+        CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 2, cores_per_node: 16 },
+            epoch_secs: 2.0,
+            cold_start_optimism: true,
+        }
+    }
+
+    #[test]
+    fn single_job_runs_to_completion() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        c.submit(mk_spec(0, 0.0, CurveKind::Exponential), exp_source(1, 0.85));
+        c.run_to_completion(1000);
+        let (p, r, done) = c.job_counts();
+        assert_eq!((p, r, done), (0, 0, 1));
+        let trace = c.into_trace();
+        assert_eq!(trace.jobs.len(), 1);
+        assert!(trace.jobs[0].completion.is_some());
+        assert!(!trace.epochs.is_empty());
+    }
+
+    #[test]
+    fn future_arrivals_wait() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        c.submit(mk_spec(0, 100.0, CurveKind::Exponential), exp_source(1, 0.85));
+        c.run_until(10.0);
+        let (p, r, done) = c.job_counts();
+        assert_eq!((p, r, done), (1, 0, 0));
+    }
+
+    #[test]
+    fn completed_jobs_release_cores() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        c.submit(mk_spec(0, 0.0, CurveKind::Exponential), exp_source(1, 0.5));
+        c.run_to_completion(1000);
+        assert_eq!(c.pool().free_cores(), 32);
+        c.pool().check_invariants();
+    }
+
+    #[test]
+    fn epoch_allocations_respect_capacity() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        for id in 0..6 {
+            c.submit(
+                mk_spec(id, 0.0, CurveKind::Exponential),
+                exp_source(id + 1, 0.8 + 0.02 * id as f64),
+            );
+        }
+        c.run_until(20.0);
+        c.pool().check_invariants();
+        let trace = c.into_trace();
+        for e in &trace.epochs {
+            let total: u32 = e.entries.iter().map(|en| en.cores).sum();
+            assert!(total <= 32, "epoch at {} over capacity: {total}", e.time);
+        }
+    }
+
+    #[test]
+    fn fair_policy_splits_evenly() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(FairPolicy::new()));
+        for id in 0..4 {
+            c.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        c.step_epoch();
+        let trace = c.into_trace();
+        let e = &trace.epochs[0];
+        for en in &e.entries {
+            assert_eq!(en.cores, 8, "fair share of 32 over 4 jobs");
+        }
+    }
+
+    #[test]
+    fn slaq_prioritizes_fresh_jobs_over_nearly_converged() {
+        // Job 0 starts at t=0 and is deep into its convergence tail when
+        // job 1 arrives at t=30 with maximal quality potential. SLAQ should
+        // shift the cores to job 1 (paper Fig 3 behaviour).
+        let cfg = CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 2, cores_per_node: 16 },
+            epoch_secs: 2.0,
+            cold_start_optimism: true,
+        };
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
+        let heavy = CostModel::new(0.1, 32.0); // iter_time(32 cores) = 1.1s
+        let mut old = mk_spec(0, 0.0, CurveKind::Exponential);
+        old.target_fraction = 0.9999; // keeps running through a long tail
+        old.cost = heavy;
+        c.submit(old, exp_source(1, 0.9));
+        let mut fresh = mk_spec(1, 30.0, CurveKind::Exponential);
+        fresh.cost = heavy;
+        c.submit(fresh, exp_source(2, 0.9));
+        c.run_until(44.0);
+        let trace = c.into_trace();
+        // Epochs after job 1 has bootstrapped (a few observations).
+        let late: Vec<_> = trace
+            .epochs
+            .iter()
+            .filter(|e| e.time >= 34.0 && e.entries.len() == 2)
+            .collect();
+        assert!(!late.is_empty(), "both jobs should be running after t=34");
+        let (mut cores0, mut cores1) = (0u64, 0u64);
+        for e in late {
+            for en in &e.entries {
+                if en.job == 0 {
+                    cores0 += en.cores as u64;
+                } else {
+                    cores1 += en.cores as u64;
+                }
+            }
+        }
+        assert!(
+            cores1 > 3 * cores0,
+            "fresh job should out-receive tail job: {cores1} vs {cores0}"
+        );
+    }
+
+    #[test]
+    fn slaq_beats_fair_on_average_quality() {
+        // The paper's Fig 4 scenario in miniature: a stream of homogeneous
+        // jobs under contention. Under fair scheduling, jobs deep in their
+        // convergence tail keep their equal share; SLAQ reassigns those
+        // cores to fresh, high-potential jobs, lowering the average
+        // normalized loss across running jobs.
+        fn run(policy: Box<dyn Policy>) -> f64 {
+            let cfg = CoordinatorConfig {
+                cluster: ClusterSpec { nodes: 2, cores_per_node: 8 },
+                epoch_secs: 2.0,
+                cold_start_optimism: true,
+            };
+            let mut c = Coordinator::new(cfg, policy);
+            for id in 0..12u64 {
+                let mut spec = mk_spec(id, 8.0 * id as f64, CurveKind::Exponential);
+                spec.cost = CostModel::new(0.05, 8.0);
+                spec.target_fraction = 0.98; // long tail before completion
+                c.submit(spec, exp_source(id + 10, 0.9));
+            }
+            c.run_until(160.0);
+            let trace = c.into_trace();
+            // Average normalized loss across epochs and active jobs (Fig 4).
+            let mut total = 0.0;
+            let mut count = 0usize;
+            for e in &trace.epochs {
+                for en in &e.entries {
+                    let j = trace.job(en.job).unwrap();
+                    let floor = j.floor.unwrap();
+                    let span = j.initial_loss - floor;
+                    total += ((en.loss - floor) / span).clamp(0.0, 1.0);
+                    count += 1;
+                }
+            }
+            total / count.max(1) as f64
+        }
+        let slaq = run(Box::new(SlaqPolicy::new()));
+        let fair = run(Box::new(FairPolicy::new()));
+        assert!(
+            slaq < fair,
+            "slaq avg normalized loss {slaq} should beat fair {fair}"
+        );
+    }
+}

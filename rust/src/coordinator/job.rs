@@ -1,0 +1,332 @@
+//! Job model: spec, lifecycle state, per-epoch advancement.
+
+use super::source::LossSource;
+use crate::cluster::CostModel;
+use crate::predictor::{CurveKind, OnlinePredictor};
+
+/// Static description of a training job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Unique id; also the FIFO arrival order key.
+    pub id: u64,
+    /// Human-readable name, e.g. "logreg-mnist-lr0.1".
+    pub name: String,
+    /// Declared convergence family of the optimizer (paper §2 categories).
+    pub kind: CurveKind,
+    /// BSP iteration cost model.
+    pub cost: CostModel,
+    /// Maximum cores the job can use (its partition count).
+    pub max_cores: u32,
+    /// Arrival time (virtual seconds).
+    pub arrival: f64,
+    /// Fraction of total achievable loss reduction at which the job is
+    /// considered converged (e.g. 0.99). Only applies when the loss source
+    /// has a known floor.
+    pub target_fraction: f64,
+    /// Hard iteration cap (safety net; also the convergence criterion when
+    /// no floor is known).
+    pub max_iterations: u64,
+    /// Optional user-provided target loss (paper §4): forwarded to the
+    /// predictor as a hint for non-convex jobs whose loss curves do not
+    /// fit the analytical families.
+    pub target_hint: Option<f64>,
+}
+
+/// Lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, not yet activated by the coordinator.
+    Pending,
+    /// Active: holds cores and runs iterations.
+    Running,
+    /// Converged or hit its iteration cap.
+    Completed,
+}
+
+/// A live job inside the coordinator.
+pub struct Job {
+    /// Static spec.
+    pub spec: JobSpec,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Online convergence predictor (the scheduler's view of the job).
+    pub predictor: OnlinePredictor,
+    /// Loss oracle.
+    pub source: Box<dyn LossSource>,
+    /// Iterations completed.
+    pub iteration: u64,
+    /// Partial-progress credit (seconds toward the next iteration).
+    pub credit: f64,
+    /// Cores currently held.
+    pub cores: u32,
+    /// Initial loss (set on activation).
+    pub initial_loss: f64,
+    /// Completion time, once completed.
+    pub completion_time: Option<f64>,
+    /// Full loss trajectory `(time, iteration, loss)` — never truncated
+    /// (the predictor's internal window is).
+    pub loss_trace: Vec<(f64, u64, f64)>,
+    /// Consecutive tiny-relative-delta count (floorless convergence check).
+    small_delta_streak: u32,
+}
+
+/// Relative per-iteration improvement below which a job with an unknown
+/// floor is considered converged (after [`STALL_STREAK`] consecutive hits).
+const STALL_TOL: f64 = 1e-4;
+/// Consecutive stalled iterations required to declare convergence.
+const STALL_STREAK: u32 = 8;
+
+impl Job {
+    /// Construct a pending job.
+    pub fn new(spec: JobSpec, source: Box<dyn LossSource>) -> Self {
+        let kind = spec.kind;
+        let mut predictor = OnlinePredictor::new(kind);
+        if let Some(hint) = spec.target_hint {
+            predictor.set_target_hint(hint);
+        }
+        Self {
+            spec,
+            state: JobState::Pending,
+            predictor,
+            source,
+            iteration: 0,
+            credit: 0.0,
+            cores: 0,
+            initial_loss: f64::NAN,
+            completion_time: None,
+            loss_trace: Vec::new(),
+            small_delta_streak: 0,
+        }
+    }
+
+    /// Activate the job at time `t`: read the initial loss (iteration 0).
+    pub fn activate(&mut self, t: f64) {
+        assert_eq!(self.state, JobState::Pending);
+        self.state = JobState::Running;
+        self.initial_loss = self.source.loss_at(0);
+        self.predictor.observe(0, self.initial_loss, t);
+        self.loss_trace.push((t, 0, self.initial_loss));
+    }
+
+    /// Advance through the window `[t0, t0 + window)` holding `cores`
+    /// cores. Completes iterations, feeds the predictor, and flips to
+    /// `Completed` when the convergence criterion fires. Returns the number
+    /// of iterations completed in this window.
+    pub fn advance(&mut self, t0: f64, window: f64, cores: u32) -> u64 {
+        assert_eq!(self.state, JobState::Running);
+        self.cores = cores;
+        if cores == 0 {
+            // Paused (allocation floor couldn't cover all jobs).
+            return 0;
+        }
+        let iter_time = self.spec.cost.iter_time(cores);
+        let (n, new_credit) = self.spec.cost.iterations_in_window(window, cores, self.credit);
+        let credit0 = self.credit;
+        self.credit = new_credit;
+        let mut done = 0;
+        for i in 1..=n {
+            self.iteration += 1;
+            let t = t0 + iter_time * i as f64 - credit0;
+            let loss = self.source.loss_at(self.iteration);
+            self.record(t, loss);
+            done += 1;
+            if self.check_converged(loss) || self.iteration >= self.spec.max_iterations {
+                self.complete(t);
+                break;
+            }
+        }
+        done
+    }
+
+    fn record(&mut self, t: f64, loss: f64) {
+        let prev = self.predictor.current_loss();
+        self.predictor.observe(self.iteration, loss, t);
+        self.loss_trace.push((t, self.iteration, loss));
+        // Track stalls for the floorless convergence criterion.
+        if let Some(prev) = prev {
+            let rel = (prev - loss).abs() / prev.abs().max(1e-12);
+            if rel < STALL_TOL {
+                self.small_delta_streak += 1;
+            } else {
+                self.small_delta_streak = 0;
+            }
+        }
+    }
+
+    fn check_converged(&self, loss: f64) -> bool {
+        match self.source.known_floor() {
+            Some(floor) => {
+                let span = self.initial_loss - floor;
+                if span <= 0.0 {
+                    return true;
+                }
+                let achieved = (self.initial_loss - loss) / span;
+                achieved >= self.spec.target_fraction
+            }
+            None => self.small_delta_streak >= STALL_STREAK,
+        }
+    }
+
+    fn complete(&mut self, t: f64) {
+        self.state = JobState::Completed;
+        self.completion_time = Some(t);
+        self.cores = 0;
+    }
+
+    /// Latest observed loss (initial loss before any iteration).
+    pub fn current_loss(&self) -> f64 {
+        self.loss_trace.last().map(|s| s.2).unwrap_or(self.initial_loss)
+    }
+
+    /// Iterations this job could complete in a `window`-second epoch with
+    /// `cores` cores, counting banked partial progress.
+    pub fn iterations_achievable(&self, window: f64, cores: u32) -> u64 {
+        if cores == 0 {
+            return 0;
+        }
+        self.spec
+            .cost
+            .iterations_in_window(window, cores, self.credit)
+            .0
+    }
+
+    /// Fractional iterations achievable in a `window`-second epoch with
+    /// `cores` cores. The allocator uses the fractional form so marginal
+    /// gains stay smooth when an extra core buys only part of an iteration.
+    pub fn iterations_achievable_f(&self, window: f64, cores: u32) -> f64 {
+        if cores == 0 {
+            return 0.0;
+        }
+        (self.credit + window) / self.spec.cost.iter_time(cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::source::SyntheticSource;
+    use crate::predictor::CurveModel;
+    use crate::util::rng::Rng;
+
+    fn spec(id: u64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("job-{id}"),
+            kind: CurveKind::Exponential,
+            cost: CostModel::new(0.1, 2.0),
+            max_cores: 16,
+            arrival: 0.0,
+            target_fraction: 0.95,
+            max_iterations: 10_000,
+            target_hint: None,
+        }
+    }
+
+    fn exp_job(id: u64) -> Job {
+        let curve = CurveModel::Exponential { m: 4.0, mu: 0.8, c: 1.0 };
+        Job::new(spec(id), Box::new(SyntheticSource::new(curve, 0.0, Rng::new(id))))
+    }
+
+    #[test]
+    fn activation_reads_initial_loss() {
+        let mut j = exp_job(1);
+        j.activate(0.0);
+        assert_eq!(j.state, JobState::Running);
+        assert_eq!(j.initial_loss, 5.0);
+        assert_eq!(j.loss_trace.len(), 1);
+    }
+
+    #[test]
+    fn advance_completes_expected_iterations() {
+        let mut j = exp_job(2);
+        j.activate(0.0);
+        // iter_time(4) = 0.1 + 2/4 = 0.6s; 3.1s window -> 5 iterations
+        // with ~0.1s of leftover credit.
+        let n = j.advance(0.0, 3.1, 4);
+        assert_eq!(n, 5);
+        assert_eq!(j.iteration, 5);
+        assert!(j.credit >= 0.0 && j.credit < 0.6);
+    }
+
+    #[test]
+    fn credit_carries_across_windows() {
+        let mut j = exp_job(3);
+        j.activate(0.0);
+        let n1 = j.advance(0.0, 0.5, 1); // iter_time(1) = 2.1s -> 0 iterations
+        assert_eq!(n1, 0);
+        let n2 = j.advance(0.5, 2.0, 1); // credit 0.5 + 2.0 = 2.5 -> 1 iteration
+        assert_eq!(n2, 1);
+    }
+
+    #[test]
+    fn converges_at_target_fraction() {
+        let mut j = exp_job(4);
+        j.activate(0.0);
+        // Run with generous resources until convergence.
+        let mut t = 0.0;
+        for _ in 0..200 {
+            if j.state != JobState::Running {
+                break;
+            }
+            j.advance(t, 3.0, 16);
+            t += 3.0;
+        }
+        assert_eq!(j.state, JobState::Completed);
+        // 95% of the way from 5.0 to 1.0 => loss <= 1.2
+        assert!(j.current_loss() <= 1.2 + 1e-9);
+        assert!(j.completion_time.is_some());
+        assert_eq!(j.cores, 0, "completed job must hold no cores");
+    }
+
+    #[test]
+    fn zero_cores_makes_no_progress() {
+        let mut j = exp_job(5);
+        j.activate(0.0);
+        assert_eq!(j.advance(0.0, 10.0, 0), 0);
+        assert_eq!(j.iteration, 0);
+    }
+
+    #[test]
+    fn iteration_cap_completes_job() {
+        let mut j = exp_job(6);
+        j.spec.max_iterations = 3;
+        j.activate(0.0);
+        j.advance(0.0, 100.0, 16);
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.iteration, 3);
+    }
+
+    #[test]
+    fn floorless_source_converges_on_stall() {
+        struct Flat;
+        impl LossSource for Flat {
+            fn loss_at(&mut self, it: u64) -> f64 {
+                // quick decay then flat
+                4.0 * 0.5f64.powf(it.min(6) as f64) + 1.0
+            }
+            fn known_floor(&self) -> Option<f64> {
+                None
+            }
+        }
+        let mut j = Job::new(spec(7), Box::new(Flat));
+        j.activate(0.0);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            if j.state != JobState::Running {
+                break;
+            }
+            j.advance(t, 3.0, 8);
+            t += 3.0;
+        }
+        assert_eq!(j.state, JobState::Completed);
+    }
+
+    #[test]
+    fn iterations_achievable_matches_cost_model() {
+        let mut j = exp_job(8);
+        j.activate(0.0);
+        // iter_time(2) = 0.1 + 1.0 = 1.1
+        assert_eq!(j.iterations_achievable(3.0, 2), 2);
+        assert_eq!(j.iterations_achievable(3.0, 0), 0);
+    }
+}

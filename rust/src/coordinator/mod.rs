@@ -1,0 +1,22 @@
+//! The SLAQ coordinator: job lifecycle, the epoch-driven scheduling loop,
+//! and experiment traces.
+//!
+//! Each scheduling epoch the coordinator:
+//! 1. activates newly arrived jobs,
+//! 2. asks every active job for its predicted quality gain as a function of
+//!    cores (via its online predictor + cost model),
+//! 3. runs the configured [`crate::sched::Policy`] to produce an allocation,
+//! 4. places the allocation onto worker nodes,
+//! 5. advances jobs through the epoch window, feeding completed-iteration
+//!    losses back into their predictors,
+//! 6. records everything into a [`Trace`].
+
+mod epoch;
+mod job;
+mod source;
+mod trace;
+
+pub use epoch::{Coordinator, CoordinatorConfig};
+pub use job::{Job, JobSpec, JobState};
+pub use source::{LossSource, NonConvexSource, ReplaySource, SyntheticSource};
+pub use trace::{EpochRecord, JobTrace, Trace};

@@ -1,0 +1,181 @@
+//! Loss sources: where a job's per-iteration loss values come from.
+//!
+//! * [`SyntheticSource`] — an analytical convergence curve plus noise;
+//!   used for large-scale scheduling simulations (Figs 3–5) where running
+//!   thousands of real training jobs would be pointless.
+//! * [`ReplaySource`] — replays a recorded loss trace from a real training
+//!   run (produced by the `mltrain` engine through the PJRT runtime), so
+//!   scheduler experiments use *real* convergence behaviour.
+//! * `mltrain::ExecSource` (in [`crate::mltrain`]) — executes actual AOT
+//!   training steps; used by the end-to-end examples.
+
+use crate::predictor::CurveModel;
+use crate::util::rng::Rng;
+
+/// Produces the loss observed after completing each iteration.
+///
+/// Deliberately not `Send`: the real-execution source wraps PJRT handles,
+/// and the coordinator is single-threaded (the paper's scheduler is a
+/// single decision loop; concurrency lives in the simulated cluster).
+pub trait LossSource {
+    /// Loss after `iteration` steps; `loss_at(0)` is the initial loss.
+    /// Iterations are queried in nondecreasing order.
+    fn loss_at(&mut self, iteration: u64) -> f64;
+
+    /// The loss this source is known to converge to, when knowable a
+    /// priori (synthetic/replay). Used for retrospective normalization.
+    fn known_floor(&self) -> Option<f64>;
+}
+
+/// Analytical curve + multiplicative Gaussian noise.
+pub struct SyntheticSource {
+    curve: CurveModel,
+    noise: f64,
+    rng: Rng,
+}
+
+impl SyntheticSource {
+    /// `noise` is the relative standard deviation (e.g. 0.005 = 0.5%).
+    pub fn new(curve: CurveModel, noise: f64, rng: Rng) -> Self {
+        Self { curve, noise, rng }
+    }
+}
+
+impl LossSource for SyntheticSource {
+    fn loss_at(&mut self, iteration: u64) -> f64 {
+        let clean = self.curve.eval(iteration as f64);
+        if self.noise > 0.0 {
+            // Noise on the *improving part* so the floor stays put.
+            let floor = self.curve.asymptote();
+            floor + (clean - floor) * (1.0 + self.noise * self.rng.normal()).max(0.0)
+        } else {
+            clean
+        }
+    }
+
+    fn known_floor(&self) -> Option<f64> {
+        Some(self.curve.asymptote())
+    }
+}
+
+/// A non-convex training trajectory (paper §4): exponential trend toward a
+/// floor, overlaid with oscillation and occasional *upward* spikes — the
+/// regime where SLAQ's analytical curve families break down and the
+/// target-hint mechanism is supposed to take over.
+///
+/// Deterministic and random-access in the iteration index (spikes come
+/// from a counter-based hash), so schedulers can replay it freely.
+pub struct NonConvexSource {
+    m: f64,
+    mu: f64,
+    floor: f64,
+    /// Oscillation amplitude relative to the decaying envelope.
+    wobble: f64,
+    seed: u64,
+}
+
+impl NonConvexSource {
+    /// `loss(k) ≈ floor + m·μ^k · (1 + wobble·sin) (+ spikes)`.
+    pub fn new(m: f64, mu: f64, floor: f64, wobble: f64, seed: u64) -> Self {
+        assert!(mu > 0.0 && mu < 1.0);
+        Self { m, mu, floor, wobble, seed }
+    }
+}
+
+impl LossSource for NonConvexSource {
+    fn loss_at(&mut self, iteration: u64) -> f64 {
+        let k = iteration as f64;
+        let envelope = self.m * self.mu.powf(k);
+        let wave = 1.0 + self.wobble * (k / 2.7).sin();
+        // Counter-based hash: ~8% of iterations spike up by up to 60% of
+        // the current envelope (a bad minibatch / escaped minimum).
+        let mut sm = crate::util::rng::SplitMix64::new(self.seed ^ iteration);
+        let h = sm.next_u64();
+        let spike = if h % 100 < 8 {
+            1.0 + 0.6 * ((h >> 32) as f64 / u32::MAX as f64)
+        } else {
+            1.0
+        };
+        self.floor + envelope * wave * spike
+    }
+
+    fn known_floor(&self) -> Option<f64> {
+        Some(self.floor)
+    }
+}
+
+/// Replays a recorded loss trajectory; holds the last value once exhausted.
+pub struct ReplaySource {
+    losses: Vec<f64>,
+}
+
+impl ReplaySource {
+    /// `losses[k]` is the loss after `k` iterations (index 0 = initial).
+    pub fn new(losses: Vec<f64>) -> Self {
+        assert!(!losses.is_empty(), "empty replay trace");
+        Self { losses }
+    }
+
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.losses.len()
+    }
+
+    /// True when the trace is empty (cannot happen post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.losses.is_empty()
+    }
+}
+
+impl LossSource for ReplaySource {
+    fn loss_at(&mut self, iteration: u64) -> f64 {
+        let idx = (iteration as usize).min(self.losses.len() - 1);
+        self.losses[idx]
+    }
+
+    fn known_floor(&self) -> Option<f64> {
+        self.losses
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::CurveModel;
+
+    #[test]
+    fn synthetic_noiseless_matches_curve() {
+        let curve = CurveModel::Exponential { m: 2.0, mu: 0.5, c: 1.0 };
+        let mut s = SyntheticSource::new(curve.clone(), 0.0, Rng::new(1));
+        assert_eq!(s.loss_at(0), 3.0);
+        assert_eq!(s.loss_at(1), 2.0);
+        assert_eq!(s.known_floor(), Some(1.0));
+    }
+
+    #[test]
+    fn synthetic_noise_preserves_floor() {
+        let curve = CurveModel::Exponential { m: 2.0, mu: 0.9, c: 1.0 };
+        let mut s = SyntheticSource::new(curve, 0.05, Rng::new(7));
+        for k in 0..200 {
+            assert!(s.loss_at(k) >= 1.0 - 1e-9);
+        }
+    }
+
+    #[test]
+    fn replay_holds_last_value() {
+        let mut r = ReplaySource::new(vec![3.0, 2.0, 1.5]);
+        assert_eq!(r.loss_at(0), 3.0);
+        assert_eq!(r.loss_at(2), 1.5);
+        assert_eq!(r.loss_at(99), 1.5);
+        assert_eq!(r.known_floor(), Some(1.5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn replay_rejects_empty() {
+        ReplaySource::new(vec![]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Experiment traces: everything the figure harness needs, recorded once.
+
+/// Snapshot of one job's grant within an epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct EpochEntry {
+    /// Job id.
+    pub job: u64,
+    /// Cores granted this epoch.
+    pub cores: u32,
+    /// Loss at the start of the epoch.
+    pub loss: f64,
+}
+
+/// One scheduling epoch.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    /// Epoch start (virtual seconds).
+    pub time: f64,
+    /// Wall-clock nanoseconds the allocation decision took (real time —
+    /// this is the quantity Fig 6 reports).
+    pub sched_nanos: u64,
+    /// Number of active jobs considered.
+    pub active_jobs: usize,
+    /// Per-job grants.
+    pub entries: Vec<EpochEntry>,
+}
+
+/// Completed per-job record.
+#[derive(Debug, Clone)]
+pub struct JobTrace {
+    /// Job id.
+    pub id: u64,
+    /// Job name.
+    pub name: String,
+    /// Arrival time.
+    pub arrival: f64,
+    /// Activation time (first epoch the job ran in).
+    pub activated: f64,
+    /// Completion time (None if still running at window end).
+    pub completion: Option<f64>,
+    /// Known convergence floor, when the loss source exposes one.
+    pub floor: Option<f64>,
+    /// Initial loss.
+    pub initial_loss: f64,
+    /// `(time, iteration, loss)` for every completed iteration.
+    pub samples: Vec<(f64, u64, f64)>,
+}
+
+impl JobTrace {
+    /// Loss value at virtual time `t` (step function over samples).
+    pub fn loss_at_time(&self, t: f64) -> Option<f64> {
+        if self.samples.is_empty() || t < self.samples[0].0 {
+            return None;
+        }
+        let mut current = self.samples[0].2;
+        for &(st, _, loss) in &self.samples {
+            if st > t {
+                break;
+            }
+            current = loss;
+        }
+        Some(current)
+    }
+
+    /// Time (relative to activation) at which the job first reached
+    /// `fraction` of its total achievable loss reduction. Requires a floor.
+    pub fn time_to_reduction(&self, fraction: f64) -> Option<f64> {
+        let floor = self.floor?;
+        let span = self.initial_loss - floor;
+        if span <= 0.0 {
+            return Some(0.0);
+        }
+        let threshold = self.initial_loss - fraction * span;
+        for &(t, _, loss) in &self.samples {
+            if loss <= threshold {
+                return Some(t - self.activated);
+            }
+        }
+        None
+    }
+}
+
+/// Full run trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Per-epoch scheduling records.
+    pub epochs: Vec<EpochRecord>,
+    /// Per-job records (completed and still-running jobs alike).
+    pub jobs: Vec<JobTrace>,
+}
+
+impl Trace {
+    /// Serialize the full trace to JSON (for external plotting tools).
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        let epochs: Vec<Value> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("time", Value::Num(e.time)),
+                    ("sched_nanos", Value::Num(e.sched_nanos as f64)),
+                    ("active_jobs", Value::Num(e.active_jobs as f64)),
+                    (
+                        "entries",
+                        Value::Arr(
+                            e.entries
+                                .iter()
+                                .map(|en| {
+                                    obj(vec![
+                                        ("job", Value::Num(en.job as f64)),
+                                        ("cores", Value::Num(en.cores as f64)),
+                                        ("loss", Value::Num(en.loss)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let jobs: Vec<Value> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                obj(vec![
+                    ("id", Value::Num(j.id as f64)),
+                    ("name", Value::Str(j.name.clone())),
+                    ("arrival", Value::Num(j.arrival)),
+                    ("activated", Value::Num(j.activated)),
+                    (
+                        "completion",
+                        j.completion.map(Value::Num).unwrap_or(Value::Null),
+                    ),
+                    ("floor", j.floor.map(Value::Num).unwrap_or(Value::Null)),
+                    ("initial_loss", Value::Num(j.initial_loss)),
+                    (
+                        "samples",
+                        Value::Arr(
+                            j.samples
+                                .iter()
+                                .map(|&(t, k, l)| {
+                                    Value::Arr(vec![
+                                        Value::Num(t),
+                                        Value::Num(k as f64),
+                                        Value::Num(l),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        obj(vec![("epochs", Value::Arr(epochs)), ("jobs", Value::Arr(jobs))])
+    }
+
+    /// Mean scheduling decision time in milliseconds.
+    pub fn mean_sched_millis(&self) -> f64 {
+        if self.epochs.is_empty() {
+            return 0.0;
+        }
+        let total: u64 = self.epochs.iter().map(|e| e.sched_nanos).sum();
+        total as f64 / self.epochs.len() as f64 / 1e6
+    }
+
+    /// Find a job trace by id.
+    pub fn job(&self, id: u64) -> Option<&JobTrace> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn jt() -> JobTrace {
+        JobTrace {
+            id: 1,
+            name: "t".into(),
+            arrival: 0.0,
+            activated: 1.0,
+            completion: Some(10.0),
+            floor: Some(1.0),
+            initial_loss: 5.0,
+            samples: vec![(1.0, 0, 5.0), (3.0, 1, 3.0), (6.0, 2, 2.0), (10.0, 3, 1.2)],
+        }
+    }
+
+    #[test]
+    fn loss_at_time_steps() {
+        let j = jt();
+        assert_eq!(j.loss_at_time(0.5), None);
+        assert_eq!(j.loss_at_time(1.0), Some(5.0));
+        assert_eq!(j.loss_at_time(4.0), Some(3.0));
+        assert_eq!(j.loss_at_time(100.0), Some(1.2));
+    }
+
+    #[test]
+    fn time_to_reduction_thresholds() {
+        let j = jt();
+        // span = 4; 50% reduction => loss <= 3.0 at t=3 => 2s after activation
+        assert_eq!(j.time_to_reduction(0.5), Some(2.0));
+        // 90% => loss <= 1.4 at t=10 => 9s
+        assert_eq!(j.time_to_reduction(0.9), Some(9.0));
+        // 99% => loss <= 1.04 never reached
+        assert_eq!(j.time_to_reduction(0.99), None);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_structure() {
+        let t = Trace {
+            epochs: vec![EpochRecord {
+                time: 3.0,
+                sched_nanos: 1000,
+                active_jobs: 1,
+                entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5 }],
+            }],
+            jobs: vec![jt()],
+        };
+        let v = t.to_json();
+        let text = v.to_string();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed, v);
+        let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs[0].get("name").unwrap().as_str(), Some("t"));
+        assert_eq!(jobs[0].get("samples").unwrap().as_arr().unwrap().len(), 4);
+        let epochs = parsed.get("epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs[0].get("time").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn mean_sched_millis() {
+        let mut t = Trace::default();
+        assert_eq!(t.mean_sched_millis(), 0.0);
+        t.epochs.push(EpochRecord { time: 0.0, sched_nanos: 2_000_000, active_jobs: 1, entries: vec![] });
+        t.epochs.push(EpochRecord { time: 1.0, sched_nanos: 4_000_000, active_jobs: 1, entries: vec![] });
+        assert!((t.mean_sched_millis() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,231 @@
+//! Ablations of SLAQ's design choices (DESIGN.md §7) and the paper's §4
+//! future-work extension:
+//!
+//! * **target hints** — non-convex jobs whose losses oscillate and spike
+//!   break the analytical fits (paper §4); the proposed fix is a
+//!   user-provided target-loss hint. We run a non-convex job mix with and
+//!   without hints.
+//! * **epoch length** — the rebalancing granularity `T`.
+//! * **starvation floor** — the paper starts every job at `a_j = 1`;
+//!   without it, greedy allocation starves whole jobs.
+//! * **cold-start optimism** — fresh jobs have no fit; SLAQ treats their
+//!   achievable iterations as maximally valuable.
+
+use super::report::{render_table, ExpOutput};
+use super::sim_runs::SimConfig;
+use crate::coordinator::{Coordinator, CoordinatorConfig, NonConvexSource, Trace};
+use crate::sched::{Policy, SlaqPolicy};
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+use crate::workload::paper_trace;
+
+/// Mean normalized loss across running jobs over the whole trace.
+fn avg_norm_loss(trace: &Trace) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for e in &trace.epochs {
+        for en in &e.entries {
+            let j = trace.job(en.job).unwrap();
+            let floor = j.floor.unwrap_or(0.0);
+            let span = j.initial_loss - floor;
+            if span > 0.0 {
+                total += ((en.loss - floor) / span).clamp(0.0, 1.0);
+                count += 1;
+            }
+        }
+    }
+    total / count.max(1) as f64
+}
+
+/// Mean time-to-90%-reduction over jobs that reached it.
+fn mean_t90(trace: &Trace) -> f64 {
+    let times: Vec<f64> = trace
+        .jobs
+        .iter()
+        .filter_map(|j| j.time_to_reduction(0.9))
+        .collect();
+    times.iter().sum::<f64>() / times.len().max(1) as f64
+}
+
+fn run_with(
+    cfg: &SimConfig,
+    policy: Box<dyn Policy>,
+    cold_start_optimism: bool,
+    nonconvex_fraction: f64,
+    hints: bool,
+) -> Trace {
+    let mut coord = Coordinator::new(
+        CoordinatorConfig {
+            cluster: cfg.cluster,
+            epoch_secs: cfg.epoch_secs,
+            cold_start_optimism,
+        },
+        policy,
+    );
+    let mut rng = Rng::new(cfg.trace.seed ^ 0xAB1A);
+    for mut template in paper_trace(&cfg.trace) {
+        let nonconvex = rng.bool(nonconvex_fraction);
+        if nonconvex {
+            // Replace the well-behaved curve with an oscillating, spiking
+            // one. Keep the job's floor so retrospective metrics work.
+            let floor = template.curve.asymptote();
+            let start = template.curve.eval(0.0);
+            let m = (start - floor).max(1e-6);
+            let mu = rng.range_f64(0.90, 0.97);
+            let src = NonConvexSource::new(m, mu, floor, 0.35, rng.next_u64());
+            if hints {
+                template.spec.target_hint = Some(floor);
+            }
+            // Non-convex: cap the run length (oscillation defeats the
+            // fraction criterion occasionally).
+            template.spec.max_iterations = 5_000;
+            coord.submit(template.spec, Box::new(src));
+        } else {
+            let src = template.make_source(&mut rng);
+            coord.submit(template.spec, src);
+        }
+    }
+    coord.run_until(cfg.duration);
+    coord.into_trace()
+}
+
+/// Paper §4 extension: target-loss hints on a 50% non-convex workload.
+pub fn ablate_hints(cfg: &SimConfig) -> ExpOutput {
+    let base = run_with(cfg, Box::new(SlaqPolicy::new()), true, 0.5, false);
+    let hinted = run_with(cfg, Box::new(SlaqPolicy::new()), true, 0.5, true);
+    let rows = vec![
+        vec![
+            "no hints".into(),
+            format!("{:.4}", avg_norm_loss(&base)),
+            format!("{:.1}s", mean_t90(&base)),
+        ],
+        vec![
+            "target hints".into(),
+            format!("{:.4}", avg_norm_loss(&hinted)),
+            format!("{:.1}s", mean_t90(&hinted)),
+        ],
+    ];
+    let mut csv = Csv::new(&["variant", "avg_norm_loss", "mean_t90_secs"]);
+    csv.row(&["no_hints".into(), avg_norm_loss(&base).to_string(), mean_t90(&base).to_string()]);
+    csv.row(&[
+        "hints".into(),
+        avg_norm_loss(&hinted).to_string(),
+        mean_t90(&hinted).to_string(),
+    ]);
+    let summary = format!(
+        "Ablation — target-loss hints on a 50% non-convex mix (paper §4)\n{}",
+        render_table(&["variant", "avg norm loss", "mean t90"], &rows)
+    );
+    ExpOutput { id: "ablate_hints".into(), csv, summary }
+}
+
+/// Epoch-length sweep: rebalancing granularity vs quality.
+pub fn ablate_epoch_length(cfg: &SimConfig) -> ExpOutput {
+    let mut csv = Csv::new(&["epoch_secs", "avg_norm_loss", "mean_t90_secs"]);
+    let mut rows = Vec::new();
+    for t in [1.0, 3.0, 10.0, 30.0] {
+        let mut c = cfg.clone();
+        c.epoch_secs = t;
+        let trace = run_with(&c, Box::new(SlaqPolicy::new()), true, 0.0, false);
+        let (al, t90) = (avg_norm_loss(&trace), mean_t90(&trace));
+        csv.row_f64(&[t, al, t90]);
+        rows.push(vec![format!("{t}s"), format!("{al:.4}"), format!("{t90:.1}s")]);
+    }
+    let summary = format!(
+        "Ablation — scheduling epoch length (shorter = more responsive)\n{}",
+        render_table(&["epoch", "avg norm loss", "mean t90"], &rows)
+    );
+    ExpOutput { id: "ablate_epoch".into(), csv, summary }
+}
+
+/// Starvation floor on/off and cold-start optimism on/off.
+pub fn ablate_floor_and_cold_start(cfg: &SimConfig) -> ExpOutput {
+    let variants: [(&str, Box<dyn Policy>, bool); 3] = [
+        ("paper (floor+optimism)", Box::new(SlaqPolicy::new()), true),
+        ("no starvation floor", Box::new(SlaqPolicy::without_floor()), true),
+        ("no cold-start optimism", Box::new(SlaqPolicy::new()), false),
+    ];
+    let mut csv = Csv::new(&["variant", "avg_norm_loss", "mean_t90_secs", "starved_job_epochs"]);
+    let mut rows = Vec::new();
+    for (name, policy, optimism) in variants {
+        let trace = run_with(cfg, policy, optimism, 0.0, false);
+        // Starvation metric: job-epochs where an active job held 0 cores.
+        let starved: usize = trace
+            .epochs
+            .iter()
+            .map(|e| e.entries.iter().filter(|en| en.cores == 0).count())
+            .sum();
+        let (al, t90) = (avg_norm_loss(&trace), mean_t90(&trace));
+        csv.row(&[
+            name.to_string(),
+            format!("{al:.4}"),
+            format!("{t90:.1}"),
+            starved.to_string(),
+        ]);
+        rows.push(vec![
+            name.to_string(),
+            format!("{al:.4}"),
+            format!("{t90:.1}s"),
+            starved.to_string(),
+        ]);
+    }
+    let summary = format!(
+        "Ablation — starvation floor & cold-start optimism\n{}",
+        render_table(&["variant", "avg norm loss", "mean t90", "starved job-epochs"], &rows)
+    );
+    ExpOutput { id: "ablate_floor".into(), csv, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::workload::TraceConfig;
+
+    fn tiny() -> SimConfig {
+        SimConfig {
+            trace: TraceConfig { jobs: 20, mean_interarrival: 6.0, seed: 4 },
+            cluster: ClusterSpec { nodes: 4, cores_per_node: 16 },
+            epoch_secs: 3.0,
+            duration: 300.0,
+        }
+    }
+
+    #[test]
+    fn hints_help_nonconvex_jobs() {
+        let out = ablate_hints(&tiny());
+        // Parse the CSV: hints row should not be worse on avg norm loss.
+        let text = out.csv.to_string();
+        let mut lines = text.lines().skip(1);
+        let base: f64 = lines.next().unwrap().split(',').nth(1).unwrap().parse().unwrap();
+        let hinted: f64 = lines.next().unwrap().split(',').nth(1).unwrap().parse().unwrap();
+        assert!(
+            hinted <= base * 1.05,
+            "hints should not hurt: base {base} hinted {hinted}"
+        );
+    }
+
+    #[test]
+    fn no_floor_starves_jobs() {
+        let cfg = tiny();
+        let floor = run_with(&cfg, Box::new(SlaqPolicy::new()), true, 0.0, false);
+        let no_floor = run_with(&cfg, Box::new(SlaqPolicy::without_floor()), true, 0.0, false);
+        let starved = |t: &Trace| -> usize {
+            t.epochs
+                .iter()
+                .map(|e| e.entries.iter().filter(|en| en.cores == 0).count())
+                .sum()
+        };
+        assert_eq!(starved(&floor), 0, "floor must prevent starvation");
+        assert!(
+            starved(&no_floor) > 0,
+            "removing the floor must starve some job-epochs"
+        );
+    }
+
+    #[test]
+    fn epoch_sweep_produces_all_rows() {
+        let out = ablate_epoch_length(&tiny());
+        assert_eq!(out.csv.len(), 4);
+    }
+}

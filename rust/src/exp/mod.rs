@@ -1,0 +1,28 @@
+//! Experiment harness: one driver per paper figure/table (DESIGN.md §5).
+//!
+//! | driver              | paper artifact                                  |
+//! |---------------------|-------------------------------------------------|
+//! | [`fig1_work_cdf`]   | Fig 1 — cumulative loss reduction vs time       |
+//! | [`fig2_norm_delta`] | Fig 2 — normalized ΔLoss per iteration          |
+//! | [`fig3_allocation`] | Fig 3 — core shares across loss groups          |
+//! | [`fig4_avg_loss`]   | Fig 4 — avg normalized loss, SLAQ vs fair       |
+//! | [`fig5_time_to`]    | Fig 5 — time to X% loss reduction               |
+//! | [`fig6_sched_time`] | Fig 6 — scheduler decision time at scale        |
+//! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
+//!
+//! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
+//! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
+//! the calibrated synthetic zoo at the paper's 160-job scale; Fig 6 is an
+//! allocator microbenchmark.
+
+mod ablations;
+mod real_runs;
+mod report;
+mod scalability;
+mod sim_runs;
+
+pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
+pub use real_runs::{fig1_work_cdf, fig2_norm_delta, pred_accuracy, run_zoo_real, ZooRun};
+pub use report::{render_table, ExpOutput};
+pub use scalability::fig6_sched_time;
+pub use sim_runs::{fig3_allocation, fig4_avg_loss, fig5_time_to, run_sim_trace, SimConfig};

@@ -1,0 +1,82 @@
+//! Experiment output: a CSV (the figure's data series) plus an ASCII
+//! summary table for the terminal.
+
+use crate::util::csv::Csv;
+use std::path::Path;
+
+/// The result of one experiment driver.
+pub struct ExpOutput {
+    /// Experiment id, e.g. "fig4".
+    pub id: String,
+    /// Data series (written to `<out>/<id>.csv`).
+    pub csv: Csv,
+    /// Human-readable summary printed to stdout.
+    pub summary: String,
+}
+
+impl ExpOutput {
+    /// Write the CSV under `out_dir` and return the summary.
+    pub fn write(&self, out_dir: &Path) -> std::io::Result<()> {
+        self.csv.write_to(&out_dir.join(format!("{}.csv", self.id)))
+    }
+}
+
+/// Render an aligned ASCII table.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncols, "table row width mismatch");
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (cell, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {cell:<w$} |"));
+        }
+        line.push('\n');
+        line
+    };
+    let header_cells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header_cells, &widths));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["algo", "err"],
+            &[
+                vec!["logreg".into(), "0.01".into()],
+                vec!["k".into(), "0.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines equally wide.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("algo"));
+        assert!(lines[2].contains("logreg"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        render_table(&["a", "b"], &[vec!["1".into()]]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Fig 6: scheduler decision time at scale (thousands of jobs × thousands
+//! of cores, "simulating both the jobs and worker nodes").
+
+use super::report::{render_table, ExpOutput};
+use crate::sched::{JobRequest, Policy, SlaqPolicy};
+use crate::util::csv::Csv;
+use crate::util::rng::Rng;
+use crate::workload::SyntheticGain;
+use std::time::Instant;
+
+/// Time one SLAQ allocation decision over `jobs` jobs and `cores` cores.
+/// Returns (milliseconds, gain-oracle evaluations).
+pub fn time_decision(jobs: usize, cores: u32, reps: usize, seed: u64) -> (f64, u64) {
+    let mut rng = Rng::new(seed);
+    let gains: Vec<SyntheticGain> = (0..jobs)
+        .map(|_| SyntheticGain {
+            scale: rng.range_f64(0.01, 2.0),
+            rate: rng.range_f64(0.02, 0.5),
+        })
+        .collect();
+    let caps: Vec<u32> = (0..jobs).map(|_| rng.range_u64(32, 129) as u32).collect();
+    let requests: Vec<JobRequest<'_>> = gains
+        .iter()
+        .enumerate()
+        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+        .collect();
+
+    let mut policy = SlaqPolicy::new();
+    // Warm-up run (page in, heap growth), then timed reps.
+    let _ = policy.allocate(&requests, cores);
+    let start = Instant::now();
+    for _ in 0..reps {
+        let alloc = policy.allocate(&requests, cores);
+        assert!(alloc.total() <= cores);
+    }
+    let millis = start.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    (millis, policy.last_evaluations)
+}
+
+/// Fig 6 sweep: jobs ∈ {1000, 2000, 3000, 4000} × cores ∈ {4k, 8k, 16k}.
+/// Paper: hundreds of milliseconds to a few seconds at 4000 × 16k.
+pub fn fig6_sched_time(reps: usize) -> ExpOutput {
+    let job_counts = [1000usize, 2000, 3000, 4000];
+    let core_counts = [4096u32, 8192, 16384];
+    let mut csv = Csv::new(&["jobs", "cores", "millis", "gain_evals"]);
+    let mut rows = Vec::new();
+    for &jobs in &job_counts {
+        for &cores in &core_counts {
+            let (millis, evals) = time_decision(jobs, cores, reps, 42);
+            csv.row_f64(&[jobs as f64, cores as f64, millis, evals as f64]);
+            rows.push(vec![
+                jobs.to_string(),
+                cores.to_string(),
+                format!("{millis:.1} ms"),
+                evals.to_string(),
+            ]);
+        }
+    }
+    let summary = format!(
+        "Fig 6 — SLAQ allocation decision time (paper: 100s of ms to a few s at 4000×16k)\n{}",
+        render_table(&["jobs", "cores", "decision time", "gain evals"], &rows)
+    );
+    ExpOutput { id: "fig6".into(), csv, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_timer_returns_sane_values() {
+        let (millis, evals) = time_decision(200, 1024, 1, 7);
+        assert!(millis > 0.0 && millis < 10_000.0);
+        assert!(evals > 200, "expected at least one eval per job: {evals}");
+    }
+
+    #[test]
+    fn decision_scales_with_capacity() {
+        let (_m1, e1) = time_decision(500, 1024, 1, 7);
+        let (_m2, e2) = time_decision(500, 8192, 1, 7);
+        assert!(e2 > e1, "more capacity => more grants => more evals");
+    }
+}

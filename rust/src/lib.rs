@@ -1,0 +1,26 @@
+//! SLAQ: quality-driven scheduling for distributed machine learning.
+//!
+//! Reproduction of Zhang, Stafman, Or, Freedman — "SLAQ: Quality-Driven
+//! Scheduling for Distributed Machine Learning" (ACM SoCC '17, SysML '18).
+//!
+//! Three-layer architecture:
+//! * Layer 3 (this crate): the SLAQ coordinator — loss normalization,
+//!   online quality prediction, greedy quality-driven resource allocation,
+//!   a discrete-event cluster substrate, and a PJRT runtime that executes
+//!   AOT-compiled JAX training steps.
+//! * Layer 2 (`python/compile/model.py`): JAX train-step definitions for the
+//!   paper's algorithm zoo, lowered once to HLO text artifacts.
+//! * Layer 1 (`python/compile/kernels/`): Pallas kernels for the compute
+//!   hot-spots (GLM gradients, K-Means assignment), lowered inside L2.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod exp;
+pub mod mltrain;
+pub mod predictor;
+pub mod quality;
+pub mod runtime;
+pub mod sched;
+pub mod workload;
+pub mod testkit;
+pub mod util;

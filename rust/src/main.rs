@@ -1,0 +1,289 @@
+//! `slaq` — command-line driver.
+//!
+//! Subcommands:
+//!   slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|pred|all> [flags]
+//!       regenerate paper figures (CSV under --out, summary to stdout)
+//!   slaq train --algo <name> [--iters N] [--variant small|base]
+//!       run one real training job through the PJRT runtime
+//!   slaq run [--policy slaq|fair|fifo|static] [--jobs N] [--duration S]
+//!       run a scheduling simulation and print cluster statistics
+//!   slaq check
+//!       verify artifacts load and the PJRT runtime is healthy
+
+use anyhow::{anyhow, Result};
+use slaq::cluster::ClusterSpec;
+use slaq::exp;
+use slaq::mltrain::{AlgoKind, TrainSession};
+use slaq::runtime::{Manifest, Runtime, RuntimeConfig};
+use slaq::util::cli::Cli;
+use slaq::util::logger;
+use slaq::workload::TraceConfig;
+use std::path::{Path, PathBuf};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    match cmd {
+        "exp" => cmd_exp(rest),
+        "train" => cmd_train(rest),
+        "run" => cmd_run(rest),
+        "check" => cmd_check(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'; try `slaq help`")),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
+         usage:\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|pred|all> [--out DIR] [...]\n  \
+         slaq train --algo <name> [--iters N] [--variant small|base]\n  \
+         slaq run [--policy P] [--jobs N] [--duration S]\n  \
+         slaq check\n\n\
+         run `slaq <cmd> --help` for per-command flags"
+    );
+}
+
+fn runtime(artifact_dir: &str) -> Result<(Runtime, Manifest)> {
+    let dir = Path::new(artifact_dir);
+    let rt = Runtime::cpu(RuntimeConfig { artifact_dir: dir.to_path_buf() })?;
+    let manifest = Manifest::load(dir)?;
+    Ok((rt, manifest))
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let cli = Cli::new("slaq exp — regenerate paper figures")
+        .flag("out", "results", "output directory for CSVs")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("variant", "small", "artifact variant for real runs")
+        .flag("iters", "120", "iterations per real training run")
+        .flag("jobs", "160", "jobs in the scheduling trace")
+        .flag("duration", "3000", "simulated seconds for figs 3-5")
+        .flag("reps", "3", "timing repetitions for fig 6")
+        .flag("seed", "20818", "workload seed")
+        .flag("log", "info", "log level");
+    let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
+    logger::init(parsed.get("log"));
+    let which: Vec<String> = if parsed.positional().is_empty() {
+        vec!["all".to_string()]
+    } else {
+        parsed.positional().to_vec()
+    };
+    let out_dir = PathBuf::from(parsed.get("out"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let wants = |name: &str| -> bool {
+        which.iter().any(|w| w == name || w == "all")
+    };
+
+    let mut outputs: Vec<exp::ExpOutput> = Vec::new();
+
+    if wants("fig1") || wants("fig2") || wants("pred") {
+        log::info!("running the real algorithm zoo through PJRT…");
+        let (rt, manifest) = runtime(parsed.get("artifacts"))?;
+        let runs = exp::run_zoo_real(
+            &rt,
+            &manifest,
+            parsed.get("variant"),
+            parsed.get_as::<usize>("iters").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+        )?;
+        if wants("fig1") {
+            outputs.push(exp::fig1_work_cdf(&runs));
+        }
+        if wants("fig2") {
+            outputs.push(exp::fig2_norm_delta(&runs));
+        }
+        if wants("pred") {
+            outputs.push(exp::pred_accuracy(&runs));
+        }
+    }
+
+    if wants("fig3") || wants("fig4") || wants("fig5") {
+        let cfg = exp::SimConfig {
+            trace: TraceConfig {
+                jobs: parsed.get_as::<usize>("jobs").map_err(|e| anyhow!(e))?,
+                mean_interarrival: 15.0,
+                seed: parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+            },
+            cluster: ClusterSpec::paper_testbed(),
+            epoch_secs: 3.0,
+            duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))?,
+        };
+        log::info!("simulating {} jobs under slaq…", cfg.trace.jobs);
+        let slaq_trace = exp::run_sim_trace(&cfg, "slaq");
+        log::info!("simulating {} jobs under fair…", cfg.trace.jobs);
+        let fair_trace = exp::run_sim_trace(&cfg, "fair");
+        if wants("fig3") {
+            outputs.push(exp::fig3_allocation(&slaq_trace));
+        }
+        if wants("fig4") {
+            outputs.push(exp::fig4_avg_loss(&slaq_trace, &fair_trace));
+        }
+        if wants("fig5") {
+            outputs.push(exp::fig5_time_to(&slaq_trace, &fair_trace));
+        }
+    }
+
+    if wants("fig6") {
+        log::info!("timing allocator at scale (fig 6)…");
+        outputs.push(exp::fig6_sched_time(
+            parsed.get_as::<usize>("reps").map_err(|e| anyhow!(e))?,
+        ));
+    }
+
+    // Ablations are opt-in ("ablate" or a specific one), not part of "all".
+    let wants_ablate =
+        |name: &str| which.iter().any(|w| w == name || w == "ablate");
+    if wants_ablate("ablate-hints") || wants_ablate("ablate-epoch") || wants_ablate("ablate-floor")
+    {
+        let cfg = exp::SimConfig {
+            trace: TraceConfig {
+                jobs: (parsed.get_as::<usize>("jobs").map_err(|e| anyhow!(e))? / 2).max(20),
+                mean_interarrival: 15.0,
+                seed: parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+            },
+            cluster: ClusterSpec::paper_testbed(),
+            epoch_secs: 3.0,
+            duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))? / 2.0,
+        };
+        if wants_ablate("ablate-hints") {
+            log::info!("ablation: target hints on non-convex mix…");
+            outputs.push(exp::ablate_hints(&cfg));
+        }
+        if wants_ablate("ablate-epoch") {
+            log::info!("ablation: epoch length sweep…");
+            outputs.push(exp::ablate_epoch_length(&cfg));
+        }
+        if wants_ablate("ablate-floor") {
+            log::info!("ablation: starvation floor / cold start…");
+            outputs.push(exp::ablate_floor_and_cold_start(&cfg));
+        }
+    }
+
+    if outputs.is_empty() {
+        return Err(anyhow!("nothing matched {:?}; see `slaq exp --help`", which));
+    }
+    for out in &outputs {
+        out.write(&out_dir)?;
+        println!("{}", out.summary);
+        println!("→ {}", out_dir.join(format!("{}.csv", out.id)).display());
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cli = Cli::new("slaq train — run one real training job")
+        .flag_required("algo", "model name (e.g. logreg_gd, kmeans_step)")
+        .flag("iters", "50", "iterations to run")
+        .flag("variant", "small", "artifact variant")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("seed", "7", "data/init seed");
+    let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
+    let algo = AlgoKind::from_model_name(parsed.get("algo"))
+        .ok_or_else(|| anyhow!("unknown algo '{}'", parsed.get("algo")))?;
+    let (rt, manifest) = runtime(parsed.get("artifacts"))?;
+    let mut sess = TrainSession::new(
+        &rt,
+        &manifest,
+        parsed.get("variant"),
+        algo,
+        parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+    )?;
+    let iters: usize = parsed.get_as("iters").map_err(|e| anyhow!(e))?;
+    println!("training {} ({} iterations):", algo.model_name(), iters);
+    for i in 0..iters {
+        let loss = sess.step()?;
+        if i < 10 || i % 10 == 0 || i == iters - 1 {
+            println!("  iter {i:4}  loss {loss:.6}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cli = Cli::new("slaq run — scheduling simulation")
+        .flag("policy", "slaq", "slaq|fair|fifo|static")
+        .flag("jobs", "60", "number of jobs")
+        .flag("duration", "1200", "virtual seconds")
+        .flag("seed", "20818", "workload seed")
+        .flag("nodes", "20", "worker nodes")
+        .flag("cores-per-node", "32", "cores per node")
+        .flag("dump", "", "write the full trace as JSON to this path");
+    let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
+    let cfg = exp::SimConfig {
+        trace: TraceConfig {
+            jobs: parsed.get_as::<usize>("jobs").map_err(|e| anyhow!(e))?,
+            mean_interarrival: 15.0,
+            seed: parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+        },
+        cluster: ClusterSpec {
+            nodes: parsed.get_as::<u32>("nodes").map_err(|e| anyhow!(e))?,
+            cores_per_node: parsed.get_as::<u32>("cores-per-node").map_err(|e| anyhow!(e))?,
+        },
+        epoch_secs: 3.0,
+        duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))?,
+    };
+    let trace = exp::run_sim_trace(&cfg, parsed.get("policy"));
+    if !parsed.get("dump").is_empty() {
+        std::fs::write(parsed.get("dump"), trace.to_json().to_string())?;
+        println!("trace dumped to {}", parsed.get("dump"));
+    }
+    let done = trace.jobs.iter().filter(|j| j.completion.is_some()).count();
+    let mean_sched = trace.mean_sched_millis();
+    println!(
+        "policy={} jobs={} completed={} epochs={} mean_decision={:.3}ms",
+        parsed.get("policy"),
+        trace.jobs.len(),
+        done,
+        trace.epochs.len(),
+        mean_sched
+    );
+    let times: Vec<f64> = trace
+        .jobs
+        .iter()
+        .filter_map(|j| j.time_to_reduction(0.9))
+        .collect();
+    if !times.is_empty() {
+        println!(
+            "time-to-90%: mean {:.1}s p50 {:.1}s p90 {:.1}s (over {} jobs)",
+            slaq::util::stats::mean(&times),
+            slaq::util::stats::percentile(&times, 50.0),
+            slaq::util::stats::percentile(&times, 90.0),
+            times.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_check() -> Result<()> {
+    let (rt, manifest) = runtime("artifacts")?;
+    println!("PJRT platform: {}", rt.platform_name());
+    for (vname, v) in &manifest.variants {
+        print!("variant {vname} (n={} d={}): ", v.n, v.d);
+        for name in v.models.keys() {
+            let spec = v.model(name)?;
+            rt.load(&spec.artifact)?;
+        }
+        println!("{} artifacts compile OK", v.models.len());
+    }
+    Ok(())
+}

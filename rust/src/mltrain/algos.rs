@@ -1,0 +1,189 @@
+//! The algorithm zoo: per-algorithm setup (initial parameters, dataset,
+//! hyperparameters) matching the signatures lowered by `python/compile`.
+
+use super::data::Dataset;
+use crate::predictor::CurveKind;
+use crate::util::rng::Rng;
+
+/// Every trainable algorithm in the zoo (paper §3 Setup, with the
+/// substitutions documented in DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Linear regression, gradient descent (class I).
+    LinregGd,
+    /// Logistic regression, gradient descent (class I).
+    LogregGd,
+    /// Linear SVM, hinge subgradient (class I).
+    SvmGd,
+    /// Polynomial-kernel SVM via degree-2 feature map (class I).
+    SvmPolyGd,
+    /// One-hidden-layer MLP classifier (MLPC; class I).
+    MlpGd,
+    /// K-Means / Lloyd (class II).
+    Kmeans,
+    /// Spherical GMM via EM (substitutes LDA; class II).
+    GmmEm,
+    /// Newton logistic regression (substitutes L-BFGS/GBT; class II).
+    NewtonLogreg,
+}
+
+/// All algorithms, iteration order = presentation order in the paper.
+pub const ALL_ALGOS: [AlgoKind; 8] = [
+    AlgoKind::LinregGd,
+    AlgoKind::LogregGd,
+    AlgoKind::SvmGd,
+    AlgoKind::SvmPolyGd,
+    AlgoKind::MlpGd,
+    AlgoKind::Kmeans,
+    AlgoKind::GmmEm,
+    AlgoKind::NewtonLogreg,
+];
+
+impl AlgoKind {
+    /// Model name in the artifact manifest.
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            AlgoKind::LinregGd => "linreg_gd",
+            AlgoKind::LogregGd => "logreg_gd",
+            AlgoKind::SvmGd => "svm_gd",
+            AlgoKind::SvmPolyGd => "svm_poly_gd",
+            AlgoKind::MlpGd => "mlp_gd",
+            AlgoKind::Kmeans => "kmeans_step",
+            AlgoKind::GmmEm => "gmm_em_step",
+            AlgoKind::NewtonLogreg => "newton_logreg_step",
+        }
+    }
+
+    /// Parse from the manifest model name.
+    pub fn from_model_name(name: &str) -> Option<Self> {
+        ALL_ALGOS.iter().copied().find(|a| a.model_name() == name)
+    }
+
+    /// Convergence class (paper §2): I = sublinear, II = linear/superlinear.
+    pub fn curve_kind(&self) -> CurveKind {
+        match self {
+            AlgoKind::LinregGd
+            | AlgoKind::LogregGd
+            | AlgoKind::SvmGd
+            | AlgoKind::SvmPolyGd
+            | AlgoKind::MlpGd => CurveKind::Sublinear,
+            AlgoKind::Kmeans | AlgoKind::GmmEm | AlgoKind::NewtonLogreg => {
+                CurveKind::Exponential
+            }
+        }
+    }
+
+    /// Initial trainable parameters, flattened per argument, matching the
+    /// manifest arg order.
+    pub fn init_params(&self, d: usize, k: usize, h: usize, ds: &Dataset, rng: &mut Rng) -> Vec<Vec<f32>> {
+        let small = |rng: &mut Rng, len: usize, scale: f64| -> Vec<f32> {
+            (0..len).map(|_| (scale * rng.normal()) as f32).collect()
+        };
+        match self {
+            AlgoKind::LinregGd | AlgoKind::LogregGd | AlgoKind::SvmGd => {
+                vec![vec![0.0; d]]
+            }
+            AlgoKind::SvmPolyGd => vec![vec![0.0; 2 * d + 1]],
+            AlgoKind::MlpGd => vec![
+                small(rng, d * h, 0.3),
+                vec![0.0; h],
+                small(rng, h, 0.3),
+                vec![0.0; 1], // rank-0 scalar b2
+            ],
+            AlgoKind::Kmeans => vec![ds.head_rows(k)],
+            AlgoKind::GmmEm => vec![
+                small(rng, k * d, 1.0),
+                vec![-(k as f32).ln(); k],
+            ],
+            AlgoKind::NewtonLogreg => vec![vec![0.0; d]],
+        }
+    }
+
+    /// Dataset appropriate for this algorithm.
+    pub fn make_dataset(&self, n: usize, d: usize, k: usize, rng: &mut Rng) -> Dataset {
+        match self {
+            AlgoKind::LinregGd => Dataset::regression(n, d, 0.1, rng),
+            AlgoKind::LogregGd | AlgoKind::NewtonLogreg => {
+                Dataset::classification(n, d, 0.02, false, rng)
+            }
+            AlgoKind::MlpGd => Dataset::classification(n, d, 0.02, false, rng),
+            AlgoKind::SvmGd => Dataset::classification(n, d, 0.02, true, rng),
+            AlgoKind::SvmPolyGd => Dataset::quadratic_boundary(n, d, rng),
+            AlgoKind::Kmeans | AlgoKind::GmmEm => Dataset::blobs(n, d, k, 1.0, rng),
+        }
+    }
+
+    /// Trailing hyperparameter scalars in manifest arg order (after data).
+    pub fn hypers(&self) -> Vec<f32> {
+        match self {
+            AlgoKind::LinregGd => vec![0.1, 1e-4],          // lr, reg
+            AlgoKind::LogregGd => vec![0.5, 1e-4],          // lr, reg
+            AlgoKind::SvmGd => vec![0.1, 1e-4],             // lr, reg
+            AlgoKind::SvmPolyGd => vec![0.05, 1e-4],        // lr, reg
+            AlgoKind::MlpGd => vec![0.5, 1e-4],             // lr, reg
+            AlgoKind::Kmeans => vec![],                     // none
+            AlgoKind::GmmEm => vec![],                      // none
+            AlgoKind::NewtonLogreg => vec![1e-3],           // reg
+        }
+    }
+
+    /// Whether the step consumes a target vector `y` after `x`.
+    pub fn supervised(&self) -> bool {
+        !matches!(self, AlgoKind::Kmeans | AlgoKind::GmmEm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_names_roundtrip() {
+        for a in ALL_ALGOS {
+            assert_eq!(AlgoKind::from_model_name(a.model_name()), Some(a));
+        }
+        assert_eq!(AlgoKind::from_model_name("nope"), None);
+    }
+
+    #[test]
+    fn class_assignment_matches_paper_categories() {
+        assert_eq!(AlgoKind::LogregGd.curve_kind(), CurveKind::Sublinear);
+        assert_eq!(AlgoKind::NewtonLogreg.curve_kind(), CurveKind::Exponential);
+        assert_eq!(AlgoKind::GmmEm.curve_kind(), CurveKind::Exponential);
+    }
+
+    #[test]
+    fn init_params_shapes() {
+        let mut rng = Rng::new(1);
+        let (d, k, h) = (8, 3, 4);
+        for a in ALL_ALGOS {
+            let ds = a.make_dataset(32, d, k, &mut rng);
+            let params = a.init_params(d, k, h, &ds, &mut rng);
+            match a {
+                AlgoKind::MlpGd => {
+                    assert_eq!(params.len(), 4);
+                    assert_eq!(params[0].len(), d * h);
+                    assert_eq!(params[3].len(), 1);
+                }
+                AlgoKind::GmmEm => {
+                    assert_eq!(params.len(), 2);
+                    assert_eq!(params[0].len(), k * d);
+                }
+                AlgoKind::Kmeans => {
+                    assert_eq!(params[0].len(), k * d);
+                }
+                AlgoKind::SvmPolyGd => assert_eq!(params[0].len(), 2 * d + 1),
+                _ => assert_eq!(params[0].len(), d),
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_kinds_match_supervision() {
+        let mut rng = Rng::new(2);
+        for a in ALL_ALGOS {
+            let ds = a.make_dataset(64, 4, 2, &mut rng);
+            assert_eq!(!ds.y.is_empty(), a.supervised(), "{a:?}");
+        }
+    }
+}

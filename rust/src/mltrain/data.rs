@@ -1,0 +1,151 @@
+//! Synthetic dataset generators (the stand-in for the paper's 200 GB of
+//! collected datasets — see DESIGN.md §2 for why this preserves the
+//! relevant convergence behaviour).
+//!
+//! All generation is deterministic from a seed via the crate PRNG, so every
+//! training run is reproducible end to end.
+
+use crate::util::rng::Rng;
+
+/// A dense f32 dataset: row-major features plus targets.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Rows.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Row-major `(n, d)` features.
+    pub x: Vec<f32>,
+    /// Targets `(n,)` (empty for unsupervised data).
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    /// Regression data: `y = X w* + noise`, standardized features.
+    pub fn regression(n: usize, d: usize, noise: f64, rng: &mut Rng) -> Self {
+        let w_true: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let dot: f64 = row.iter().zip(&w_true).map(|(a, b)| a * b).sum();
+            y.push((dot + noise * rng.normal()) as f32);
+            x.extend(row.iter().map(|&v| v as f32));
+        }
+        Self { n, d, x, y }
+    }
+
+    /// Binary classification with a noisy linear boundary.
+    /// `labels_pm1` selects {-1,+1} (SVM) vs {0,1} (logistic) encoding.
+    pub fn classification(
+        n: usize,
+        d: usize,
+        label_noise: f64,
+        labels_pm1: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let w_true: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let logit: f64 =
+                row.iter().zip(&w_true).map(|(a, b)| a * b).sum::<f64>() + 0.5 * rng.normal();
+            let mut label = logit > 0.0;
+            if rng.bool(label_noise) {
+                label = !label;
+            }
+            y.push(match (label, labels_pm1) {
+                (true, true) => 1.0,
+                (false, true) => -1.0,
+                (true, false) => 1.0,
+                (false, false) => 0.0,
+            });
+            x.extend(row.iter().map(|&v| v as f32));
+        }
+        Self { n, d, x, y }
+    }
+
+    /// Classification with a *quadratic* boundary (for the poly-kernel SVM):
+    /// label = sign(Σ x_i² − d).
+    pub fn quadratic_boundary(n: usize, d: usize, rng: &mut Rng) -> Self {
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let s: f64 = row.iter().map(|v| v * v).sum();
+            y.push(if s > d as f64 { 1.0 } else { -1.0 });
+            x.extend(row.iter().map(|&v| v as f32));
+        }
+        Self { n, d, x, y }
+    }
+
+    /// Gaussian blobs around `k` well-separated centers (unsupervised:
+    /// `y` is empty).
+    pub fn blobs(n: usize, d: usize, k: usize, spread: f64, rng: &mut Rng) -> Self {
+        let centers: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..d).map(|_| 4.0 * rng.normal()).collect())
+            .collect();
+        let mut x = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let c = &centers[rng.below_usize(k)];
+            for j in 0..d {
+                x.push((c[j] + spread * rng.normal()) as f32);
+            }
+        }
+        Self { n, d, x, y: Vec::new() }
+    }
+
+    /// First `k` rows (used to seed K-Means centers from data points).
+    pub fn head_rows(&self, k: usize) -> Vec<f32> {
+        assert!(k <= self.n);
+        self.x[..k * self.d].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regression_shapes_and_determinism() {
+        let a = Dataset::regression(64, 8, 0.1, &mut Rng::new(1));
+        let b = Dataset::regression(64, 8, 0.1, &mut Rng::new(1));
+        assert_eq!(a.x.len(), 64 * 8);
+        assert_eq!(a.y.len(), 64);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn classification_label_encodings() {
+        let pm = Dataset::classification(200, 4, 0.0, true, &mut Rng::new(2));
+        assert!(pm.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(pm.y.iter().any(|&v| v == 1.0));
+        assert!(pm.y.iter().any(|&v| v == -1.0));
+        let zo = Dataset::classification(200, 4, 0.0, false, &mut Rng::new(2));
+        assert!(zo.y.iter().all(|&v| v == 1.0 || v == 0.0));
+    }
+
+    #[test]
+    fn quadratic_boundary_balanced_enough() {
+        let d = Dataset::quadratic_boundary(500, 8, &mut Rng::new(3));
+        let pos = d.y.iter().filter(|&&v| v > 0.0).count();
+        assert!(pos > 100 && pos < 400, "pos = {pos}");
+    }
+
+    #[test]
+    fn blobs_unsupervised() {
+        let d = Dataset::blobs(128, 4, 3, 1.0, &mut Rng::new(4));
+        assert_eq!(d.x.len(), 128 * 4);
+        assert!(d.y.is_empty());
+    }
+
+    #[test]
+    fn head_rows_slices_correctly() {
+        let d = Dataset::blobs(16, 3, 2, 1.0, &mut Rng::new(5));
+        let h = d.head_rows(4);
+        assert_eq!(h.len(), 12);
+        assert_eq!(h[..], d.x[..12]);
+    }
+}

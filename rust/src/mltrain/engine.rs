@@ -1,0 +1,185 @@
+//! TrainSession: one live training job backed by an AOT-compiled step.
+
+use super::algos::AlgoKind;
+use crate::coordinator::LossSource;
+use crate::runtime::{first_f32, literal_f32, Manifest, Runtime};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::sync::Arc;
+
+/// A live training job: parameters + data held as device literals, advanced
+/// one BSP iteration per `step()` by executing the lowered HLO module.
+pub struct TrainSession {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    params: Vec<xla::Literal>,
+    fixed: Vec<xla::Literal>,
+    param_count: usize,
+    iterations: u64,
+    algo: AlgoKind,
+}
+
+impl TrainSession {
+    /// Create a session for `algo` using artifacts of `variant`
+    /// ("base" or "small"), with data/init generated from `seed`.
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        variant: &str,
+        algo: AlgoKind,
+        seed: u64,
+    ) -> Result<Self> {
+        Self::new_with_hypers(rt, manifest, variant, algo, seed, None)
+    }
+
+    /// Like [`TrainSession::new`], but overriding the algorithm's default
+    /// hyperparameter scalars (hyperparameters are traced inputs of the
+    /// artifact, so one compiled module serves every configuration — this
+    /// is what makes exploratory hyperparameter sweeps cheap).
+    pub fn new_with_hypers(
+        rt: &Runtime,
+        manifest: &Manifest,
+        variant: &str,
+        algo: AlgoKind,
+        seed: u64,
+        hypers: Option<&[f32]>,
+    ) -> Result<Self> {
+        let v = manifest.variant(variant)?;
+        let spec = v.model(algo.model_name())?;
+        let exe = rt
+            .load(&spec.artifact)
+            .with_context(|| format!("loading artifact for {algo:?}"))?;
+
+        let mut rng = Rng::new(seed);
+        let ds = algo.make_dataset(v.n, v.d, v.k, &mut rng);
+        let params_data = algo.init_params(v.d, v.k, v.h, &ds, &mut rng);
+        if params_data.len() != spec.param_count {
+            return Err(anyhow!(
+                "{algo:?}: init produced {} params, manifest says {}",
+                params_data.len(),
+                spec.param_count
+            ));
+        }
+
+        let mut params = Vec::with_capacity(spec.param_count);
+        for (i, data) in params_data.iter().enumerate() {
+            params.push(
+                literal_f32(&spec.args[i].shape, data)
+                    .with_context(|| format!("{algo:?} param {i}"))?,
+            );
+        }
+
+        let mut fixed = Vec::new();
+        let mut arg_idx = spec.param_count;
+        fixed.push(literal_f32(&spec.args[arg_idx].shape, &ds.x).context("x")?);
+        arg_idx += 1;
+        if algo.supervised() {
+            fixed.push(literal_f32(&spec.args[arg_idx].shape, &ds.y).context("y")?);
+            arg_idx += 1;
+        }
+        let defaults = algo.hypers();
+        let hypers_vec: Vec<f32> = match hypers {
+            Some(h) => {
+                if h.len() != defaults.len() {
+                    return Err(anyhow!(
+                        "{algo:?}: {} hyper overrides given, expects {}",
+                        h.len(),
+                        defaults.len()
+                    ));
+                }
+                h.to_vec()
+            }
+            None => defaults,
+        };
+        for (h_i, h) in hypers_vec.iter().enumerate() {
+            fixed.push(
+                literal_f32(&spec.args[arg_idx].shape, &[*h])
+                    .with_context(|| format!("hyper {h_i}"))?,
+            );
+            arg_idx += 1;
+        }
+        if arg_idx != spec.args.len() {
+            return Err(anyhow!(
+                "{algo:?}: built {arg_idx} args, manifest expects {}",
+                spec.args.len()
+            ));
+        }
+
+        Ok(Self { exe, params, fixed, param_count: spec.param_count, iterations: 0, algo })
+    }
+
+    /// Algorithm this session trains.
+    pub fn algo(&self) -> AlgoKind {
+        self.algo
+    }
+
+    /// Iterations executed so far.
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Execute one training iteration. Returns the loss evaluated at the
+    /// *pre-step* parameters (so the first call reports the initial loss).
+    pub fn step(&mut self) -> Result<f64> {
+        let inputs: Vec<&xla::Literal> = self.params.iter().chain(self.fixed.iter()).collect();
+        let result = self.exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let mut outputs = result.to_tuple()?;
+        if outputs.len() != self.param_count + 1 {
+            return Err(anyhow!(
+                "{:?}: expected {} outputs, got {}",
+                self.algo,
+                self.param_count + 1,
+                outputs.len()
+            ));
+        }
+        let loss = first_f32(&outputs[self.param_count])? as f64;
+        outputs.truncate(self.param_count);
+        self.params = outputs;
+        self.iterations += 1;
+        Ok(loss)
+    }
+
+    /// Current parameter values, flattened per argument.
+    pub fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|p| Ok(p.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+/// Adapts a [`TrainSession`] into the coordinator's [`LossSource`]: the
+/// loss for iteration `k` comes from really executing the k-th training
+/// step on the PJRT runtime.
+pub struct ExecSource {
+    session: TrainSession,
+    losses: Vec<f64>,
+}
+
+impl ExecSource {
+    /// Wrap a session.
+    pub fn new(session: TrainSession) -> Self {
+        Self { session, losses: Vec::new() }
+    }
+
+    /// Losses computed so far.
+    pub fn losses(&self) -> &[f64] {
+        &self.losses
+    }
+}
+
+impl LossSource for ExecSource {
+    fn loss_at(&mut self, iteration: u64) -> f64 {
+        while self.losses.len() <= iteration as usize {
+            let loss = self
+                .session
+                .step()
+                .expect("training step execution failed");
+            self.losses.push(loss);
+        }
+        self.losses[iteration as usize]
+    }
+
+    fn known_floor(&self) -> Option<f64> {
+        None
+    }
+}

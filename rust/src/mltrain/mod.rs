@@ -1,0 +1,15 @@
+//! Real-execution training engine: drives the AOT-compiled JAX train steps
+//! through the PJRT runtime, one iteration per call, entirely from Rust.
+//!
+//! This is the "real mode" of the coordinator: instead of a synthetic
+//! convergence curve, a job's per-iteration loss comes from actually
+//! executing the lowered (Pallas-kernel-bearing) HLO module on real
+//! synthetic datasets.
+
+mod algos;
+mod data;
+mod engine;
+
+pub use algos::{AlgoKind, ALL_ALGOS};
+pub use data::Dataset;
+pub use engine::{ExecSource, TrainSession};

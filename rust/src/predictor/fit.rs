@@ -1,0 +1,234 @@
+//! Curve fitting on loss histories: linearized initialization + LM polish.
+
+use super::linalg::polyfit_weighted;
+use super::lm::{levenberg_marquardt, LmConfig};
+use super::models::{CurveKind, CurveModel};
+use crate::quality::LossHistory;
+
+/// Fitting configuration.
+#[derive(Debug, Clone)]
+pub struct FitConfig {
+    /// Exponential history-weight decay per iteration of age (paper §2).
+    pub gamma: f64,
+    /// LM polish settings.
+    pub lm: LmConfig,
+    /// Minimum samples before attempting a fit.
+    pub min_samples: usize,
+}
+
+impl Default for FitConfig {
+    fn default() -> Self {
+        Self { gamma: 0.95, lm: LmConfig::default(), min_samples: 4 }
+    }
+}
+
+/// A fitted convergence curve plus fit diagnostics.
+#[derive(Debug, Clone)]
+pub struct FittedCurve {
+    /// The curve itself.
+    pub model: CurveModel,
+    /// Weighted mean squared residual of the fit.
+    pub residual: f64,
+    /// Relative residual: residual normalized by the weighted variance of
+    /// the target values (≈ 1 - R²; lower is better).
+    pub relative_residual: f64,
+    /// Samples used.
+    pub n_samples: usize,
+}
+
+impl FittedCurve {
+    /// Predicted loss at iteration `k` (clamped to be no higher than the
+    /// most recently observed point when extrapolating forward).
+    pub fn predict(&self, k: f64) -> f64 {
+        self.model.eval(k)
+    }
+}
+
+/// Fit `kind` to the history using exponentially weighted least squares.
+/// Returns `None` when there is not enough data or the fit degenerates.
+pub fn fit_history(history: &LossHistory, kind: CurveKind, cfg: &FitConfig) -> Option<FittedCurve> {
+    if history.len() < cfg.min_samples {
+        return None;
+    }
+    let pts = history.weighted(cfg.gamma);
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let ws: Vec<f64> = pts.iter().map(|p| p.2).collect();
+
+    let init = match kind {
+        CurveKind::Sublinear => init_sublinear(&xs, &ys, &ws)?,
+        CurveKind::Exponential => init_exponential(&xs, &ys, &ws)?,
+    };
+
+    let wsum: f64 = ws.iter().sum();
+    if wsum <= 0.0 {
+        return None;
+    }
+    let wmean = ys.iter().zip(&ws).map(|(y, w)| y * w).sum::<f64>() / wsum;
+    let wvar = ys
+        .iter()
+        .zip(&ws)
+        .map(|(y, w)| w * (y - wmean) * (y - wmean))
+        .sum::<f64>()
+        / wsum;
+    let cost_of = |m: &CurveModel| -> f64 {
+        xs.iter()
+            .zip(&ys)
+            .zip(&ws)
+            .map(|((&x, &y), &w)| {
+                let r = y - m.eval(x);
+                w * r * r
+            })
+            .sum()
+    };
+
+    // Skip the LM polish when the linearized initialization already fits to
+    // (near) numerical precision — common on clean convergence curves, and
+    // the polish is the dominant cost of a refit.
+    let init_cost = cost_of(&init);
+    let (model, cost) = if wvar > 1e-300 && init_cost / wsum / wvar < 1e-6 {
+        (init, init_cost)
+    } else {
+        let eval = move |p: &[f64], x: f64| CurveModel::from_params(kind, p).eval(x);
+        let project = move |p: &mut [f64]| {
+            let m = CurveModel::from_params(kind, p);
+            let fixed = m.params();
+            p.copy_from_slice(&fixed);
+        };
+        let rep =
+            levenberg_marquardt(&xs, &ys, &ws, &init.params(), eval, project, &cfg.lm);
+        let model = CurveModel::from_params(kind, &rep.params);
+        (model, rep.cost)
+    };
+
+    let residual = cost / wsum;
+    let relative_residual = if wvar > 1e-300 { residual / wvar } else { 0.0 };
+
+    if !residual.is_finite() {
+        return None;
+    }
+    Some(FittedCurve { model, residual, relative_residual, n_samples: xs.len() })
+}
+
+/// Initialization for the sublinear family: guess the asymptote `d` just
+/// below the minimum observed loss, then `1/(y - d) ≈ a k² + b k + c` is a
+/// weighted *quadratic* least squares problem.
+fn init_sublinear(xs: &[f64], ys: &[f64], ws: &[f64]) -> Option<CurveModel> {
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let d = ymin - 0.05 * span;
+    let gs: Vec<f64> = ys.iter().map(|&y| 1.0 / (y - d).max(1e-12)).collect();
+    let coeffs = polyfit_weighted(xs, &gs, ws, 2)?;
+    Some(CurveModel::from_params(
+        CurveKind::Sublinear,
+        &[coeffs[2], coeffs[1], coeffs[0], d],
+    ))
+}
+
+/// Initialization for the exponential family: guess the asymptote `c` just
+/// below the minimum, then `log(y - c) ≈ log m + k log μ` is a weighted
+/// *linear* least squares problem.
+fn init_exponential(xs: &[f64], ys: &[f64], ws: &[f64]) -> Option<CurveModel> {
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let c = ymin - 0.05 * span;
+    let logs: Vec<f64> = ys.iter().map(|&y| (y - c).max(1e-12).ln()).collect();
+    let coeffs = polyfit_weighted(xs, &logs, ws, 1)?;
+    let m = coeffs[0].exp();
+    let mu = coeffs[1].exp();
+    Some(CurveModel::from_params(CurveKind::Exponential, &[m, mu, c]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    fn history_from(f: impl Fn(f64) -> f64, n: u64) -> LossHistory {
+        let mut h = LossHistory::new();
+        for k in 0..n {
+            h.push(k, f(k as f64), k as f64);
+        }
+        h
+    }
+
+    #[test]
+    fn too_few_samples_returns_none() {
+        let h = history_from(|k| 1.0 / (k + 1.0), 3);
+        assert!(fit_history(&h, CurveKind::Sublinear, &FitConfig::default()).is_none());
+    }
+
+    #[test]
+    fn recovers_sublinear_curve() {
+        let h = history_from(|k| 1.0 / (0.02 * k * k + 0.3 * k + 1.0) + 0.2, 40);
+        let fit = fit_history(&h, CurveKind::Sublinear, &FitConfig::default()).unwrap();
+        assert!(fit.relative_residual < 1e-4, "rel {}", fit.relative_residual);
+        // Prediction 10 iterations ahead within 5% (the paper's claim).
+        let truth = 1.0 / (0.02 * 50.0 * 50.0 + 0.3 * 50.0 + 1.0) + 0.2;
+        let pred = fit.predict(50.0);
+        assert!((pred - truth).abs() / truth < 0.05, "pred {pred} truth {truth}");
+    }
+
+    #[test]
+    fn recovers_exponential_curve() {
+        let h = history_from(|k| 4.0 * 0.85f64.powf(k) + 0.7, 40);
+        let fit = fit_history(&h, CurveKind::Exponential, &FitConfig::default()).unwrap();
+        assert!(fit.relative_residual < 1e-6, "rel {}", fit.relative_residual);
+        let truth = 4.0 * 0.85f64.powf(50.0) + 0.7;
+        let pred = fit.predict(50.0);
+        assert!((pred - truth).abs() / truth < 0.05);
+    }
+
+    #[test]
+    fn noisy_curve_prediction_within_five_percent() {
+        // The paper's §2 claim: < 5% error predicting the +10th iteration.
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut h = LossHistory::new();
+        for k in 0..30u64 {
+            let kf = k as f64;
+            let clean = 1.0 / (0.05 * kf + 0.5) + 0.1;
+            h.push(k, clean * (1.0 + 0.005 * rng.normal()), kf);
+        }
+        let fit = fit_history(&h, CurveKind::Sublinear, &FitConfig::default()).unwrap();
+        let truth = 1.0 / (0.05 * 39.0 + 0.5) + 0.1;
+        let pred = fit.predict(39.0);
+        assert!(
+            (pred - truth).abs() / truth < 0.05,
+            "pred {pred} truth {truth}"
+        );
+    }
+
+    #[test]
+    fn fitted_curves_are_decreasing_on_horizon() {
+        forall("fits of decreasing data decrease", 40, |g| {
+            let mu = g.f64_in(0.7, 0.97);
+            let m = g.f64_in(0.5, 20.0);
+            let c = g.f64_in(0.0, 2.0);
+            let mut h = LossHistory::new();
+            for k in 0..25u64 {
+                h.push(k, m * mu.powf(k as f64) + c, k as f64);
+            }
+            let fit =
+                fit_history(&h, CurveKind::Exponential, &FitConfig::default()).unwrap();
+            assert!(fit.model.is_decreasing_on(0.0, 60.0));
+        });
+    }
+
+    #[test]
+    fn wrong_family_produces_finite_fit_and_flags_poor_quality() {
+        // A rational curve cannot track fast exponential decay (factor ~800
+        // over 30 iterations). The fit must stay finite and its
+        // relative_residual must be large enough to trigger the
+        // OnlinePredictor's family fallback (threshold 0.25).
+        let h = history_from(|k| 3.0 * 0.8f64.powf(k) + 1.0, 30);
+        let fit = fit_history(&h, CurveKind::Sublinear, &FitConfig::default()).unwrap();
+        assert!(fit.predict(40.0).is_finite());
+        assert!(
+            fit.relative_residual > 0.25,
+            "poor fit should be flagged, rel = {}",
+            fit.relative_residual
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Dense linear algebra for the (tiny) systems arising in curve fitting.
+
+/// Solve `A x = b` for square `A` (row-major, n×n) by Gaussian elimination
+/// with partial pivoting. Returns `None` when `A` is singular to working
+/// precision. `n` here is at most 4, so no blocking is needed.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // Pivot: largest magnitude in this column at or below the diagonal.
+        let mut pivot = col;
+        for row in col + 1..n {
+            if m[row * n + col].abs() > m[pivot * n + col].abs() {
+                pivot = row;
+            }
+        }
+        if m[pivot * n + col].abs() < 1e-300 {
+            return None;
+        }
+        if pivot != col {
+            for k in 0..n {
+                m.swap(col * n + k, pivot * n + k);
+            }
+            rhs.swap(col, pivot);
+        }
+        let diag = m[col * n + col];
+        for row in col + 1..n {
+            let factor = m[row * n + col] / diag;
+            if factor == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= factor * m[col * n + k];
+            }
+            rhs[row] -= factor * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = rhs[row];
+        for k in row + 1..n {
+            acc -= m[row * n + k] * x[k];
+        }
+        let d = m[row * n + row];
+        if d.abs() < 1e-300 {
+            return None;
+        }
+        x[row] = acc / d;
+    }
+    if x.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    Some(x)
+}
+
+/// Weighted polynomial least squares: fit `y ≈ Σ c_p x^p` for `p = 0..=deg`
+/// given per-sample weights. Returns coefficients lowest power first, or
+/// `None` if the normal equations are singular.
+pub fn polyfit_weighted(xs: &[f64], ys: &[f64], ws: &[f64], deg: usize) -> Option<Vec<f64>> {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), ws.len());
+    let n = deg + 1;
+    if xs.len() < n {
+        return None;
+    }
+    // Normal equations: (X^T W X) c = X^T W y.
+    let mut ata = vec![0.0; n * n];
+    let mut atb = vec![0.0; n];
+    for ((&x, &y), &w) in xs.iter().zip(ys).zip(ws) {
+        // powers[p] = x^p
+        let mut powers = vec![1.0; 2 * n - 1];
+        for p in 1..2 * n - 1 {
+            powers[p] = powers[p - 1] * x;
+        }
+        for r in 0..n {
+            for c in 0..n {
+                ata[r * n + c] += w * powers[r + c];
+            }
+            atb[r] += w * powers[r] * y;
+        }
+    }
+    solve(&ata, &atb, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn solve_identity() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [3.0, -2.0];
+        assert_eq!(solve(&a, &b, 2).unwrap(), vec![3.0, -2.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = [0.0, 1.0, 1.0, 0.0];
+        let b = [5.0, 7.0];
+        let x = solve(&a, &b, 2).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12);
+        assert!((x[1] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        let b = [1.0, 2.0];
+        assert!(solve(&a, &b, 2).is_none());
+    }
+
+    #[test]
+    fn solve_3x3() {
+        // A = [[2,1,0],[1,3,1],[0,1,2]], x = [1,2,3] -> b = [4, 10, 8]
+        let a = [2.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0];
+        let b = [4.0, 10.0, 8.0];
+        let x = solve(&a, &b, 3).unwrap();
+        for (xi, expect) in x.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((xi - expect).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn polyfit_recovers_quadratic() {
+        let xs: Vec<f64> = (0..20).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 - 3.0 * x + 0.5 * x * x).collect();
+        let ws = vec![1.0; xs.len()];
+        let c = polyfit_weighted(&xs, &ys, &ws, 2).unwrap();
+        assert!((c[0] - 2.0).abs() < 1e-8);
+        assert!((c[1] + 3.0).abs() < 1e-8);
+        assert!((c[2] - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn polyfit_weights_prefer_recent() {
+        // Piecewise data: heavily weighting the tail should fit the tail line.
+        let xs: Vec<f64> = (0..10).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| if x < 5.0 { 100.0 } else { x })
+            .collect();
+        let ws: Vec<f64> = xs.iter().map(|&x| if x < 5.0 { 1e-9 } else { 1.0 }).collect();
+        let c = polyfit_weighted(&xs, &ys, &ws, 1).unwrap();
+        assert!(c[0].abs() < 1e-3, "intercept {}", c[0]);
+        assert!((c[1] - 1.0).abs() < 1e-3, "slope {}", c[1]);
+    }
+
+    #[test]
+    fn polyfit_underdetermined_returns_none() {
+        assert!(polyfit_weighted(&[1.0], &[2.0], &[1.0], 2).is_none());
+    }
+
+    #[test]
+    fn solve_random_systems_roundtrip() {
+        forall("Ax=b roundtrip", 200, |g| {
+            let n = g.usize_in(1, 5);
+            // Diagonally dominant => well conditioned.
+            let mut a = vec![0.0; n * n];
+            for r in 0..n {
+                let mut rowsum = 0.0;
+                for c in 0..n {
+                    if r != c {
+                        let v = g.f64_in(-1.0, 1.0);
+                        a[r * n + c] = v;
+                        rowsum += v.abs();
+                    }
+                }
+                a[r * n + r] = rowsum + g.f64_in(1.0, 2.0);
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| g.f64_in(-10.0, 10.0)).collect();
+            let mut b = vec![0.0; n];
+            for r in 0..n {
+                for c in 0..n {
+                    b[r] += a[r * n + c] * x_true[c];
+                }
+            }
+            let x = solve(&a, &b, n).expect("well-conditioned system");
+            for (xi, ti) in x.iter().zip(&x_true) {
+                assert!((xi - ti).abs() < 1e-6, "{xi} vs {ti}");
+            }
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Weighted Levenberg–Marquardt for the tiny nonlinear fits in `predictor`.
+//!
+//! Generic over the residual model: the caller supplies `eval(params, x)`;
+//! Jacobians are forward-difference (the problems here have ≤ 4 parameters
+//! and tens of samples, so numeric differentiation is plenty).
+
+use super::linalg::solve;
+
+/// LM solver configuration.
+#[derive(Debug, Clone)]
+pub struct LmConfig {
+    /// Maximum outer iterations.
+    pub max_iters: usize,
+    /// Initial damping factor λ.
+    pub lambda_init: f64,
+    /// Multiplier applied to λ on a rejected step.
+    pub lambda_up: f64,
+    /// Divisor applied to λ on an accepted step.
+    pub lambda_down: f64,
+    /// Relative cost-improvement threshold for convergence.
+    pub tol: f64,
+}
+
+impl Default for LmConfig {
+    fn default() -> Self {
+        // max_iters/tol tuned on the predictor_fit bench: beyond ~30
+        // accepted steps the fits on (noisy) convergence curves change by
+        // <1e-8 relative — see EXPERIMENTS.md §Perf.
+        Self { max_iters: 30, lambda_init: 1e-3, lambda_up: 8.0, lambda_down: 4.0, tol: 1e-9 }
+    }
+}
+
+/// Outcome of an LM run.
+#[derive(Debug, Clone)]
+pub struct LmReport {
+    /// Optimized parameters.
+    pub params: Vec<f64>,
+    /// Final weighted sum of squared residuals.
+    pub cost: f64,
+    /// Iterations actually performed.
+    pub iters: usize,
+    /// Whether the tolerance was reached (vs. hitting `max_iters`).
+    pub converged: bool,
+}
+
+/// Minimize `Σ w_i (y_i - eval(p, x_i))²` over `p` starting at `p0`.
+///
+/// `project` is applied to candidate parameter vectors to keep them inside
+/// the model family's valid region (e.g. `0 < μ < 1`).
+pub fn levenberg_marquardt(
+    xs: &[f64],
+    ys: &[f64],
+    ws: &[f64],
+    p0: &[f64],
+    eval: impl Fn(&[f64], f64) -> f64,
+    project: impl Fn(&mut [f64]),
+    cfg: &LmConfig,
+) -> LmReport {
+    assert_eq!(xs.len(), ys.len());
+    assert_eq!(xs.len(), ws.len());
+    let np = p0.len();
+    let mut params = p0.to_vec();
+    project(&mut params);
+    let cost_of = |p: &[f64]| -> f64 {
+        xs.iter()
+            .zip(ys)
+            .zip(ws)
+            .map(|((&x, &y), &w)| {
+                let r = y - eval(p, x);
+                w * r * r
+            })
+            .sum()
+    };
+    let mut cost = cost_of(&params);
+    let mut lambda = cfg.lambda_init;
+    let mut iters = 0;
+    let mut converged = false;
+
+    for _ in 0..cfg.max_iters {
+        iters += 1;
+        // Build J^T W J and J^T W r with forward differences.
+        let mut jtj = vec![0.0; np * np];
+        let mut jtr = vec![0.0; np];
+        let base: Vec<f64> = xs.iter().map(|&x| eval(&params, x)).collect();
+        let mut jac = vec![0.0; xs.len() * np]; // row-major per sample
+        for p_idx in 0..np {
+            let h = 1e-6 * params[p_idx].abs().max(1e-6);
+            let mut bumped = params.clone();
+            bumped[p_idx] += h;
+            for (i, &x) in xs.iter().enumerate() {
+                jac[i * np + p_idx] = (eval(&bumped, x) - base[i]) / h;
+            }
+        }
+        for (i, ((&_x, &y), &w)) in xs.iter().zip(ys).zip(ws).enumerate() {
+            let r = y - base[i];
+            for a in 0..np {
+                let ja = jac[i * np + a];
+                jtr[a] += w * ja * r;
+                for b in 0..np {
+                    jtj[a * np + b] += w * ja * jac[i * np + b];
+                }
+            }
+        }
+        // Damped step: (J^T W J + λ diag) δ = J^T W r
+        let mut accepted = false;
+        for _ in 0..8 {
+            let mut damped = jtj.clone();
+            for d in 0..np {
+                let diag = jtj[d * np + d];
+                damped[d * np + d] = diag + lambda * diag.max(1e-12);
+            }
+            if let Some(delta) = solve(&damped, &jtr, np) {
+                let mut cand = params.clone();
+                for (c, d) in cand.iter_mut().zip(&delta) {
+                    *c += d;
+                }
+                project(&mut cand);
+                let cand_cost = cost_of(&cand);
+                if cand_cost.is_finite() && cand_cost < cost {
+                    let rel = (cost - cand_cost) / cost.max(1e-300);
+                    params = cand;
+                    cost = cand_cost;
+                    lambda = (lambda / cfg.lambda_down).max(1e-12);
+                    accepted = true;
+                    if rel < cfg.tol {
+                        converged = true;
+                    }
+                    break;
+                }
+            }
+            lambda *= cfg.lambda_up;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+        if converged || !accepted {
+            if !accepted {
+                converged = cost.is_finite();
+            }
+            break;
+        }
+    }
+    LmReport { params, cost, iters, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform_w(n: usize) -> Vec<f64> {
+        vec![1.0; n]
+    }
+
+    #[test]
+    fn fits_exponential_decay_exactly() {
+        let xs: Vec<f64> = (0..30).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&k| 2.5 * 0.8f64.powf(k) + 0.3).collect();
+        let eval = |p: &[f64], x: f64| p[0] * p[1].powf(x) + p[2];
+        let project = |p: &mut [f64]| {
+            p[0] = p[0].max(1e-12);
+            p[1] = p[1].clamp(1e-6, 0.999_999);
+        };
+        let rep = levenberg_marquardt(
+            &xs,
+            &ys,
+            &uniform_w(xs.len()),
+            &[1.0, 0.5, 0.0],
+            eval,
+            project,
+            &LmConfig::default(),
+        );
+        assert!(rep.cost < 1e-12, "cost {}", rep.cost);
+        assert!((rep.params[0] - 2.5).abs() < 1e-4);
+        assert!((rep.params[1] - 0.8).abs() < 1e-5);
+        assert!((rep.params[2] - 0.3).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fits_rational_curve() {
+        // y = 1/(0.05 k^2 + 0.4 k + 1.2) + 0.1
+        let xs: Vec<f64> = (0..40).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&k| 1.0 / (0.05 * k * k + 0.4 * k + 1.2) + 0.1)
+            .collect();
+        let eval = |p: &[f64], x: f64| {
+            let q = p[0] * x * x + p[1] * x + p[2];
+            if q <= 1e-12 { p[3] } else { 1.0 / q + p[3] }
+        };
+        let project = |p: &mut [f64]| {
+            p[0] = p[0].max(0.0);
+            p[2] = p[2].max(1e-9);
+        };
+        let rep = levenberg_marquardt(
+            &xs,
+            &ys,
+            &uniform_w(xs.len()),
+            &[0.01, 0.1, 1.0, 0.0],
+            eval,
+            project,
+            &LmConfig::default(),
+        );
+        assert!(rep.cost < 1e-10, "cost {}", rep.cost);
+        assert!((rep.params[3] - 0.1).abs() < 1e-3, "d {}", rep.params[3]);
+    }
+
+    #[test]
+    fn respects_weights() {
+        // Two regimes; massive weight on the second.
+        let xs: Vec<f64> = (0..10).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| if x < 5.0 { 10.0 } else { 1.0 }).collect();
+        let ws: Vec<f64> = xs.iter().map(|&x| if x < 5.0 { 1e-9 } else { 1.0 }).collect();
+        // Constant model y = p0.
+        let rep = levenberg_marquardt(
+            &xs,
+            &ys,
+            &ws,
+            &[5.0],
+            |p, _| p[0],
+            |_| {},
+            &LmConfig::default(),
+        );
+        assert!((rep.params[0] - 1.0).abs() < 1e-4, "got {}", rep.params[0]);
+    }
+
+    #[test]
+    fn degenerate_flat_data_terminates() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [1.0, 1.0, 1.0];
+        let rep = levenberg_marquardt(
+            &xs,
+            &ys,
+            &uniform_w(3),
+            &[1.0, 0.5, 1.0],
+            |p, x| p[0] * p[1].powf(x) + p[2],
+            |p| p[1] = p[1].clamp(1e-6, 0.999_999),
+            &LmConfig::default(),
+        );
+        assert!(rep.cost.is_finite());
+        assert!(rep.iters <= LmConfig::default().max_iters);
+    }
+
+    #[test]
+    fn noisy_fit_recovers_asymptote_roughly() {
+        let mut rng = crate::util::rng::Rng::new(99);
+        let xs: Vec<f64> = (0..60).map(|k| k as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&k| 3.0 * 0.9f64.powf(k) + 0.5 + 0.01 * rng.normal())
+            .collect();
+        let rep = levenberg_marquardt(
+            &xs,
+            &ys,
+            &uniform_w(xs.len()),
+            &[1.0, 0.8, 0.0],
+            |p, x| p[0] * p[1].powf(x) + p[2],
+            |p| {
+                p[0] = p[0].max(1e-12);
+                p[1] = p[1].clamp(1e-6, 0.999_999);
+            },
+            &LmConfig::default(),
+        );
+        assert!((rep.params[2] - 0.5).abs() < 0.05, "c {}", rep.params[2]);
+    }
+}

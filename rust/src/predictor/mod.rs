@@ -1,0 +1,25 @@
+//! Online quality prediction (paper §2, "Predicting Quality Improvement").
+//!
+//! SLAQ fits analytical convergence curves to each job's recent
+//! (exponentially weighted) loss history and extrapolates them a short
+//! horizon ahead:
+//!
+//! * class I (first-order / sublinear, e.g. gradient descent):
+//!   `f(k) = 1 / (a·k² + b·k + c) + d`
+//! * class II (linear / superlinear, e.g. L-BFGS, Newton, EM):
+//!   `f(k) = m·μ^k + c` with `0 < μ < 1`
+//!
+//! Fitting is weighted least squares: a robust linearized initialization
+//! followed by a Levenberg–Marquardt polish.
+
+mod fit;
+mod linalg;
+mod lm;
+mod models;
+mod online;
+
+pub use fit::{fit_history, FitConfig, FittedCurve};
+pub use linalg::{polyfit_weighted, solve};
+pub use lm::{levenberg_marquardt, LmConfig, LmReport};
+pub use models::{CurveKind, CurveModel};
+pub use online::{OnlinePredictor, PredictionError};

@@ -1,0 +1,180 @@
+//! Analytical convergence-curve families (paper §2).
+//!
+//! Class I (first-order methods, sublinear `O(1/k)`–`O(1/k²)`):
+//!   `f(k) = 1 / (a·k² + b·k + c) + d`
+//! Class II (linear / superlinear methods — L-BFGS, Newton, EM):
+//!   `f(k) = m·μ^k + c`, `0 < μ < 1`
+//!
+//! The exponential family is parameterized as `m·μ^k + c` rather than the
+//! paper's `μ^(k−b) + c`; the two are identical with `m = μ^{−b}`, and the
+//! multiplicative form is better conditioned for least squares.
+
+/// Which analytical family a curve belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CurveKind {
+    /// `1/(a k² + b k + c) + d` — first-order (gradient-descent-like).
+    Sublinear,
+    /// `m μ^k + c` — linear/superlinear (Newton, EM, K-Means-like).
+    Exponential,
+}
+
+/// A concrete fitted curve: evaluate and differentiate w.r.t. parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CurveModel {
+    /// Parameters `[a, b, c, d]`.
+    Sublinear { a: f64, b: f64, c: f64, d: f64 },
+    /// Parameters `[m, mu, c]`.
+    Exponential { m: f64, mu: f64, c: f64 },
+}
+
+impl CurveModel {
+    /// Family of this model.
+    pub fn kind(&self) -> CurveKind {
+        match self {
+            CurveModel::Sublinear { .. } => CurveKind::Sublinear,
+            CurveModel::Exponential { .. } => CurveKind::Exponential,
+        }
+    }
+
+    /// Evaluate the loss prediction at (possibly fractional) iteration `k`.
+    pub fn eval(&self, k: f64) -> f64 {
+        match *self {
+            CurveModel::Sublinear { a, b, c, d } => {
+                let q = a * k * k + b * k + c;
+                // Guard the pole: treat a non-positive denominator as "far
+                // converged" and return the asymptote.
+                if q <= 1e-12 {
+                    d
+                } else {
+                    1.0 / q + d
+                }
+            }
+            CurveModel::Exponential { m, mu, c } => m * mu.powf(k) + c,
+        }
+    }
+
+    /// Asymptotic loss as `k → ∞`.
+    pub fn asymptote(&self) -> f64 {
+        match *self {
+            CurveModel::Sublinear { d, .. } => d,
+            CurveModel::Exponential { c, .. } => c,
+        }
+    }
+
+    /// Parameters as a vector (for the LM fitter).
+    pub fn params(&self) -> Vec<f64> {
+        match *self {
+            CurveModel::Sublinear { a, b, c, d } => vec![a, b, c, d],
+            CurveModel::Exponential { m, mu, c } => vec![m, mu, c],
+        }
+    }
+
+    /// Rebuild a model of the same family from a parameter vector,
+    /// projecting back into the family's valid region.
+    ///
+    /// Sublinear: `a, b ≥ 0` makes the denominator non-decreasing on
+    /// `k ≥ 0`, so `f` is monotone non-increasing — the convergence
+    /// assumption of the paper's class-I family. Without the `b ≥ 0`
+    /// constraint, least squares on a handful of early samples happily
+    /// produces step-shaped fits (`a ≈ −b` huge) that are flat beyond the
+    /// first iteration and predict zero future progress.
+    pub fn from_params(kind: CurveKind, p: &[f64]) -> CurveModel {
+        match kind {
+            CurveKind::Sublinear => CurveModel::Sublinear {
+                a: p[0].max(0.0),
+                b: p[1].max(0.0),
+                c: p[2].max(1e-9),
+                d: p[3],
+            },
+            CurveKind::Exponential => CurveModel::Exponential {
+                m: p[0].max(1e-12),
+                mu: p[1].clamp(1e-6, 0.999_999),
+                c: p[2],
+            },
+        }
+    }
+
+    /// Number of free parameters.
+    pub fn param_count(kind: CurveKind) -> usize {
+        match kind {
+            CurveKind::Sublinear => 4,
+            CurveKind::Exponential => 3,
+        }
+    }
+
+    /// True if the curve is non-increasing over `[k0, k1]` (sampled check).
+    pub fn is_decreasing_on(&self, k0: f64, k1: f64) -> bool {
+        let steps = 16;
+        let mut prev = self.eval(k0);
+        for i in 1..=steps {
+            let k = k0 + (k1 - k0) * i as f64 / steps as f64;
+            let v = self.eval(k);
+            if v > prev + 1e-9 {
+                return false;
+            }
+            prev = v;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sublinear_eval_matches_formula() {
+        let m = CurveModel::Sublinear { a: 0.1, b: 1.0, c: 2.0, d: 0.5 };
+        let k = 3.0;
+        let expect = 1.0 / (0.1 * 9.0 + 3.0 + 2.0) + 0.5;
+        assert!((m.eval(k) - expect).abs() < 1e-12);
+        assert_eq!(m.asymptote(), 0.5);
+    }
+
+    #[test]
+    fn sublinear_pole_guard() {
+        let m = CurveModel::Sublinear { a: 0.0, b: 0.0, c: 0.0, d: 0.3 };
+        assert_eq!(m.eval(10.0), 0.3);
+    }
+
+    #[test]
+    fn exponential_eval_matches_formula() {
+        let m = CurveModel::Exponential { m: 2.0, mu: 0.5, c: 1.0 };
+        assert!((m.eval(0.0) - 3.0).abs() < 1e-12);
+        assert!((m.eval(1.0) - 2.0).abs() < 1e-12);
+        assert!((m.eval(2.0) - 1.5).abs() < 1e-12);
+        assert_eq!(m.asymptote(), 1.0);
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let m = CurveModel::Sublinear { a: 0.1, b: 0.2, c: 0.3, d: 0.4 };
+        let p = m.params();
+        let m2 = CurveModel::from_params(CurveKind::Sublinear, &p);
+        assert_eq!(m, m2);
+
+        let e = CurveModel::Exponential { m: 1.5, mu: 0.9, c: 0.1 };
+        let e2 = CurveModel::from_params(CurveKind::Exponential, &e.params());
+        assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn from_params_projects_into_valid_region() {
+        let e = CurveModel::Exponential { m: 1.0, mu: 0.5, c: 0.0 };
+        let mut p = e.params();
+        p[1] = 1.7; // invalid mu > 1
+        let e2 = CurveModel::from_params(CurveKind::Exponential, &p);
+        match e2 {
+            CurveModel::Exponential { mu, .. } => assert!(mu < 1.0),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn decreasing_check() {
+        let dec = CurveModel::Exponential { m: 1.0, mu: 0.8, c: 0.0 };
+        assert!(dec.is_decreasing_on(0.0, 50.0));
+        let inc = CurveModel::Sublinear { a: 0.0, b: -0.01, c: 1.0, d: 0.0 };
+        assert!(!inc.is_decreasing_on(0.0, 50.0));
+    }
+}

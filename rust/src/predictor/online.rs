@@ -1,0 +1,470 @@
+//! Per-job online predictor: maintains the loss history, refits the
+//! convergence curve each scheduling epoch, and answers "what loss will this
+//! job reach by iteration k?" queries for the allocator.
+
+use super::fit::{fit_history, FitConfig, FittedCurve};
+use super::models::CurveKind;
+use crate::quality::{DeltaNormalizer, LossHistory};
+
+/// Record of one prediction checked against reality (for the paper's
+/// "< 5% error at +10 iterations" accuracy table).
+#[derive(Debug, Clone, Copy)]
+pub struct PredictionError {
+    /// Iteration the prediction was made at.
+    pub at_iteration: u64,
+    /// Iteration the prediction was made for.
+    pub target_iteration: u64,
+    /// Predicted loss.
+    pub predicted: f64,
+    /// Actual loss later observed.
+    pub actual: f64,
+}
+
+impl PredictionError {
+    /// Relative error |pred - actual| / |actual|.
+    pub fn relative(&self) -> f64 {
+        (self.predicted - self.actual).abs() / self.actual.abs().max(1e-12)
+    }
+}
+
+/// Online predictor for a single job.
+#[derive(Debug, Clone)]
+pub struct OnlinePredictor {
+    kind: CurveKind,
+    cfg: FitConfig,
+    history: LossHistory,
+    normalizer: DeltaNormalizer,
+    fit: Option<FittedCurve>,
+    /// True when observations arrived since the last fit (lazy refit).
+    dirty: bool,
+    /// User-provided target loss (paper §4: the proposed remedy for
+    /// non-convex jobs whose curves do not fit the analytical families —
+    /// "let users provide the scheduler with a hint of their target
+    /// loss", e.g. from prior trials or state-of-the-art results).
+    target_hint: Option<f64>,
+    /// EWMA of the fraction of remaining-loss-to-target closed per
+    /// iteration (drives hint-based prediction).
+    hint_rate: crate::util::stats::Ewma,
+    /// Non-finite losses observed and discarded (robustness counter).
+    rejected_samples: u64,
+    /// Outstanding predictions awaiting their target iteration.
+    pending: Vec<(u64, f64)>,
+    /// Resolved prediction errors.
+    errors: Vec<PredictionError>,
+    /// Fit window: keep this many recent samples.
+    window: usize,
+}
+
+impl OnlinePredictor {
+    /// Create a predictor for a job whose optimizer belongs to `kind`.
+    ///
+    /// The default window of 128 recent samples bounds the cost of a refit
+    /// while comfortably covering the horizon the scheduler extrapolates
+    /// over (a few epochs ≈ tens of iterations).
+    pub fn new(kind: CurveKind) -> Self {
+        Self::with_config(kind, FitConfig::default(), 128)
+    }
+
+    /// Full-control constructor.
+    pub fn with_config(kind: CurveKind, cfg: FitConfig, window: usize) -> Self {
+        Self {
+            kind,
+            cfg,
+            history: LossHistory::new(),
+            normalizer: DeltaNormalizer::new(),
+            fit: None,
+            dirty: false,
+            target_hint: None,
+            hint_rate: crate::util::stats::Ewma::new(0.2),
+            rejected_samples: 0,
+            pending: Vec::new(),
+            errors: Vec::new(),
+            window,
+        }
+    }
+
+    /// Provide a target-loss hint (paper §4, non-convex future work): when
+    /// the analytical families fit poorly, predictions fall back to
+    /// geometric progress toward this target instead.
+    pub fn set_target_hint(&mut self, target_loss: f64) {
+        assert!(target_loss.is_finite());
+        self.target_hint = Some(target_loss);
+    }
+
+    /// Number of non-finite loss observations that were rejected.
+    pub fn rejected_samples(&self) -> u64 {
+        self.rejected_samples
+    }
+
+    /// Declared convergence family.
+    pub fn kind(&self) -> CurveKind {
+        self.kind
+    }
+
+    /// Observe a completed iteration. Resolves any pending predictions whose
+    /// target has been reached and marks the fit stale.
+    ///
+    /// Non-finite losses (NaN/inf from a diverged job) are counted and
+    /// discarded: one bad sample must not poison the normalizer's maximum
+    /// or the least-squares fit.
+    pub fn observe(&mut self, iteration: u64, loss: f64, time: f64) {
+        if !loss.is_finite() {
+            self.rejected_samples += 1;
+            return;
+        }
+        // Track progress toward the target hint, if any.
+        if let (Some(target), Some(prev)) = (self.target_hint, self.current_loss()) {
+            let remaining = prev - target;
+            if remaining > 1e-12 {
+                let closed = ((prev - loss) / remaining).clamp(-1.0, 1.0);
+                self.hint_rate.push(closed.max(0.0));
+            }
+        }
+        // Resolve matured predictions.
+        let mut resolved = Vec::new();
+        self.pending.retain(|&(target, predicted)| {
+            if iteration >= target {
+                resolved.push((target, predicted));
+                false
+            } else {
+                true
+            }
+        });
+        for (target, predicted) in resolved {
+            self.errors.push(PredictionError {
+                at_iteration: self.history.last().map(|s| s.iteration).unwrap_or(0),
+                target_iteration: target,
+                predicted,
+                actual: loss,
+            });
+        }
+        self.history.push(iteration, loss, time);
+        self.history.truncate_to_recent(self.window);
+        self.normalizer.observe(loss);
+        // Refitting is deferred (lazy): a job completes several iterations
+        // per scheduling epoch, but the fit is only consumed once per epoch
+        // when the allocator queries gains. `refresh_fit` is the sync point.
+        self.dirty = true;
+    }
+
+    /// Refit the convergence curve if new observations arrived since the
+    /// last fit. The coordinator calls this once per scheduling epoch per
+    /// active job, right before building the allocator's gain oracles.
+    pub fn refresh_fit(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        self.dirty = false;
+        self.fit = fit_history(&self.history, self.kind, &self.cfg);
+        // Fallback: if the declared family fits poorly, try the other one
+        // (paper: categories are a prior, not ground truth).
+        if let Some(fit) = &self.fit {
+            if fit.relative_residual > 0.25 {
+                let other = match self.kind {
+                    CurveKind::Sublinear => CurveKind::Exponential,
+                    CurveKind::Exponential => CurveKind::Sublinear,
+                };
+                if let Some(alt) = fit_history(&self.history, other, &self.cfg) {
+                    if alt.relative_residual < fit.relative_residual {
+                        self.fit = Some(alt);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Latest observed loss.
+    pub fn current_loss(&self) -> Option<f64> {
+        self.history.last().map(|s| s.loss)
+    }
+
+    /// Latest observed iteration.
+    pub fn current_iteration(&self) -> Option<u64> {
+        self.history.last().map(|s| s.iteration)
+    }
+
+    /// Current fitted curve, if enough history has accumulated.
+    pub fn fit(&self) -> Option<&FittedCurve> {
+        self.fit.as_ref()
+    }
+
+    /// Predict the raw loss after `extra` more iterations.
+    pub fn predict_loss_after(&self, extra: u64) -> Option<f64> {
+        self.predict_loss_after_f(extra as f64)
+    }
+
+    /// Predict the raw loss after a possibly *fractional* number of extra
+    /// iterations. Fractional horizons matter to the allocator: within one
+    /// short epoch a marginal core often buys only part of an iteration,
+    /// and flooring would make every marginal gain zero (a step function
+    /// greedy allocation cannot climb).
+    ///
+    /// Predictions are clamped to `[asymptote-aware floor, current loss]`:
+    /// a convergence curve never predicts the loss rising, and never below
+    /// the fitted asymptote.
+    pub fn predict_loss_after_f(&self, extra: f64) -> Option<f64> {
+        let last = self.history.last()?;
+        if extra <= 0.0 {
+            return Some(last.loss);
+        }
+        match &self.fit {
+            Some(fit) => {
+                let k = last.iteration as f64 + extra;
+                let raw = fit.predict(k);
+                let floor = fit.model.asymptote().min(last.loss);
+                Some(raw.clamp(floor, last.loss))
+            }
+            None => {
+                let reduction = self.geometric_reduction(extra);
+                Some((last.loss - reduction).max(0.0).min(last.loss))
+            }
+        }
+    }
+
+    /// Model-free loss-reduction estimate: assume the last observed delta
+    /// repeats with geometric decay 0.9 per iteration (closed-form partial
+    /// geometric sum, supporting fractional horizons). Used before a curve
+    /// fit exists and when the fit is locally non-decreasing.
+    fn geometric_reduction(&self, extra: f64) -> f64 {
+        let s = self.history.samples();
+        if s.len() >= 2 {
+            let last_delta = (s[s.len() - 2].loss - s[s.len() - 1].loss).max(0.0);
+            let q: f64 = 0.9;
+            last_delta * q * (1.0 - q.powf(extra)) / (1.0 - q)
+        } else {
+            0.0
+        }
+    }
+
+    /// Predicted *normalized* loss reduction from running `extra` more
+    /// (possibly fractional) iterations — the scheduler's objective
+    /// currency (`Loss(t) − Loss(t+T)` in the paper's formulation).
+    ///
+    /// The reduction is evaluated curve-to-curve, `f(k) − f(k+extra)`,
+    /// rather than anchored at the last noisy observation: for fractional
+    /// horizons the model's step `Δf` is often smaller than the fit's
+    /// residual at the newest point, and anchoring would clamp every
+    /// sub-iteration gain to zero (starving jobs with expensive
+    /// iterations). The result is still capped by how far the *actual*
+    /// current loss sits above the fitted asymptote.
+    pub fn predicted_normalized_reduction(&self, extra: f64) -> f64 {
+        let Some(last) = self.history.last() else {
+            return 0.0;
+        };
+        if extra <= 0.0 {
+            return 0.0;
+        }
+        // Paper §4 (non-convex future work): when the analytical fit is
+        // unreliable and the user supplied a target-loss hint, predict
+        // geometric progress toward the target at the observed per-
+        // iteration closing rate instead of trusting the curve.
+        let fit_unreliable = self
+            .fit
+            .as_ref()
+            .map(|f| f.relative_residual > 0.25)
+            .unwrap_or(true);
+        if fit_unreliable {
+            if let (Some(target), Some(rate)) = (self.target_hint, self.hint_rate.value()) {
+                let remaining = (last.loss - target).max(0.0);
+                let rate = rate.clamp(0.0, 1.0);
+                let reduction = remaining * (1.0 - (1.0 - rate).powf(extra));
+                return self.normalizer.normalize(reduction);
+            }
+        }
+
+        let fit_reduction = self.fit.as_ref().and_then(|fit| {
+            let k = last.iteration as f64;
+            let raw = fit.predict(k) - fit.predict(k + extra);
+            if raw > 0.0 {
+                let cap = (last.loss - fit.model.asymptote()).max(0.0);
+                Some(raw.min(cap))
+            } else {
+                // A young/noisy fit can be locally *increasing*; trusting
+                // it would predict zero gain and starve the job. Fall back
+                // to the model-free geometric estimate below.
+                None
+            }
+        });
+        let reduction = fit_reduction.unwrap_or_else(|| {
+            self.geometric_reduction(extra).max(0.0)
+        });
+        self.normalizer.normalize(reduction)
+    }
+
+    /// Register a prediction for the `extra`-th future iteration so its
+    /// error can be measured when that iteration completes.
+    pub fn record_prediction(&mut self, extra: u64) {
+        if let (Some(cur_it), Some(pred)) =
+            (self.current_iteration(), self.predict_loss_after(extra))
+        {
+            self.pending.push((cur_it + extra, pred));
+        }
+    }
+
+    /// Resolved prediction errors so far.
+    pub fn errors(&self) -> &[PredictionError] {
+        &self.errors
+    }
+
+    /// Access the loss history.
+    pub fn history(&self) -> &LossHistory {
+        &self.history
+    }
+
+    /// Access the delta normalizer.
+    pub fn normalizer(&self) -> &DeltaNormalizer {
+        &self.normalizer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(p: &mut OnlinePredictor, f: impl Fn(f64) -> f64, n: u64) {
+        for k in 0..n {
+            p.observe(k, f(k as f64), k as f64);
+        }
+        // Fits are lazy; tests consume them right after feeding.
+        p.refresh_fit();
+    }
+
+    #[test]
+    fn predicts_exponential_convergence() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut p, |k| 5.0 * 0.9f64.powf(k) + 1.0, 25);
+        let pred = p.predict_loss_after(10).unwrap();
+        let truth = 5.0 * 0.9f64.powf(34.0) + 1.0;
+        assert!((pred - truth).abs() / truth < 0.05, "pred {pred} truth {truth}");
+    }
+
+    #[test]
+    fn predicts_sublinear_convergence() {
+        let mut p = OnlinePredictor::new(CurveKind::Sublinear);
+        feed(&mut p, |k| 1.0 / (0.1 * k + 0.5) + 0.2, 25);
+        let pred = p.predict_loss_after(10).unwrap();
+        let truth = 1.0 / (0.1 * 34.0 + 0.5) + 0.2;
+        assert!((pred - truth).abs() / truth < 0.05, "pred {pred} truth {truth}");
+    }
+
+    #[test]
+    fn prediction_never_exceeds_current_loss() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut p, |k| 5.0 * 0.9f64.powf(k) + 1.0, 20);
+        let cur = p.current_loss().unwrap();
+        for extra in [1, 5, 50, 500] {
+            assert!(p.predict_loss_after(extra).unwrap() <= cur + 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_extra_returns_current() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut p, |k| 5.0 - k, 3);
+        assert_eq!(p.predict_loss_after(0), p.current_loss());
+    }
+
+    #[test]
+    fn cold_start_predictions_are_safe() {
+        let mut p = OnlinePredictor::new(CurveKind::Sublinear);
+        assert!(p.predict_loss_after(5).is_none());
+        p.observe(0, 10.0, 0.0);
+        assert_eq!(p.predict_loss_after(5), Some(10.0)); // one sample: flat
+        p.observe(1, 8.0, 1.0);
+        let pred = p.predict_loss_after(3).unwrap();
+        assert!(pred < 8.0 && pred >= 0.0);
+    }
+
+    #[test]
+    fn normalized_reduction_positive_while_improving() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut p, |k| 5.0 * 0.8f64.powf(k) + 1.0, 15);
+        let red = p.predicted_normalized_reduction(10.0);
+        assert!(red > 0.0);
+        // A converged job predicts ~no reduction.
+        let mut q = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut q, |k| 5.0 * 0.8f64.powf(k) + 1.0, 120);
+        assert!(q.predicted_normalized_reduction(10.0) < 0.01 * red);
+    }
+
+    #[test]
+    fn prediction_errors_resolve_and_meet_paper_bound() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        // Warm up, then record a +10 prediction at each subsequent step.
+        for k in 0..40u64 {
+            p.observe(k, 5.0 * 0.9f64.powf(k as f64) + 1.0, k as f64);
+            if k >= 10 {
+                p.refresh_fit();
+                p.record_prediction(10);
+            }
+        }
+        assert!(!p.errors().is_empty());
+        for e in p.errors() {
+            assert!(e.relative() < 0.05, "error {} at {:?}", e.relative(), e);
+        }
+    }
+
+    #[test]
+    fn non_finite_losses_are_rejected() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        p.observe(0, 5.0, 0.0);
+        p.observe(1, f64::NAN, 1.0);
+        p.observe(2, f64::INFINITY, 2.0);
+        p.observe(3, 4.0, 3.0);
+        assert_eq!(p.rejected_samples(), 2);
+        assert_eq!(p.history().len(), 2);
+        assert_eq!(p.current_loss(), Some(4.0));
+        // Normalizer base must stay finite.
+        assert!(p.normalizer().max_abs_delta().is_finite());
+    }
+
+    #[test]
+    fn target_hint_drives_prediction_for_nonconvex_losses() {
+        // Non-monotone "non-convex" trajectory: big dips + partial rebounds,
+        // trending toward 1.0. Neither analytical family fits this well.
+        let losses = [
+            10.0, 8.0, 8.9, 6.5, 7.2, 5.0, 5.6, 4.0, 4.5, 3.2, 3.6, 2.6, 2.9,
+            2.2, 2.45, 1.9, 2.05, 1.7,
+        ];
+        let mut hinted = OnlinePredictor::new(CurveKind::Sublinear);
+        hinted.set_target_hint(1.0);
+        let mut blind = OnlinePredictor::new(CurveKind::Sublinear);
+        for (k, &l) in losses.iter().enumerate() {
+            hinted.observe(k as u64, l, k as f64);
+            blind.observe(k as u64, l, k as f64);
+        }
+        hinted.refresh_fit();
+        blind.refresh_fit();
+        let g_hint = hinted.predicted_normalized_reduction(5.0);
+        assert!(g_hint > 0.0, "hinted predictor must see future gain");
+        // The hinted reduction must be bounded by the remaining distance
+        // to the target, in normalized units.
+        let remaining = hinted.normalizer().normalize(1.7 - 1.0);
+        assert!(g_hint <= remaining + 1e-9, "{g_hint} > {remaining}");
+    }
+
+    #[test]
+    fn hint_is_ignored_when_fit_is_good() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        p.set_target_hint(0.0); // wildly wrong hint
+        feed(&mut p, |k| 5.0 * 0.9f64.powf(k) + 1.0, 30);
+        // Clean exponential data: the fit is reliable, so the (wrong) hint
+        // must not distort the prediction.
+        let pred = p.predict_loss_after(10).unwrap();
+        let truth = 5.0 * 0.9f64.powf(39.0) + 1.0;
+        assert!((pred - truth).abs() / truth < 0.05);
+        let red = p.predicted_normalized_reduction(10.0);
+        let direct = p.normalizer().normalize(p.current_loss().unwrap() - pred);
+        assert!((red - direct).abs() < 0.05 * direct.max(1e-9));
+    }
+
+    #[test]
+    fn fallback_to_other_family_on_bad_fit() {
+        // Declared sublinear but data is strongly exponential.
+        let mut p = OnlinePredictor::new(CurveKind::Sublinear);
+        feed(&mut p, |k| 10.0 * 0.5f64.powf(k) + 2.0, 20);
+        let pred = p.predict_loss_after(10).unwrap();
+        let truth = 10.0 * 0.5f64.powf(29.0) + 2.0;
+        assert!((pred - truth).abs() / truth < 0.10, "pred {pred} truth {truth}");
+    }
+}

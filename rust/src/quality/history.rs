@@ -1,0 +1,163 @@
+//! Per-job loss history with exponentially weighted sampling for curve fits.
+
+/// One recorded loss observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LossSample {
+    /// Iteration index (0-based; iteration `k` means `k` steps completed).
+    pub iteration: u64,
+    /// Raw loss value reported by the training job.
+    pub loss: f64,
+    /// Virtual time at which the iteration completed (seconds).
+    pub time: f64,
+}
+
+/// Append-only loss history for one job.
+#[derive(Debug, Clone, Default)]
+pub struct LossHistory {
+    samples: Vec<LossSample>,
+}
+
+impl LossHistory {
+    /// Empty history.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed iteration. Iterations must arrive in order.
+    pub fn push(&mut self, iteration: u64, loss: f64, time: f64) {
+        if let Some(last) = self.samples.last() {
+            assert!(
+                iteration > last.iteration,
+                "iterations must be recorded in increasing order ({} after {})",
+                iteration,
+                last.iteration
+            );
+        }
+        self.samples.push(LossSample { iteration, loss, time });
+    }
+
+    /// All samples in iteration order.
+    pub fn samples(&self) -> &[LossSample] {
+        &self.samples
+    }
+
+    /// Number of recorded samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True if no samples recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Latest sample, if any.
+    pub fn last(&self) -> Option<&LossSample> {
+        self.samples.last()
+    }
+
+    /// First sample, if any.
+    pub fn first(&self) -> Option<&LossSample> {
+        self.samples.first()
+    }
+
+    /// Minimum loss observed so far.
+    pub fn min_loss(&self) -> Option<f64> {
+        self.samples
+            .iter()
+            .map(|s| s.loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// `(iteration, loss, weight)` triples with exponential decay `gamma`
+    /// per iteration of age: the newest sample has weight 1, a sample `m`
+    /// iterations older has weight `gamma^m`. Paper §2: "exponentially
+    /// weighted history loss values".
+    pub fn weighted(&self, gamma: f64) -> Vec<(f64, f64, f64)> {
+        assert!(gamma > 0.0 && gamma <= 1.0);
+        let newest = match self.samples.last() {
+            Some(s) => s.iteration,
+            None => return Vec::new(),
+        };
+        self.samples
+            .iter()
+            .map(|s| {
+                let age = (newest - s.iteration) as f64;
+                (s.iteration as f64, s.loss, gamma.powf(age))
+            })
+            .collect()
+    }
+
+    /// Keep only the most recent `n` samples (fitting window).
+    pub fn truncate_to_recent(&mut self, n: usize) {
+        if self.samples.len() > n {
+            self.samples.drain(..self.samples.len() - n);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut h = LossHistory::new();
+        h.push(0, 10.0, 0.0);
+        h.push(1, 6.0, 1.0);
+        h.push(2, 4.5, 2.0);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.first().unwrap().loss, 10.0);
+        assert_eq!(h.last().unwrap().iteration, 2);
+        assert_eq!(h.min_loss(), Some(4.5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_order_rejected() {
+        let mut h = LossHistory::new();
+        h.push(5, 1.0, 0.0);
+        h.push(5, 0.9, 1.0);
+    }
+
+    #[test]
+    fn weights_decay_with_age() {
+        let mut h = LossHistory::new();
+        h.push(0, 3.0, 0.0);
+        h.push(1, 2.0, 1.0);
+        h.push(2, 1.0, 2.0);
+        let w = h.weighted(0.5);
+        assert_eq!(w.len(), 3);
+        assert!((w[2].2 - 1.0).abs() < 1e-12); // newest
+        assert!((w[1].2 - 0.5).abs() < 1e-12);
+        assert!((w[0].2 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weights_respect_iteration_gaps() {
+        let mut h = LossHistory::new();
+        h.push(0, 3.0, 0.0);
+        h.push(4, 1.0, 4.0); // gap of 4 iterations
+        let w = h.weighted(0.5);
+        assert!((w[0].2 - 0.5f64.powi(4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncate_keeps_recent() {
+        let mut h = LossHistory::new();
+        for k in 0..10 {
+            h.push(k, 10.0 - k as f64, k as f64);
+        }
+        h.truncate_to_recent(3);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.first().unwrap().iteration, 7);
+    }
+
+    #[test]
+    fn empty_history_is_safe() {
+        let h = LossHistory::new();
+        assert!(h.is_empty());
+        assert!(h.min_loss().is_none());
+        assert!(h.weighted(0.9).is_empty());
+    }
+}

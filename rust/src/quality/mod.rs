@@ -1,0 +1,13 @@
+//! Quality metrics: loss histories and normalization (paper §2,
+//! "Normalizing Quality Metrics").
+//!
+//! SLAQ compares progress *across* heterogeneous jobs by normalizing the
+//! per-iteration *change* in loss with respect to the largest change seen so
+//! far for that job. The normalized deltas of all the paper's algorithms
+//! decay from 1 toward 0, which makes them commensurable.
+
+mod history;
+mod normalizer;
+
+pub use history::{LossHistory, LossSample};
+pub use normalizer::{normalize_trace, DeltaNormalizer};

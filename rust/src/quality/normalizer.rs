@@ -1,0 +1,200 @@
+//! Loss-delta normalization (paper §2, "Normalizing Quality Metrics").
+//!
+//! Loss functions across algorithms have wildly different ranges, so SLAQ
+//! normalizes the per-iteration *change* in loss by the largest absolute
+//! change observed so far for that job. The normalized deltas start near 1
+//! and decay toward 0 as the job converges, regardless of algorithm.
+
+/// Online normalizer for one job's loss stream.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaNormalizer {
+    last_loss: Option<f64>,
+    max_abs_delta: f64,
+    /// Running sum of normalized positive deltas (total normalized progress).
+    cumulative: f64,
+}
+
+impl DeltaNormalizer {
+    /// Fresh normalizer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Observe the next loss value; returns the normalized delta for this
+    /// step (`None` for the very first observation, which has no delta).
+    ///
+    /// The normalized delta is `(prev - cur) / max_abs_delta_so_far`, i.e.
+    /// positive when the loss improves, and always in `[-1, 1]`.
+    pub fn observe(&mut self, loss: f64) -> Option<f64> {
+        let prev = match self.last_loss.replace(loss) {
+            None => return None,
+            Some(p) => p,
+        };
+        let delta = prev - loss;
+        self.max_abs_delta = self.max_abs_delta.max(delta.abs());
+        let norm = if self.max_abs_delta > 0.0 { delta / self.max_abs_delta } else { 0.0 };
+        if norm > 0.0 {
+            self.cumulative += norm;
+        }
+        Some(norm)
+    }
+
+    /// Largest absolute raw delta seen so far (the normalization base).
+    pub fn max_abs_delta(&self) -> f64 {
+        self.max_abs_delta
+    }
+
+    /// Normalize a *predicted* raw loss reduction with the current base.
+    /// Returns 0 when no base is established yet.
+    pub fn normalize(&self, raw_delta: f64) -> f64 {
+        if self.max_abs_delta > 0.0 {
+            raw_delta / self.max_abs_delta
+        } else {
+            0.0
+        }
+    }
+
+    /// Sum of normalized positive deltas so far (proxy for total progress).
+    pub fn cumulative_progress(&self) -> f64 {
+        self.cumulative
+    }
+
+    /// Most recent loss observed.
+    pub fn last_loss(&self) -> Option<f64> {
+        self.last_loss
+    }
+}
+
+/// Retrospectively normalize a complete loss trace to `[0, 1]`:
+/// 1 at the first sample, 0 at `floor` (the best loss the job is known to
+/// reach — e.g. its minimum across all policies, or a fitted asymptote).
+///
+/// This is the scale used when reporting "average normalized loss" (Fig 4)
+/// and "time to X% loss reduction" (Fig 5).
+pub fn normalize_trace(losses: &[f64], floor: f64) -> Vec<f64> {
+    if losses.is_empty() {
+        return Vec::new();
+    }
+    let init = losses[0];
+    let span = init - floor;
+    if span <= 0.0 {
+        // Degenerate: job started at (or below) its floor.
+        return vec![0.0; losses.len()];
+    }
+    losses
+        .iter()
+        .map(|&l| ((l - floor) / span).clamp(0.0, 1.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn first_observation_has_no_delta() {
+        let mut n = DeltaNormalizer::new();
+        assert_eq!(n.observe(10.0), None);
+    }
+
+    #[test]
+    fn first_delta_normalizes_to_one() {
+        let mut n = DeltaNormalizer::new();
+        n.observe(10.0);
+        assert_eq!(n.observe(6.0), Some(1.0));
+        assert_eq!(n.max_abs_delta(), 4.0);
+    }
+
+    #[test]
+    fn later_smaller_deltas_shrink() {
+        let mut n = DeltaNormalizer::new();
+        n.observe(10.0);
+        n.observe(6.0); // delta 4 -> base
+        let d = n.observe(5.0).unwrap(); // delta 1
+        assert!((d - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_increase_gives_negative_delta() {
+        let mut n = DeltaNormalizer::new();
+        n.observe(10.0);
+        n.observe(6.0);
+        let d = n.observe(7.0).unwrap();
+        assert!(d < 0.0);
+    }
+
+    #[test]
+    fn normalize_predicted_uses_current_base() {
+        let mut n = DeltaNormalizer::new();
+        assert_eq!(n.normalize(3.0), 0.0); // no base yet
+        n.observe(10.0);
+        n.observe(8.0);
+        assert!((n.normalize(1.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cumulative_counts_only_progress() {
+        let mut n = DeltaNormalizer::new();
+        n.observe(10.0);
+        n.observe(8.0); // +1.0
+        n.observe(9.0); // negative, ignored
+        n.observe(8.5); // +0.25
+        assert!((n.cumulative_progress() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_normalization_endpoints() {
+        let t = normalize_trace(&[10.0, 6.0, 4.0, 2.0], 2.0);
+        assert_eq!(t[0], 1.0);
+        assert_eq!(t[3], 0.0);
+        assert!((t[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_normalization_clamps_below_floor() {
+        let t = normalize_trace(&[10.0, 1.0], 2.0);
+        assert_eq!(t[1], 0.0);
+    }
+
+    #[test]
+    fn trace_degenerate_cases() {
+        assert!(normalize_trace(&[], 0.0).is_empty());
+        assert_eq!(normalize_trace(&[5.0, 5.0], 5.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn normalized_deltas_always_bounded() {
+        forall("normalized delta in [-1,1]", 200, |g| {
+            let mut n = DeltaNormalizer::new();
+            let len = g.usize_in(2, 40);
+            let mut loss = g.f64_in(1.0, 1000.0);
+            for _ in 0..len {
+                if let Some(d) = n.observe(loss) {
+                    assert!((-1.0..=1.0).contains(&d), "delta {d} out of range");
+                }
+                // Mostly-decreasing noisy trajectory.
+                let step = g.f64_in(-0.1, 1.0) * loss.abs() * 0.3;
+                loss -= step;
+            }
+        });
+    }
+
+    #[test]
+    fn trace_normalization_is_monotone_for_monotone_input() {
+        forall("monotone trace stays monotone", 100, |g| {
+            let len = g.usize_in(2, 30);
+            let mut losses = Vec::with_capacity(len);
+            let mut l = g.f64_in(10.0, 100.0);
+            for _ in 0..len {
+                losses.push(l);
+                l -= g.f64_in(0.0, 5.0);
+            }
+            let floor = l - g.f64_in(0.0, 1.0);
+            let t = normalize_trace(&losses, floor);
+            for w in t.windows(2) {
+                assert!(w[1] <= w[0] + 1e-12);
+            }
+        });
+    }
+}

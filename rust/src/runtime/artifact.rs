@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust training engine.
+//!
+//! `artifacts/manifest.json` describes, for every lowered model, the
+//! ordered argument shapes, how many leading arguments are trainable
+//! parameters, and the artifact file name.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape + dtype of one argument.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    /// Dimensions (empty = rank-0 scalar).
+    pub shape: Vec<usize>,
+    /// Dtype name as emitted by JAX (always "float32" here).
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    /// Number of elements.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered model.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Model name (registry key), e.g. "logreg_gd".
+    pub name: String,
+    /// Artifact file stem, e.g. "logreg_gd_base".
+    pub artifact: String,
+    /// Leading arguments that are trainable state.
+    pub param_count: usize,
+    /// All arguments in call order.
+    pub args: Vec<ArgSpec>,
+    /// Outputs = `param_count` new params + 1 loss.
+    pub num_outputs: usize,
+}
+
+/// One shape variant ("base", "small") of the whole model zoo.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    /// Variant name.
+    pub variant: String,
+    /// Batch rows.
+    pub n: usize,
+    /// Feature dim.
+    pub d: usize,
+    /// Clusters / mixture components.
+    pub k: usize,
+    /// MLP hidden width.
+    pub h: usize,
+    /// Models by name.
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Variants by name.
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    /// Load `<artifact_dir>/manifest.json`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let path = artifact_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let variants_obj = root
+            .get("variants")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?;
+        let mut variants = BTreeMap::new();
+        for (vname, vval) in variants_obj {
+            variants.insert(vname.clone(), parse_variant(vname, vval)?);
+        }
+        Ok(Self { variants })
+    }
+
+    /// Get a variant by name.
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no variant '{name}'"))
+    }
+}
+
+impl Variant {
+    /// Get a model by name.
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("variant '{}' has no model '{name}'", self.variant))
+    }
+}
+
+fn parse_variant(name: &str, v: &Value) -> Result<Variant> {
+    let get_usize = |key: &str| -> Result<usize> {
+        v.get(key)
+            .and_then(Value::as_u64)
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("variant '{name}': missing numeric '{key}'"))
+    };
+    let models_obj = v
+        .get("models")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| anyhow!("variant '{name}': missing 'models'"))?;
+    let mut models = BTreeMap::new();
+    for (mname, mval) in models_obj {
+        models.insert(mname.clone(), parse_model(mname, mval)?);
+    }
+    Ok(Variant {
+        variant: name.to_string(),
+        n: get_usize("n")?,
+        d: get_usize("d")?,
+        k: get_usize("k")?,
+        h: get_usize("h")?,
+        models,
+    })
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelSpec> {
+    let artifact = v
+        .get("artifact")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("model '{name}': missing 'artifact'"))?
+        .to_string();
+    let param_count = v
+        .get("param_count")
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("model '{name}': missing 'param_count'"))? as usize;
+    let num_outputs = v
+        .get("num_outputs")
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("model '{name}': missing 'num_outputs'"))? as usize;
+    let args_arr = v
+        .get("args")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("model '{name}': missing 'args'"))?;
+    let mut args = Vec::with_capacity(args_arr.len());
+    for a in args_arr {
+        let shape = a
+            .get("shape")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("model '{name}': arg missing 'shape'"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("model '{name}': non-integer dim"))?;
+        let dtype = a
+            .get("dtype")
+            .and_then(Value::as_str)
+            .unwrap_or("float32")
+            .to_string();
+        args.push(ArgSpec { shape, dtype });
+    }
+    if param_count > args.len() {
+        return Err(anyhow!("model '{name}': param_count > arg count"));
+    }
+    Ok(ModelSpec { name: name.to_string(), artifact, param_count, args, num_outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "variants": {
+        "base": {
+          "variant": "base", "n": 2048, "d": 32, "k": 8, "h": 16,
+          "models": {
+            "logreg_gd": {
+              "artifact": "logreg_gd_base",
+              "param_count": 1,
+              "num_outputs": 2,
+              "args": [
+                {"shape": [32], "dtype": "float32"},
+                {"shape": [2048, 32], "dtype": "float32"},
+                {"shape": [2048], "dtype": "float32"},
+                {"shape": [], "dtype": "float32"},
+                {"shape": [], "dtype": "float32"}
+              ]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variant("base").unwrap();
+        assert_eq!(v.n, 2048);
+        let model = v.model("logreg_gd").unwrap();
+        assert_eq!(model.param_count, 1);
+        assert_eq!(model.args.len(), 5);
+        assert_eq!(model.args[0].shape, vec![32]);
+        assert_eq!(model.args[3].shape, Vec::<usize>::new());
+        assert_eq!(model.args[1].elements(), 2048 * 32);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"variants": {"x": {}}}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.variant("nope").is_err());
+        assert!(m.variant("base").unwrap().model("nope").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let v = m.variant("base").unwrap();
+        assert_eq!(v.models.len(), 8);
+        for (_, model) in &v.models {
+            assert_eq!(model.num_outputs, model.param_count + 1);
+        }
+    }
+}

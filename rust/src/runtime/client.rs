@@ -1,0 +1,73 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Configuration for the PJRT runtime.
+#[derive(Debug, Clone)]
+pub struct RuntimeConfig {
+    /// Directory containing `*.hlo.txt` artifacts produced by `make artifacts`.
+    pub artifact_dir: PathBuf,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self { artifact_dir: PathBuf::from("artifacts") }
+    }
+}
+
+/// A PJRT client plus a cache of compiled executables keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    config: RuntimeConfig,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu(config: RuntimeConfig) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, config, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Name of the underlying PJRT platform (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the executable for artifact `name`.
+    ///
+    /// `name` is the artifact file name without the `.hlo.txt` suffix.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.config.artifact_dir.join(format!("{name}.hlo.txt"));
+        let exe = std::sync::Arc::new(self.compile_file(&path)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an HLO-text file into a loaded executable (no cache).
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute a loaded executable on literal inputs; returns the tuple elements.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // Artifacts are lowered with return_tuple=True: unwrap the tuple.
+        Ok(out.to_tuple()?)
+    }
+}

@@ -1,0 +1,65 @@
+//! Literal construction/extraction helpers for f32 tensors.
+
+use anyhow::{anyhow, Result};
+
+/// Build an f32 literal of the given shape from row-major data.
+/// Empty shape = rank-0 scalar.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let elements: usize = shape.iter().product();
+    if data.len() != elements {
+        return Err(anyhow!(
+            "literal shape {shape:?} needs {elements} elements, got {}",
+            data.len()
+        ));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Rank-0 f32 scalar literal.
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract all f32 elements of a literal (any rank).
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract the first f32 element (for scalar / (1,) loss outputs).
+pub fn first_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_vec_f32(lit)?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty literal has no first element"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_vector_and_matrix() {
+        let v = literal_f32(&[4], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(to_vec_f32(&v).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let m = literal_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(to_vec_f32(&m).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let s = literal_f32(&[], &[2.5]).unwrap();
+        assert_eq!(first_f32(&s).unwrap(), 2.5);
+        assert_eq!(first_f32(&scalar_f32(7.0)).unwrap(), 7.0);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[3], &[1.0]).is_err());
+        assert!(literal_f32(&[], &[1.0, 2.0]).is_err());
+    }
+}

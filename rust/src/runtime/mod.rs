@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module is the
+//! only bridge between the Rust coordinator and the compiled computations.
+
+mod artifact;
+mod client;
+mod literal;
+
+pub use artifact::{ArgSpec, Manifest, ModelSpec, Variant};
+pub use client::{Runtime, RuntimeConfig};
+pub use literal::{first_f32, literal_f32, scalar_f32, to_vec_f32};

@@ -1,0 +1,230 @@
+//! Baseline policies: work-conserving max-min fair share and a rigid
+//! static split.
+//!
+//! The fair scheduler is the baseline the paper evaluates against — it is
+//! the default policy of YARN, Mesos and Spark's standalone scheduler:
+//! every active job gets an equal share, with shares capped jobs cannot use
+//! redistributed to the rest (water-filling).
+
+use super::{Allocation, JobRequest, Policy};
+
+/// Work-conserving max-min fair allocator.
+#[derive(Debug, Default)]
+pub struct FairPolicy;
+
+impl FairPolicy {
+    /// New fair policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for FairPolicy {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let n = requests.len();
+        let mut cores = vec![0u32; n];
+        if n == 0 || capacity == 0 {
+            return Allocation { cores };
+        }
+        // Water-filling: repeatedly split the remaining capacity equally
+        // among jobs that are not yet at their cap.
+        let mut remaining = capacity;
+        let mut open: Vec<usize> = (0..n).filter(|&i| requests[i].max_cores > 0).collect();
+        while remaining > 0 && !open.is_empty() {
+            let share = remaining / open.len() as u32;
+            if share == 0 {
+                // Fewer cores than open jobs: one each, round-robin in id
+                // order, until capacity runs out.
+                let mut by_id = open.clone();
+                by_id.sort_by_key(|&i| requests[i].id);
+                for &i in by_id.iter().take(remaining as usize) {
+                    cores[i] += 1;
+                }
+                break;
+            }
+            let mut next_open = Vec::with_capacity(open.len());
+            for &i in &open {
+                let room = requests[i].max_cores - cores[i];
+                let grant = share.min(room);
+                cores[i] += grant;
+                remaining -= grant;
+                if cores[i] < requests[i].max_cores {
+                    next_open.push(i);
+                }
+            }
+            if next_open.len() == open.len() && share > 0 && remaining < open.len() as u32 {
+                // Distribute the final remainder one by one.
+                let mut by_id = next_open.clone();
+                by_id.sort_by_key(|&i| requests[i].id);
+                for &i in by_id.iter().take(remaining as usize) {
+                    cores[i] += 1;
+                }
+                remaining = 0;
+            }
+            open = next_open;
+        }
+        Allocation { cores }
+    }
+}
+
+/// Rigid equal split: `C / J` cores each (capped), leftovers unused.
+/// Not work conserving — included as an ablation contrast to `FairPolicy`.
+#[derive(Debug, Default)]
+pub struct StaticPolicy;
+
+impl StaticPolicy {
+    /// New static policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let n = requests.len();
+        let mut cores = vec![0u32; n];
+        if n == 0 || capacity == 0 {
+            return Allocation { cores };
+        }
+        let share = capacity / n as u32;
+        for (i, r) in requests.iter().enumerate() {
+            cores[i] = share.min(r.max_cores);
+        }
+        Allocation { cores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+    use crate::testkit::forall;
+
+    fn mk_reqs(caps: &[u32]) -> (Vec<ConcaveGain>, Vec<u32>) {
+        let gains = caps
+            .iter()
+            .map(|_| ConcaveGain { scale: 1.0, rate: 0.5 })
+            .collect();
+        (gains, caps.to_vec())
+    }
+
+    fn build<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+        gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect()
+    }
+
+    #[test]
+    fn equal_split_no_caps() {
+        let (g, c) = mk_reqs(&[100, 100, 100, 100]);
+        let rs = build(&g, &c);
+        let a = FairPolicy::new().allocate(&rs, 40);
+        assert_eq!(a.cores, vec![10, 10, 10, 10]);
+    }
+
+    #[test]
+    fn remainder_distributed_by_id() {
+        let (g, c) = mk_reqs(&[100, 100, 100]);
+        let rs = build(&g, &c);
+        let a = FairPolicy::new().allocate(&rs, 10);
+        assert_eq!(a.total(), 10);
+        // 3 each, remainder 1 to the lowest id.
+        assert_eq!(a.cores, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn capped_jobs_release_share() {
+        let (g, c) = mk_reqs(&[2, 100, 100]);
+        let rs = build(&g, &c);
+        let a = FairPolicy::new().allocate(&rs, 30);
+        check_invariants(&rs, 30, &a);
+        assert_eq!(a.cores[0], 2);
+        assert_eq!(a.cores[1] + a.cores[2], 28);
+        assert!((a.cores[1] as i64 - a.cores[2] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn more_jobs_than_cores() {
+        let (g, c) = mk_reqs(&[10, 10, 10, 10, 10]);
+        let rs = build(&g, &c);
+        let a = FairPolicy::new().allocate(&rs, 3);
+        check_invariants(&rs, 3, &a);
+        assert_eq!(a.total(), 3);
+        assert!(a.cores.iter().all(|&x| x <= 1));
+    }
+
+    #[test]
+    fn fair_is_work_conserving() {
+        forall("fair work conserving", 100, |gen| {
+            let n = gen.usize_in(1, 25);
+            let caps: Vec<u32> = (0..n).map(|_| gen.usize_in(0, 15) as u32).collect();
+            let (g, c) = mk_reqs(&caps);
+            let rs = build(&g, &c);
+            let capacity = gen.usize_in(0, 120) as u32;
+            let a = FairPolicy::new().allocate(&rs, capacity);
+            check_invariants(&rs, capacity, &a);
+            let total_cap: u32 = caps.iter().sum();
+            if capacity <= total_cap {
+                assert_eq!(a.total(), capacity, "caps {caps:?} alloc {:?}", a.cores);
+            } else {
+                check_work_conserving(&rs, capacity, &a);
+            }
+        });
+    }
+
+    #[test]
+    fn fair_is_max_min() {
+        forall("fair max-min property", 60, |gen| {
+            let n = gen.usize_in(2, 12);
+            let caps: Vec<u32> = (0..n).map(|_| gen.usize_in(1, 20) as u32).collect();
+            let (g, c) = mk_reqs(&caps);
+            let rs = build(&g, &c);
+            let capacity = gen.usize_in(n, 100) as u32;
+            let a = FairPolicy::new().allocate(&rs, capacity);
+            // Max-min: a job below its cap can't have 2+ fewer cores than
+            // any other job (otherwise taking from the larger one would
+            // raise the minimum).
+            for i in 0..n {
+                if a.cores[i] < caps[i] {
+                    for j in 0..n {
+                        assert!(
+                            a.cores[j] <= a.cores[i] + 1,
+                            "job {i} (uncapped, {}) vs job {j} ({}) caps {caps:?}",
+                            a.cores[i],
+                            a.cores[j]
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn static_leaves_leftovers() {
+        let (g, c) = mk_reqs(&[1, 100, 100]);
+        let rs = build(&g, &c);
+        let a = StaticPolicy::new().allocate(&rs, 30);
+        check_invariants(&rs, 30, &a);
+        // share = 10; job 0 capped at 1; leftovers NOT redistributed.
+        assert_eq!(a.cores, vec![1, 10, 10]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(FairPolicy::new().allocate(&[], 5).cores.len(), 0);
+        let (g, c) = mk_reqs(&[4]);
+        let rs = build(&g, &c);
+        assert_eq!(FairPolicy::new().allocate(&rs, 0).total(), 0);
+        assert_eq!(StaticPolicy::new().allocate(&rs, 0).total(), 0);
+    }
+}

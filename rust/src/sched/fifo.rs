@@ -1,0 +1,68 @@
+//! FIFO baseline: jobs are served to their cap in arrival (id) order.
+
+use super::{Allocation, JobRequest, Policy};
+
+/// First-in-first-out allocator (arrival order = ascending job id).
+#[derive(Debug, Default)]
+pub struct FifoPolicy;
+
+impl FifoPolicy {
+    /// New FIFO policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for FifoPolicy {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by_key(|&i| requests[i].id);
+        let mut cores = vec![0u32; requests.len()];
+        let mut remaining = capacity;
+        for i in order {
+            if remaining == 0 {
+                break;
+            }
+            let grant = requests[i].max_cores.min(remaining);
+            cores[i] = grant;
+            remaining -= grant;
+        }
+        Allocation { cores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, ConcaveGain};
+
+    #[test]
+    fn serves_in_id_order() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        // Deliberately out-of-order ids in the slice.
+        let rs = vec![
+            JobRequest { id: 2, max_cores: 10, gain: &g },
+            JobRequest { id: 0, max_cores: 10, gain: &g },
+            JobRequest { id: 1, max_cores: 10, gain: &g },
+        ];
+        let a = FifoPolicy::new().allocate(&rs, 15);
+        check_invariants(&rs, 15, &a);
+        // id 0 (slice idx 1) and id 1 (slice idx 2) fill first.
+        assert_eq!(a.cores, vec![0, 10, 5]);
+    }
+
+    #[test]
+    fn all_fit_when_capacity_ample() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let rs = vec![
+            JobRequest { id: 0, max_cores: 3, gain: &g },
+            JobRequest { id: 1, max_cores: 4, gain: &g },
+        ];
+        let a = FifoPolicy::new().allocate(&rs, 100);
+        assert_eq!(a.cores, vec![3, 4]);
+    }
+}

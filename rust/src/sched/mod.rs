@@ -1,0 +1,154 @@
+//! Scheduling policies (paper §2, "Scheduling Based on Quality
+//! Improvements").
+//!
+//! A policy maps a set of job *requests* — each exposing how much predicted
+//! normalized quality it would gain from `a` cores this epoch — onto an
+//! integer core allocation bounded by cluster capacity.
+//!
+//! Policies implemented:
+//! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator.
+//! * [`FairPolicy`] — work-conserving max-min fair share (the baseline the
+//!   paper compares against; the default in YARN/Mesos-style schedulers).
+//! * [`FifoPolicy`] — arrival-order allocation up to each job's cap.
+//! * [`StaticPolicy`] — rigid equal split (not work conserving).
+
+mod fair;
+mod fifo;
+mod slaq;
+
+pub use fair::FairPolicy;
+pub use fifo::FifoPolicy;
+pub use slaq::SlaqPolicy;
+
+/// Predicted quality gain as a function of allocated cores.
+///
+/// `gain(a)` is the predicted *normalized loss reduction* job `id` would
+/// achieve during the next scheduling epoch if granted `a` cores.
+/// `gain(0) = 0` by convention; implementations should be monotone
+/// non-decreasing in `a` with (typically) diminishing returns.
+pub trait GainModel {
+    /// Predicted normalized loss reduction with `cores` cores this epoch.
+    fn gain(&self, cores: u32) -> f64;
+}
+
+impl<F: Fn(u32) -> f64> GainModel for F {
+    fn gain(&self, cores: u32) -> f64 {
+        self(cores)
+    }
+}
+
+/// One job's scheduling request for an epoch.
+pub struct JobRequest<'a> {
+    /// Stable job identifier (used for arrival ordering in FIFO).
+    pub id: u64,
+    /// Maximum cores the job can exploit (e.g. its number of data
+    /// partitions). The allocator never exceeds this.
+    pub max_cores: u32,
+    /// Predicted-gain oracle for this job.
+    pub gain: &'a dyn GainModel,
+}
+
+/// An allocation: `cores[i]` is the grant for `requests[i]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    /// Core grant per request, in request order.
+    pub cores: Vec<u32>,
+}
+
+impl Allocation {
+    /// Total cores granted.
+    pub fn total(&self) -> u32 {
+        self.cores.iter().sum()
+    }
+}
+
+/// A scheduling policy: produces an allocation each epoch.
+pub trait Policy: Send {
+    /// Short identifier used in traces and CLI (e.g. "slaq", "fair").
+    fn name(&self) -> &'static str;
+
+    /// Allocate up to `capacity` cores among `requests`.
+    ///
+    /// Invariants every implementation must uphold:
+    /// * `result.cores.len() == requests.len()`
+    /// * `result.total() <= capacity`
+    /// * `result.cores[i] <= requests[i].max_cores`
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation;
+}
+
+/// Construct a policy by name (CLI convenience).
+pub fn policy_by_name(name: &str) -> Option<Box<dyn Policy>> {
+    match name {
+        "slaq" => Some(Box::new(SlaqPolicy::new())),
+        "fair" => Some(Box::new(FairPolicy::new())),
+        "fifo" => Some(Box::new(FifoPolicy::new())),
+        "static" => Some(Box::new(fair::StaticPolicy::new())),
+        _ => None,
+    }
+}
+
+pub use fair::StaticPolicy;
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// A concave gain curve `g(a) = scale * (1 - 1/(1+rate*a))` for tests.
+    pub struct ConcaveGain {
+        pub scale: f64,
+        pub rate: f64,
+    }
+
+    impl GainModel for ConcaveGain {
+        fn gain(&self, cores: u32) -> f64 {
+            self.scale * (1.0 - 1.0 / (1.0 + self.rate * cores as f64))
+        }
+    }
+
+    /// Check the three allocation invariants shared by all policies.
+    pub fn check_invariants(reqs: &[JobRequest<'_>], capacity: u32, alloc: &Allocation) {
+        assert_eq!(alloc.cores.len(), reqs.len());
+        assert!(alloc.total() <= capacity, "over capacity");
+        for (r, &a) in reqs.iter().zip(&alloc.cores) {
+            assert!(a <= r.max_cores, "job {} over its cap", r.id);
+        }
+    }
+
+    /// Work conservation: capacity exhausted or every job capped.
+    pub fn check_work_conserving(reqs: &[JobRequest<'_>], capacity: u32, alloc: &Allocation) {
+        let all_capped = reqs
+            .iter()
+            .zip(&alloc.cores)
+            .all(|(r, &a)| a == r.max_cores);
+        assert!(
+            alloc.total() == capacity || all_capped,
+            "not work conserving: total {} of {capacity}",
+            alloc.total()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closure_implements_gain_model() {
+        let g = |a: u32| a as f64 * 2.0;
+        assert_eq!(g.gain(3), 6.0);
+    }
+
+    #[test]
+    fn policy_by_name_resolves() {
+        for n in ["slaq", "fair", "fifo", "static"] {
+            assert_eq!(policy_by_name(n).unwrap().name(), n);
+        }
+        assert!(policy_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn allocation_total() {
+        let a = Allocation { cores: vec![1, 2, 3] };
+        assert_eq!(a.total(), 6);
+    }
+}

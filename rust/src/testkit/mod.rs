@@ -1,0 +1,131 @@
+//! Mini property-based testing kit.
+//!
+//! The offline build has no `proptest`, so the crate carries a small
+//! substitute: seeded generators over [`crate::util::rng::Rng`] plus a
+//! `forall` runner that reports the failing case and its seed. No shrinking —
+//! cases are kept small instead.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath in this offline image.
+//! use slaq::testkit::{forall, Gen};
+//! forall("sum is commutative", 100, |g| {
+//!     let a = g.f64_in(-1e6, 1e6);
+//!     let b = g.f64_in(-1e6, 1e6);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+    /// Seed that reproduces this exact case.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.rng.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Positive, finite f64 spanning several orders of magnitude.
+    pub fn positive_f64(&mut self) -> f64 {
+        let exp = self.f64_in(-6.0, 6.0);
+        10f64.powf(exp)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of given length from a element generator.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Borrow the underlying RNG for distribution draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Base seed: override with env `SLAQ_TEST_SEED` for reproduction.
+fn base_seed() -> u64 {
+    std::env::var("SLAQ_TEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x51AC_2024)
+}
+
+/// Run `body` over `cases` generated inputs. Panics (with the case seed in
+/// the message) on the first failing case.
+pub fn forall(name: &str, cases: u64, mut body: impl FnMut(&mut Gen)) {
+    let base = base_seed();
+    for case in 0..cases {
+        let case_seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: Rng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (SLAQ_TEST_SEED={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall("count", 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always fails", 10, |_| panic!("boom"));
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("SLAQ_TEST_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_hold() {
+        forall("ranges", 200, |g| {
+            let x = g.usize_in(3, 10);
+            assert!((3..10).contains(&x));
+            let y = g.f64_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&y));
+            let p = g.positive_f64();
+            assert!(p > 0.0 && p.is_finite());
+        });
+    }
+}

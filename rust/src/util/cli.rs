@@ -1,0 +1,233 @@
+//! Declarative command-line flag parsing for the `slaq` binary and examples.
+//!
+//! Intentionally small: `--flag value`, `--flag=value`, boolean `--flag`,
+//! positional arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// A tiny argv parser: declare flags, then [`Args::parse`].
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    /// New parser with a one-line description used in `--help`.
+    pub fn new(about: &str) -> Self {
+        Self { about: about.to_string(), flags: Vec::new() }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required value flag (no default).
+    pub fn flag_required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (off by default).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}\n\nFlags:", self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            let _ = writeln!(out, "  --{:<18} {}{}", f.name, f.help, d);
+        }
+        out
+    }
+
+    /// Parse an argv slice (excluding the program name).
+    ///
+    /// Returns `Err` with a message (or the help text for `--help`).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positional = Vec::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.help()))?;
+                if spec.is_bool {
+                    if inline.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    bools.insert(name.to_string(), true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("flag --{name} needs a value"))?
+                            .clone(),
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+        }
+        for f in &self.flags {
+            if !f.is_bool && f.default.is_none() && !values.contains_key(&f.name) {
+                return Err(format!("missing required flag --{}", f.name));
+            }
+        }
+        Ok(Args { values, bools, positional })
+    }
+}
+
+impl Args {
+    /// Value flag as string.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    /// Value flag parsed as any `FromStr` type.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        self.get(name)
+            .parse::<T>()
+            .map_err(|_| format!("flag --{name}: cannot parse '{}'", self.get(name)))
+    }
+
+    /// Boolean switch state.
+    pub fn switch(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} was not declared"))
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .flag("jobs", "10", "number of jobs")
+            .flag_required("policy", "scheduling policy")
+            .switch("verbose", "extra logging")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&["--policy", "slaq"])).unwrap();
+        assert_eq!(a.get("jobs"), "10");
+        assert_eq!(a.get("policy"), "slaq");
+        assert!(!a.switch("verbose"));
+
+        let a = cli()
+            .parse(&argv(&["--policy=fair", "--jobs", "5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_as::<u32>("jobs").unwrap(), 5);
+        assert_eq!(a.get("policy"), "fair");
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(cli().parse(&argv(&["--policy=x", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&argv(&["--policy=x", "fig3", "fig4"])).unwrap();
+        assert_eq!(a.positional(), &["fig3".to_string(), "fig4".to_string()]);
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(h.contains("--jobs"));
+        assert!(h.contains("--policy"));
+    }
+
+    #[test]
+    fn parse_error_messages() {
+        let a = cli().parse(&argv(&["--policy"]));
+        assert!(a.unwrap_err().contains("needs a value"));
+        let a = cli().parse(&argv(&["--policy=x", "--verbose=1"]));
+        assert!(a.unwrap_err().contains("takes no value"));
+    }
+}

@@ -1,0 +1,127 @@
+//! CSV output for experiment series (one file per figure).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    /// Create a table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of already-formatted cells. Panics on column mismatch.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of f64 cells formatted with 6 significant digits.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|x| format_num(*x)).collect::<Vec<_>>());
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a CSV string (RFC-4180 quoting where needed).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+fn write_row(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains([',', '"', '\n']) {
+            let _ = write!(out, "\"{}\"", cell.replace('"', "\"\""));
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format a float compactly: integers without decimals, else 6 sig figs.
+pub fn format_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        let s = format!("{x:.6}");
+        // Trim trailing zeros but keep at least one decimal digit.
+        let trimmed = s.trim_end_matches('0');
+        let trimmed = if trimmed.ends_with('.') { &s[..trimmed.len() + 1] } else { trimmed };
+        trimmed.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Csv::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut t = Csv::new(&["x"]);
+        t.row(&["he,llo".into()]);
+        t.row(&["say \"hi\"".into()]);
+        assert_eq!(t.to_string(), "x\n\"he,llo\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn f64_rows_format_compactly() {
+        let mut t = Csv::new(&["v", "w"]);
+        t.row_f64(&[2.0, 0.125]);
+        assert_eq!(t.to_string(), "v,w\n2,0.125\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = Csv::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn format_num_trims() {
+        assert_eq!(format_num(1.5), "1.5");
+        assert_eq!(format_num(3.0), "3");
+        assert_eq!(format_num(0.333333333), "0.333333");
+    }
+}

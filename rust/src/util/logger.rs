@@ -1,0 +1,64 @@
+//! Minimal leveled logger implementing the `log` facade.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::io::Write;
+use std::time::Instant;
+
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let elapsed = START.elapsed().as_secs_f64();
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let _ = writeln!(
+            std::io::stderr(),
+            "[{elapsed:9.3}s {tag} {}] {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. `level` accepts "error"|"warn"|"info"|"debug"|"trace".
+/// Safe to call more than once (later calls are ignored).
+pub fn init(level: &str) {
+    let filter = match level {
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level: filter }));
+    log::set_max_level(filter);
+    once_cell::sync::Lazy::force(&START);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init("info");
+        super::init("debug"); // second call must not panic
+        log::info!("logger test line");
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrates the scheduler is built on.
+//!
+//! The build environment vendors only the `xla` dependency chain, so the
+//! crate carries its own PRNG, statistics, JSON, CSV, CLI and logging
+//! utilities rather than pulling `rand`/`serde`/`clap`/etc.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,96 @@
+//! Arrival processes and experiment populations.
+
+use super::zoo::{sample_job, JobTemplate};
+use crate::util::rng::Rng;
+
+/// Configuration of a simulated submission trace.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Number of jobs to submit.
+    pub jobs: usize,
+    /// Mean inter-arrival time (seconds); arrivals are Poisson, i.e.
+    /// exponential inter-arrival gaps.
+    pub mean_interarrival: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        // Paper §3: 160 jobs, Poisson arrivals with 15 s mean.
+        Self { jobs: 160, mean_interarrival: 15.0, seed: 0x51AC }
+    }
+}
+
+/// Poisson arrival times: exponential gaps with the given mean.
+pub fn poisson_arrivals(n: usize, mean_gap: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(1.0 / mean_gap);
+            t
+        })
+        .collect()
+}
+
+/// The paper's 160-job submission trace (Figs 3–5), deterministically
+/// generated from the config seed.
+pub fn paper_trace(cfg: &TraceConfig) -> Vec<JobTemplate> {
+    let mut rng = Rng::new(cfg.seed);
+    let arrivals = poisson_arrivals(cfg.jobs, cfg.mean_interarrival, &mut rng);
+    arrivals
+        .into_iter()
+        .enumerate()
+        .map(|(id, arrival)| sample_job(id as u64, arrival, &mut rng))
+        .collect()
+}
+
+/// Population for the Fig 6 scalability sweep: `jobs` templates, all
+/// already active (arrival 0), with wide core caps so the allocator has
+/// real work to do at large capacities.
+pub fn scale_population(jobs: usize, seed: u64) -> Vec<JobTemplate> {
+    let mut rng = Rng::new(seed);
+    (0..jobs)
+        .map(|id| {
+            let mut t = sample_job(id as u64, 0.0, &mut rng);
+            // Large clusters: let jobs use up to 128 cores (more partitions).
+            t.spec.max_cores = rng.range_u64(32, 129) as u32;
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_increasing_with_right_mean() {
+        let mut rng = Rng::new(7);
+        let a = poisson_arrivals(2000, 15.0, &mut rng);
+        assert!(a.windows(2).all(|w| w[1] > w[0]));
+        let mean_gap = a.last().unwrap() / 2000.0;
+        assert!((mean_gap - 15.0).abs() < 1.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn paper_trace_is_deterministic_and_sized() {
+        let cfg = TraceConfig::default();
+        let a = paper_trace(&cfg);
+        let b = paper_trace(&cfg);
+        assert_eq!(a.len(), 160);
+        assert_eq!(a[0].spec.arrival, b[0].spec.arrival);
+        assert_eq!(a[159].spec.name, b[159].spec.name);
+        // ~160 jobs * 15s: the submission window is roughly 2400s.
+        let last = a.last().unwrap().spec.arrival;
+        assert!(last > 1200.0 && last < 4800.0, "window {last}");
+    }
+
+    #[test]
+    fn scale_population_all_active_at_zero() {
+        let p = scale_population(500, 1);
+        assert_eq!(p.len(), 500);
+        assert!(p.iter().all(|t| t.spec.arrival == 0.0));
+        assert!(p.iter().all(|t| t.spec.max_cores >= 32));
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload generation: the paper's experiment traces.
+//!
+//! * [`zoo`] — the diversified job population ("Each algorithm is further
+//!   diversified to construct different models", paper §3): convergence
+//!   curves, cost models and resource caps sampled per job.
+//! * [`generator`] — Poisson arrival processes, the 160-job Fig 3–5 trace,
+//!   and the Fig 6 scale sweep population.
+
+mod generator;
+mod zoo;
+
+pub use generator::{paper_trace, poisson_arrivals, scale_population, TraceConfig};
+pub use zoo::{sample_job, JobTemplate, SyntheticGain};

@@ -1,0 +1,168 @@
+//! The diversified synthetic job population.
+//!
+//! Parameter ranges are calibrated to reproduce the convergence-curve
+//! families of the paper's Fig 2 (normalized ΔLoss decaying from 1 to 0
+//! within tens-to-hundreds of iterations) across loss scales spanning
+//! several orders of magnitude.
+
+use crate::cluster::CostModel;
+use crate::coordinator::{JobSpec, LossSource, SyntheticSource};
+use crate::predictor::{CurveKind, CurveModel};
+use crate::sched::GainModel;
+use crate::util::rng::Rng;
+
+/// A sampled job: spec + the curve its losses follow.
+#[derive(Debug, Clone)]
+pub struct JobTemplate {
+    /// Scheduler-facing spec.
+    pub spec: JobSpec,
+    /// Ground-truth convergence curve.
+    pub curve: CurveModel,
+    /// Relative observation noise.
+    pub noise: f64,
+}
+
+impl JobTemplate {
+    /// Materialize the loss source for this template.
+    pub fn make_source(&self, rng: &mut Rng) -> Box<dyn LossSource> {
+        Box::new(SyntheticSource::new(self.curve.clone(), self.noise, rng.fork()))
+    }
+}
+
+/// Sample one diversified job (paper §3 Setup).
+///
+/// 60% class I (sublinear first-order: SVM / LogReg / LinReg / MLP-like),
+/// 40% class II (linear/superlinear: K-Means / EM / Newton-like), with
+/// loss magnitudes spanning `10^[-1, 2]` — the normalization machinery is
+/// what makes these comparable, exactly as in the paper.
+pub fn sample_job(id: u64, arrival: f64, rng: &mut Rng) -> JobTemplate {
+    let magnitude = 10f64.powf(rng.range_f64(-1.0, 2.0));
+    let floor = magnitude * rng.range_f64(0.05, 0.3);
+    let is_sublinear = rng.bool(0.6);
+    let (kind, curve) = if is_sublinear {
+        // f(k) = 1/(a k^2 + b k + c) + d, scaled to start near `magnitude`.
+        let c = 1.0 / magnitude.max(1e-9);
+        let b = c * rng.range_f64(0.03, 0.25);
+        let a = b * rng.range_f64(0.0, 0.05);
+        (CurveKind::Sublinear, CurveModel::Sublinear { a, b, c, d: floor })
+    } else {
+        let mu = rng.range_f64(0.85, 0.975);
+        (
+            CurveKind::Exponential,
+            CurveModel::Exponential { m: magnitude, mu, c: floor },
+        )
+    };
+
+    // BSP cost: iteration times of O(100ms)–O(seconds), Spark-like.
+    // Calibrated so that, with Poisson(15 s) arrivals, aggregate demand
+    // exceeds the 640-core testbed — the paper's contended regime (its
+    // Fig 3 shows the cluster fully allocated throughout).
+    let cost = CostModel {
+        serial_secs: rng.range_f64(0.02, 0.15),
+        work_core_secs: rng.range_f64(10.0, 120.0),
+        overhead_per_core: 0.0005,
+    };
+    let max_cores = rng.range_u64(32, 129) as u32; // data partition count
+
+    let spec = JobSpec {
+        id,
+        name: format!(
+            "{}-{id}",
+            if is_sublinear { "sublin" } else { "exp" }
+        ),
+        kind,
+        cost,
+        max_cores,
+        arrival,
+        // Deep tails: practitioners run well past 99% of the achievable
+        // reduction, which is what leaves many "nearly converged" jobs
+        // holding resources under fair scheduling (the paper's motivation).
+        target_fraction: rng.range_f64(0.993, 0.999),
+        max_iterations: 100_000,
+        target_hint: None,
+    };
+    JobTemplate { spec, curve, noise: 0.005 }
+}
+
+/// A closed-form concave gain curve used by the Fig 6 scalability
+/// benchmark: the allocator's cost is dominated by heap operations and
+/// gain-oracle evaluations, so a cheap analytic oracle measures the
+/// scheduler engine itself (prediction refits are per-job-iteration, not
+/// per-allocation-step, and are benchmarked separately).
+#[derive(Debug, Clone)]
+pub struct SyntheticGain {
+    /// Quality potential (normalized-loss units per epoch at saturation).
+    pub scale: f64,
+    /// Speedup shape: how quickly extra cores saturate.
+    pub rate: f64,
+}
+
+impl GainModel for SyntheticGain {
+    fn gain(&self, cores: u32) -> f64 {
+        self.scale * (1.0 - 1.0 / (1.0 + self.rate * cores as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_jobs_are_valid() {
+        let mut rng = Rng::new(1);
+        for id in 0..200 {
+            let t = sample_job(id, id as f64, &mut rng);
+            assert_eq!(t.spec.id, id);
+            assert!(t.spec.max_cores >= 32 && t.spec.max_cores <= 128);
+            assert!(t.spec.cost.work_core_secs > 0.0);
+            assert!(t.curve.is_decreasing_on(0.0, 500.0), "curve must decay");
+            let start = t.curve.eval(0.0);
+            let floor = t.curve.asymptote();
+            assert!(start > floor, "positive span required");
+        }
+    }
+
+    #[test]
+    fn population_is_diverse() {
+        let mut rng = Rng::new(2);
+        let jobs: Vec<JobTemplate> =
+            (0..300).map(|id| sample_job(id, 0.0, &mut rng)).collect();
+        let sub = jobs
+            .iter()
+            .filter(|j| j.spec.kind == CurveKind::Sublinear)
+            .count();
+        assert!(sub > 120 && sub < 240, "class mix off: {sub}/300");
+        // Loss magnitudes span orders of magnitude.
+        let starts: Vec<f64> = jobs.iter().map(|j| j.curve.eval(0.0)).collect();
+        let min = starts.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = starts.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min > 50.0, "magnitude span {}", max / min);
+    }
+
+    #[test]
+    fn sources_replay_the_curve() {
+        let mut rng = Rng::new(3);
+        let t = sample_job(0, 0.0, &mut rng);
+        let mut src = t.make_source(&mut rng);
+        let floor = t.curve.asymptote();
+        assert_eq!(src.known_floor(), Some(floor));
+        let l0 = src.loss_at(0);
+        let l50 = src.loss_at(50);
+        assert!(l50 < l0);
+    }
+
+    #[test]
+    fn synthetic_gain_is_concave_increasing() {
+        let g = SyntheticGain { scale: 2.0, rate: 0.1 };
+        let mut prev_gain = 0.0;
+        let mut prev_marginal = f64::INFINITY;
+        for a in 1..100 {
+            let v = g.gain(a);
+            let marginal = v - prev_gain;
+            assert!(v >= prev_gain);
+            assert!(marginal <= prev_marginal + 1e-12);
+            prev_gain = v;
+            prev_marginal = marginal;
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: the full Rust → PJRT → AOT-artifact training path.
+//!
+//! Requires `make artifacts` to have run (the Makefile's `test` target
+//! guarantees the order); tests skip with a message otherwise.
+
+use slaq::mltrain::{AlgoKind, ExecSource, TrainSession, ALL_ALGOS};
+use slaq::coordinator::LossSource;
+use slaq::runtime::{Manifest, Runtime, RuntimeConfig};
+use std::path::Path;
+
+fn runtime() -> Option<(Runtime, Manifest)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing; run `make artifacts`");
+        return None;
+    }
+    let rt = Runtime::cpu(RuntimeConfig { artifact_dir: dir.to_path_buf() }).unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    Some((rt, manifest))
+}
+
+#[test]
+fn every_algorithm_trains_and_improves() {
+    let Some((rt, manifest)) = runtime() else { return };
+    for algo in ALL_ALGOS {
+        let mut sess = TrainSession::new(&rt, &manifest, "small", algo, 7).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..20 {
+            losses.push(sess.step().unwrap());
+        }
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "{algo:?}: non-finite loss {losses:?}"
+        );
+        let first = losses[0];
+        let last = *losses.last().unwrap();
+        assert!(
+            last < first,
+            "{algo:?}: loss did not improve ({first} -> {last})"
+        );
+    }
+}
+
+#[test]
+fn kmeans_loss_is_monotone_nonincreasing() {
+    let Some((rt, manifest)) = runtime() else { return };
+    let mut sess = TrainSession::new(&rt, &manifest, "small", AlgoKind::Kmeans, 3).unwrap();
+    let mut prev = f64::INFINITY;
+    for _ in 0..15 {
+        let loss = sess.step().unwrap();
+        assert!(loss <= prev + 1e-5, "Lloyd iteration increased loss");
+        prev = loss;
+    }
+}
+
+#[test]
+fn newton_converges_in_few_iterations() {
+    let Some((rt, manifest)) = runtime() else { return };
+    let mut sess =
+        TrainSession::new(&rt, &manifest, "small", AlgoKind::NewtonLogreg, 11).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        losses.push(sess.step().unwrap());
+    }
+    let tail_delta = (losses[6] - losses[7]).abs() / losses[0];
+    assert!(tail_delta < 1e-3, "Newton should flatline: {losses:?}");
+    assert!(losses[7] < 0.7 * losses[0]);
+}
+
+#[test]
+fn exec_source_feeds_coordinator_losses() {
+    let Some((rt, manifest)) = runtime() else { return };
+    let sess = TrainSession::new(&rt, &manifest, "small", AlgoKind::LogregGd, 5).unwrap();
+    let mut src = ExecSource::new(sess);
+    let l0 = src.loss_at(0);
+    let l5 = src.loss_at(5);
+    // Querying out of order within the cache is fine.
+    let l3 = src.loss_at(3);
+    assert!(l5 < l0);
+    assert!(l3 <= l0 && l3 >= l5 - 1e-9);
+    assert_eq!(src.losses().len(), 6);
+    assert_eq!(src.known_floor(), None);
+}
+
+#[test]
+fn sessions_are_deterministic_from_seed() {
+    let Some((rt, manifest)) = runtime() else { return };
+    let mut a = TrainSession::new(&rt, &manifest, "small", AlgoKind::SvmGd, 42).unwrap();
+    let mut b = TrainSession::new(&rt, &manifest, "small", AlgoKind::SvmGd, 42).unwrap();
+    for _ in 0..5 {
+        assert_eq!(a.step().unwrap(), b.step().unwrap());
+    }
+    let pa = a.params_f32().unwrap();
+    let pb = b.params_f32().unwrap();
+    assert_eq!(pa, pb);
+}
+
+#[test]
+fn slaq_coordinator_schedules_real_jobs_end_to_end() {
+    // Miniature of examples/quickstart.rs as a regression gate: real AOT
+    // training steps driven by the SLAQ epoch loop.
+    use slaq::cluster::{ClusterSpec, CostModel};
+    use slaq::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+    use slaq::sched::SlaqPolicy;
+
+    let Some((rt, manifest)) = runtime() else { return };
+    let cfg = CoordinatorConfig {
+        cluster: ClusterSpec { nodes: 1, cores_per_node: 8 },
+        epoch_secs: 2.0,
+        cold_start_optimism: true,
+    };
+    let mut coord = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
+    for (i, algo) in [AlgoKind::LogregGd, AlgoKind::Kmeans, AlgoKind::NewtonLogreg]
+        .iter()
+        .enumerate()
+    {
+        let sess = TrainSession::new(&rt, &manifest, "small", *algo, 50 + i as u64).unwrap();
+        coord.submit(
+            JobSpec {
+                id: i as u64,
+                name: algo.model_name().to_string(),
+                kind: algo.curve_kind(),
+                cost: CostModel::new(0.05, 4.0),
+                max_cores: 8,
+                arrival: 2.0 * i as f64,
+                target_fraction: 0.95,
+                max_iterations: 120,
+                target_hint: None,
+            },
+            Box::new(ExecSource::new(sess)),
+        );
+    }
+    coord.run_to_completion(2000);
+    let (pending, running, done) = coord.job_counts();
+    assert_eq!((pending, running, done), (0, 0, 3));
+    let trace = coord.into_trace();
+    for j in &trace.jobs {
+        let last = j.samples.last().unwrap().2;
+        assert!(last < j.initial_loss, "{} did not improve", j.name);
+        assert!(j.completion.is_some());
+    }
+    // The JSON dump of a real-execution trace must be valid JSON.
+    let dump = trace.to_json().to_string();
+    assert!(slaq::util::json::parse(&dump).is_ok());
+}
+
+#[test]
+fn base_variant_also_loads() {
+    let Some((rt, manifest)) = runtime() else { return };
+    let mut sess = TrainSession::new(&rt, &manifest, "base", AlgoKind::LinregGd, 1).unwrap();
+    let l0 = sess.step().unwrap();
+    let l1 = sess.step().unwrap();
+    assert!(l1 < l0);
+}

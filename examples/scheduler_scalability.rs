@@ -1,11 +1,16 @@
-//! Scheduler scalability — the paper's Fig 6: SLAQ allocation decision
-//! time for thousands of jobs across thousands of cores.
+//! Scheduler scalability — the paper's Fig 6 (SLAQ allocation decision
+//! time for thousands of jobs across thousands of cores) plus the churn
+//! scenario: steady-state epochs where only a handful of jobs turn over,
+//! comparing the incremental (warm-start) decision path to from-scratch.
 //!
 //! Run with:  cargo run --release --example scheduler_scalability
 
-use slaq::exp::fig6_sched_time;
+use slaq::exp::{churn_scalability, fig6_sched_time};
 
 fn main() {
     let out = fig6_sched_time(3);
     println!("{}", out.summary);
+
+    let churn = churn_scalability(&[1000, 2000, 4000], 16384, 32, 12);
+    println!("{}", churn.summary);
 }

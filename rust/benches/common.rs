@@ -1,12 +1,40 @@
 //! Shared micro-benchmark harness (criterion is not available in the
 //! offline build; this reproduces the part we need: warmup, repeated
-//! timing, and robust summary statistics).
+//! timing, robust summary statistics, and a machine-readable JSON dump).
 
 use std::time::Instant;
 
+/// Summary statistics of one benchmark (seconds per iteration).
+#[allow(dead_code)] // shared across bench binaries; not all use every item
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean latency (seconds).
+    pub mean: f64,
+    /// Median latency (seconds).
+    pub p50: f64,
+    /// 95th-percentile latency (seconds).
+    pub p95: f64,
+    /// Timed iterations.
+    pub iters: usize,
+}
+
+impl BenchStats {
+    /// Render as one JSON object (flat, all-numeric fields).
+    #[allow(dead_code)]
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"mean_secs\":{:e},\"p50_secs\":{:e},\"p95_secs\":{:e},\"iters\":{}}}",
+            self.name, self.mean, self.p50, self.p95, self.iters
+        )
+    }
+}
+
 /// Time `f` for `iters` iterations after `warmup` warmup calls; prints
-/// mean / p50 / p95 per-iteration latency.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+/// mean / p50 / p95 per-iteration latency and returns the statistics.
+#[allow(dead_code)]
+pub fn bench_stats<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     for _ in 0..warmup {
         f();
     }
@@ -26,6 +54,20 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
         fmt(p50),
         fmt(p95)
     );
+    BenchStats { name: name.to_string(), mean, p50, p95, iters }
+}
+
+/// [`bench_stats`] without the return value (most benches only print).
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) {
+    let _ = bench_stats(name, warmup, iters, f);
+}
+
+/// Write benchmark statistics to `path` as a JSON array.
+#[allow(dead_code)]
+pub fn write_bench_json(path: &str, stats: &[BenchStats]) -> std::io::Result<()> {
+    let body: Vec<String> = stats.iter().map(|s| format!("  {}", s.to_json())).collect();
+    std::fs::write(path, format!("[\n{}\n]\n", body.join(",\n")))
 }
 
 fn fmt(secs: f64) -> String {

@@ -1,16 +1,23 @@
-//! Bench: Fig 6 — SLAQ allocation decision time at scale, plus the
-//! jobs×cores sweep the paper plots.
+//! Bench: Fig 6 — SLAQ allocation decision time at scale, the jobs×cores
+//! sweep the paper plots, and the churn scenario comparing the incremental
+//! (warm-start) decision path against from-scratch.
+//!
+//! Besides the human-readable tables, the run emits `BENCH_sched.json` — a
+//! machine-readable array of `{name, mean_secs, p50_secs, p95_secs, iters}`
+//! objects — so CI and plotting scripts can track decision latency.
 
 #[path = "common.rs"]
 mod common;
 
-use common::bench;
-use slaq::exp::fig6_sched_time;
+use common::{bench_stats, write_bench_json, BenchStats};
+use slaq::exp::{churn_decision_cost, fig6_sched_time, ChurnConfig};
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
 use slaq::workload::SyntheticGain;
 
 fn main() {
+    let mut all: Vec<BenchStats> = Vec::new();
+
     println!("== Fig 6: full sweep (1000-4000 jobs × 4k-16k cores) ==");
     let out = fig6_sched_time(5);
     println!("{}", out.summary);
@@ -31,8 +38,40 @@ fn main() {
             .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
             .collect();
         let mut policy = SlaqPolicy::new();
-        bench(&format!("slaq_allocate_{jobs}x{cores}"), 2, 20, || {
+        all.push(bench_stats(&format!("slaq_allocate_{jobs}x{cores}"), 2, 20, || {
             common::black_box(policy.allocate(&requests, cores));
-        });
+        }));
+    }
+
+    println!("== churn: incremental vs from-scratch steady-state epochs ==");
+    for (jobs, cores, churn) in [(1000usize, 4096u32, 16usize), (4000, 16384, 32)] {
+        let cfg = ChurnConfig { jobs, cores, churn_per_epoch: churn, epochs: 10, seed: 7 };
+        let scratch = churn_decision_cost(&cfg, false);
+        let warm = churn_decision_cost(&cfg, true);
+        let speedup = scratch.mean_millis() / warm.mean_millis().max(1e-9);
+        println!(
+            "churn_{jobs}x{cores}_r{churn}: scratch {:.2} ms/epoch ({:.0} evals) vs \
+             incremental {:.2} ms/epoch ({:.0} evals) — {speedup:.1}x, warm {}/{}",
+            scratch.mean_millis(),
+            scratch.mean_evals(),
+            warm.mean_millis(),
+            warm.mean_evals(),
+            warm.warm_epochs,
+            warm.epochs,
+        );
+        for (mode, cost) in [("scratch", &scratch), ("incremental", &warm)] {
+            all.push(BenchStats {
+                name: format!("churn_{mode}_{jobs}x{cores}_r{churn}"),
+                mean: cost.mean_millis() / 1e3,
+                p50: cost.percentile_millis(50.0) / 1e3,
+                p95: cost.percentile_millis(95.0) / 1e3,
+                iters: cost.epochs,
+            });
+        }
+    }
+
+    match write_bench_json("BENCH_sched.json", &all) {
+        Ok(()) => println!("\nwrote BENCH_sched.json ({} entries)", all.len()),
+        Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),
     }
 }

@@ -14,4 +14,4 @@ mod cost;
 mod nodes;
 
 pub use cost::CostModel;
-pub use nodes::{ClusterSpec, NodePool, Placement};
+pub use nodes::{ClusterSpec, NodePool, Placement, PlacementDelta};

@@ -34,6 +34,26 @@ impl ClusterSpec {
 /// Where a job's cores live: `node -> cores held on that node`.
 pub type Placement = BTreeMap<u32, u32>;
 
+/// Summary of one epoch's placement update (see [`NodePool::apply_diff`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlacementDelta {
+    /// Jobs whose grant shrank.
+    pub shrunk_jobs: usize,
+    /// Jobs whose grant grew.
+    pub grown_jobs: usize,
+    /// Cores released by the shrink phase.
+    pub released_cores: u32,
+    /// Cores claimed by the grow phase.
+    pub claimed_cores: u32,
+}
+
+impl PlacementDelta {
+    /// True when no node state was touched.
+    pub fn is_noop(&self) -> bool {
+        self.shrunk_jobs == 0 && self.grown_jobs == 0
+    }
+}
+
 /// Tracks free cores per node and per-job placements.
 #[derive(Debug, Clone)]
 pub struct NodePool {
@@ -62,9 +82,16 @@ impl NodePool {
         self.free.iter().sum()
     }
 
-    /// Current placement of a job (empty if none).
+    /// Current placement of a job (empty if none). Clones the map — use
+    /// [`NodePool::placement_ref`] on hot paths.
     pub fn placement(&self, job: u64) -> Placement {
         self.placements.get(&job).cloned().unwrap_or_default()
+    }
+
+    /// Borrow a job's placement without cloning (`None` when the job holds
+    /// no cores).
+    pub fn placement_ref(&self, job: u64) -> Option<&Placement> {
+        self.placements.get(&job)
     }
 
     /// Cores currently held by a job.
@@ -95,6 +122,42 @@ impl NodePool {
         true
     }
 
+    /// Apply a whole epoch's target grants as placement *deltas*: every
+    /// over-target job shrinks first (freeing cores), then every
+    /// under-target job grows into the freed space. Jobs already at target
+    /// cost one `held` lookup and touch no node state — the common case in
+    /// steady-state epochs. Panics if the targets are infeasible (total
+    /// beyond pool capacity), which a correct policy never produces.
+    pub fn apply_diff(&mut self, targets: &[(u64, u32)]) -> PlacementDelta {
+        let mut delta = PlacementDelta::default();
+        for &(job, target) in targets {
+            let current = self.held(job);
+            if target < current {
+                self.shrink(job, current - target);
+                if target == 0 {
+                    self.placements.remove(&job);
+                }
+                delta.shrunk_jobs += 1;
+                delta.released_cores += current - target;
+            }
+        }
+        for &(job, target) in targets {
+            let current = self.held(job);
+            if target > current {
+                let need = target - current;
+                assert!(
+                    need <= self.free_cores(),
+                    "placement diff infeasible: job {job} needs {need} cores, {} free",
+                    self.free_cores()
+                );
+                self.grow(job, need);
+                delta.grown_jobs += 1;
+                delta.claimed_cores += need;
+            }
+        }
+        delta
+    }
+
     /// Release all cores of a job (job completion).
     pub fn release_all(&mut self, job: u64) {
         if let Some(p) = self.placements.remove(&job) {
@@ -107,8 +170,12 @@ impl NodePool {
     fn grow(&mut self, job: u64, mut need: u32) {
         let placement = self.placements.entry(job).or_default();
         // Pack-first: prefer nodes where the job already has cores, then
-        // the fullest (least-free, non-empty) nodes.
-        let mut order: Vec<u32> = (0..self.spec.nodes).collect();
+        // the fullest (least-free, non-empty) nodes. Fully used nodes are
+        // skipped outright — in the contended steady state most nodes are
+        // full, so the candidate list stays short.
+        let mut order: Vec<u32> = (0..self.spec.nodes)
+            .filter(|&n| self.free[n as usize] > 0)
+            .collect();
         order.sort_by_key(|&n| {
             let has_job = placement.contains_key(&n);
             let free = self.free[n as usize];
@@ -247,6 +314,90 @@ mod tests {
         p.release_all(1);
         assert_eq!(p.free_cores(), 22);
         p.check_invariants();
+    }
+
+    #[test]
+    fn apply_diff_steady_state_is_a_noop() {
+        let mut p = pool4x8();
+        p.resize(1, 10);
+        p.resize(2, 10);
+        let delta = p.apply_diff(&[(1, 10), (2, 10)]);
+        assert!(delta.is_noop());
+        assert_eq!(p.held(1), 10);
+        assert_eq!(p.held(2), 10);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn apply_diff_shrinks_before_growing() {
+        // Job 2's grow only fits because job 1's shrink runs first.
+        let mut p = pool4x8();
+        p.resize(1, 30);
+        p.resize(2, 2);
+        let delta = p.apply_diff(&[(1, 10), (2, 20)]);
+        assert_eq!(p.held(1), 10);
+        assert_eq!(p.held(2), 20);
+        assert_eq!(delta.shrunk_jobs, 1);
+        assert_eq!(delta.grown_jobs, 1);
+        assert_eq!(delta.released_cores, 20);
+        assert_eq!(delta.claimed_cores, 18);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn apply_diff_target_zero_drops_placement() {
+        let mut p = pool4x8();
+        p.resize(5, 7);
+        let delta = p.apply_diff(&[(5, 0)]);
+        assert_eq!(p.held(5), 0);
+        assert_eq!(p.span(5), 0);
+        assert_eq!(p.free_cores(), 32);
+        assert_eq!(delta.released_cores, 7);
+        assert!(p.placement_ref(5).is_none());
+    }
+
+    #[test]
+    fn apply_diff_matches_sequential_resizes() {
+        forall("apply_diff ≡ shrink-all-then-grow-all resize", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 8) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let jobs = g.usize_in(1, 6) as u64;
+            // Random starting placement.
+            let mut a = NodePool::new(spec);
+            for job in 0..jobs {
+                let want = g.usize_in(0, (spec.capacity() + 1) as usize) as u32;
+                let _ = a.resize(job, want.min(a.free_cores()));
+            }
+            let mut b = a.clone();
+            // Random feasible targets: never exceed total capacity.
+            let mut room = spec.capacity();
+            let targets: Vec<(u64, u32)> = (0..jobs)
+                .map(|job| {
+                    let t = g.usize_in(0, (room + 1) as usize) as u32;
+                    room -= t;
+                    (job, t)
+                })
+                .collect();
+            a.apply_diff(&targets);
+            // Reference behaviour: all shrinks, then all grows.
+            for &(job, t) in &targets {
+                if t < b.held(job) {
+                    assert!(b.resize(job, t));
+                }
+            }
+            for &(job, t) in &targets {
+                if t > b.held(job) {
+                    assert!(b.resize(job, t));
+                }
+            }
+            for job in 0..jobs {
+                assert_eq!(a.held(job), b.held(job), "job {job} targets {targets:?}");
+            }
+            a.check_invariants();
+            b.check_invariants();
+        });
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! The epoch-driven scheduling loop.
+//! The epoch-driven scheduling loop, built around persistent, delta-aware
+//! state: the [`JobLedger`] (id-indexed jobs, arrival heap, running set),
+//! the [`SchedContext`] (previous grant, for policy warm starts) and the
+//! node pool's placement-diff application.
 
-use super::job::{Job, JobSpec, JobState};
+use super::job::{JobState, JobSpec, Job};
+use super::ledger::JobLedger;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
 use crate::cluster::{ClusterSpec, NodePool};
-use crate::sched::{GainModel, JobRequest, Policy};
+use crate::sched::{GainModel, JobRequest, Policy, SchedContext};
 use std::time::Instant;
 
 /// Coordinator configuration.
@@ -60,28 +64,36 @@ impl GainModel for JobGain<'_> {
     }
 }
 
-/// The SLAQ coordinator: owns the jobs, the node pool and the policy.
+/// The SLAQ coordinator: owns the job ledger, the node pool, the policy
+/// and the persistent scheduling context.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     policy: Box<dyn Policy>,
     pool: NodePool,
-    jobs: Vec<Job>,
+    ledger: JobLedger,
+    sched_ctx: SchedContext,
     time: f64,
     epochs: Vec<EpochRecord>,
-    activated_at: Vec<f64>,
 }
 
 impl Coordinator {
     /// New coordinator with the given policy.
     pub fn new(cfg: CoordinatorConfig, policy: Box<dyn Policy>) -> Self {
         let pool = NodePool::new(cfg.cluster);
-        Self { cfg, policy, pool, jobs: Vec::new(), time: 0.0, epochs: Vec::new(), activated_at: Vec::new() }
+        Self {
+            cfg,
+            policy,
+            pool,
+            ledger: JobLedger::new(),
+            sched_ctx: SchedContext::new(),
+            time: 0.0,
+            epochs: Vec::new(),
+        }
     }
 
-    /// Submit a job (may arrive in the future).
+    /// Submit a job (may arrive in the future). Job ids must be unique.
     pub fn submit(&mut self, spec: JobSpec, source: Box<dyn LossSource>) {
-        self.jobs.push(Job::new(spec, source));
-        self.activated_at.push(f64::NAN);
+        self.ledger.submit(spec, source);
     }
 
     /// Current virtual time.
@@ -95,53 +107,48 @@ impl Coordinator {
     }
 
     /// Number of jobs in each state: (pending, running, completed).
+    /// O(1) — maintained by the ledger, not recomputed by scanning.
     pub fn job_counts(&self) -> (usize, usize, usize) {
-        let mut c = (0, 0, 0);
-        for j in &self.jobs {
-            match j.state {
-                JobState::Pending => c.0 += 1,
-                JobState::Running => c.1 += 1,
-                JobState::Completed => c.2 += 1,
-            }
-        }
-        c
+        self.ledger.counts()
     }
 
     /// Run one scheduling epoch.
+    ///
+    /// The hot loop touches pending jobs only when they arrive (ledger
+    /// heap) and never revisits completed jobs; the allocator receives the
+    /// persistent [`SchedContext`] so warm-start policies pay for what
+    /// changed, not for cluster capacity.
     pub fn step_epoch(&mut self) {
         let t0 = self.time;
         let window = self.cfg.epoch_secs;
 
-        // 1. Activate arrivals.
-        for (i, job) in self.jobs.iter_mut().enumerate() {
-            if job.state == JobState::Pending && job.spec.arrival <= t0 {
-                job.activate(t0);
-                self.activated_at[i] = t0;
-            }
-        }
+        // 1. Activate arrivals — O(arrivals), driven by the arrival heap.
+        self.ledger.activate_due(t0);
 
-        // 2. Collect active jobs and build gain oracles.
-        let active: Vec<usize> = self
-            .jobs
-            .iter()
-            .enumerate()
-            .filter(|(_, j)| j.state == JobState::Running)
-            .map(|(i, _)| i)
-            .collect();
+        // 2. The running set (completed jobs have already dropped out).
+        let active = self.ledger.running_ids();
 
         // Sync point for the lazy predictors: one refit per active job per
         // epoch, no matter how many iterations completed since the last one.
-        for &i in &active {
-            self.jobs[i].predictor.refresh_fit();
+        for &id in &active {
+            self.ledger.job_mut(id).expect("running job").predictor.refresh_fit();
         }
 
         let sched_nanos;
         let allocation;
+        let targets: Vec<(u64, u32)>;
+        let entries: Vec<EpochEntry>;
         {
-            let gains: Vec<JobGain<'_>> = active
+            // One ledger lookup per job, shared by the gain oracles and
+            // the epoch record below.
+            let jobs: Vec<&Job> = active
                 .iter()
-                .map(|&i| JobGain {
-                    job: &self.jobs[i],
+                .map(|&id| self.ledger.job(id).expect("running job"))
+                .collect();
+            let gains: Vec<JobGain<'_>> = jobs
+                .iter()
+                .map(|&job| JobGain {
+                    job,
                     window,
                     cold_start_optimism: self.cfg.cold_start_optimism,
                 })
@@ -149,46 +156,45 @@ impl Coordinator {
             let requests: Vec<JobRequest<'_>> = active
                 .iter()
                 .zip(&gains)
-                .map(|(&i, g)| JobRequest {
-                    id: self.jobs[i].spec.id,
-                    max_cores: self.jobs[i].spec.max_cores,
+                .map(|(&id, g)| JobRequest {
+                    id,
+                    max_cores: g.job.spec.max_cores,
                     gain: g,
                 })
                 .collect();
 
-            // 3. Allocate (this is the decision Fig 6 times).
+            // 3. Allocate (this is the decision Fig 6 times). The context
+            // carries the previous grant for the warm-start path.
             let start = Instant::now();
-            allocation = self.policy.allocate(&requests, self.cfg.cluster.capacity());
+            allocation =
+                self.policy
+                    .allocate_ctx(&self.sched_ctx, &requests, self.cfg.cluster.capacity());
             sched_nanos = start.elapsed().as_nanos() as u64;
+
+            // Persist this epoch's grant for the next warm start.
+            self.sched_ctx.record(&requests, &allocation);
+            targets = requests
+                .iter()
+                .zip(&allocation.cores)
+                .map(|(r, &cores)| (r.id, cores))
+                .collect();
+            // Epoch record (losses at epoch start, before jobs advance).
+            entries = active
+                .iter()
+                .zip(&jobs)
+                .zip(&allocation.cores)
+                .map(|((&id, &job), &cores)| EpochEntry {
+                    job: id,
+                    cores,
+                    loss: job.current_loss(),
+                })
+                .collect();
         }
 
-        // 4. Apply placements: shrink first to free cores, then grow.
-        for (&i, &cores) in active.iter().zip(&allocation.cores) {
-            let id = self.jobs[i].spec.id;
-            if cores < self.pool.held(id) {
-                assert!(self.pool.resize(id, cores));
-            }
-        }
-        for (&i, &cores) in active.iter().zip(&allocation.cores) {
-            let id = self.jobs[i].spec.id;
-            if cores > self.pool.held(id) {
-                assert!(
-                    self.pool.resize(id, cores),
-                    "placement failed for job {id}: {cores} cores"
-                );
-            }
-        }
+        // 4. Apply only the placement deltas (shrink first, then grow).
+        self.pool.apply_diff(&targets);
 
-        // 5. Record the epoch before advancing (losses at epoch start).
-        let entries: Vec<EpochEntry> = active
-            .iter()
-            .zip(&allocation.cores)
-            .map(|(&i, &cores)| EpochEntry {
-                job: self.jobs[i].spec.id,
-                cores,
-                loss: self.jobs[i].current_loss(),
-            })
-            .collect();
+        // 5. Record the epoch before advancing.
         self.epochs.push(EpochRecord {
             time: t0,
             sched_nanos,
@@ -196,12 +202,15 @@ impl Coordinator {
             entries,
         });
 
-        // 6. Advance jobs through the window.
-        for (&i, &cores) in active.iter().zip(&allocation.cores) {
-            let job = &mut self.jobs[i];
+        // 6. Advance jobs through the window; completed jobs leave the
+        // running set, the node pool and the scheduling context.
+        for (&id, &cores) in active.iter().zip(&allocation.cores) {
+            let job = self.ledger.job_mut(id).expect("running job");
             job.advance(t0, window, cores);
             if job.state == JobState::Completed {
-                self.pool.release_all(job.spec.id);
+                self.pool.release_all(id);
+                self.ledger.retire(id);
+                self.sched_ctx.forget(id);
             }
         }
 
@@ -226,9 +235,9 @@ impl Coordinator {
         }
     }
 
-    /// Immutable view of the jobs.
-    pub fn jobs(&self) -> &[Job] {
-        &self.jobs
+    /// Immutable view of the job ledger.
+    pub fn ledger(&self) -> &JobLedger {
+        &self.ledger
     }
 
     /// Node pool (placement state).
@@ -239,18 +248,20 @@ impl Coordinator {
     /// Extract the full trace (consumes the coordinator).
     pub fn into_trace(self) -> Trace {
         let jobs = self
-            .jobs
-            .iter()
-            .enumerate()
-            .map(|(i, j)| JobTrace {
-                id: j.spec.id,
-                name: j.spec.name.clone(),
-                arrival: j.spec.arrival,
-                activated: self.activated_at[i],
-                completion: j.completion_time,
-                floor: j.source.known_floor(),
-                initial_loss: j.initial_loss,
-                samples: j.loss_trace.clone(),
+            .ledger
+            .into_entries()
+            .map(|(id, entry)| {
+                let j = entry.job;
+                JobTrace {
+                    id,
+                    name: j.spec.name,
+                    arrival: j.spec.arrival,
+                    activated: entry.activated_at,
+                    completion: j.completion_time,
+                    floor: j.source.known_floor(),
+                    initial_loss: j.initial_loss,
+                    samples: j.loss_trace,
+                }
             })
             .collect();
         Trace { epochs: self.epochs, jobs }
@@ -360,6 +371,21 @@ mod tests {
     }
 
     #[test]
+    fn ledger_counts_track_the_epoch_loop() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        c.submit(mk_spec(0, 0.0, CurveKind::Exponential), exp_source(1, 0.5));
+        c.submit(mk_spec(1, 1000.0, CurveKind::Exponential), exp_source(2, 0.5));
+        assert_eq!(c.job_counts(), (2, 0, 0));
+        c.step_epoch();
+        assert_eq!(c.job_counts().0, 1, "future arrival must stay pending");
+        c.run_until(100.0);
+        let (p, r, done) = c.job_counts();
+        assert_eq!((p, done), (1, 1), "fast job completes, future stays pending");
+        assert_eq!(r, 0);
+        assert_eq!(c.ledger().len(), 2);
+    }
+
+    #[test]
     fn slaq_prioritizes_fresh_jobs_over_nearly_converged() {
         // Job 0 starts at t=0 and is deep into its convergence tail when
         // job 1 arrives at t=30 with maximal quality potential. SLAQ should
@@ -431,9 +457,7 @@ mod tests {
             for e in &trace.epochs {
                 for en in &e.entries {
                     let j = trace.job(en.job).unwrap();
-                    let floor = j.floor.unwrap();
-                    let span = j.initial_loss - floor;
-                    total += ((en.loss - floor) / span).clamp(0.0, 1.0);
+                    total += j.norm_loss(en.loss);
                     count += 1;
                 }
             }

@@ -1,0 +1,250 @@
+//! The persistent job ledger: id-indexed job state with an arrival-ordered
+//! pending heap and an explicit running set.
+//!
+//! The ledger replaces the coordinator's former parallel `Vec<Job>` +
+//! `activated_at` arrays. Its contract is that epoch stepping never scans
+//! the full submission history:
+//!
+//! * **activation** pops the arrival min-heap — O(arrivals·log pending)
+//!   per epoch, not O(all jobs);
+//! * **the hot loop** iterates the running set only — completed jobs drop
+//!   out via [`JobLedger::retire`] and are never touched again;
+//! * **lookups** are by stable job id, matching the id-keyed
+//!   [`crate::sched::SchedContext`] the allocator warm-starts from.
+
+use super::job::{Job, JobSpec};
+use super::source::LossSource;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+
+/// Total-order wrapper for finite arrival times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Arrival(f64);
+
+impl Eq for Arrival {}
+
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Arrival {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// One job plus its ledger bookkeeping.
+pub struct LedgerEntry {
+    /// The job itself.
+    pub job: Job,
+    /// Activation time (NaN until the job is activated).
+    pub activated_at: f64,
+}
+
+/// Id-indexed job store with arrival-ordered activation.
+#[derive(Default)]
+pub struct JobLedger {
+    /// Every job ever submitted, keyed by id (deterministic iteration).
+    jobs: BTreeMap<u64, LedgerEntry>,
+    /// Jobs not yet activated, ordered by arrival time.
+    pending: BinaryHeap<Reverse<(Arrival, u64)>>,
+    /// Ids of currently running jobs.
+    running: BTreeSet<u64>,
+    /// Completed-job count (jobs retired from the running set).
+    completed: usize,
+}
+
+impl JobLedger {
+    /// Empty ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a job (may arrive in the future). Job ids must be unique.
+    pub fn submit(&mut self, spec: JobSpec, source: Box<dyn LossSource>) {
+        let id = spec.id;
+        let arrival = spec.arrival;
+        let prev = self.jobs.insert(
+            id,
+            LedgerEntry { job: Job::new(spec, source), activated_at: f64::NAN },
+        );
+        assert!(prev.is_none(), "duplicate job id {id}");
+        self.pending.push(Reverse((Arrival(arrival), id)));
+    }
+
+    /// Activate every pending job whose arrival is at or before `now`,
+    /// in arrival order. Returns how many were activated. Cost is
+    /// O(activated · log pending) — epochs with no arrivals cost O(1).
+    pub fn activate_due(&mut self, now: f64) -> usize {
+        let mut activated = 0;
+        while let Some(&Reverse((Arrival(arrival), id))) = self.pending.peek() {
+            if arrival > now {
+                break;
+            }
+            self.pending.pop();
+            let entry = self.jobs.get_mut(&id).expect("pending job in ledger");
+            entry.job.activate(now);
+            entry.activated_at = now;
+            self.running.insert(id);
+            activated += 1;
+        }
+        activated
+    }
+
+    /// Ids of the currently running jobs, in ascending id order.
+    pub fn running_ids(&self) -> Vec<u64> {
+        self.running.iter().copied().collect()
+    }
+
+    /// The running set.
+    pub fn running(&self) -> &BTreeSet<u64> {
+        &self.running
+    }
+
+    /// Borrow a job by id.
+    pub fn job(&self, id: u64) -> Option<&Job> {
+        self.jobs.get(&id).map(|e| &e.job)
+    }
+
+    /// Mutably borrow a job by id.
+    pub fn job_mut(&mut self, id: u64) -> Option<&mut Job> {
+        self.jobs.get_mut(&id).map(|e| &mut e.job)
+    }
+
+    /// Activation time of a job (NaN if not yet activated).
+    pub fn activated_at(&self, id: u64) -> f64 {
+        self.jobs.get(&id).map(|e| e.activated_at).unwrap_or(f64::NAN)
+    }
+
+    /// Drop a completed job out of the running set. Idempotent; the job's
+    /// record stays in the ledger for tracing, but the hot loop never
+    /// visits it again.
+    pub fn retire(&mut self, id: u64) {
+        if self.running.remove(&id) {
+            self.completed += 1;
+        }
+    }
+
+    /// `(pending, running, completed)` job counts — O(1), no scan.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        (self.pending.len(), self.running.len(), self.completed)
+    }
+
+    /// Total jobs ever submitted.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// True when nothing was ever submitted.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Iterate all entries in id order.
+    pub fn entries(&self) -> impl Iterator<Item = (&u64, &LedgerEntry)> {
+        self.jobs.iter()
+    }
+
+    /// Consume the ledger, yielding `(id, entry)` in id order.
+    pub fn into_entries(self) -> impl Iterator<Item = (u64, LedgerEntry)> {
+        self.jobs.into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CostModel;
+    use crate::coordinator::source::SyntheticSource;
+    use crate::coordinator::JobState;
+    use crate::predictor::{CurveKind, CurveModel};
+    use crate::util::rng::Rng;
+
+    fn spec(id: u64, arrival: f64) -> JobSpec {
+        JobSpec {
+            id,
+            name: format!("job-{id}"),
+            kind: CurveKind::Exponential,
+            cost: CostModel::new(0.1, 2.0),
+            max_cores: 16,
+            arrival,
+            target_fraction: 0.95,
+            max_iterations: 10_000,
+            target_hint: None,
+        }
+    }
+
+    fn source(seed: u64) -> Box<dyn LossSource> {
+        Box::new(SyntheticSource::new(
+            CurveModel::Exponential { m: 4.0, mu: 0.8, c: 1.0 },
+            0.0,
+            Rng::new(seed),
+        ))
+    }
+
+    #[test]
+    fn activation_is_arrival_ordered_not_submission_ordered() {
+        let mut ledger = JobLedger::new();
+        // Submit out of arrival order.
+        ledger.submit(spec(0, 30.0), source(1));
+        ledger.submit(spec(1, 10.0), source(2));
+        ledger.submit(spec(2, 20.0), source(3));
+        assert_eq!(ledger.counts(), (3, 0, 0));
+
+        assert_eq!(ledger.activate_due(5.0), 0);
+        assert_eq!(ledger.activate_due(15.0), 1);
+        assert_eq!(ledger.running_ids(), vec![1]);
+        assert_eq!(ledger.activate_due(30.0), 2);
+        assert_eq!(ledger.running_ids(), vec![0, 1, 2]);
+        assert_eq!(ledger.counts(), (0, 3, 0));
+        assert_eq!(ledger.activated_at(1), 15.0);
+        assert_eq!(ledger.activated_at(0), 30.0);
+    }
+
+    #[test]
+    fn retire_moves_jobs_out_of_the_hot_set() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(7, 0.0), source(1));
+        ledger.submit(spec(8, 0.0), source(2));
+        ledger.activate_due(0.0);
+        ledger.retire(7);
+        ledger.retire(7); // idempotent
+        assert_eq!(ledger.counts(), (0, 1, 1));
+        assert_eq!(ledger.running_ids(), vec![8]);
+        // The record survives for tracing.
+        assert!(ledger.job(7).is_some());
+        assert_eq!(ledger.job(7).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn lookups_by_id() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(42, 0.0), source(1));
+        assert!(ledger.job(42).is_some());
+        assert!(ledger.job(43).is_none());
+        ledger.activate_due(0.0);
+        let job = ledger.job_mut(42).unwrap();
+        assert_eq!(job.state, JobState::Running);
+        assert!(ledger.activated_at(43).is_nan());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_ids_rejected() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(1, 0.0), source(1));
+        ledger.submit(spec(1, 5.0), source(2));
+    }
+
+    #[test]
+    fn simultaneous_arrivals_all_activate() {
+        let mut ledger = JobLedger::new();
+        for id in 0..5 {
+            ledger.submit(spec(id, 1.0), source(id));
+        }
+        assert_eq!(ledger.activate_due(1.0), 5);
+        assert_eq!(ledger.counts(), (0, 5, 0));
+    }
+}

@@ -1,22 +1,40 @@
 //! The SLAQ coordinator: job lifecycle, the epoch-driven scheduling loop,
 //! and experiment traces.
 //!
+//! The coordinator is built around persistent, delta-aware state — between
+//! epochs the cluster changes *incrementally* (a few arrivals, a few
+//! completions, gains drifting), so nothing is rebuilt from scratch:
+//!
+//! * the [`JobLedger`] indexes jobs by stable id, keeps not-yet-activated
+//!   jobs in an arrival-ordered min-heap (activation costs O(arrivals) per
+//!   epoch, not O(all jobs)) and maintains the running set so completed
+//!   jobs drop out of the hot loop permanently;
+//! * a persistent [`crate::sched::SchedContext`] carries the previous
+//!   epoch's grant into the allocator, which lets [`crate::sched::SlaqPolicy`]
+//!   warm-start from the prior solution;
+//! * placements are updated through the node pool's diff API
+//!   ([`crate::cluster::NodePool::apply_diff`]) — only shrink/grow deltas
+//!   touch node state.
+//!
 //! Each scheduling epoch the coordinator:
-//! 1. activates newly arrived jobs,
-//! 2. asks every active job for its predicted quality gain as a function of
-//!    cores (via its online predictor + cost model),
-//! 3. runs the configured [`crate::sched::Policy`] to produce an allocation,
-//! 4. places the allocation onto worker nodes,
+//! 1. activates newly arrived jobs from the ledger's arrival heap,
+//! 2. asks every *running* job for its predicted quality gain as a function
+//!    of cores (via its online predictor + cost model),
+//! 3. runs the configured [`crate::sched::Policy`] through its delta-aware
+//!    entry point to produce an allocation,
+//! 4. applies the placement delta onto worker nodes,
 //! 5. advances jobs through the epoch window, feeding completed-iteration
 //!    losses back into their predictors,
 //! 6. records everything into a [`Trace`].
 
 mod epoch;
 mod job;
+mod ledger;
 mod source;
 mod trace;
 
 pub use epoch::{Coordinator, CoordinatorConfig};
 pub use job::{Job, JobSpec, JobState};
+pub use ledger::{JobLedger, LedgerEntry};
 pub use source::{LossSource, NonConvexSource, ReplaySource, SyntheticSource};
 pub use trace::{EpochRecord, JobTrace, Trace};

@@ -47,6 +47,13 @@ pub struct JobTrace {
 }
 
 impl JobTrace {
+    /// Normalized position of `loss` on this job's `[floor, initial]` span
+    /// (the Fig-4 scale; see [`crate::quality::normalized_loss`]). Jobs
+    /// without a known floor normalize against 0.
+    pub fn norm_loss(&self, loss: f64) -> f64 {
+        crate::quality::normalized_loss(self.initial_loss, self.floor.unwrap_or(0.0), loss)
+    }
+
     /// Loss value at virtual time `t` (step function over samples).
     pub fn loss_at_time(&self, t: f64) -> Option<f64> {
         if self.samples.is_empty() || t < self.samples[0].0 {

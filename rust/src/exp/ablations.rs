@@ -19,7 +19,8 @@ use crate::util::csv::Csv;
 use crate::util::rng::Rng;
 use crate::workload::paper_trace;
 
-/// Mean normalized loss across running jobs over the whole trace.
+/// Mean normalized loss across running jobs over the whole trace (the
+/// Fig-4 scale, shared via [`crate::quality::normalized_loss`]).
 fn avg_norm_loss(trace: &Trace) -> f64 {
     let mut total = 0.0;
     let mut count = 0usize;
@@ -27,9 +28,8 @@ fn avg_norm_loss(trace: &Trace) -> f64 {
         for en in &e.entries {
             let j = trace.job(en.job).unwrap();
             let floor = j.floor.unwrap_or(0.0);
-            let span = j.initial_loss - floor;
-            if span > 0.0 {
-                total += ((en.loss - floor) / span).clamp(0.0, 1.0);
+            if j.initial_loss > floor {
+                total += j.norm_loss(en.loss);
                 count += 1;
             }
         }

@@ -8,12 +8,14 @@
 //! | [`fig4_avg_loss`]   | Fig 4 — avg normalized loss, SLAQ vs fair       |
 //! | [`fig5_time_to`]    | Fig 5 — time to X% loss reduction               |
 //! | [`fig6_sched_time`] | Fig 6 — scheduler decision time at scale        |
+//! | [`churn_scalability`] | churn — incremental vs from-scratch decisions |
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
-//! the calibrated synthetic zoo at the paper's 160-job scale; Fig 6 is an
-//! allocator microbenchmark.
+//! the calibrated synthetic zoo at the paper's 160-job scale; Fig 6 and
+//! the churn scenario are allocator microbenchmarks (churn measures the
+//! warm-start path against from-scratch under steady-state job turnover).
 
 mod ablations;
 mod real_runs;
@@ -24,5 +26,8 @@ mod sim_runs;
 pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
 pub use real_runs::{fig1_work_cdf, fig2_norm_delta, pred_accuracy, run_zoo_real, ZooRun};
 pub use report::{render_table, ExpOutput};
-pub use scalability::fig6_sched_time;
+pub use scalability::{
+    churn_decision_cost, churn_scalability, fig6_sched_time, time_decision, ChurnConfig,
+    ChurnCost,
+};
 pub use sim_runs::{fig3_allocation, fig4_avg_loss, fig5_time_to, run_sim_trace, SimConfig};

@@ -1,8 +1,14 @@
-//! Fig 6: scheduler decision time at scale (thousands of jobs × thousands
-//! of cores, "simulating both the jobs and worker nodes").
+//! Scheduler decision time at scale.
+//!
+//! * Fig 6: one-shot allocation over thousands of jobs × thousands of
+//!   cores ("simulating both the jobs and worker nodes").
+//! * Churn: steady-state epochs with a configurable arrival/completion
+//!   rate, measuring the *incremental* (warm-start) decision path against
+//!   the from-scratch path — the regime a production scheduler actually
+//!   lives in, where cluster state changes by a handful of jobs per epoch.
 
 use super::report::{render_table, ExpOutput};
-use crate::sched::{JobRequest, Policy, SlaqPolicy};
+use crate::sched::{JobRequest, Policy, SchedContext, SlaqPolicy};
 use crate::util::csv::Csv;
 use crate::util::rng::Rng;
 use crate::workload::SyntheticGain;
@@ -63,6 +69,202 @@ pub fn fig6_sched_time(reps: usize) -> ExpOutput {
     ExpOutput { id: "fig6".into(), csv, summary }
 }
 
+/// Churn scenario configuration: a steady-state population with a fixed
+/// number of completions + arrivals per epoch and per-job gain drift.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// Steady-state population size.
+    pub jobs: usize,
+    /// Cluster capacity (cores).
+    pub cores: u32,
+    /// Jobs replaced (one completion + one fresh arrival each) per epoch.
+    pub churn_per_epoch: usize,
+    /// Measured steady-state epochs (one unmeasured warm-up epoch runs
+    /// first to establish the previous grant).
+    pub epochs: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// Accumulated decision costs of one scheduling mode over a churn run.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnCost {
+    /// Total decision wall-clock across measured epochs (ms).
+    pub total_millis: f64,
+    /// Total gain-oracle evaluations across measured epochs.
+    pub total_evals: u64,
+    /// Epochs that actually took the warm-start path.
+    pub warm_epochs: usize,
+    /// Epochs measured.
+    pub epochs: usize,
+    /// Per-epoch decision times (ms), in epoch order.
+    pub epoch_millis: Vec<f64>,
+}
+
+impl ChurnCost {
+    /// Mean decision time per epoch (ms).
+    pub fn mean_millis(&self) -> f64 {
+        self.total_millis / (self.epochs.max(1)) as f64
+    }
+
+    /// Decision-time percentile across epochs (ms); NaN with no epochs.
+    pub fn percentile_millis(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.epoch_millis, q)
+    }
+
+    /// Mean gain evaluations per epoch.
+    pub fn mean_evals(&self) -> f64 {
+        self.total_evals as f64 / (self.epochs.max(1)) as f64
+    }
+}
+
+/// One synthetic job in the churn population.
+struct ChurnJob {
+    id: u64,
+    gain: SyntheticGain,
+    max_cores: u32,
+    /// Per-epoch multiplicative decay of the gain scale — models the job
+    /// converging (its quality potential shrinking) between decisions.
+    decay: f64,
+}
+
+fn sample_churn_job(rng: &mut Rng, id: u64) -> ChurnJob {
+    ChurnJob {
+        id,
+        gain: SyntheticGain {
+            scale: rng.range_f64(0.01, 2.0),
+            rate: rng.range_f64(0.02, 0.5),
+        },
+        max_cores: rng.range_u64(32, 129) as u32,
+        decay: rng.range_f64(0.95, 0.999),
+    }
+}
+
+/// Run the churn trace once. `warm` selects the incremental (delta-based)
+/// decision path; otherwise every epoch re-runs the from-scratch
+/// allocator. Identical seeds produce identical job populations in both
+/// modes, so the comparison isolates the decision path.
+pub fn churn_decision_cost(cfg: &ChurnConfig, warm: bool) -> ChurnCost {
+    let mut rng = Rng::new(cfg.seed);
+    let mut next_id = 0u64;
+    let mut pop: Vec<ChurnJob> = (0..cfg.jobs)
+        .map(|_| {
+            let job = sample_churn_job(&mut rng, next_id);
+            next_id += 1;
+            job
+        })
+        .collect();
+
+    let mut policy = SlaqPolicy::new();
+    let mut ctx = SchedContext::new();
+    let mut cost = ChurnCost::default();
+
+    // Warm-up epoch (not measured): establishes the previous grant.
+    {
+        let requests: Vec<JobRequest<'_>> = pop
+            .iter()
+            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, gain: &j.gain })
+            .collect();
+        let alloc = policy.allocate(&requests, cfg.cores);
+        ctx.record(&requests, &alloc);
+    }
+
+    for _ in 0..cfg.epochs {
+        // Churn: `churn_per_epoch` jobs complete and are replaced by fresh
+        // arrivals with new ids.
+        for _ in 0..cfg.churn_per_epoch {
+            let slot = rng.below_usize(pop.len());
+            pop[slot] = sample_churn_job(&mut rng, next_id);
+            next_id += 1;
+        }
+        // Gain drift: every surviving job converged a little since the
+        // last decision.
+        for j in &mut pop {
+            j.gain.scale *= j.decay;
+        }
+
+        let requests: Vec<JobRequest<'_>> = pop
+            .iter()
+            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, gain: &j.gain })
+            .collect();
+        let start = Instant::now();
+        let alloc = if warm {
+            policy.allocate_ctx(&ctx, &requests, cfg.cores)
+        } else {
+            policy.allocate(&requests, cfg.cores)
+        };
+        let millis = start.elapsed().as_secs_f64() * 1e3;
+        cost.total_millis += millis;
+        cost.epoch_millis.push(millis);
+        cost.total_evals += policy.last_evaluations;
+        if policy.last_warm_start {
+            cost.warm_epochs += 1;
+        }
+        cost.epochs += 1;
+        assert!(alloc.total() <= cfg.cores);
+        // Both modes maintain the context so the runs stay comparable.
+        ctx.record(&requests, &alloc);
+    }
+    cost
+}
+
+/// Churn sweep: incremental (warm-start) vs from-scratch decision cost at
+/// steady state, across population sizes.
+pub fn churn_scalability(
+    jobs_list: &[usize],
+    cores: u32,
+    churn_per_epoch: usize,
+    epochs: usize,
+) -> ExpOutput {
+    let mut csv = Csv::new(&[
+        "jobs",
+        "cores",
+        "churn_per_epoch",
+        "scratch_ms",
+        "warm_ms",
+        "speedup",
+        "scratch_evals",
+        "warm_evals",
+        "warm_epochs",
+    ]);
+    let mut rows = Vec::new();
+    for &jobs in jobs_list {
+        let cfg = ChurnConfig { jobs, cores, churn_per_epoch, epochs, seed: 20818 };
+        let scratch = churn_decision_cost(&cfg, false);
+        let warm = churn_decision_cost(&cfg, true);
+        let speedup = scratch.mean_millis() / warm.mean_millis().max(1e-9);
+        csv.row_f64(&[
+            jobs as f64,
+            cores as f64,
+            churn_per_epoch as f64,
+            scratch.mean_millis(),
+            warm.mean_millis(),
+            speedup,
+            scratch.mean_evals(),
+            warm.mean_evals(),
+            warm.warm_epochs as f64,
+        ]);
+        rows.push(vec![
+            jobs.to_string(),
+            format!("{:.2} ms", scratch.mean_millis()),
+            format!("{:.2} ms", warm.mean_millis()),
+            format!("{speedup:.1}x"),
+            format!("{:.0}", scratch.mean_evals()),
+            format!("{:.0}", warm.mean_evals()),
+            format!("{}/{}", warm.warm_epochs, warm.epochs),
+        ]);
+    }
+    let summary = format!(
+        "Churn — steady-state decision cost at {cores} cores, {churn_per_epoch} jobs \
+         replaced per epoch (incremental vs from-scratch)\n{}",
+        render_table(
+            &["jobs", "scratch", "incremental", "speedup", "scratch evals", "incr evals", "warm epochs"],
+            &rows
+        )
+    );
+    ExpOutput { id: "churn".into(), csv, summary }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +281,33 @@ mod tests {
         let (_m1, e1) = time_decision(500, 1024, 1, 7);
         let (_m2, e2) = time_decision(500, 8192, 1, 7);
         assert!(e2 > e1, "more capacity => more grants => more evals");
+    }
+
+    #[test]
+    fn churn_incremental_path_engages_and_saves_evaluations() {
+        let cfg = ChurnConfig {
+            jobs: 600,
+            cores: 4096,
+            churn_per_epoch: 8,
+            epochs: 6,
+            seed: 11,
+        };
+        let scratch = churn_decision_cost(&cfg, false);
+        let warm = churn_decision_cost(&cfg, true);
+        assert_eq!(scratch.warm_epochs, 0);
+        assert_eq!(warm.warm_epochs, warm.epochs, "every epoch should warm-start");
+        assert!(
+            warm.total_evals < scratch.total_evals,
+            "incremental {} evals should undercut from-scratch {}",
+            warm.total_evals,
+            scratch.total_evals
+        );
+    }
+
+    #[test]
+    fn churn_output_has_one_row_per_population() {
+        let out = churn_scalability(&[50, 100], 512, 4, 3);
+        assert_eq!(out.csv.len(), 2);
+        assert!(out.summary.contains("incremental"));
     }
 }

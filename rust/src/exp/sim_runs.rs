@@ -50,16 +50,10 @@ pub fn run_sim_trace(cfg: &SimConfig, policy: &str) -> Trace {
     coord.into_trace()
 }
 
-/// Normalized loss of a job at a given raw loss (fraction-of-span scale).
+/// Normalized loss of a job at a given raw loss (fraction-of-span scale;
+/// the shared definition lives in [`crate::quality::normalized_loss`]).
 fn norm_loss(trace: &Trace, job: u64, loss: f64) -> f64 {
-    let j = trace.job(job).expect("job in trace");
-    let floor = j.floor.unwrap_or(0.0);
-    let span = j.initial_loss - floor;
-    if span <= 0.0 {
-        0.0
-    } else {
-        ((loss - floor) / span).clamp(0.0, 1.0)
-    }
+    trace.job(job).expect("job in trace").norm_loss(loss)
 }
 
 /// Fig 3: fraction of allocated cores granted to job groups ranked by

@@ -12,6 +12,25 @@
 //!   paper's algorithm zoo, lowered once to HLO text artifacts.
 //! * Layer 1 (`python/compile/kernels/`): Pallas kernels for the compute
 //!   hot-spots (GLM gradients, K-Means assignment), lowered inside L2.
+//!
+//! ## Incremental scheduling core
+//!
+//! The scheduling path is organized around persistent, delta-aware state —
+//! between epochs the cluster changes *incrementally*, and the decision
+//! cost is proportional to what changed, not to cluster size:
+//!
+//! * [`coordinator::JobLedger`] — id-indexed job store with an
+//!   arrival-ordered pending heap and an explicit running set; epoch
+//!   stepping never rescans the full submission history.
+//! * [`sched::SchedContext`] — the previous epoch's grant keyed by job id;
+//!   [`sched::SlaqPolicy`] warm-starts its marginal-gain search from it
+//!   (`O(jobs)` evaluations at steady state instead of `O(capacity)`).
+//! * [`cluster::NodePool::apply_diff`] — placements update via shrink/grow
+//!   deltas only.
+//!
+//! The `churn` experiment (`slaq exp churn`, `benches/sched_scalability`)
+//! measures the incremental path against from-scratch under steady-state
+//! job turnover at 1000–4000 jobs.
 
 pub mod cluster;
 pub mod coordinator;

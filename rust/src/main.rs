@@ -1,7 +1,7 @@
 //! `slaq` — command-line driver.
 //!
 //! Subcommands:
-//!   slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|pred|all> [flags]
+//!   slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [flags]
 //!       regenerate paper figures (CSV under --out, summary to stdout)
 //!   slaq train --algo <name> [--iters N] [--variant small|base]
 //!       run one real training job through the PJRT runtime
@@ -53,7 +53,7 @@ fn print_usage() {
     println!(
         "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
          usage:\n  \
-         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|pred|all> [--out DIR] [...]\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [--out DIR] [...]\n  \
          slaq train --algo <name> [--iters N] [--variant small|base]\n  \
          slaq run [--policy P] [--jobs N] [--duration S]\n  \
          slaq check\n\n\
@@ -77,6 +77,10 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("jobs", "160", "jobs in the scheduling trace")
         .flag("duration", "3000", "simulated seconds for figs 3-5")
         .flag("reps", "3", "timing repetitions for fig 6")
+        .flag("churn", "32", "jobs replaced per epoch in the churn scenario")
+        .flag("churn-epochs", "12", "measured steady-state epochs for churn")
+        .flag("churn-jobs", "1000,2000,4000", "population sizes for churn")
+        .flag("churn-cores", "16384", "cluster capacity for churn")
         .flag("seed", "20818", "workload seed")
         .flag("log", "info", "log level");
     let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
@@ -146,6 +150,17 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         log::info!("timing allocator at scale (fig 6)…");
         outputs.push(exp::fig6_sched_time(
             parsed.get_as::<usize>("reps").map_err(|e| anyhow!(e))?,
+        ));
+    }
+
+    if wants("churn") {
+        log::info!("churn scenario: incremental vs from-scratch decisions…");
+        let jobs_list = parsed.get_csv::<usize>("churn-jobs").map_err(|e| anyhow!(e))?;
+        outputs.push(exp::churn_scalability(
+            &jobs_list,
+            parsed.get_as::<u32>("churn-cores").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<usize>("churn").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<usize>("churn-epochs").map_err(|e| anyhow!(e))?,
         ));
     }
 

@@ -10,4 +10,4 @@ mod history;
 mod normalizer;
 
 pub use history::{LossHistory, LossSample};
-pub use normalizer::{normalize_trace, DeltaNormalizer};
+pub use normalizer::{normalize_trace, normalized_loss, DeltaNormalizer};

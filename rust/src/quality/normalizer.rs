@@ -65,6 +65,22 @@ impl DeltaNormalizer {
     }
 }
 
+/// Position of one loss value on the `[floor, initial]` span, clamped to
+/// `[0, 1]` — the Fig-4 "normalized loss" scale: 1 at the initial loss, 0
+/// at the floor. Degenerate spans (initial at or below the floor) map to 0.
+///
+/// This is the single definition the experiment code shares (Fig 3 loss
+/// groups, Fig 4 averages, the ablation metrics); [`normalize_trace`]
+/// applies it across a whole trajectory.
+pub fn normalized_loss(initial: f64, floor: f64, loss: f64) -> f64 {
+    let span = initial - floor;
+    if span <= 0.0 {
+        0.0
+    } else {
+        ((loss - floor) / span).clamp(0.0, 1.0)
+    }
+}
+
 /// Retrospectively normalize a complete loss trace to `[0, 1]`:
 /// 1 at the first sample, 0 at `floor` (the best loss the job is known to
 /// reach — e.g. its minimum across all policies, or a fitted asymptote).
@@ -141,6 +157,19 @@ mod tests {
         n.observe(9.0); // negative, ignored
         n.observe(8.5); // +0.25
         assert!((n.cumulative_progress() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_loss_spans_and_clamps() {
+        assert_eq!(normalized_loss(10.0, 2.0, 10.0), 1.0);
+        assert_eq!(normalized_loss(10.0, 2.0, 2.0), 0.0);
+        assert!((normalized_loss(10.0, 2.0, 6.0) - 0.5).abs() < 1e-12);
+        // Clamped outside the span.
+        assert_eq!(normalized_loss(10.0, 2.0, 1.0), 0.0);
+        assert_eq!(normalized_loss(10.0, 2.0, 12.0), 1.0);
+        // Degenerate span.
+        assert_eq!(normalized_loss(2.0, 2.0, 5.0), 0.0);
+        assert_eq!(normalized_loss(1.0, 2.0, 1.5), 0.0);
     }
 
     #[test]

@@ -1,10 +1,10 @@
-//! Baseline policies: work-conserving max-min fair share and a rigid
-//! static split.
+//! Work-conserving max-min fair share.
 //!
 //! The fair scheduler is the baseline the paper evaluates against — it is
 //! the default policy of YARN, Mesos and Spark's standalone scheduler:
 //! every active job gets an equal share, with shares capped jobs cannot use
-//! redistributed to the rest (water-filling).
+//! redistributed to the rest (water-filling). The rigid (non-work-
+//! conserving) variant lives in [`crate::sched::StaticPolicy`].
 
 use super::{Allocation, JobRequest, Policy};
 
@@ -66,37 +66,6 @@ impl Policy for FairPolicy {
                 remaining = 0;
             }
             open = next_open;
-        }
-        Allocation { cores }
-    }
-}
-
-/// Rigid equal split: `C / J` cores each (capped), leftovers unused.
-/// Not work conserving — included as an ablation contrast to `FairPolicy`.
-#[derive(Debug, Default)]
-pub struct StaticPolicy;
-
-impl StaticPolicy {
-    /// New static policy.
-    pub fn new() -> Self {
-        Self
-    }
-}
-
-impl Policy for StaticPolicy {
-    fn name(&self) -> &'static str {
-        "static"
-    }
-
-    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
-        let n = requests.len();
-        let mut cores = vec![0u32; n];
-        if n == 0 || capacity == 0 {
-            return Allocation { cores };
-        }
-        let share = capacity / n as u32;
-        for (i, r) in requests.iter().enumerate() {
-            cores[i] = share.min(r.max_cores);
         }
         Allocation { cores }
     }
@@ -210,21 +179,10 @@ mod tests {
     }
 
     #[test]
-    fn static_leaves_leftovers() {
-        let (g, c) = mk_reqs(&[1, 100, 100]);
-        let rs = build(&g, &c);
-        let a = StaticPolicy::new().allocate(&rs, 30);
-        check_invariants(&rs, 30, &a);
-        // share = 10; job 0 capped at 1; leftovers NOT redistributed.
-        assert_eq!(a.cores, vec![1, 10, 10]);
-    }
-
-    #[test]
     fn empty_inputs() {
         assert_eq!(FairPolicy::new().allocate(&[], 5).cores.len(), 0);
         let (g, c) = mk_reqs(&[4]);
         let rs = build(&g, &c);
         assert_eq!(FairPolicy::new().allocate(&rs, 0).total(), 0);
-        assert_eq!(StaticPolicy::new().allocate(&rs, 0).total(), 0);
     }
 }

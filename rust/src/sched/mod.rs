@@ -5,8 +5,26 @@
 //! normalized quality it would gain from `a` cores this epoch — onto an
 //! integer core allocation bounded by cluster capacity.
 //!
+//! ## Incremental (delta-aware) scheduling
+//!
+//! SLAQ's headline systems claim is that the allocation decision stays
+//! cheap enough to re-run every few seconds for thousands of jobs. Between
+//! consecutive epochs the cluster state changes *incrementally* — a few
+//! arrivals, a few completions, gains drifting as jobs converge — so the
+//! scheduling path is built around persistent state rather than
+//! from-scratch reconstruction:
+//!
+//! * [`SchedContext`] carries the previous epoch's grant *keyed by stable
+//!   job id* (unlike the positional [`Allocation`] vector, it survives
+//!   arrivals, completions and request reordering).
+//! * [`Policy::allocate_ctx`] is the delta-aware entry point. The default
+//!   implementation ignores the context; [`SlaqPolicy`] overrides it with a
+//!   warm-started search seeded from the prior grant that falls back to the
+//!   from-scratch path when the job set shifted too much.
+//!
 //! Policies implemented:
-//! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator.
+//! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator, with the
+//!   warm-start path described above.
 //! * [`FairPolicy`] — work-conserving max-min fair share (the baseline the
 //!   paper compares against; the default in YARN/Mesos-style schedulers).
 //! * [`FifoPolicy`] — arrival-order allocation up to each job's cap.
@@ -15,10 +33,14 @@
 mod fair;
 mod fifo;
 mod slaq;
+mod static_split;
 
 pub use fair::FairPolicy;
 pub use fifo::FifoPolicy;
 pub use slaq::SlaqPolicy;
+pub use static_split::StaticPolicy;
+
+use std::collections::HashMap;
 
 /// Predicted quality gain as a function of allocated cores.
 ///
@@ -39,7 +61,8 @@ impl<F: Fn(u32) -> f64> GainModel for F {
 
 /// One job's scheduling request for an epoch.
 pub struct JobRequest<'a> {
-    /// Stable job identifier (used for arrival ordering in FIFO).
+    /// Stable job identifier (used for arrival ordering in FIFO and for
+    /// matching prior grants in [`SchedContext`]).
     pub id: u64,
     /// Maximum cores the job can exploit (e.g. its number of data
     /// partitions). The allocator never exceeds this.
@@ -62,18 +85,96 @@ impl Allocation {
     }
 }
 
+/// Persistent scheduler state carried across epochs.
+///
+/// The context owns the previous epoch's grant keyed by stable job id, so a
+/// policy can warm-start from where it left off instead of rebuilding its
+/// search structures. The coordinator records each epoch's outcome via
+/// [`SchedContext::record`] and evicts completed jobs with
+/// [`SchedContext::forget`]; both are O(active jobs), never O(all jobs).
+#[derive(Debug, Clone, Default)]
+pub struct SchedContext {
+    prev: HashMap<u64, u32>,
+    epoch: u64,
+}
+
+impl SchedContext {
+    /// Empty context (first epoch: every policy starts from scratch).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a context from explicit `(job id, cores)` grants.
+    pub fn from_grants(grants: impl IntoIterator<Item = (u64, u32)>) -> Self {
+        Self { prev: grants.into_iter().collect(), epoch: 1 }
+    }
+
+    /// Number of epochs recorded so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// True when no prior grant is available.
+    pub fn is_empty(&self) -> bool {
+        self.prev.is_empty()
+    }
+
+    /// Number of jobs with a recorded prior grant.
+    pub fn len(&self) -> usize {
+        self.prev.len()
+    }
+
+    /// The previous epoch's grant for `id`, if the job was scheduled then.
+    pub fn prev_grant(&self, id: u64) -> Option<u32> {
+        self.prev.get(&id).copied()
+    }
+
+    /// Absorb this epoch's outcome: the grant of every request, keyed by
+    /// id. Replaces the previous grant set (jobs that left the request set
+    /// drop out automatically).
+    pub fn record(&mut self, requests: &[JobRequest<'_>], alloc: &Allocation) {
+        debug_assert_eq!(requests.len(), alloc.cores.len());
+        self.prev.clear();
+        for (r, &c) in requests.iter().zip(&alloc.cores) {
+            self.prev.insert(r.id, c);
+        }
+        self.epoch += 1;
+    }
+
+    /// Evict one job (e.g. on completion) without waiting for the next
+    /// [`SchedContext::record`].
+    pub fn forget(&mut self, id: u64) {
+        self.prev.remove(&id);
+    }
+}
+
 /// A scheduling policy: produces an allocation each epoch.
 pub trait Policy: Send {
     /// Short identifier used in traces and CLI (e.g. "slaq", "fair").
     fn name(&self) -> &'static str;
 
-    /// Allocate up to `capacity` cores among `requests`.
+    /// Allocate up to `capacity` cores among `requests` from scratch.
     ///
     /// Invariants every implementation must uphold:
     /// * `result.cores.len() == requests.len()`
     /// * `result.total() <= capacity`
     /// * `result.cores[i] <= requests[i].max_cores`
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation;
+
+    /// Delta-aware entry point: allocate with access to the previous
+    /// epoch's grant. Must uphold the same invariants as
+    /// [`Policy::allocate`] and produce an allocation of equal total
+    /// predicted gain. The default ignores the context; policies with a
+    /// warm-start path override it.
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        let _ = ctx;
+        self.allocate(requests, capacity)
+    }
 }
 
 /// Construct a policy by name (CLI convenience).
@@ -82,12 +183,10 @@ pub fn policy_by_name(name: &str) -> Option<Box<dyn Policy>> {
         "slaq" => Some(Box::new(SlaqPolicy::new())),
         "fair" => Some(Box::new(FairPolicy::new())),
         "fifo" => Some(Box::new(FifoPolicy::new())),
-        "static" => Some(Box::new(fair::StaticPolicy::new())),
+        "static" => Some(Box::new(StaticPolicy::new())),
         _ => None,
     }
 }
-
-pub use fair::StaticPolicy;
 
 #[cfg(test)]
 pub(crate) mod test_support {
@@ -129,6 +228,9 @@ pub(crate) mod test_support {
 }
 
 #[cfg(test)]
+mod prop_tests;
+
+#[cfg(test)]
 mod tests {
     use super::*;
 
@@ -150,5 +252,41 @@ mod tests {
     fn allocation_total() {
         let a = Allocation { cores: vec![1, 2, 3] };
         assert_eq!(a.total(), 6);
+    }
+
+    #[test]
+    fn context_records_and_forgets() {
+        let mut ctx = SchedContext::new();
+        assert!(ctx.is_empty());
+        assert_eq!(ctx.epoch(), 0);
+        let g = |_: u32| 0.0;
+        let reqs = vec![
+            JobRequest { id: 7, max_cores: 4, gain: &g },
+            JobRequest { id: 9, max_cores: 4, gain: &g },
+        ];
+        ctx.record(&reqs, &Allocation { cores: vec![3, 1] });
+        assert_eq!(ctx.epoch(), 1);
+        assert_eq!(ctx.len(), 2);
+        assert_eq!(ctx.prev_grant(7), Some(3));
+        assert_eq!(ctx.prev_grant(9), Some(1));
+        assert_eq!(ctx.prev_grant(8), None);
+        ctx.forget(7);
+        assert_eq!(ctx.prev_grant(7), None);
+        // Re-recording replaces the whole grant set.
+        let reqs2 = vec![JobRequest { id: 11, max_cores: 4, gain: &g }];
+        ctx.record(&reqs2, &Allocation { cores: vec![2] });
+        assert_eq!(ctx.len(), 1);
+        assert_eq!(ctx.prev_grant(9), None);
+        assert_eq!(ctx.prev_grant(11), Some(2));
+    }
+
+    #[test]
+    fn default_allocate_ctx_ignores_context() {
+        let g = |a: u32| a as f64;
+        let reqs = vec![JobRequest { id: 0, max_cores: 8, gain: &g }];
+        let ctx = SchedContext::from_grants([(0, 5)]);
+        let mut p = FairPolicy::new();
+        let a = p.allocate_ctx(&ctx, &reqs, 3);
+        assert_eq!(a.cores, vec![3]);
     }
 }

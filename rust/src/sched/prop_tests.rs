@@ -1,0 +1,154 @@
+//! Randomized cross-policy properties (issue: policy equivalence and
+//! invariants):
+//!
+//! * every policy upholds the allocation invariants under random concave
+//!   gain curves, caps and capacities;
+//! * the work-conserving policies (slaq / fair / fifo) exhaust capacity or
+//!   cap out;
+//! * warm-start SLAQ is allocation-equivalent (equal total predicted gain)
+//!   to from-scratch SLAQ on identical inputs, for arbitrary prior grants.
+
+use super::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+use super::*;
+use crate::testkit::{forall, Gen};
+
+fn random_gains(g: &mut Gen, n: usize) -> Vec<ConcaveGain> {
+    (0..n)
+        .map(|_| ConcaveGain { scale: g.f64_in(0.0, 8.0), rate: g.f64_in(0.02, 1.0) })
+        .collect()
+}
+
+fn build<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+    gains
+        .iter()
+        .enumerate()
+        .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], gain: gm })
+        .collect()
+}
+
+fn total_gain(reqs: &[JobRequest<'_>], alloc: &Allocation) -> f64 {
+    reqs.iter().zip(&alloc.cores).map(|(r, &c)| r.gain.gain(c)).sum()
+}
+
+#[test]
+fn all_policies_uphold_invariants() {
+    forall("allocation invariants for all policies", 80, |g| {
+        let n = g.usize_in(1, 24);
+        let gains = random_gains(g, n);
+        let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 14) as u32).collect();
+        let reqs = build(&gains, &caps);
+        let capacity = g.usize_in(0, 140) as u32;
+        for name in ["slaq", "fair", "fifo", "static"] {
+            let mut p = policy_by_name(name).unwrap();
+            let a = p.allocate(&reqs, capacity);
+            check_invariants(&reqs, capacity, &a);
+        }
+    });
+}
+
+#[test]
+fn work_conserving_policies_fill_capacity() {
+    forall("work conservation (slaq/fair/fifo)", 80, |g| {
+        let n = g.usize_in(1, 20);
+        let gains = random_gains(g, n);
+        let caps: Vec<u32> = (0..n).map(|_| g.usize_in(1, 12) as u32).collect();
+        let reqs = build(&gains, &caps);
+        // Capacity at least n so the SLAQ floor path never short-circuits.
+        let capacity = g.usize_in(n, 160) as u32;
+        for name in ["slaq", "fair", "fifo"] {
+            let mut p = policy_by_name(name).unwrap();
+            let a = p.allocate(&reqs, capacity);
+            check_invariants(&reqs, capacity, &a);
+            check_work_conserving(&reqs, capacity, &a);
+        }
+    });
+}
+
+#[test]
+fn warm_start_slaq_equals_from_scratch_slaq() {
+    forall("warm-start ≡ from-scratch (total gain)", 120, |g| {
+        let n = g.usize_in(1, 16);
+        let gains: Vec<ConcaveGain> = (0..n)
+            .map(|_| ConcaveGain { scale: g.f64_in(0.05, 8.0), rate: g.f64_in(0.05, 1.0) })
+            .collect();
+        let caps: Vec<u32> = (0..n).map(|_| g.usize_in(1, 12) as u32).collect();
+        let reqs = build(&gains, &caps);
+        let cap_total: u32 = caps.iter().sum();
+        let capacity = g.usize_in(n, (cap_total + 4) as usize) as u32;
+
+        // Arbitrary prior grant over a random subset of the job set —
+        // including over-cap and zero grants the warm path must clamp.
+        let mut grants = Vec::new();
+        for i in 0..n {
+            if g.bool(0.8) {
+                grants.push((i as u64, g.usize_in(0, 16) as u32));
+            }
+        }
+        let ctx = SchedContext::from_grants(grants);
+
+        let mut warm = SlaqPolicy::new();
+        let aw = warm.allocate_ctx(&ctx, &reqs, capacity);
+        check_invariants(&reqs, capacity, &aw);
+        check_work_conserving(&reqs, capacity, &aw);
+
+        let mut scratch = SlaqPolicy::new();
+        let asc = scratch.allocate(&reqs, capacity);
+        let (gw, gs) = (total_gain(&reqs, &aw), total_gain(&reqs, &asc));
+        assert!(
+            (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
+            "warm gain {gw} != scratch gain {gs} (ctx {} jobs, capacity {capacity}, caps {caps:?})",
+            ctx.len(),
+        );
+    });
+}
+
+#[test]
+fn warm_start_equivalence_survives_sequences_of_epochs() {
+    // Chain epochs: each epoch's warm allocation feeds the next context,
+    // with gains drifting and the job set churning — the coordinator's
+    // actual usage pattern.
+    forall("warm-start chain ≡ from-scratch each epoch", 30, |g| {
+        let n = g.usize_in(4, 14);
+        let mut scales: Vec<f64> = (0..n).map(|_| g.f64_in(0.2, 6.0)).collect();
+        let rates: Vec<f64> = (0..n).map(|_| g.f64_in(0.05, 0.8)).collect();
+        let caps: Vec<u32> = (0..n).map(|_| g.usize_in(1, 10) as u32).collect();
+        let mut ids: Vec<u64> = (0..n as u64).collect();
+        let mut next_id = n as u64;
+        let capacity = g.usize_in(n, 80) as u32;
+
+        let mut ctx = SchedContext::new();
+        let mut warm = SlaqPolicy::new();
+        for _ in 0..6 {
+            let gains: Vec<ConcaveGain> = scales
+                .iter()
+                .zip(&rates)
+                .map(|(&s, &r)| ConcaveGain { scale: s, rate: r })
+                .collect();
+            let reqs: Vec<JobRequest<'_>> = gains
+                .iter()
+                .enumerate()
+                .map(|(i, gm)| JobRequest { id: ids[i], max_cores: caps[i], gain: gm })
+                .collect();
+            let aw = warm.allocate_ctx(&ctx, &reqs, capacity);
+            check_invariants(&reqs, capacity, &aw);
+            let mut scratch = SlaqPolicy::new();
+            let asc = scratch.allocate(&reqs, capacity);
+            let (gw, gs) = (total_gain(&reqs, &aw), total_gain(&reqs, &asc));
+            assert!(
+                (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
+                "epoch gain mismatch: warm {gw} scratch {gs}"
+            );
+            ctx.record(&reqs, &aw);
+            // Drift and churn for the next epoch.
+            for s in &mut scales {
+                *s *= g.f64_in(0.9, 1.0);
+            }
+            if g.bool(0.5) {
+                let slot = g.usize_in(0, n);
+                ids[slot] = next_id;
+                next_id += 1;
+                scales[slot] = g.f64_in(0.2, 6.0);
+            }
+        }
+    });
+}

@@ -1,23 +1,51 @@
-//! The SLAQ allocator: greedy marginal-gain maximization (paper §2).
+//! The SLAQ allocator: greedy marginal-gain maximization (paper §2), with
+//! an incremental warm-start path for the epoch-over-epoch steady state.
 //!
 //! Objective: maximize `Σ_j [Loss_j(a_j, t) − Loss_j(a_j, t+T)]` subject to
-//! `Σ_j a_j ≤ C`. The algorithm (verbatim from the paper): start with
-//! `a_j = 1` for every job to prevent starvation, then repeatedly grant one
-//! more core to the job whose predicted loss reduction increases the most,
-//! until capacity is exhausted.
+//! `Σ_j a_j ≤ C`. The from-scratch algorithm (verbatim from the paper):
+//! start with `a_j = 1` for every job to prevent starvation, then
+//! repeatedly grant one more core to the job whose predicted loss reduction
+//! increases the most, until capacity is exhausted.
 //!
-//! Implementation: a lazy max-heap over marginal gains (CELF-style). Each
-//! heap entry remembers the allocation at which its marginal was computed;
-//! stale entries are re-evaluated on pop instead of rebuilding the heap
-//! after every grant. For diminishing-returns gain curves the lazy marginal
-//! can only shrink, so a fresh re-evaluation that still tops the heap is
-//! safe to grant — this gives `O(C log J)` gain evaluations in practice.
+//! From-scratch implementation: a lazy max-heap over marginal gains
+//! (CELF-style). Each heap entry remembers the allocation at which its
+//! marginal was computed; stale entries are re-evaluated on pop instead of
+//! rebuilding the heap after every grant. For diminishing-returns gain
+//! curves the lazy marginal can only shrink, so a fresh re-evaluation that
+//! still tops the heap is safe to grant — `O(C log J)` gain evaluations.
+//!
+//! ## Warm start (incremental path)
+//!
+//! Between scheduling epochs the cluster state changes *incrementally*: a
+//! few arrivals, a few completions, gains drifting as jobs converge. The
+//! warm-start path ([`Policy::allocate_ctx`]) seeds the search from the
+//! previous grant in the [`SchedContext`] instead of from `a_j = 1`, then
+//! repairs it with single-core moves:
+//!
+//! 1. **shed** cores while the seeded total exceeds capacity (cheapest
+//!    held core first),
+//! 2. **grow** greedily into any spare capacity (highest marginal first),
+//! 3. **exchange** — move one core at a time from the job whose last core
+//!    is worth least to the job whose next core is worth most, until no
+//!    move improves the objective.
+//!
+//! Every move strictly increases total predicted gain, and for concave
+//! gains a single-core-exchange local optimum is a global optimum — the
+//! same optimum the from-scratch greedy reaches — so the two paths are
+//! allocation-equivalent (property-tested in `sched/prop_tests.rs`). The
+//! payoff: a steady-state epoch costs `O(J)` gain evaluations instead of
+//! `O(C + J)`, and churn costs are proportional to *what changed* rather
+//! than to cluster capacity. The policy falls back to from-scratch when
+//! the job set churned past the payoff point (fewer than half the requests
+//! carry a prior grant), when capacity cannot cover the per-job floor, or
+//! when a (non-concave) oracle makes the repair loop overrun its budget.
 
-use super::{Allocation, JobRequest, Policy};
-use std::cmp::Ordering;
+use super::{Allocation, JobRequest, Policy, SchedContext};
+use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
-/// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th core.
+/// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th
+/// core (up-heap), or of its `at_alloc`-th held core (down-heap).
 struct Entry {
     marginal: f64,
     idx: usize,
@@ -48,9 +76,12 @@ impl Ord for Entry {
 /// The paper's quality-driven allocator.
 #[derive(Debug)]
 pub struct SlaqPolicy {
-    /// Count of gain-oracle evaluations in the last `allocate` call
-    /// (exposed for the Fig 6 scalability analysis).
+    /// Count of gain-oracle evaluations in the last `allocate` /
+    /// `allocate_ctx` call (exposed for the Fig 6 scalability analysis and
+    /// the churn benchmark).
     pub last_evaluations: u64,
+    /// True when the last `allocate_ctx` call took the warm-start path.
+    pub last_warm_start: bool,
     /// Grant every job one core before greedy allocation (paper default;
     /// disable only for the starvation ablation).
     starvation_floor: bool,
@@ -58,7 +89,7 @@ pub struct SlaqPolicy {
 
 impl Default for SlaqPolicy {
     fn default() -> Self {
-        Self { last_evaluations: 0, starvation_floor: true }
+        Self { last_evaluations: 0, last_warm_start: false, starvation_floor: true }
     }
 }
 
@@ -70,9 +101,209 @@ impl SlaqPolicy {
 
     /// Ablation variant: pure greedy, no per-job floor. Converged jobs can
     /// be starved to zero cores — used to demonstrate why the paper starts
-    /// every job at `a_j = 1`.
+    /// every job at `a_j = 1`. The warm-start path requires the floor and
+    /// is disabled in this mode.
     pub fn without_floor() -> Self {
-        Self { last_evaluations: 0, starvation_floor: false }
+        Self { last_evaluations: 0, last_warm_start: false, starvation_floor: false }
+    }
+
+    /// Warm-started allocation seeded from the previous grant. Returns
+    /// `None` when the repair loop overruns its move budget (gains shifted
+    /// too much — the caller falls back to the from-scratch path).
+    fn warm_allocate(
+        &self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        evals: &mut u64,
+    ) -> Option<Allocation> {
+        let n = requests.len();
+        let mut cores = vec![0u32; n];
+        let mut gain_at = vec![0.0f64; n];
+        let mut total: u64 = 0;
+
+        // Seed: the prior grant where one exists, the starvation floor for
+        // fresh arrivals, clamped into each job's feasible range.
+        for (i, r) in requests.iter().enumerate() {
+            if r.max_cores == 0 {
+                continue;
+            }
+            let seed = ctx.prev_grant(r.id).unwrap_or(1).clamp(1, r.max_cores);
+            cores[i] = seed;
+            total += seed as u64;
+        }
+
+        // Marginal heaps at the seeded allocation. Invariant maintained
+        // throughout: whenever `cores[i]` changes, fresh entries for job
+        // `i` are pushed into both heaps (where a move exists), so a
+        // validated pop always reflects the true extreme marginal. Stale
+        // entries are detected by `at_alloc` and re-evaluated on pop.
+        let mut up: BinaryHeap<Entry> = BinaryHeap::with_capacity(n + 1);
+        let mut down: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(n + 1);
+        for (i, r) in requests.iter().enumerate() {
+            let c = cores[i];
+            if c == 0 {
+                continue;
+            }
+            *evals += 1;
+            let g_c = r.gain.gain(c);
+            gain_at[i] = g_c;
+            if c < r.max_cores {
+                *evals += 1;
+                up.push(Entry { marginal: r.gain.gain(c + 1) - g_c, idx: i, at_alloc: c });
+            }
+            if c > 1 {
+                *evals += 1;
+                down.push(Reverse(Entry {
+                    marginal: g_c - r.gain.gain(c - 1),
+                    idx: i,
+                    at_alloc: c,
+                }));
+            }
+        }
+
+        let cap = capacity as u64;
+        // Repair budget: past this many heap operations a warm start no
+        // longer beats rebuilding, so give up and let the caller fall back.
+        let budget = 4 * n as u64 + 2 * total.abs_diff(cap) + 64;
+        let mut steps: u64 = 0;
+
+        // Phase 1 — shed: the seeded grant can exceed today's room (jobs
+        // shrank their caps, or capacity dropped). Release the cores whose
+        // loss hurts least.
+        while total > cap {
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let Reverse(e) = down.pop()?;
+            let i = e.idx;
+            if cores[i] <= 1 {
+                continue;
+            }
+            if e.at_alloc != cores[i] {
+                *evals += 1;
+                let m = gain_at[i] - requests[i].gain.gain(cores[i] - 1);
+                down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                continue;
+            }
+            let c = cores[i];
+            cores[i] = c - 1;
+            gain_at[i] -= e.marginal;
+            total -= 1;
+            // Regaining the released core would be worth exactly `e.marginal`.
+            up.push(Entry { marginal: e.marginal, idx: i, at_alloc: c - 1 });
+            if c - 1 > 1 {
+                *evals += 1;
+                let m = gain_at[i] - requests[i].gain.gain(c - 2);
+                down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: c - 1 }));
+            }
+        }
+
+        // Phase 2 — grow: plain greedy over freed/new capacity.
+        while total < cap {
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let Some(e) = up.pop() else { break }; // every job capped
+            let i = e.idx;
+            if cores[i] >= requests[i].max_cores {
+                continue;
+            }
+            if e.at_alloc != cores[i] {
+                *evals += 1;
+                let m = requests[i].gain.gain(cores[i] + 1) - gain_at[i];
+                up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                continue;
+            }
+            let c = cores[i];
+            cores[i] = c + 1;
+            gain_at[i] += e.marginal;
+            total += 1;
+            down.push(Reverse(Entry { marginal: e.marginal, idx: i, at_alloc: c + 1 }));
+            if c + 1 < requests[i].max_cores {
+                *evals += 1;
+                let m = requests[i].gain.gain(c + 2) - gain_at[i];
+                up.push(Entry { marginal: m, idx: i, at_alloc: c + 1 });
+            }
+        }
+
+        // Phase 3 — exchange: move single cores from the least valuable
+        // grant to the most valuable want until no move improves the
+        // objective. Each move strictly increases total predicted gain, so
+        // the loop terminates; for concave gains the resulting local
+        // optimum equals the from-scratch greedy optimum.
+        loop {
+            let ue = loop {
+                let Some(e) = up.pop() else { break None };
+                let i = e.idx;
+                if cores[i] >= requests[i].max_cores {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    steps += 1;
+                    if steps > budget {
+                        return None;
+                    }
+                    *evals += 1;
+                    let m = requests[i].gain.gain(cores[i] + 1) - gain_at[i];
+                    up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                    continue;
+                }
+                break Some(e);
+            };
+            let Some(ue) = ue else { break };
+            let de = loop {
+                let Some(Reverse(e)) = down.pop() else { break None };
+                let i = e.idx;
+                if cores[i] <= 1 {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    steps += 1;
+                    if steps > budget {
+                        return None;
+                    }
+                    *evals += 1;
+                    let m = gain_at[i] - requests[i].gain.gain(cores[i] - 1);
+                    down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                    continue;
+                }
+                break Some(e);
+            };
+            let Some(de) = de else { break };
+            if ue.idx == de.idx || ue.marginal <= de.marginal {
+                // Converged: the best possible move does not improve the
+                // objective. (For a concave oracle the same job can never
+                // head both heaps with `ue > de`.)
+                break;
+            }
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let (a, b) = (ue.idx, de.idx);
+            cores[a] += 1;
+            gain_at[a] += ue.marginal;
+            cores[b] -= 1;
+            gain_at[b] -= de.marginal;
+            // Mirror entries are known without re-evaluating the oracle.
+            down.push(Reverse(Entry { marginal: ue.marginal, idx: a, at_alloc: cores[a] }));
+            up.push(Entry { marginal: de.marginal, idx: b, at_alloc: cores[b] });
+            if cores[a] < requests[a].max_cores {
+                *evals += 1;
+                let m = requests[a].gain.gain(cores[a] + 1) - gain_at[a];
+                up.push(Entry { marginal: m, idx: a, at_alloc: cores[a] });
+            }
+            if cores[b] > 1 {
+                *evals += 1;
+                let m = gain_at[b] - requests[b].gain.gain(cores[b] - 1);
+                down.push(Reverse(Entry { marginal: m, idx: b, at_alloc: cores[b] }));
+            }
+        }
+
+        Some(Allocation { cores })
     }
 }
 
@@ -82,6 +313,7 @@ impl Policy for SlaqPolicy {
     }
 
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        self.last_warm_start = false;
         let mut evals: u64 = 0;
         let n = requests.len();
         let mut cores = vec![0u32; n];
@@ -171,6 +403,36 @@ impl Policy for SlaqPolicy {
         self.last_evaluations = evals;
         Allocation { cores }
     }
+
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        if requests.is_empty() || capacity == 0 || !self.starvation_floor || ctx.is_empty() {
+            return self.allocate(requests, capacity);
+        }
+        let eligible = requests.iter().filter(|r| r.max_cores > 0).count() as u64;
+        if eligible > capacity as u64 {
+            // Scarce-floor regime: the from-scratch top-k path handles it.
+            return self.allocate(requests, capacity);
+        }
+        let matched = requests.iter().filter(|r| ctx.prev_grant(r.id).is_some()).count();
+        if matched * 2 < requests.len() {
+            // The job set churned past the warm-start payoff point.
+            return self.allocate(requests, capacity);
+        }
+        let mut evals = 0u64;
+        if let Some(alloc) = self.warm_allocate(ctx, requests, capacity, &mut evals) {
+            self.last_evaluations = evals;
+            self.last_warm_start = true;
+            return alloc;
+        }
+        let alloc = self.allocate(requests, capacity);
+        self.last_evaluations += evals; // count the aborted warm attempt too
+        alloc
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +447,10 @@ mod tests {
             .enumerate()
             .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
             .collect()
+    }
+
+    fn total_gain(rs: &[JobRequest<'_>], alloc: &Allocation) -> f64 {
+        rs.iter().zip(&alloc.cores).map(|(r, &c)| r.gain.gain(c)).sum()
     }
 
     /// Brute-force optimum by dynamic programming over (job, capacity).
@@ -364,5 +630,137 @@ mod tests {
             "evaluations {} exceed bound {bound}",
             p.last_evaluations
         );
+    }
+
+    #[test]
+    fn warm_start_is_a_noop_at_steady_state() {
+        // Identical request set and capacity: the warm path must reproduce
+        // the from-scratch allocation exactly and much more cheaply.
+        let n = 300usize;
+        let capacity = 3000u32;
+        let gains: Vec<ConcaveGain> = (0..n)
+            .map(|i| ConcaveGain { scale: 0.5 + (i % 11) as f64, rate: 0.1 + 0.01 * (i % 5) as f64 })
+            .collect();
+        let caps = vec![64u32; n];
+        let rs = reqs(&gains, &caps);
+
+        let mut scratch = SlaqPolicy::new();
+        let base = scratch.allocate(&rs, capacity);
+        let scratch_evals = scratch.last_evaluations;
+
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &base);
+
+        let mut warm = SlaqPolicy::new();
+        let again = warm.allocate_ctx(&ctx, &rs, capacity);
+        assert!(warm.last_warm_start, "warm path must engage");
+        assert_eq!(again.total(), capacity);
+        let (gw, gs) = (total_gain(&rs, &again), total_gain(&rs, &base));
+        assert!(
+            (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
+            "steady-state warm gain {gw} != scratch gain {gs}"
+        );
+        assert!(
+            warm.last_evaluations * 2 < scratch_evals,
+            "warm {} vs scratch {scratch_evals} evaluations",
+            warm.last_evaluations
+        );
+    }
+
+    #[test]
+    fn warm_start_matches_scratch_under_churn() {
+        // Simulate churn: the context was recorded for ids 0..40, the new
+        // epoch schedules ids 8..48 (8 completions + 8 arrivals).
+        let old_gains: Vec<ConcaveGain> = (0..40)
+            .map(|i| ConcaveGain { scale: 1.0 + (i % 7) as f64, rate: 0.15 })
+            .collect();
+        let old_caps = vec![8u32; 40];
+        let old_rs: Vec<JobRequest<'_>> = old_gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: old_caps[i], gain: g })
+            .collect();
+        let mut scratch = SlaqPolicy::new();
+        let old_alloc = scratch.allocate(&old_rs, 200);
+        let mut ctx = SchedContext::new();
+        ctx.record(&old_rs, &old_alloc);
+
+        let new_gains: Vec<ConcaveGain> = (0..40)
+            .map(|i| ConcaveGain { scale: 0.8 + ((i + 3) % 5) as f64, rate: 0.2 })
+            .collect();
+        let new_rs: Vec<JobRequest<'_>> = new_gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: (i + 8) as u64, max_cores: 8, gain: g })
+            .collect();
+
+        let mut warm = SlaqPolicy::new();
+        let aw = warm.allocate_ctx(&ctx, &new_rs, 200);
+        assert!(warm.last_warm_start);
+        check_invariants(&new_rs, 200, &aw);
+        check_work_conserving(&new_rs, 200, &aw);
+
+        let mut scratch2 = SlaqPolicy::new();
+        let asc = scratch2.allocate(&new_rs, 200);
+        let (gw, gs) = (total_gain(&new_rs, &aw), total_gain(&new_rs, &asc));
+        assert!(
+            (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
+            "warm gain {gw} != scratch gain {gs}"
+        );
+    }
+
+    #[test]
+    fn warm_start_sheds_cores_when_capacity_drops() {
+        // Previous grant was made at capacity 64; this epoch only 24 cores
+        // exist. The warm path must shed down to a valid optimal grant.
+        let gains: Vec<ConcaveGain> = (0..8)
+            .map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 })
+            .collect();
+        let caps = vec![16u32; 8];
+        let rs = reqs(&gains, &caps);
+        let mut scratch = SlaqPolicy::new();
+        let wide = scratch.allocate(&rs, 64);
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &wide);
+
+        let mut warm = SlaqPolicy::new();
+        let narrow = warm.allocate_ctx(&ctx, &rs, 24);
+        assert!(warm.last_warm_start);
+        check_invariants(&rs, 24, &narrow);
+        assert_eq!(narrow.total(), 24);
+        let mut scratch2 = SlaqPolicy::new();
+        let direct = scratch2.allocate(&rs, 24);
+        let (gw, gs) = (total_gain(&rs, &narrow), total_gain(&rs, &direct));
+        assert!((gw - gs).abs() <= 1e-9 * gs.abs().max(1.0), "{gw} vs {gs}");
+    }
+
+    #[test]
+    fn warm_start_falls_back_on_heavy_churn() {
+        let gains: Vec<ConcaveGain> =
+            (0..10).map(|_| ConcaveGain { scale: 1.0, rate: 0.3 }).collect();
+        let rs: Vec<JobRequest<'_>> = gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: (i + 1000) as u64, max_cores: 8, gain: g })
+            .collect();
+        // Context knows only ids 0..10 — zero overlap with ids 1000+.
+        let ctx = SchedContext::from_grants((0..10).map(|i| (i, 4)));
+        let mut p = SlaqPolicy::new();
+        let a = p.allocate_ctx(&ctx, &rs, 40);
+        assert!(!p.last_warm_start, "disjoint job set must fall back");
+        check_invariants(&rs, 40, &a);
+        assert_eq!(a.total(), 40);
+    }
+
+    #[test]
+    fn warm_start_disabled_without_floor() {
+        let gains: Vec<ConcaveGain> =
+            (0..4).map(|_| ConcaveGain { scale: 1.0, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[8, 8, 8, 8]);
+        let ctx = SchedContext::from_grants((0..4).map(|i| (i, 2)));
+        let mut p = SlaqPolicy::without_floor();
+        let a = p.allocate_ctx(&ctx, &rs, 16);
+        assert!(!p.last_warm_start);
+        check_invariants(&rs, 16, &a);
     }
 }

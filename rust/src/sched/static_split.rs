@@ -1,0 +1,74 @@
+//! Rigid static partitioning: `C / J` cores each, leftovers unused.
+//!
+//! Included as an ablation contrast to [`crate::sched::FairPolicy`]: it is
+//! *not* work conserving (cores a capped job cannot use are left idle
+//! rather than redistributed), which is exactly the inefficiency
+//! water-filling fair share fixes.
+
+use super::{Allocation, JobRequest, Policy};
+
+/// Rigid equal split: `C / J` cores each (capped), leftovers unused.
+#[derive(Debug, Default)]
+pub struct StaticPolicy;
+
+impl StaticPolicy {
+    /// New static policy.
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let n = requests.len();
+        let mut cores = vec![0u32; n];
+        if n == 0 || capacity == 0 {
+            return Allocation { cores };
+        }
+        let share = capacity / n as u32;
+        for (i, r) in requests.iter().enumerate() {
+            cores[i] = share.min(r.max_cores);
+        }
+        Allocation { cores }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, ConcaveGain};
+
+    fn gains(n: usize) -> Vec<ConcaveGain> {
+        (0..n).map(|_| ConcaveGain { scale: 1.0, rate: 0.5 }).collect()
+    }
+
+    fn build<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+        gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect()
+    }
+
+    #[test]
+    fn static_leaves_leftovers() {
+        let g = gains(3);
+        let rs = build(&g, &[1, 100, 100]);
+        let a = StaticPolicy::new().allocate(&rs, 30);
+        check_invariants(&rs, 30, &a);
+        // share = 10; job 0 capped at 1; leftovers NOT redistributed.
+        assert_eq!(a.cores, vec![1, 10, 10]);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(StaticPolicy::new().allocate(&[], 5).cores.len(), 0);
+        let g = gains(1);
+        let rs = build(&g, &[4]);
+        assert_eq!(StaticPolicy::new().allocate(&rs, 0).total(), 0);
+    }
+}

@@ -156,6 +156,20 @@ impl Args {
             .map_err(|_| format!("flag --{name}: cannot parse '{}'", self.get(name)))
     }
 
+    /// Value flag parsed as a comma-separated list of `FromStr` values
+    /// (e.g. `--churn-jobs 1000,2000,4000`). Empty items are skipped.
+    pub fn get_csv<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String> {
+        self.get(name)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse::<T>()
+                    .map_err(|_| format!("flag --{name}: cannot parse '{s}'"))
+            })
+            .collect()
+    }
+
     /// Boolean switch state.
     pub fn switch(&self, name: &str) -> bool {
         *self
@@ -214,6 +228,17 @@ mod tests {
     fn positional_collected() {
         let a = cli().parse(&argv(&["--policy=x", "fig3", "fig4"])).unwrap();
         assert_eq!(a.positional(), &["fig3".to_string(), "fig4".to_string()]);
+    }
+
+    #[test]
+    fn csv_flags_parse_lists() {
+        let cli = Cli::new("t").flag("sizes", "10,20, 30,", "list flag");
+        let a = cli.parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_csv::<usize>("sizes").unwrap(), vec![10, 20, 30]);
+        let a = cli.parse(&argv(&["--sizes", "5"])).unwrap();
+        assert_eq!(a.get_csv::<usize>("sizes").unwrap(), vec![5]);
+        let a = cli.parse(&argv(&["--sizes", "5,x"])).unwrap();
+        assert!(a.get_csv::<usize>("sizes").is_err());
     }
 
     #[test]

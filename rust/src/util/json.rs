@@ -74,14 +74,21 @@ impl Value {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     /// Byte offset in the input where the error occurred.
     pub offset: usize,
     /// Human-readable description.
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a JSON document. Rejects trailing non-whitespace.
 pub fn parse(input: &str) -> Result<Value, ParseError> {

@@ -2,9 +2,15 @@
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::io::Write;
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Process start reference for log timestamps (first call wins).
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger {
     level: LevelFilter,
@@ -19,7 +25,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let elapsed = START.elapsed().as_secs_f64();
+        let elapsed = start().elapsed().as_secs_f64();
         let tag = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -50,7 +56,7 @@ pub fn init(level: &str) {
     };
     let _ = log::set_boxed_logger(Box::new(StderrLogger { level: filter }));
     log::set_max_level(filter);
-    once_cell::sync::Lazy::force(&START);
+    let _ = start();
 }
 
 #[cfg(test)]

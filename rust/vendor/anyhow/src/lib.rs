@@ -1,0 +1,191 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so the repository vendors
+//! the small slice of `anyhow`'s API that the `slaq` crate uses: the
+//! [`Error`] type with a context chain, the [`Result`] alias, the
+//! [`Context`] extension trait for `Result`, and the [`anyhow!`] macro.
+//! Semantics follow the real crate: `{:#}` formatting renders the full
+//! cause chain, `{:?}` renders a "Caused by" list.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error with an ordered chain of causes.
+pub struct Error {
+    msg: String,
+    /// Causes, outermost first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), chain: Vec::new() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(self.msg);
+        chain.extend(self.chain);
+        Self { msg: context.to_string(), chain }
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for cause in &self.chain {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.chain.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain.iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        let mut chain = Vec::new();
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { msg: err.to_string(), chain }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Like the real `anyhow`, this impl is disjoint from the generic one above
+// because `Error` deliberately does not implement `std::error::Error`.
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::from(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("inner"));
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("step one").unwrap_err();
+        assert_eq!(format!("{e:#}"), "step one: missing file");
+        let r2: Result<()> = Err(e);
+        let e2 = r2.with_context(|| "step two").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step two: step one: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "missing file");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(format!("{a}"), "plain");
+        let x = 7;
+        let b = anyhow!("value {x}");
+        assert_eq!(format!("{b}"), "value 7");
+        let c = anyhow!("{} and {}", 1, 2);
+        assert_eq!(format!("{c}"), "1 and 2");
+        let d = anyhow!(String::from("owned"));
+        assert_eq!(format!("{d}"), "owned");
+    }
+}

@@ -1,0 +1,276 @@
+//! Minimal offline stand-in for the `log` facade crate.
+//!
+//! Implements the subset `slaq` uses: the [`Log`] trait, [`Level`] /
+//! [`LevelFilter`] (with the cross-type comparisons the real crate
+//! provides), a process-global boxed logger, and the `error!` … `trace!`
+//! macros. Records carry pre-formatted message strings instead of
+//! `fmt::Arguments`, which keeps the facade lifetime-free.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a log record. Ordered `Error < Warn < … < Trace`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable failures.
+    Error = 1,
+    /// Recoverable problems.
+    Warn,
+    /// High-level progress.
+    Info,
+    /// Developer detail.
+    Debug,
+    /// Very fine-grained detail.
+    Trace,
+}
+
+/// Maximum-verbosity filter. `Off` disables all logging.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// No logging at all.
+    Off = 0,
+    /// `Error` only.
+    Error,
+    /// Up to `Warn`.
+    Warn,
+    /// Up to `Info`.
+    Info,
+    /// Up to `Debug`.
+    Debug,
+    /// Everything.
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Metadata about a log record (level + target module path).
+#[derive(Debug, Clone)]
+pub struct Metadata {
+    level: Level,
+    target: String,
+}
+
+impl Metadata {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &str {
+        &self.target
+    }
+}
+
+/// One log record with a pre-formatted message.
+#[derive(Debug, Clone)]
+pub struct Record {
+    metadata: Metadata,
+    args: String,
+}
+
+impl Record {
+    /// Record metadata.
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target.
+    pub fn target(&self) -> &str {
+        self.metadata.target()
+    }
+
+    /// The formatted message.
+    pub fn args(&self) -> &str {
+        &self.args
+    }
+}
+
+/// A log sink.
+pub trait Log: Send + Sync {
+    /// Whether a record with this metadata would be logged.
+    fn enabled(&self, metadata: &Metadata) -> bool;
+
+    /// Consume one record.
+    fn log(&self, record: &Record);
+
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+/// Returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-global logger. Fails if one is already set.
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum verbosity.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, AtomicOrdering::Relaxed);
+}
+
+/// Current global maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(AtomicOrdering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level > max_level() {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target: target.to_string() };
+        if logger.enabled(&metadata) {
+            let record = Record { metadata, args: fmt::format(args) };
+            logger.log(&record);
+        }
+    }
+}
+
+/// Log at `Error` level.
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => {
+        $crate::__private_log($crate::Level::Error, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at `Warn` level.
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => {
+        $crate::__private_log($crate::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at `Info` level.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => {
+        $crate::__private_log($crate::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at `Debug` level.
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => {
+        $crate::__private_log($crate::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at `Trace` level.
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => {
+        $crate::__private_log($crate::Level::Trace, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    struct Counter {
+        hits: Arc<AtomicUsize>,
+    }
+
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+
+        fn log(&self, record: &Record) {
+            assert!(!record.args().is_empty());
+            assert!(!record.target().is_empty());
+            self.hits.fetch_add(1, AtomicOrdering::Relaxed);
+        }
+
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn level_orderings() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Warn >= Level::Error);
+    }
+
+    #[test]
+    fn filtered_dispatch() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let _ = set_boxed_logger(Box::new(Counter { hits: hits.clone() }));
+        set_max_level(LevelFilter::Info);
+        info!("counted {}", 1);
+        debug!("not counted");
+        assert_eq!(hits.load(AtomicOrdering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! Offline stub of the `xla` PJRT binding surface used by `slaq`.
+//!
+//! The real crate links the XLA runtime; this build environment cannot, so
+//! the stub keeps the crate compiling and makes the capability boundary
+//! explicit at runtime:
+//!
+//! * [`Literal`] is a real host-side f32 tensor (construction, reshape,
+//!   extraction and tuples all work — the `runtime::literal` helpers and
+//!   their tests run against it).
+//! * [`PjRtClient::cpu`] returns an error, so no executable can ever be
+//!   built; every type downstream of the client is uninhabited and its
+//!   methods are statically unreachable. Real-execution tests detect the
+//!   missing `artifacts/` directory and skip.
+
+use std::fmt;
+
+/// Error type for all stub operations.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's signatures.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types extractable from a [`Literal`] (f32 only in this stub).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Array { dims: Vec<i64>, data: Vec<f32> },
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor value (row-major f32, or a tuple of literals).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// Rank-0 scalar literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { repr: Repr::Array { dims: Vec::new(), data: vec![x] } }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            repr: Repr::Array { dims: vec![data.len() as i64], data: data.to_vec() },
+        }
+    }
+
+    /// Tuple literal (stub-side helper for tests).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(elements) }
+    }
+
+    /// Reshape to `dims`; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.repr {
+            Repr::Array { data, .. } => {
+                let elements: i64 = dims.iter().product();
+                if elements < 0 || elements as usize != data.len() {
+                    return Err(Error::new(format!(
+                        "reshape to {dims:?} needs {elements} elements, literal has {}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal {
+                    repr: Repr::Array { dims: dims.to_vec(), data: data.clone() },
+                })
+            }
+            Repr::Tuple(_) => Err(Error::new("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// All elements, row-major.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::Array { data, .. } => Ok(data.iter().map(|&x| T::from_f32(x)).collect()),
+            Repr::Tuple(_) => Err(Error::new("cannot extract elements of a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(elements) => Ok(elements),
+            Repr::Array { .. } => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    /// Array shape (dims), if this is not a tuple.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.repr {
+            Repr::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Repr::Tuple(_) => Err(Error::new("tuple literal has no array shape")),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Uninhabited marker: values of the PJRT types below cannot exist in the
+/// stub, which makes their methods statically unreachable.
+#[derive(Debug, Clone, Copy)]
+enum Never {}
+
+const STUB_MSG: &str = "PJRT is unavailable: the `xla` crate is the offline stub under \
+                        rust/vendor/xla (real execution needs the vendored XLA toolchain \
+                        and `make artifacts`)";
+
+/// PJRT client handle (never constructible in the stub).
+pub struct PjRtClient {
+    never: Never,
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client — always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    /// Platform name of the underlying PJRT runtime.
+    pub fn platform_name(&self) -> String {
+        match self.never {}
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let _ = computation;
+        match self.never {}
+    }
+}
+
+/// A compiled, device-loaded executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    never: Never,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on literal inputs, returning per-device output buffers.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = args;
+        match self.never {}
+    }
+}
+
+/// A device buffer (never constructible in the stub).
+pub struct PjRtBuffer {
+    never: Never,
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.never {}
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    never: Never,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always fails in the stub.
+    pub fn from_text_file<P: AsRef<std::path::Path>>(path: P) -> Result<Self> {
+        Err(Error::new(format!(
+            "cannot parse HLO text {}: {STUB_MSG}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation {
+    never: Never,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        match proto.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let v = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let m = v.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        assert!(Literal::vec1(&[1.0, 2.0]).reshape(&[3]).is_err());
+        assert!(Literal::vec1(&[1.0, 2.0]).reshape(&[2, 1]).is_ok());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("offline stub"));
+    }
+}

@@ -1,11 +1,12 @@
 //! Scheduler scalability — the paper's Fig 6 (SLAQ allocation decision
-//! time for thousands of jobs across thousands of cores) plus the churn
-//! scenario: steady-state epochs where only a handful of jobs turn over,
-//! comparing the incremental (warm-start) decision path to from-scratch.
+//! time for thousands of jobs across thousands of cores) plus the two
+//! churn scenarios: the allocator microbenchmark (incremental warm-start
+//! vs from-scratch decisions) and the end-to-end coordinator epoch loop
+//! (ledger activation, predictor refits, allocation, placement diffs).
 //!
 //! Run with:  cargo run --release --example scheduler_scalability
 
-use slaq::exp::{churn_scalability, fig6_sched_time};
+use slaq::exp::{churn_epoch_loop, churn_scalability, fig6_sched_time};
 
 fn main() {
     let out = fig6_sched_time(3);
@@ -13,4 +14,7 @@ fn main() {
 
     let churn = churn_scalability(&[1000, 2000, 4000], 16384, 32, 12);
     println!("{}", churn.summary);
+
+    let epoch = churn_epoch_loop(&[1000, 2000, 4000], 16384, 32, 12);
+    println!("{}", epoch.summary);
 }

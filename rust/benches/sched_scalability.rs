@@ -1,16 +1,20 @@
 //! Bench: Fig 6 — SLAQ allocation decision time at scale, the jobs×cores
-//! sweep the paper plots, and the churn scenario comparing the incremental
-//! (warm-start) decision path against from-scratch.
+//! sweep the paper plots, the churn scenario comparing the incremental
+//! (warm-start) decision path against from-scratch, and the end-to-end
+//! coordinator epoch loop under the same churn regime.
 //!
 //! Besides the human-readable tables, the run emits `BENCH_sched.json` — a
 //! machine-readable array of `{name, mean_secs, p50_secs, p95_secs, iters}`
-//! objects — so CI and plotting scripts can track decision latency.
+//! objects — so CI and plotting scripts can track decision latency. The
+//! `epoch_loop_*` entries are whole-epoch latencies (ledger activation,
+//! predictor refits, allocation, placement diffs, job advancement), the
+//! `churn_*` entries the allocation kernel alone.
 
 #[path = "common.rs"]
 mod common;
 
 use common::{bench_stats, write_bench_json, BenchStats};
-use slaq::exp::{churn_decision_cost, fig6_sched_time, ChurnConfig};
+use slaq::exp::{churn_decision_cost, epoch_loop_cost, fig6_sched_time, ChurnConfig, EpochLoopConfig};
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
 use slaq::workload::SyntheticGain;
@@ -68,6 +72,37 @@ fn main() {
                 iters: cost.epochs,
             });
         }
+    }
+
+    println!("== churn: end-to-end coordinator epochs (full decision loop) ==");
+    for (jobs, cores, churn) in [(1000usize, 4096u32, 16usize), (2000, 8192, 24), (4000, 16384, 32)] {
+        let cfg = EpochLoopConfig {
+            jobs,
+            cores,
+            churn_per_epoch: churn,
+            epochs: 10,
+            warmup_epochs: 3,
+            seed: 7,
+        };
+        let cost = epoch_loop_cost(&cfg);
+        println!(
+            "epoch_loop_{jobs}x{cores}_r{churn}: epoch mean {:.2} ms (p50 {:.2}, p95 {:.2}), \
+             allocation {:.2} ms, ~{:.0} active, {} completed / {} arrived",
+            cost.mean_millis(),
+            cost.percentile_millis(50.0),
+            cost.percentile_millis(95.0),
+            cost.mean_sched_millis(),
+            cost.mean_active,
+            cost.completed,
+            cost.arrived,
+        );
+        all.push(BenchStats {
+            name: format!("epoch_loop_{jobs}x{cores}_r{churn}"),
+            mean: cost.mean_millis() / 1e3,
+            p50: cost.percentile_millis(50.0) / 1e3,
+            p95: cost.percentile_millis(95.0) / 1e3,
+            iters: cost.epoch_millis.len(),
+        });
     }
 
     match write_bench_json("BENCH_sched.json", &all) {

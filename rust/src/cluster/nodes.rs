@@ -7,8 +7,20 @@
 //! to keep per-job locality, and supports incremental re-balancing: when an
 //! epoch shrinks a job, cores are released from its most-fragmented node
 //! first.
+//!
+//! ## The persistent free-space index
+//!
+//! [`NodePool`] keeps nodes bucketed by their current free-core count
+//! (`by_free: free count → node set`), maintained incrementally by every
+//! operation that moves cores. A grow therefore walks the index straight
+//! to the least-free candidate nodes instead of sorting the whole pool per
+//! call, so placement cost scales with the *grant delta* (cores moved ×
+//! nodes touched), not with cluster size — the property the epoch loop
+//! needs to stay cheap at thousands of nodes. The indexed path is
+//! placement-equivalent to the historical sort-per-call path (property
+//! tested below against a verbatim reference implementation).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Static description of the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,19 +67,37 @@ impl PlacementDelta {
 }
 
 /// Tracks free cores per node and per-job placements.
+///
+/// All mutating operations keep three structures in sync: the per-node
+/// free-core vector, the per-job placements, and the persistent free-space
+/// index (`free count → nodes`) that makes grow-side placement O(delta)
+/// instead of O(nodes log nodes) per call.
 #[derive(Debug, Clone)]
 pub struct NodePool {
     spec: ClusterSpec,
     free: Vec<u32>,
+    /// Total free cores, maintained incrementally ([`NodePool::free_cores`]
+    /// is O(1), not a scan).
+    free_total: u32,
+    /// Persistent free-space index: free-core count → nodes with exactly
+    /// that many free cores. Only nodes with free > 0 appear; empty
+    /// buckets are removed eagerly so range queries stay tight.
+    by_free: BTreeMap<u32, BTreeSet<u32>>,
     placements: BTreeMap<u64, Placement>,
 }
 
 impl NodePool {
     /// Fresh pool with all cores free.
     pub fn new(spec: ClusterSpec) -> Self {
+        let mut by_free = BTreeMap::new();
+        if spec.nodes > 0 && spec.cores_per_node > 0 {
+            by_free.insert(spec.cores_per_node, (0..spec.nodes).collect::<BTreeSet<u32>>());
+        }
         Self {
             spec,
             free: vec![spec.cores_per_node; spec.nodes as usize],
+            free_total: spec.capacity(),
+            by_free,
             placements: BTreeMap::new(),
         }
     }
@@ -77,9 +107,14 @@ impl NodePool {
         self.spec
     }
 
-    /// Total free cores.
+    /// Total free cores. O(1) — maintained, not recomputed.
     pub fn free_cores(&self) -> u32 {
-        self.free.iter().sum()
+        self.free_total
+    }
+
+    /// Free cores on one node.
+    pub fn free_on(&self, node: u32) -> u32 {
+        self.free[node as usize]
     }
 
     /// Current placement of a job (empty if none). Clones the map — use
@@ -128,6 +163,25 @@ impl NodePool {
     /// cost one `held` lookup and touch no node state — the common case in
     /// steady-state epochs. Panics if the targets are infeasible (total
     /// beyond pool capacity), which a correct policy never produces.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use slaq::cluster::{ClusterSpec, NodePool};
+    ///
+    /// let mut pool = NodePool::new(ClusterSpec { nodes: 2, cores_per_node: 8 });
+    /// pool.apply_diff(&[(1, 6), (2, 4)]);
+    /// assert_eq!((pool.held(1), pool.held(2)), (6, 4));
+    ///
+    /// // Steady state: identical targets touch no node state.
+    /// let delta = pool.apply_diff(&[(1, 6), (2, 4)]);
+    /// assert!(delta.is_noop());
+    ///
+    /// // One job shrinks, another grows into the freed space.
+    /// let delta = pool.apply_diff(&[(1, 2), (2, 10)]);
+    /// assert_eq!(delta.released_cores, 4);
+    /// assert_eq!(delta.claimed_cores, 6);
+    /// ```
     pub fn apply_diff(&mut self, targets: &[(u64, u32)]) -> PlacementDelta {
         let mut delta = PlacementDelta::default();
         for &(job, target) in targets {
@@ -162,36 +216,90 @@ impl NodePool {
     pub fn release_all(&mut self, job: u64) {
         if let Some(p) = self.placements.remove(&job) {
             for (node, cores) in p {
-                self.free[node as usize] += cores;
+                let freed = self.free[node as usize] + cores;
+                self.set_free(node, freed);
             }
         }
     }
 
+    /// Move `node` to its new free-core count, updating the free vector,
+    /// the running total and the free-space index in one place.
+    fn set_free(&mut self, node: u32, new_free: u32) {
+        let old = self.free[node as usize];
+        if old == new_free {
+            return;
+        }
+        if old > 0 {
+            if let Some(bucket) = self.by_free.get_mut(&old) {
+                bucket.remove(&node);
+                if bucket.is_empty() {
+                    self.by_free.remove(&old);
+                }
+            }
+        }
+        if new_free > 0 {
+            self.by_free.entry(new_free).or_default().insert(node);
+        }
+        self.free_total = self.free_total - old + new_free;
+        self.free[node as usize] = new_free;
+    }
+
+    /// Claim `cores` free cores of `node` for `job`.
+    fn take(&mut self, job: u64, node: u32, cores: u32) {
+        if cores == 0 {
+            return;
+        }
+        let remaining = self.free[node as usize] - cores;
+        self.set_free(node, remaining);
+        *self
+            .placements
+            .entry(job)
+            .or_default()
+            .entry(node)
+            .or_insert(0) += cores;
+    }
+
     fn grow(&mut self, job: u64, mut need: u32) {
-        let placement = self.placements.entry(job).or_default();
-        // Pack-first: prefer nodes where the job already has cores, then
-        // the fullest (least-free, non-empty) nodes. Fully used nodes are
-        // skipped outright — in the contended steady state most nodes are
-        // full, so the candidate list stays short.
-        let mut order: Vec<u32> = (0..self.spec.nodes)
-            .filter(|&n| self.free[n as usize] > 0)
-            .collect();
-        order.sort_by_key(|&n| {
-            let has_job = placement.contains_key(&n);
-            let free = self.free[n as usize];
-            // Nodes with the job first, then less free space first.
-            (if has_job { 0u32 } else { 1 }, free)
-        });
-        for node in order {
+        // Pack-first, in two phases, visiting exactly the nodes the grant
+        // lands on.
+        //
+        // Phase A — nodes where the job already holds cores, least free
+        // space first. The job's placement spans only a handful of nodes,
+        // so this snapshot is O(span log span), independent of pool size.
+        let own: Vec<(u32, u32)> = match self.placements.get(&job) {
+            Some(p) => {
+                let mut own: Vec<(u32, u32)> = p
+                    .keys()
+                    .filter(|&&n| self.free[n as usize] > 0)
+                    .map(|&n| (self.free[n as usize], n))
+                    .collect();
+                own.sort_unstable(); // (free asc, node asc) — the seed sort's order
+                own
+            }
+            None => Vec::new(),
+        };
+        for (_, node) in own {
             if need == 0 {
                 break;
             }
             let take = self.free[node as usize].min(need);
-            if take > 0 {
-                self.free[node as usize] -= take;
-                *placement.entry(node).or_insert(0) += take;
-                need -= take;
-            }
+            self.take(job, node, take);
+            need -= take;
+        }
+        // Phase B — walk the free-space index from the least-free bucket
+        // up. Every node visited is either fully drained (and leaves the
+        // index) or receives the final partial grant, so the walk touches
+        // O(nodes-in-the-delta) entries. Reaching this phase implies phase
+        // A drained all of the job's own nodes, so no index entry needs
+        // skipping.
+        while need > 0 {
+            let (bucket_free, node) = match self.by_free.iter().next() {
+                Some((&f, bucket)) => (f, *bucket.iter().next().expect("non-empty bucket")),
+                None => break, // pool exhausted; caller checked free_cores
+            };
+            let take = bucket_free.min(need);
+            self.take(job, node, take);
+            need -= take;
         }
         debug_assert_eq!(need, 0, "grow called without checking free_cores");
     }
@@ -202,21 +310,25 @@ impl NodePool {
             None => return,
         };
         // Release from the job's most fragmented (smallest) holdings first.
-        let mut order: Vec<u32> = placement.keys().cloned().collect();
-        order.sort_by_key(|n| placement[n]);
-        for node in order {
+        let mut order: Vec<(u32, u32)> = placement.iter().map(|(&n, &c)| (c, n)).collect();
+        order.sort_unstable(); // (held asc, node asc)
+        let mut releases: Vec<(u32, u32)> = Vec::new();
+        for (held, node) in order {
             if excess == 0 {
                 break;
             }
-            let held = placement[&node];
             let give = held.min(excess);
-            self.free[node as usize] += give;
             excess -= give;
             if give == held {
                 placement.remove(&node);
             } else {
                 placement.insert(node, held - give);
             }
+            releases.push((node, give));
+        }
+        for (node, give) in releases {
+            let freed = self.free[node as usize] + give;
+            self.set_free(node, freed);
         }
     }
 
@@ -225,7 +337,9 @@ impl NodePool {
         self.placements.get(&job).map(|p| p.len()).unwrap_or(0)
     }
 
-    /// Internal consistency: free + held == capacity, no node oversubscribed.
+    /// Internal consistency: free + held == capacity, no node
+    /// oversubscribed, and the maintained free-space index exactly matches
+    /// a freshly-built one.
     pub fn check_invariants(&self) {
         let mut used = vec![0u32; self.spec.nodes as usize];
         for p in self.placements.values() {
@@ -233,25 +347,200 @@ impl NodePool {
                 used[node as usize] += cores;
             }
         }
-        for n in 0..self.spec.nodes as usize {
+        let mut total = 0u32;
+        let mut expect_indexed = 0usize;
+        for n in 0..self.spec.nodes {
+            let i = n as usize;
             assert!(
-                used[n] + self.free[n] == self.spec.cores_per_node,
+                used[i] + self.free[i] == self.spec.cores_per_node,
                 "node {n}: used {} + free {} != {}",
-                used[n],
-                self.free[n],
+                used[i],
+                self.free[i],
                 self.spec.cores_per_node
             );
+            total += self.free[i];
+            if self.free[i] > 0 {
+                assert!(
+                    self.by_free
+                        .get(&self.free[i])
+                        .map_or(false, |bucket| bucket.contains(&n)),
+                    "node {n} (free {}) missing from the free-space index",
+                    self.free[i]
+                );
+                expect_indexed += 1;
+            }
         }
+        assert_eq!(total, self.free_total, "free_total out of sync");
+        let indexed: usize = self.by_free.values().map(|b| b.len()).sum();
+        assert_eq!(indexed, expect_indexed, "stale entries in the free-space index");
+        assert!(
+            self.by_free.values().all(|b| !b.is_empty()),
+            "empty bucket left in the free-space index"
+        );
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testkit::forall;
+    use crate::testkit::{forall, Gen};
 
     fn pool4x8() -> NodePool {
         NodePool::new(ClusterSpec { nodes: 4, cores_per_node: 8 })
+    }
+
+    /// Reference pool: the historical sort-per-call placement path, kept
+    /// verbatim. The indexed [`NodePool`] must stay placement-equivalent
+    /// to this implementation.
+    struct RefPool {
+        spec: ClusterSpec,
+        free: Vec<u32>,
+        placements: BTreeMap<u64, Placement>,
+    }
+
+    impl RefPool {
+        fn new(spec: ClusterSpec) -> Self {
+            Self {
+                spec,
+                free: vec![spec.cores_per_node; spec.nodes as usize],
+                placements: BTreeMap::new(),
+            }
+        }
+
+        fn free_cores(&self) -> u32 {
+            self.free.iter().sum()
+        }
+
+        fn held(&self, job: u64) -> u32 {
+            self.placements
+                .get(&job)
+                .map(|p| p.values().sum())
+                .unwrap_or(0)
+        }
+
+        fn placement(&self, job: u64) -> Placement {
+            self.placements.get(&job).cloned().unwrap_or_default()
+        }
+
+        fn resize(&mut self, job: u64, target: u32) -> bool {
+            let current = self.held(job);
+            if target > current {
+                let need = target - current;
+                if need > self.free_cores() {
+                    return false;
+                }
+                self.grow(job, need);
+            } else if target < current {
+                self.shrink(job, current - target);
+            }
+            if target == 0 {
+                self.placements.remove(&job);
+            }
+            true
+        }
+
+        fn apply_diff(&mut self, targets: &[(u64, u32)]) {
+            for &(job, target) in targets {
+                let current = self.held(job);
+                if target < current {
+                    self.shrink(job, current - target);
+                    if target == 0 {
+                        self.placements.remove(&job);
+                    }
+                }
+            }
+            for &(job, target) in targets {
+                let current = self.held(job);
+                if target > current {
+                    self.grow(job, target - current);
+                }
+            }
+        }
+
+        fn release_all(&mut self, job: u64) {
+            if let Some(p) = self.placements.remove(&job) {
+                for (node, cores) in p {
+                    self.free[node as usize] += cores;
+                }
+            }
+        }
+
+        fn grow(&mut self, job: u64, mut need: u32) {
+            let placement = self.placements.entry(job).or_default();
+            let mut order: Vec<u32> = (0..self.spec.nodes)
+                .filter(|&n| self.free[n as usize] > 0)
+                .collect();
+            order.sort_by_key(|&n| {
+                let has_job = placement.contains_key(&n);
+                let free = self.free[n as usize];
+                (if has_job { 0u32 } else { 1 }, free)
+            });
+            for node in order {
+                if need == 0 {
+                    break;
+                }
+                let take = self.free[node as usize].min(need);
+                if take > 0 {
+                    self.free[node as usize] -= take;
+                    *placement.entry(node).or_insert(0) += take;
+                    need -= take;
+                }
+            }
+        }
+
+        fn shrink(&mut self, job: u64, mut excess: u32) {
+            let placement = match self.placements.get_mut(&job) {
+                Some(p) => p,
+                None => return,
+            };
+            let mut order: Vec<u32> = placement.keys().cloned().collect();
+            order.sort_by_key(|n| placement[n]);
+            for node in order {
+                if excess == 0 {
+                    break;
+                }
+                let held = placement[&node];
+                let give = held.min(excess);
+                self.free[node as usize] += give;
+                excess -= give;
+                if give == held {
+                    placement.remove(&node);
+                } else {
+                    placement.insert(node, held - give);
+                }
+            }
+        }
+    }
+
+    /// One random mutating operation applied to both pools.
+    fn random_op(g: &mut Gen, spec: ClusterSpec, jobs: u64, a: &mut NodePool, b: &mut RefPool) {
+        match g.usize_in(0, 3) {
+            0 => {
+                let job = g.usize_in(0, jobs as usize) as u64;
+                let target = g.usize_in(0, (spec.capacity() + 2) as usize) as u32;
+                let ra = a.resize(job, target);
+                let rb = b.resize(job, target);
+                assert_eq!(ra, rb, "resize({job}, {target}) feasibility diverged");
+            }
+            1 => {
+                // Feasible whole-epoch diff.
+                let mut room = spec.capacity();
+                let targets: Vec<(u64, u32)> = (0..jobs)
+                    .map(|job| {
+                        let t = g.usize_in(0, (room + 1) as usize) as u32;
+                        room -= t;
+                        (job, t)
+                    })
+                    .collect();
+                a.apply_diff(&targets);
+                b.apply_diff(&targets);
+            }
+            _ => {
+                let job = g.usize_in(0, jobs as usize) as u64;
+                a.release_all(job);
+                b.release_all(job);
+            }
+        }
     }
 
     #[test]
@@ -357,6 +646,16 @@ mod tests {
     }
 
     #[test]
+    fn free_on_tracks_node_state() {
+        let mut p = pool4x8();
+        assert_eq!(p.free_on(0), 8);
+        p.resize(1, 6);
+        assert_eq!(p.free_on(0), 2);
+        p.release_all(1);
+        assert_eq!(p.free_on(0), 8);
+    }
+
+    #[test]
     fn apply_diff_matches_sequential_resizes() {
         forall("apply_diff ≡ shrink-all-then-grow-all resize", 60, |g| {
             let spec = ClusterSpec {
@@ -422,6 +721,68 @@ mod tests {
                     assert_eq!(pool.free_cores(), before_free);
                 }
                 pool.check_invariants();
+            }
+        });
+    }
+
+    #[test]
+    fn indexed_pool_is_placement_equivalent_to_sorted_reference() {
+        // The tentpole property: the free-space-indexed pool must place
+        // cores on exactly the same nodes as the seed's sort-per-call
+        // path, under arbitrary interleavings of resize / apply_diff /
+        // release_all.
+        forall("indexed ≡ sorted placement", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 10) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let jobs = g.usize_in(1, 6) as u64;
+            let mut a = NodePool::new(spec);
+            let mut b = RefPool::new(spec);
+            for _ in 0..30 {
+                random_op(g, spec, jobs, &mut a, &mut b);
+                a.check_invariants();
+                for n in 0..spec.nodes {
+                    assert_eq!(
+                        a.free_on(n),
+                        b.free[n as usize],
+                        "node {n} free diverged from the sorted reference"
+                    );
+                }
+                for job in 0..jobs {
+                    assert_eq!(
+                        a.placement(job),
+                        b.placement(job),
+                        "job {job} placement diverged from the sorted reference"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn maintained_index_equals_freshly_built_index() {
+        // Index-maintenance property: after any interleaved sequence of
+        // shrink/grow/apply_diff/release_all, the incrementally-maintained
+        // index equals one rebuilt from scratch off the free vector.
+        forall("index ≡ rebuild", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 10) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let jobs = g.usize_in(1, 6) as u64;
+            let mut pool = NodePool::new(spec);
+            let mut reference = RefPool::new(spec);
+            for _ in 0..30 {
+                random_op(g, spec, jobs, &mut pool, &mut reference);
+                let mut rebuilt: BTreeMap<u32, BTreeSet<u32>> = BTreeMap::new();
+                for n in 0..spec.nodes {
+                    let f = pool.free_on(n);
+                    if f > 0 {
+                        rebuilt.entry(f).or_default().insert(n);
+                    }
+                }
+                assert_eq!(pool.by_free, rebuilt, "maintained index drifted");
             }
         });
     }

@@ -171,8 +171,13 @@ impl Coordinator {
                     .allocate_ctx(&self.sched_ctx, &requests, self.cfg.cluster.capacity());
             sched_nanos = start.elapsed().as_nanos() as u64;
 
-            // Persist this epoch's grant for the next warm start.
+            // Persist this epoch's grant for the next warm start, and
+            // republish the policy's decision-cost model so context
+            // observers (benchmarks, traces) can read it.
             self.sched_ctx.record(&requests, &allocation);
+            if let Some(stats) = self.policy.decision_stats() {
+                self.sched_ctx.record_stats(stats);
+            }
             targets = requests
                 .iter()
                 .zip(&allocation.cores)
@@ -238,6 +243,18 @@ impl Coordinator {
     /// Immutable view of the job ledger.
     pub fn ledger(&self) -> &JobLedger {
         &self.ledger
+    }
+
+    /// The most recent epoch's record, if any epoch has run (the full
+    /// history is extracted by [`Coordinator::into_trace`]).
+    pub fn last_epoch(&self) -> Option<&EpochRecord> {
+        self.epochs.last()
+    }
+
+    /// The persistent scheduling context (previous grant + the policy's
+    /// published decision-cost statistics).
+    pub fn sched_context(&self) -> &SchedContext {
+        &self.sched_ctx
     }
 
     /// Node pool (placement state).
@@ -383,6 +400,25 @@ mod tests {
         assert_eq!((p, done), (1, 1), "fast job completes, future stays pending");
         assert_eq!(r, 0);
         assert_eq!(c.ledger().len(), 2);
+    }
+
+    #[test]
+    fn epoch_loop_publishes_decision_stats() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        for id in 0..3 {
+            c.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        // Epoch 1 allocates from an empty context; epoch 2 exercises the
+        // timed warm-or-scratch decision, which feeds the published model.
+        c.step_epoch();
+        c.step_epoch();
+        let stats = c.sched_context().decision_stats().expect("slaq publishes its model");
+        assert!(
+            stats.warm_samples() + stats.scratch_samples() >= 1,
+            "second epoch must feed the decision-cost model"
+        );
+        assert!(c.last_epoch().is_some());
+        assert_eq!(c.last_epoch().unwrap().active_jobs, 3);
     }
 
     #[test]

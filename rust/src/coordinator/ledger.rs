@@ -44,6 +44,41 @@ pub struct LedgerEntry {
 }
 
 /// Id-indexed job store with arrival-ordered activation.
+///
+/// # Examples
+///
+/// ```
+/// use slaq::cluster::CostModel;
+/// use slaq::coordinator::{JobLedger, JobSpec, SyntheticSource};
+/// use slaq::predictor::{CurveKind, CurveModel};
+/// use slaq::util::rng::Rng;
+///
+/// let mut ledger = JobLedger::new();
+/// for (id, arrival) in [(1u64, 0.0), (2, 10.0)] {
+///     let spec = JobSpec {
+///         id,
+///         name: format!("job-{id}"),
+///         kind: CurveKind::Exponential,
+///         cost: CostModel::new(0.1, 4.0),
+///         max_cores: 8,
+///         arrival,
+///         target_fraction: 0.95,
+///         max_iterations: 1_000,
+///         target_hint: None,
+///     };
+///     let curve = CurveModel::Exponential { m: 4.0, mu: 0.8, c: 1.0 };
+///     ledger.submit(spec, Box::new(SyntheticSource::new(curve, 0.0, Rng::new(id))));
+/// }
+///
+/// // Activation pops the arrival heap: only due jobs start running.
+/// ledger.activate_due(0.0);
+/// assert_eq!(ledger.counts(), (1, 1, 0));
+/// assert_eq!(ledger.running_ids(), vec![1]);
+///
+/// // Retiring a completed job drops it out of the hot loop for good.
+/// ledger.retire(1);
+/// assert_eq!(ledger.counts(), (1, 0, 1));
+/// ```
 #[derive(Default)]
 pub struct JobLedger {
     /// Every job ever submitted, keyed by id (deterministic iteration).

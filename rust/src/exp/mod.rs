@@ -9,13 +9,16 @@
 //! | [`fig5_time_to`]    | Fig 5 — time to X% loss reduction               |
 //! | [`fig6_sched_time`] | Fig 6 — scheduler decision time at scale        |
 //! | [`churn_scalability`] | churn — incremental vs from-scratch decisions |
+//! | [`churn_epoch_loop`] | churn — end-to-end coordinator epoch latency   |
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
 //! the calibrated synthetic zoo at the paper's 160-job scale; Fig 6 and
 //! the churn scenario are allocator microbenchmarks (churn measures the
-//! warm-start path against from-scratch under steady-state job turnover).
+//! warm-start path against from-scratch under steady-state job turnover),
+//! while [`churn_epoch_loop`] drives the same churn regime through the
+//! full coordinator epoch loop and reports whole-epoch latency.
 
 mod ablations;
 mod real_runs;
@@ -27,7 +30,7 @@ pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hin
 pub use real_runs::{fig1_work_cdf, fig2_norm_delta, pred_accuracy, run_zoo_real, ZooRun};
 pub use report::{render_table, ExpOutput};
 pub use scalability::{
-    churn_decision_cost, churn_scalability, fig6_sched_time, time_decision, ChurnConfig,
-    ChurnCost,
+    churn_decision_cost, churn_epoch_loop, churn_scalability, epoch_loop_cost, fig6_sched_time,
+    time_decision, ChurnConfig, ChurnCost, EpochLoopConfig, EpochLoopCost,
 };
 pub use sim_runs::{fig3_allocation, fig4_avg_loss, fig5_time_to, run_sim_trace, SimConfig};

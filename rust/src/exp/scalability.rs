@@ -2,16 +2,24 @@
 //!
 //! * Fig 6: one-shot allocation over thousands of jobs × thousands of
 //!   cores ("simulating both the jobs and worker nodes").
-//! * Churn: steady-state epochs with a configurable arrival/completion
-//!   rate, measuring the *incremental* (warm-start) decision path against
-//!   the from-scratch path — the regime a production scheduler actually
-//!   lives in, where cluster state changes by a handful of jobs per epoch.
+//! * Churn (allocator): steady-state epochs with a configurable
+//!   arrival/completion rate, measuring the *incremental* (warm-start)
+//!   decision path against the from-scratch path — the regime a
+//!   production scheduler actually lives in, where cluster state changes
+//!   by a handful of jobs per epoch.
+//! * Churn (end-to-end): the same steady-state regime driven through the
+//!   full [`Coordinator`] epoch loop — ledger activation, predictor
+//!   refits, allocation, placement diffs, job advancement — reporting
+//!   whole-epoch latency percentiles, not just the allocation kernel.
 
 use super::report::{render_table, ExpOutput};
-use crate::sched::{JobRequest, Policy, SchedContext, SlaqPolicy};
+use crate::cluster::{ClusterSpec, CostModel};
+use crate::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+use crate::predictor::{CurveKind, CurveModel};
+use crate::sched::{DecisionStats, JobRequest, Policy, SchedContext, SlaqPolicy};
 use crate::util::csv::Csv;
 use crate::util::rng::Rng;
-use crate::workload::SyntheticGain;
+use crate::workload::{JobTemplate, SyntheticGain};
 use std::time::Instant;
 
 /// Time one SLAQ allocation decision over `jobs` jobs and `cores` cores.
@@ -143,7 +151,10 @@ fn sample_churn_job(rng: &mut Rng, id: u64) -> ChurnJob {
 /// Run the churn trace once. `warm` selects the incremental (delta-based)
 /// decision path; otherwise every epoch re-runs the from-scratch
 /// allocator. Identical seeds produce identical job populations in both
-/// modes, so the comparison isolates the decision path.
+/// modes, and the policy's adaptive cost model is held cold throughout so
+/// its re-probe rule never injects from-scratch epochs into the warm run —
+/// the comparison isolates the decision path (the production behaviour,
+/// adaptive model included, is what [`epoch_loop_cost`] measures).
 pub fn churn_decision_cost(cfg: &ChurnConfig, warm: bool) -> ChurnCost {
     let mut rng = Rng::new(cfg.seed);
     let mut next_id = 0u64;
@@ -187,6 +198,11 @@ pub fn churn_decision_cost(cfg: &ChurnConfig, warm: bool) -> ChurnCost {
             .iter()
             .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, gain: &j.gain })
             .collect();
+        if warm {
+            // Keep the model cold so the matched-fraction prior decides
+            // every epoch: this microbenchmark isolates the warm path.
+            policy.cost_model = DecisionStats::default();
+        }
         let start = Instant::now();
         let alloc = if warm {
             policy.allocate_ctx(&ctx, &requests, cfg.cores)
@@ -265,6 +281,210 @@ pub fn churn_scalability(
     ExpOutput { id: "churn".into(), csv, summary }
 }
 
+/// Full-coordinator churn configuration. Unlike [`ChurnConfig`] (which
+/// microbenchmarks the allocator alone on synthetic gain oracles), this
+/// drives [`Coordinator::step_epoch`] end to end, so every measured epoch
+/// pays for ledger activation, per-job predictor refits, the allocation
+/// decision, placement diffs and job advancement.
+#[derive(Debug, Clone)]
+pub struct EpochLoopConfig {
+    /// Long-lived steady-state population, all active from the first epoch.
+    pub jobs: usize,
+    /// Cluster capacity in cores, placed on 32-core nodes (the paper's
+    /// node size): the pool gets `max(1, cores / 32)` whole nodes, so
+    /// values below 32 still get one full node.
+    pub cores: u32,
+    /// Short-lived jobs arriving per epoch. Each completes within a few
+    /// epochs, so arrivals *and* completions flow through every measured
+    /// epoch.
+    pub churn_per_epoch: usize,
+    /// Measured epochs.
+    pub epochs: usize,
+    /// Unmeasured warm-up epochs (establish the prior grant, placements
+    /// and predictor windows).
+    pub warmup_epochs: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// End-to-end epoch-latency measurements from one [`epoch_loop_cost`] run.
+#[derive(Debug, Clone, Default)]
+pub struct EpochLoopCost {
+    /// Whole-epoch wall-clock per measured epoch (ms), in epoch order.
+    pub epoch_millis: Vec<f64>,
+    /// Allocation-decision wall-clock per measured epoch (ms) — the
+    /// subset of the epoch the allocator microbenchmark sees.
+    pub sched_millis: Vec<f64>,
+    /// Jobs that completed during the measured epochs.
+    pub completed: usize,
+    /// Jobs that arrived during the measured epochs.
+    pub arrived: usize,
+    /// Mean running-set size across measured epochs.
+    pub mean_active: f64,
+}
+
+impl EpochLoopCost {
+    /// Mean end-to-end epoch latency (ms).
+    pub fn mean_millis(&self) -> f64 {
+        crate::util::stats::mean(&self.epoch_millis)
+    }
+
+    /// End-to-end epoch-latency percentile (ms); NaN with no epochs.
+    pub fn percentile_millis(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.epoch_millis, q)
+    }
+
+    /// Mean allocation-decision latency (ms).
+    pub fn mean_sched_millis(&self) -> f64 {
+        crate::util::stats::mean(&self.sched_millis)
+    }
+}
+
+/// Sample one job for the end-to-end churn population. Long-lived jobs
+/// model the steady-state population (deep convergence tails, effectively
+/// unbounded iteration budget); short-lived jobs model churn (cheap
+/// iterations, a tight iteration cap, so they finish within a few epochs).
+fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: bool) -> JobTemplate {
+    let m = rng.range_f64(0.5, 4.0);
+    let mu = rng.range_f64(0.9, 0.99);
+    let floor = m * rng.range_f64(0.05, 0.3);
+    let curve = CurveModel::Exponential { m, mu, c: floor };
+    let cost = if short_lived {
+        CostModel::new(rng.range_f64(0.02, 0.1), rng.range_f64(1.0, 5.0))
+    } else {
+        CostModel::new(rng.range_f64(0.02, 0.15), rng.range_f64(10.0, 120.0))
+    };
+    let spec = JobSpec {
+        id,
+        name: format!("churn-{id}"),
+        kind: CurveKind::Exponential,
+        cost,
+        max_cores: rng.range_u64(32, 129) as u32,
+        arrival,
+        target_fraction: 0.999,
+        max_iterations: if short_lived { rng.range_u64(3, 12) } else { 1_000_000 },
+        target_hint: None,
+    };
+    JobTemplate { spec, curve, noise: 0.005 }
+}
+
+/// Run the full coordinator epoch loop under steady-state churn and
+/// measure whole-epoch latency. All submissions (the initial population
+/// and every epoch's churn arrivals) are enqueued up front; the ledger's
+/// arrival heap activates them on schedule, so measured epochs exercise
+/// activation, refits, allocation, placement diffs and completions — the
+/// decision loop a production coordinator actually runs.
+pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
+    const EPOCH_SECS: f64 = 3.0;
+    let spec = ClusterSpec { nodes: (cfg.cores / 32).max(1), cores_per_node: 32 };
+    let coord_cfg = CoordinatorConfig {
+        cluster: spec,
+        epoch_secs: EPOCH_SECS,
+        cold_start_optimism: true,
+    };
+    let mut coord = Coordinator::new(coord_cfg, Box::new(SlaqPolicy::new()));
+    let mut rng = Rng::new(cfg.seed);
+    let mut next_id = 0u64;
+    for _ in 0..cfg.jobs {
+        let template = churn_sim_job(&mut rng, next_id, 0.0, false);
+        let source = template.make_source(&mut rng);
+        coord.submit(template.spec, source);
+        next_id += 1;
+    }
+    let total_epochs = cfg.warmup_epochs + cfg.epochs;
+    for epoch in 0..total_epochs {
+        let t = EPOCH_SECS * epoch as f64;
+        for _ in 0..cfg.churn_per_epoch {
+            let template = churn_sim_job(&mut rng, next_id, t, true);
+            let source = template.make_source(&mut rng);
+            coord.submit(template.spec, source);
+            next_id += 1;
+        }
+    }
+
+    for _ in 0..cfg.warmup_epochs {
+        coord.step_epoch();
+    }
+
+    let mut cost = EpochLoopCost::default();
+    let completed_before = coord.job_counts().2;
+    let mut active_sum = 0usize;
+    for _ in 0..cfg.epochs {
+        let start = Instant::now();
+        coord.step_epoch();
+        cost.epoch_millis.push(start.elapsed().as_secs_f64() * 1e3);
+        let record = coord.last_epoch().expect("epoch just ran");
+        cost.sched_millis.push(record.sched_nanos as f64 / 1e6);
+        active_sum += coord.job_counts().1;
+    }
+    cost.completed = coord.job_counts().2 - completed_before;
+    cost.arrived = cfg.epochs * cfg.churn_per_epoch;
+    cost.mean_active = active_sum as f64 / cfg.epochs.max(1) as f64;
+    cost
+}
+
+/// End-to-end churn sweep: whole-epoch latency percentiles across
+/// population sizes, driven through the full coordinator loop.
+pub fn churn_epoch_loop(
+    jobs_list: &[usize],
+    cores: u32,
+    churn_per_epoch: usize,
+    epochs: usize,
+) -> ExpOutput {
+    let mut csv = Csv::new(&[
+        "jobs",
+        "cores",
+        "churn_per_epoch",
+        "epoch_ms_mean",
+        "epoch_ms_p50",
+        "epoch_ms_p95",
+        "sched_ms_mean",
+        "mean_active",
+        "completed",
+    ]);
+    let mut rows = Vec::new();
+    for &jobs in jobs_list {
+        let cfg = EpochLoopConfig {
+            jobs,
+            cores,
+            churn_per_epoch,
+            epochs,
+            warmup_epochs: 2,
+            seed: 20818,
+        };
+        let cost = epoch_loop_cost(&cfg);
+        csv.row_f64(&[
+            jobs as f64,
+            cores as f64,
+            churn_per_epoch as f64,
+            cost.mean_millis(),
+            cost.percentile_millis(50.0),
+            cost.percentile_millis(95.0),
+            cost.mean_sched_millis(),
+            cost.mean_active,
+            cost.completed as f64,
+        ]);
+        rows.push(vec![
+            jobs.to_string(),
+            format!("{:.2} ms", cost.mean_millis()),
+            format!("{:.2} ms", cost.percentile_millis(50.0)),
+            format!("{:.2} ms", cost.percentile_millis(95.0)),
+            format!("{:.2} ms", cost.mean_sched_millis()),
+            format!("{:.0}", cost.mean_active),
+            cost.completed.to_string(),
+        ]);
+    }
+    let summary = format!(
+        "Churn (end-to-end) — full coordinator epoch latency at {cores} cores, \
+         {churn_per_epoch} arrivals per epoch\n{}",
+        render_table(
+            &["jobs", "epoch mean", "epoch p50", "epoch p95", "alloc mean", "active", "completed"],
+            &rows
+        )
+    );
+    ExpOutput { id: "churn_epoch".into(), csv, summary }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,5 +529,41 @@ mod tests {
         let out = churn_scalability(&[50, 100], 512, 4, 3);
         assert_eq!(out.csv.len(), 2);
         assert!(out.summary.contains("incremental"));
+    }
+
+    #[test]
+    fn epoch_loop_measures_full_epochs_under_churn() {
+        let cfg = EpochLoopConfig {
+            jobs: 120,
+            cores: 512,
+            churn_per_epoch: 6,
+            epochs: 5,
+            warmup_epochs: 2,
+            seed: 3,
+        };
+        let cost = epoch_loop_cost(&cfg);
+        assert_eq!(cost.epoch_millis.len(), 5);
+        assert_eq!(cost.sched_millis.len(), 5);
+        assert_eq!(cost.arrived, 30);
+        assert!(cost.mean_millis() > 0.0 && cost.mean_millis() < 60_000.0);
+        // The allocation decision is a strict subset of the epoch.
+        assert!(cost.mean_sched_millis() <= cost.mean_millis());
+        // The long-lived population stays active throughout.
+        assert!(
+            cost.mean_active >= 100.0,
+            "population collapsed: mean active {}",
+            cost.mean_active
+        );
+        // Short-lived churn jobs complete inside the measured window.
+        assert!(cost.completed > 0, "no churn job completed");
+        assert!(!cost.percentile_millis(95.0).is_nan());
+    }
+
+    #[test]
+    fn epoch_loop_output_has_one_row_per_population() {
+        let out = churn_epoch_loop(&[40, 80], 256, 3, 3);
+        assert_eq!(out.csv.len(), 2);
+        assert_eq!(out.id, "churn_epoch");
+        assert!(out.summary.contains("end-to-end"));
     }
 }

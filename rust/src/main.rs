@@ -1,14 +1,17 @@
 //! `slaq` — command-line driver.
 //!
 //! Subcommands:
-//!   slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [flags]
-//!       regenerate paper figures (CSV under --out, summary to stdout)
-//!   slaq train --algo <name> [--iters N] [--variant small|base]
-//!       run one real training job through the PJRT runtime
-//!   slaq run [--policy slaq|fair|fifo|static] [--jobs N] [--duration S]
-//!       run a scheduling simulation and print cluster statistics
-//!   slaq check
-//!       verify artifacts load and the PJRT runtime is healthy
+//!
+//! ```text
+//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [flags]
+//!     regenerate paper figures (CSV under --out, summary to stdout)
+//! slaq train --algo <name> [--iters N] [--variant small|base]
+//!     run one real training job through the PJRT runtime
+//! slaq run [--policy slaq|fair|fifo|static] [--jobs N] [--duration S]
+//!     run a scheduling simulation and print cluster statistics
+//! slaq check
+//!     verify artifacts load and the PJRT runtime is healthy
+//! ```
 
 use anyhow::{anyhow, Result};
 use slaq::cluster::ClusterSpec;
@@ -156,11 +159,21 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     if wants("churn") {
         log::info!("churn scenario: incremental vs from-scratch decisions…");
         let jobs_list = parsed.get_csv::<usize>("churn-jobs").map_err(|e| anyhow!(e))?;
+        let churn_cores = parsed.get_as::<u32>("churn-cores").map_err(|e| anyhow!(e))?;
+        let churn_rate = parsed.get_as::<usize>("churn").map_err(|e| anyhow!(e))?;
+        let churn_epochs = parsed.get_as::<usize>("churn-epochs").map_err(|e| anyhow!(e))?;
         outputs.push(exp::churn_scalability(
             &jobs_list,
-            parsed.get_as::<u32>("churn-cores").map_err(|e| anyhow!(e))?,
-            parsed.get_as::<usize>("churn").map_err(|e| anyhow!(e))?,
-            parsed.get_as::<usize>("churn-epochs").map_err(|e| anyhow!(e))?,
+            churn_cores,
+            churn_rate,
+            churn_epochs,
+        ));
+        log::info!("churn scenario: end-to-end coordinator epochs…");
+        outputs.push(exp::churn_epoch_loop(
+            &jobs_list,
+            churn_cores,
+            churn_rate,
+            churn_epochs,
         ));
     }
 

@@ -21,6 +21,12 @@
 //!   implementation ignores the context; [`SlaqPolicy`] overrides it with a
 //!   warm-started search seeded from the prior grant that falls back to the
 //!   from-scratch path when the job set shifted too much.
+//! * [`DecisionStats`] is the online cost model behind the warm-or-scratch
+//!   choice: EWMAs of the measured per-work-unit cost of each path. Once
+//!   both paths have been observed, the policy takes whichever the model
+//!   predicts cheaper for this epoch's churn, instead of a fixed
+//!   churn-fraction threshold. The coordinator republishes the policy's
+//!   model through [`SchedContext::decision_stats`] after every epoch.
 //!
 //! Policies implemented:
 //! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator, with the
@@ -85,6 +91,147 @@ impl Allocation {
     }
 }
 
+/// Online decision-cost model: EWMAs of the measured cost of the two
+/// allocation paths, in nanoseconds per *work unit* (one work unit ≈ one
+/// gain-oracle evaluation's worth of search effort).
+///
+/// [`SlaqPolicy`] feeds the model with every timed [`Policy::allocate_ctx`]
+/// decision and consults [`DecisionStats::prefer_warm`] to choose between
+/// the warm-start repair and the from-scratch rebuild, replacing the old
+/// hard-coded "at least half the requests must carry a prior grant" rule
+/// with a threshold that adapts to where the break-even actually sits on
+/// this machine and workload.
+///
+/// ```
+/// use slaq::sched::DecisionStats;
+///
+/// let mut model = DecisionStats::default();
+/// assert_eq!(model.prefer_warm(10, 100), None); // cold: no samples yet
+/// model.observe_warm(100, 1_000); // 10 ns per work unit
+/// model.observe_scratch(100, 2_000); // 20 ns per work unit
+/// assert_eq!(model.prefer_warm(10, 100), Some(true));
+/// assert_eq!(model.prefer_warm(1_000, 10), Some(false));
+/// ```
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionStats {
+    warm_ns_per_unit: Option<f64>,
+    scratch_ns_per_unit: Option<f64>,
+    warm_samples: u64,
+    scratch_samples: u64,
+    /// Decisions since the warm path was last measured.
+    since_warm: u64,
+    /// Decisions since the from-scratch path was last measured.
+    since_scratch: u64,
+}
+
+impl DecisionStats {
+    /// EWMA weight of the newest sample.
+    const ALPHA: f64 = 0.25;
+
+    /// Force a measurement of the untaken path after this many decisions
+    /// without one. The EWMAs only update for the path actually taken, so
+    /// without re-probing a single outlier (an aborted repair, an OS
+    /// preemption spike) could lock the model out of a path forever; the
+    /// periodic probe keeps both estimates fresh at an amortized cost of
+    /// one off-path decision in [`DecisionStats::REPROBE_EVERY`].
+    pub const REPROBE_EVERY: u64 = 16;
+
+    fn fold(slot: &mut Option<f64>, x: f64) {
+        *slot = Some(match *slot {
+            None => x,
+            Some(v) => Self::ALPHA * x + (1.0 - Self::ALPHA) * v,
+        });
+    }
+
+    /// Fold in one measured warm-start decision (`units` of estimated
+    /// search work, `nanos` of wall clock). Aborted warm attempts should
+    /// be recorded too — wasted repair work is exactly what the model must
+    /// learn to avoid.
+    pub fn observe_warm(&mut self, units: u64, nanos: u64) {
+        if units == 0 {
+            return;
+        }
+        Self::fold(&mut self.warm_ns_per_unit, nanos as f64 / units as f64);
+        self.warm_samples += 1;
+        self.since_warm = 0;
+        self.since_scratch += 1;
+    }
+
+    /// Fold in one measured from-scratch decision.
+    pub fn observe_scratch(&mut self, units: u64, nanos: u64) {
+        if units == 0 {
+            return;
+        }
+        Self::fold(&mut self.scratch_ns_per_unit, nanos as f64 / units as f64);
+        self.scratch_samples += 1;
+        self.since_scratch = 0;
+        self.since_warm += 1;
+    }
+
+    /// EWMA cost of the warm path (ns per work unit), once observed.
+    pub fn warm_ns_per_unit(&self) -> Option<f64> {
+        self.warm_ns_per_unit
+    }
+
+    /// EWMA cost of the from-scratch path (ns per work unit), once observed.
+    pub fn scratch_ns_per_unit(&self) -> Option<f64> {
+        self.scratch_ns_per_unit
+    }
+
+    /// Warm-path decisions folded in so far.
+    pub fn warm_samples(&self) -> u64 {
+        self.warm_samples
+    }
+
+    /// From-scratch decisions folded in so far.
+    pub fn scratch_samples(&self) -> u64 {
+        self.scratch_samples
+    }
+
+    /// Predicted warm-path cost in nanoseconds for `units` of work.
+    pub fn predict_warm_nanos(&self, units: u64) -> Option<f64> {
+        self.warm_ns_per_unit.map(|c| c * units as f64)
+    }
+
+    /// Predicted from-scratch cost in nanoseconds for `units` of work.
+    pub fn predict_scratch_nanos(&self, units: u64) -> Option<f64> {
+        self.scratch_ns_per_unit.map(|c| c * units as f64)
+    }
+
+    /// The adaptive threshold: `Some(true)` when the modeled warm-start
+    /// cost for `warm_units` of repair work undercuts the modeled
+    /// from-scratch cost for `scratch_units` of rebuild work, `None` while
+    /// the model is too cold to say (callers fall back to a static prior).
+    ///
+    /// Two probe rules keep the model two-sided: a path that has gone
+    /// [`DecisionStats::REPROBE_EVERY`] decisions without a measurement is
+    /// forced once — whether it lost on its (possibly stale) estimate, or
+    /// was never measured at all because the cold-start prior consistently
+    /// chose the other path. Without them a stale or one-sided history
+    /// could lock the scheduler out of a path permanently.
+    pub fn prefer_warm(&self, warm_units: u64, scratch_units: u64) -> Option<bool> {
+        match (self.warm_ns_per_unit, self.scratch_ns_per_unit) {
+            (None, None) => None,
+            // Bootstrap: one side has never been measured; sample it after
+            // REPROBE_EVERY one-sided decisions so the model can engage.
+            (Some(_), None) => {
+                (self.since_scratch >= Self::REPROBE_EVERY).then_some(false)
+            }
+            (None, Some(_)) => (self.since_warm >= Self::REPROBE_EVERY).then_some(true),
+            (Some(w), Some(s)) => {
+                let model_says_warm = w * warm_units as f64 <= s * scratch_units as f64;
+                if model_says_warm && self.since_scratch >= Self::REPROBE_EVERY {
+                    Some(false)
+                } else if !model_says_warm && self.since_warm >= Self::REPROBE_EVERY {
+                    Some(true)
+                } else {
+                    Some(model_says_warm)
+                }
+            }
+        }
+    }
+}
+
 /// Persistent scheduler state carried across epochs.
 ///
 /// The context owns the previous epoch's grant keyed by stable job id, so a
@@ -92,10 +239,29 @@ impl Allocation {
 /// search structures. The coordinator records each epoch's outcome via
 /// [`SchedContext::record`] and evicts completed jobs with
 /// [`SchedContext::forget`]; both are O(active jobs), never O(all jobs).
+///
+/// ```
+/// use slaq::sched::{Allocation, JobRequest, SchedContext};
+///
+/// let gain = |cores: u32| cores as f64;
+/// let requests = vec![
+///     JobRequest { id: 3, max_cores: 4, gain: &gain },
+///     JobRequest { id: 5, max_cores: 4, gain: &gain },
+/// ];
+/// let mut ctx = SchedContext::new();
+/// ctx.record(&requests, &Allocation { cores: vec![3, 1] });
+/// assert_eq!(ctx.prev_grant(3), Some(3));
+/// assert_eq!(ctx.prev_grant(5), Some(1));
+///
+/// // Completed jobs leave the context immediately.
+/// ctx.forget(5);
+/// assert_eq!(ctx.prev_grant(5), None);
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct SchedContext {
     prev: HashMap<u64, u32>,
     epoch: u64,
+    stats: Option<DecisionStats>,
 }
 
 impl SchedContext {
@@ -106,7 +272,7 @@ impl SchedContext {
 
     /// Build a context from explicit `(job id, cores)` grants.
     pub fn from_grants(grants: impl IntoIterator<Item = (u64, u32)>) -> Self {
-        Self { prev: grants.into_iter().collect(), epoch: 1 }
+        Self { prev: grants.into_iter().collect(), epoch: 1, stats: None }
     }
 
     /// Number of epochs recorded so far.
@@ -146,6 +312,20 @@ impl SchedContext {
     pub fn forget(&mut self, id: u64) {
         self.prev.remove(&id);
     }
+
+    /// Publish the policy's decision-cost model (see
+    /// [`Policy::decision_stats`]); the coordinator calls this after every
+    /// epoch so observers of the context can read the model without
+    /// reaching into the policy.
+    pub fn record_stats(&mut self, stats: DecisionStats) {
+        self.stats = Some(stats);
+    }
+
+    /// Decision-cost statistics of the most recent recorded epoch, if the
+    /// policy in use publishes them.
+    pub fn decision_stats(&self) -> Option<DecisionStats> {
+        self.stats
+    }
 }
 
 /// A scheduling policy: produces an allocation each epoch.
@@ -166,6 +346,37 @@ pub trait Policy: Send {
     /// [`Policy::allocate`] and produce an allocation of equal total
     /// predicted gain. The default ignores the context; policies with a
     /// warm-start path override it.
+    ///
+    /// # Examples
+    ///
+    /// The epoch-over-epoch usage pattern — record each grant, pass the
+    /// context back in, and the SLAQ policy warm-starts from it:
+    ///
+    /// ```
+    /// use slaq::sched::{JobRequest, Policy, SchedContext, SlaqPolicy};
+    ///
+    /// // Two jobs with concave quality-gain oracles.
+    /// let fast = |cores: u32| 2.0 * (1.0 - 1.0 / (1.0 + 0.5 * cores as f64));
+    /// let slow = |cores: u32| 0.5 * (1.0 - 1.0 / (1.0 + 0.5 * cores as f64));
+    /// let requests = vec![
+    ///     JobRequest { id: 7, max_cores: 8, gain: &fast },
+    ///     JobRequest { id: 9, max_cores: 8, gain: &slow },
+    /// ];
+    ///
+    /// let mut policy = SlaqPolicy::new();
+    /// let mut ctx = SchedContext::new();
+    ///
+    /// // Epoch 1: empty context — the policy allocates from scratch.
+    /// let alloc = policy.allocate_ctx(&ctx, &requests, 10);
+    /// assert_eq!(alloc.total(), 10);
+    /// ctx.record(&requests, &alloc);
+    ///
+    /// // Epoch 2: the recorded grant seeds the warm-start repair, which
+    /// // lands on the same optimum far more cheaply.
+    /// let again = policy.allocate_ctx(&ctx, &requests, 10);
+    /// assert!(policy.last_warm_start);
+    /// assert_eq!(again.cores, alloc.cores);
+    /// ```
     fn allocate_ctx(
         &mut self,
         ctx: &SchedContext,
@@ -174,6 +385,14 @@ pub trait Policy: Send {
     ) -> Allocation {
         let _ = ctx;
         self.allocate(requests, capacity)
+    }
+
+    /// The decision-cost model this policy maintains across
+    /// [`Policy::allocate_ctx`] calls, if any (see [`DecisionStats`]).
+    /// The coordinator republishes it into the [`SchedContext`] after
+    /// every epoch. The default reports none.
+    fn decision_stats(&self) -> Option<DecisionStats> {
+        None
     }
 }
 
@@ -278,6 +497,91 @@ mod tests {
         assert_eq!(ctx.len(), 1);
         assert_eq!(ctx.prev_grant(9), None);
         assert_eq!(ctx.prev_grant(11), Some(2));
+    }
+
+    #[test]
+    fn cost_model_prefers_the_modeled_cheaper_path() {
+        let mut m = DecisionStats::default();
+        assert_eq!(m.prefer_warm(10, 100), None, "cold model must defer");
+        m.observe_warm(100, 1_000); // 10 ns/unit
+        assert_eq!(m.prefer_warm(10, 100), None, "one-sided model must defer");
+        m.observe_scratch(100, 2_000); // 20 ns/unit
+        assert_eq!(m.prefer_warm(10, 100), Some(true));
+        assert_eq!(m.prefer_warm(1_000, 10), Some(false));
+        assert_eq!(m.warm_samples(), 1);
+        assert_eq!(m.scratch_samples(), 1);
+        assert_eq!(m.predict_warm_nanos(10), Some(100.0));
+        assert_eq!(m.predict_scratch_nanos(10), Some(200.0));
+    }
+
+    #[test]
+    fn cost_model_ewma_tracks_drift() {
+        let mut m = DecisionStats::default();
+        m.observe_scratch(1, 1_000); // 1000 ns/unit
+        for _ in 0..64 {
+            m.observe_scratch(1, 100); // drifts toward 100 ns/unit
+        }
+        let v = m.scratch_ns_per_unit().unwrap();
+        assert!((v - 100.0).abs() < 1.0, "EWMA stuck at {v}");
+        // Zero-unit observations are ignored rather than dividing by zero.
+        m.observe_warm(0, 123);
+        assert_eq!(m.warm_samples(), 0);
+        assert_eq!(m.warm_ns_per_unit(), None);
+    }
+
+    #[test]
+    fn cost_model_bootstraps_from_one_sided_observations() {
+        let mut m = DecisionStats::default();
+        // Only the warm path is ever measured (an always-matched
+        // steady-state history where the prior always picks warm).
+        for _ in 0..DecisionStats::REPROBE_EVERY {
+            assert_eq!(m.prefer_warm(10, 10), None, "one-sided: defer to the prior");
+            m.observe_warm(100, 100);
+        }
+        // The scratch side has never been sampled: force one measurement.
+        assert_eq!(m.prefer_warm(10, 10), Some(false));
+        m.observe_scratch(100, 100);
+        // Both sides observed: the adaptive model engages.
+        assert!(m.prefer_warm(10, 10).is_some());
+        assert_eq!(m.scratch_samples(), 1);
+
+        // And symmetrically from a scratch-only history.
+        let mut m = DecisionStats::default();
+        for _ in 0..DecisionStats::REPROBE_EVERY {
+            assert_eq!(m.prefer_warm(10, 10), None);
+            m.observe_scratch(100, 100);
+        }
+        assert_eq!(m.prefer_warm(10, 10), Some(true));
+    }
+
+    #[test]
+    fn cost_model_reprobes_the_untaken_path() {
+        let mut m = DecisionStats::default();
+        m.observe_scratch(100, 100); // 1 ns/unit — scratch looks cheap
+        m.observe_warm(100, 100_000); // 1000 ns/unit — warm looks ruinous
+        // The model favors scratch; keep taking (and measuring) scratch.
+        for _ in 0..DecisionStats::REPROBE_EVERY {
+            assert_eq!(m.prefer_warm(10, 10), Some(false));
+            m.observe_scratch(100, 100);
+        }
+        // The warm estimate is now stale: the model forces a re-probe …
+        assert_eq!(m.prefer_warm(10, 10), Some(true));
+        // … and the fresh measurement heals the inflated estimate.
+        m.observe_warm(100, 100);
+        assert!(m.warm_ns_per_unit().unwrap() < 1000.0);
+        assert_eq!(m.prefer_warm(10, 10), Some(false), "probe counter reset");
+    }
+
+    #[test]
+    fn context_republishes_decision_stats() {
+        let mut ctx = SchedContext::new();
+        assert!(ctx.decision_stats().is_none());
+        let mut stats = DecisionStats::default();
+        stats.observe_warm(10, 50);
+        ctx.record_stats(stats);
+        let seen = ctx.decision_stats().expect("stats recorded");
+        assert_eq!(seen.warm_samples(), 1);
+        assert_eq!(seen.warm_ns_per_unit(), Some(5.0));
     }
 
     #[test]

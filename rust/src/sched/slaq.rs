@@ -36,13 +36,35 @@
 //! payoff: a steady-state epoch costs `O(J)` gain evaluations instead of
 //! `O(C + J)`, and churn costs are proportional to *what changed* rather
 //! than to cluster capacity. The policy falls back to from-scratch when
-//! the job set churned past the payoff point (fewer than half the requests
-//! carry a prior grant), when capacity cannot cover the per-job floor, or
-//! when a (non-concave) oracle makes the repair loop overrun its budget.
+//! capacity cannot cover the per-job floor, or when a (non-concave)
+//! oracle makes the repair loop overrun its budget.
+//!
+//! ## The adaptive warm-or-scratch threshold
+//!
+//! Whether the warm repair beats a from-scratch rebuild depends on how
+//! much churned: the repair pays `O(J)` to seed plus one move per core of
+//! mismatch between the seeded total and capacity, while the rebuild pays
+//! `O(J + C)`. Instead of the historical fixed rule ("warm-start only when
+//! at least half the requests carry a prior grant"), the policy keeps an
+//! online cost model ([`super::DecisionStats`]): EWMAs of the measured
+//! nanoseconds-per-work-unit of each path, fed by every timed
+//! [`Policy::allocate_ctx`] decision. Once both paths have been observed,
+//! each epoch takes whichever path the model predicts cheaper for that
+//! epoch's churn; while the model is cold, the static half-matched prior
+//! decides. The model is exposed via [`Policy::decision_stats`] and
+//! republished through [`SchedContext::decision_stats`].
+//!
+//! Because the model is fed by wall-clock measurements, *which path runs*
+//! can vary between two identically-seeded runs (the total predicted gain
+//! cannot — the paths are allocation-equivalent, though per-job grants may
+//! differ on exact marginal ties). Benchmarks that must isolate one path
+//! deterministically hold the model cold (see `exp::churn_decision_cost`)
+//! or call [`Policy::allocate`] directly.
 
-use super::{Allocation, JobRequest, Policy, SchedContext};
+use super::{Allocation, DecisionStats, JobRequest, Policy, SchedContext};
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
+use std::time::Instant;
 
 /// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th
 /// core (up-heap), or of its `at_alloc`-th held core (down-heap).
@@ -82,6 +104,9 @@ pub struct SlaqPolicy {
     pub last_evaluations: u64,
     /// True when the last `allocate_ctx` call took the warm-start path.
     pub last_warm_start: bool,
+    /// Online warm-vs-scratch cost model driving the adaptive threshold
+    /// (see the module docs); fed by every timed `allocate_ctx` call.
+    pub cost_model: DecisionStats,
     /// Grant every job one core before greedy allocation (paper default;
     /// disable only for the starvation ablation).
     starvation_floor: bool,
@@ -89,7 +114,12 @@ pub struct SlaqPolicy {
 
 impl Default for SlaqPolicy {
     fn default() -> Self {
-        Self { last_evaluations: 0, last_warm_start: false, starvation_floor: true }
+        Self {
+            last_evaluations: 0,
+            last_warm_start: false,
+            cost_model: DecisionStats::default(),
+            starvation_floor: true,
+        }
     }
 }
 
@@ -104,7 +134,7 @@ impl SlaqPolicy {
     /// every job at `a_j = 1`. The warm-start path requires the floor and
     /// is disabled in this mode.
     pub fn without_floor() -> Self {
-        Self { last_evaluations: 0, last_warm_start: false, starvation_floor: false }
+        Self { starvation_floor: false, ..Self::default() }
     }
 
     /// Warm-started allocation seeded from the previous grant. Returns
@@ -418,20 +448,74 @@ impl Policy for SlaqPolicy {
             // Scarce-floor regime: the from-scratch top-k path handles it.
             return self.allocate(requests, capacity);
         }
-        let matched = requests.iter().filter(|r| ctx.prev_grant(r.id).is_some()).count();
-        if matched * 2 < requests.len() {
-            // The job set churned past the warm-start payoff point.
-            return self.allocate(requests, capacity);
+
+        // Work estimates for the two paths, in gain-evaluation-sized
+        // units. The warm repair pays O(J) to seed plus one move per core
+        // of mismatch between the seeded total and the grantable total; a
+        // rebuild pays O(J + grantable). Both searches stop at the jobs'
+        // combined caps when those bind before capacity does, so the
+        // grantable total is min(capacity, Σ caps). `seeded` mirrors the
+        // warm path's seeding rule exactly (prior grant where one exists,
+        // the floor otherwise, clamped into the job's feasible range).
+        let mut matched = 0usize;
+        let mut seeded: u64 = 0;
+        let mut caps_total: u64 = 0;
+        for r in requests {
+            let prev = ctx.prev_grant(r.id);
+            if prev.is_some() {
+                matched += 1;
+            }
+            if r.max_cores == 0 {
+                continue;
+            }
+            caps_total += u64::from(r.max_cores);
+            seeded += u64::from(prev.unwrap_or(1).clamp(1, r.max_cores));
         }
+        let n = requests.len() as u64;
+        let grantable = (capacity as u64).min(caps_total);
+        let warm_units = n + seeded.abs_diff(grantable);
+        let scratch_units = n + grantable;
+
+        // Adaptive threshold: once both paths have measured costs, take
+        // the path the model predicts cheaper for this epoch's churn.
+        // While the model is cold, the static prior decides (warm-start
+        // only when at least half the requests carry a prior grant).
+        let try_warm = self
+            .cost_model
+            .prefer_warm(warm_units, scratch_units)
+            .unwrap_or(matched * 2 >= requests.len());
+        if !try_warm {
+            let start = Instant::now();
+            let alloc = self.allocate(requests, capacity);
+            self.cost_model
+                .observe_scratch(scratch_units, start.elapsed().as_nanos() as u64);
+            return alloc;
+        }
+
         let mut evals = 0u64;
+        let start = Instant::now();
         if let Some(alloc) = self.warm_allocate(ctx, requests, capacity, &mut evals) {
+            self.cost_model
+                .observe_warm(warm_units, start.elapsed().as_nanos() as u64);
             self.last_evaluations = evals;
             self.last_warm_start = true;
             return alloc;
         }
+        // Aborted warm attempt (repair budget overrun): charge the wasted
+        // work to the warm model so the threshold learns from it, then
+        // rebuild.
+        self.cost_model
+            .observe_warm(warm_units, start.elapsed().as_nanos() as u64);
+        let start = Instant::now();
         let alloc = self.allocate(requests, capacity);
+        self.cost_model
+            .observe_scratch(scratch_units, start.elapsed().as_nanos() as u64);
         self.last_evaluations += evals; // count the aborted warm attempt too
         alloc
+    }
+
+    fn decision_stats(&self) -> Option<DecisionStats> {
+        Some(self.cost_model)
     }
 }
 
@@ -750,6 +834,61 @@ mod tests {
         assert!(!p.last_warm_start, "disjoint job set must fall back");
         check_invariants(&rs, 40, &a);
         assert_eq!(a.total(), 40);
+    }
+
+    #[test]
+    fn adaptive_threshold_overrides_the_static_prior() {
+        let gains: Vec<ConcaveGain> =
+            (0..8).map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[16; 8]);
+        let mut scratch = SlaqPolicy::new();
+        let base = scratch.allocate(&rs, 64);
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &base);
+
+        // Every request matches, so the static prior would warm-start —
+        // but the primed model says the warm path is ruinously expensive.
+        let mut p = SlaqPolicy::new();
+        p.cost_model.observe_warm(1, 1_000_000);
+        p.cost_model.observe_scratch(1_000_000, 1);
+        let a = p.allocate_ctx(&ctx, &rs, 64);
+        assert!(!p.last_warm_start, "model predicts scratch cheaper");
+        check_invariants(&rs, 64, &a);
+
+        // The other direction: only 1 of 8 requests matches (the static
+        // prior would rebuild), but the model says repair is nearly free.
+        let mut q = SlaqPolicy::new();
+        q.cost_model.observe_warm(1_000_000, 1);
+        q.cost_model.observe_scratch(1, 1_000_000);
+        let ctx2 = SchedContext::from_grants([(0u64, 4u32)]);
+        let b = q.allocate_ctx(&ctx2, &rs, 64);
+        assert!(q.last_warm_start, "model predicts warm cheaper");
+        check_invariants(&rs, 64, &b);
+        check_work_conserving(&rs, 64, &b);
+        let (gw, gs) = (total_gain(&rs, &b), total_gain(&rs, &base));
+        assert!(
+            (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
+            "adaptively-warm gain {gw} != scratch gain {gs}"
+        );
+    }
+
+    #[test]
+    fn allocate_ctx_feeds_the_cost_model() {
+        let gains: Vec<ConcaveGain> =
+            (0..6).map(|_| ConcaveGain { scale: 1.0, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[8; 6]);
+        let mut p = SlaqPolicy::new();
+        let ctx = SchedContext::from_grants((0..6).map(|i| (i, 4)));
+        let _ = p.allocate_ctx(&ctx, &rs, 24);
+        assert!(p.last_warm_start);
+        assert_eq!(p.cost_model.warm_samples(), 1);
+
+        let disjoint = SchedContext::from_grants((100..106).map(|i| (i, 4)));
+        let mut q = SlaqPolicy::new();
+        let _ = q.allocate_ctx(&disjoint, &rs, 24);
+        assert!(!q.last_warm_start);
+        assert_eq!(q.cost_model.scratch_samples(), 1);
+        assert!(q.decision_stats().is_some(), "slaq publishes its model");
     }
 
     #[test]

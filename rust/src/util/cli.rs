@@ -15,7 +15,7 @@ struct FlagSpec {
     is_bool: bool,
 }
 
-/// A tiny argv parser: declare flags, then [`Args::parse`].
+/// A tiny argv parser: declare flags, then [`Cli::parse`].
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
     about: String,

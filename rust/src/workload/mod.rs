@@ -1,10 +1,12 @@
 //! Workload generation: the paper's experiment traces.
 //!
-//! * [`zoo`] — the diversified job population ("Each algorithm is further
-//!   diversified to construct different models", paper §3): convergence
-//!   curves, cost models and resource caps sampled per job.
-//! * [`generator`] — Poisson arrival processes, the 160-job Fig 3–5 trace,
-//!   and the Fig 6 scale sweep population.
+//! * `zoo` ([`sample_job`], [`JobTemplate`]) — the diversified job
+//!   population ("Each algorithm is further diversified to construct
+//!   different models", paper §3): convergence curves, cost models and
+//!   resource caps sampled per job.
+//! * `generator` ([`poisson_arrivals`], [`paper_trace`]) — Poisson arrival
+//!   processes, the 160-job Fig 3–5 trace, and the Fig 6 scale sweep
+//!   population.
 
 mod generator;
 mod zoo;

@@ -25,7 +25,7 @@ fn run(policy: &str, rt: &Runtime, manifest: &Manifest) -> Result<Trace> {
     let cfg = CoordinatorConfig {
         cluster: ClusterSpec { nodes: 1, cores_per_node: 16 },
         epoch_secs: 2.0,
-        cold_start_optimism: true,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(cfg, policy_by_name(policy).unwrap());
     for (i, lr) in LRS.iter().enumerate() {

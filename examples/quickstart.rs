@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     let cfg = CoordinatorConfig {
         cluster: ClusterSpec { nodes: 2, cores_per_node: 8 },
         epoch_secs: 2.0,
-        cold_start_optimism: true,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
 

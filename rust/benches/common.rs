@@ -5,6 +5,10 @@
 use std::time::Instant;
 
 /// Summary statistics of one benchmark (seconds per iteration).
+///
+/// A few bench binaries reuse the mean/p50/p95 fields for unit-less
+/// *counts* instead of latencies; such entries always carry an explicit
+/// `_per_epoch` name suffix so latency dashboards can filter them out.
 #[allow(dead_code)] // shared across bench binaries; not all use every item
 #[derive(Debug, Clone)]
 pub struct BenchStats {

@@ -16,7 +16,7 @@ fn build(jobs: usize, policy: &str) -> Coordinator {
     let cfg = CoordinatorConfig {
         cluster: ClusterSpec::paper_testbed(),
         epoch_secs: 3.0,
-        cold_start_optimism: true,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(cfg, policy_by_name(policy).unwrap());
     let mut rng = Rng::new(0xBEEF);

@@ -1,6 +1,7 @@
 //! The epoch-driven scheduling loop, built around persistent, delta-aware
-//! state: the [`JobLedger`] (id-indexed jobs, arrival heap, running set),
-//! the [`SchedContext`] (previous grant, for policy warm starts) and the
+//! state: the [`JobLedger`] (id-indexed jobs, arrival heap, running set,
+//! and the dirty set driving selective predictor refits), the
+//! [`SchedContext`] (previous grant, for policy warm starts) and the
 //! node pool's placement-diff application.
 
 use super::job::{JobState, JobSpec, Job};
@@ -23,6 +24,19 @@ pub struct CoordinatorConfig {
     /// achievable iteration worth the maximum normalized delta). Disable
     /// only for the cold-start ablation.
     pub cold_start_optimism: bool,
+    /// Sync only the predictors of jobs that received loss samples since
+    /// the last epoch (the ledger's dirty set) instead of sweeping every
+    /// active job. Equivalent to the sweep — `refresh_fit` is a no-op on a
+    /// clean predictor — and property-tested so; disable only for the
+    /// equivalence property itself or an ablation.
+    pub selective_refits: bool,
+    /// Defer refits for dirty jobs whose newest samples the current fit
+    /// already explains (prediction error within the fit's own residual;
+    /// see [`crate::predictor::OnlinePredictor::refresh_fit_deferrable`]).
+    /// Off by default: it trades bit-exact fit freshness for a smaller
+    /// refit bill, so the quality-fidelity suite pins its behaviour
+    /// separately.
+    pub refit_amortization: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -31,6 +45,8 @@ impl Default for CoordinatorConfig {
             cluster: ClusterSpec::paper_testbed(),
             epoch_secs: 3.0,
             cold_start_optimism: true,
+            selective_refits: true,
+            refit_amortization: false,
         }
     }
 }
@@ -115,24 +131,40 @@ impl Coordinator {
     /// Run one scheduling epoch.
     ///
     /// The hot loop touches pending jobs only when they arrive (ledger
-    /// heap) and never revisits completed jobs; the allocator receives the
-    /// persistent [`SchedContext`] so warm-start policies pay for what
-    /// changed, not for cluster capacity.
+    /// heap) and never revisits completed jobs; predictor refits visit
+    /// only the ledger's dirty set (jobs with new loss samples); the
+    /// allocator receives the persistent [`SchedContext`] so warm-start
+    /// policies pay for what changed, not for cluster capacity.
     pub fn step_epoch(&mut self) {
         let t0 = self.time;
         let window = self.cfg.epoch_secs;
 
         // 1. Activate arrivals — O(arrivals), driven by the arrival heap.
+        // Activation observes each job's initial loss, which enters it
+        // into the ledger's dirty set.
         self.ledger.activate_due(t0);
 
         // 2. The running set (completed jobs have already dropped out).
         let active = self.ledger.running_ids();
 
-        // Sync point for the lazy predictors: one refit per active job per
-        // epoch, no matter how many iterations completed since the last one.
-        for &id in &active {
-            self.ledger.job_mut(id).expect("running job").predictor.refresh_fit();
+        // 3. Predictor sync: refit only the jobs that received samples
+        // since the last sync — O(jobs-that-changed), not O(active). The
+        // refit-all sweep survives as a reference path (`selective_refits:
+        // false`); it visits every active job but `refresh_fit` no-ops on
+        // clean predictors, so the two paths produce identical fits (the
+        // quality-fidelity equivalence property pins this down).
+        let refit_start = Instant::now();
+        let dirty = self.ledger.take_dirty();
+        let dirty_jobs = dirty.len();
+        let sync_ids: &[u64] = if self.cfg.selective_refits { &dirty } else { &active };
+        let mut refits = 0usize;
+        for &id in sync_ids {
+            let job = self.ledger.job_mut(id).expect("synced job in ledger");
+            if job.predictor.refresh_fit_deferrable(self.cfg.refit_amortization) {
+                refits += 1;
+            }
         }
+        let refit_nanos = refit_start.elapsed().as_nanos() as u64;
 
         let sched_nanos;
         let allocation;
@@ -163,7 +195,7 @@ impl Coordinator {
                 })
                 .collect();
 
-            // 3. Allocate (this is the decision Fig 6 times). The context
+            // 4. Allocate (this is the decision Fig 6 times). The context
             // carries the previous grant for the warm-start path.
             let start = Instant::now();
             allocation =
@@ -196,23 +228,32 @@ impl Coordinator {
                 .collect();
         }
 
-        // 4. Apply only the placement deltas (shrink first, then grow).
+        // 5. Apply only the placement deltas (shrink first, then grow).
         self.pool.apply_diff(&targets);
 
-        // 5. Record the epoch before advancing.
+        // 6. Record the epoch before advancing.
         self.epochs.push(EpochRecord {
             time: t0,
             sched_nanos,
+            refit_nanos,
+            refits,
+            dirty_jobs,
             active_jobs: active.len(),
             entries,
         });
 
-        // 6. Advance jobs through the window; completed jobs leave the
-        // running set, the node pool and the scheduling context.
+        // 7. Advance jobs through the window; jobs that completed
+        // iterations re-enter the dirty set for the next sync, while
+        // completed jobs leave the running set, the dirty set, the node
+        // pool and the scheduling context for good.
         for (&id, &cores) in active.iter().zip(&allocation.cores) {
             let job = self.ledger.job_mut(id).expect("running job");
-            job.advance(t0, window, cores);
-            if job.state == JobState::Completed {
+            let iterations = job.advance(t0, window, cores);
+            let completed = job.state == JobState::Completed;
+            if iterations > 0 {
+                self.ledger.mark_dirty(id);
+            }
+            if completed {
                 self.pool.release_all(id);
                 self.ledger.retire(id);
                 self.sched_ctx.forget(id);
@@ -273,6 +314,7 @@ impl Coordinator {
                     id,
                     name: j.spec.name,
                     arrival: j.spec.arrival,
+                    max_cores: j.spec.max_cores,
                     activated: entry.activated_at,
                     completion: j.completion_time,
                     floor: j.source.known_floor(),
@@ -320,7 +362,7 @@ mod tests {
         CoordinatorConfig {
             cluster: ClusterSpec { nodes: 2, cores_per_node: 16 },
             epoch_secs: 2.0,
-            cold_start_optimism: true,
+            ..Default::default()
         }
     }
 
@@ -422,6 +464,92 @@ mod tests {
     }
 
     #[test]
+    fn selective_sync_skips_jobs_without_new_samples() {
+        let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::new()));
+        // Fast job: completes several iterations every epoch.
+        c.submit(mk_spec(0, 0.0, CurveKind::Exponential), exp_source(1, 0.9));
+        // Slow job: a single iteration takes ~10 epochs at its 1-core cap,
+        // so most epochs bring it no new samples.
+        let mut slow = mk_spec(1, 0.0, CurveKind::Exponential);
+        slow.cost = CostModel::new(0.5, 20.0);
+        slow.max_cores = 1;
+        c.submit(slow, exp_source(2, 0.9));
+        for _ in 0..6 {
+            c.step_epoch();
+        }
+        let trace = c.into_trace();
+        for e in &trace.epochs {
+            assert!(
+                e.refits <= e.dirty_jobs && e.dirty_jobs <= e.active_jobs,
+                "refit accounting out of order at t={}: {} / {} / {}",
+                e.time,
+                e.refits,
+                e.dirty_jobs,
+                e.active_jobs
+            );
+        }
+        assert_eq!(trace.epochs[0].dirty_jobs, 2, "activation marks both jobs dirty");
+        assert!(
+            trace
+                .epochs
+                .iter()
+                .skip(1)
+                .any(|e| e.active_jobs == 2 && e.dirty_jobs < 2),
+            "the sample-less job must drop out of the refit bill"
+        );
+    }
+
+    #[test]
+    fn quality_fidelity_selective_equals_refit_all_on_random_churn() {
+        // The tentpole's safety net: the dirty-set sync and the historical
+        // sweep over every active job must be *indistinguishable* — same
+        // per-epoch allocations, same loss trajectories, same completions
+        // — on arbitrary churn traces. Uses the deterministic SLAQ variant
+        // so both runs take identical decision paths.
+        use crate::testkit::{forall, sim};
+        forall("selective ≡ refit-all coordinators", 6, |g| {
+            let templates = sim::random_churn_templates(g, 14, 40.0);
+            let src_seed = g.u64();
+            let run = |selective: bool| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+                    epoch_secs: 2.0,
+                    cold_start_optimism: true,
+                    selective_refits: selective,
+                    refit_amortization: false,
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(80.0);
+                c.into_trace()
+            };
+            let sel = run(true);
+            let all = run(false);
+            assert_eq!(sel.epochs.len(), all.epochs.len());
+            for (a, b) in sel.epochs.iter().zip(&all.epochs) {
+                assert_eq!(a.active_jobs, b.active_jobs, "active sets diverged at t={}", a.time);
+                assert_eq!(a.entries.len(), b.entries.len());
+                for (x, y) in a.entries.iter().zip(&b.entries) {
+                    assert_eq!(x.job, y.job);
+                    assert_eq!(x.cores, y.cores, "allocations diverged at t={}", a.time);
+                    assert_eq!(x.loss, y.loss, "losses diverged at t={}", a.time);
+                }
+            }
+            assert_eq!(sel.jobs.len(), all.jobs.len());
+            for (a, b) in sel.jobs.iter().zip(&all.jobs) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.completion, b.completion, "completion diverged for job {}", a.id);
+                assert_eq!(
+                    a.samples.last().map(|s| s.2),
+                    b.samples.last().map(|s| s.2),
+                    "final losses diverged for job {}",
+                    a.id
+                );
+            }
+        });
+    }
+
+    #[test]
     fn slaq_prioritizes_fresh_jobs_over_nearly_converged() {
         // Job 0 starts at t=0 and is deep into its convergence tail when
         // job 1 arrives at t=30 with maximal quality potential. SLAQ should
@@ -429,7 +557,7 @@ mod tests {
         let cfg = CoordinatorConfig {
             cluster: ClusterSpec { nodes: 2, cores_per_node: 16 },
             epoch_secs: 2.0,
-            cold_start_optimism: true,
+            ..Default::default()
         };
         let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
         let heavy = CostModel::new(0.1, 32.0); // iter_time(32 cores) = 1.1s
@@ -476,7 +604,7 @@ mod tests {
             let cfg = CoordinatorConfig {
                 cluster: ClusterSpec { nodes: 2, cores_per_node: 8 },
                 epoch_secs: 2.0,
-                cold_start_optimism: true,
+                ..Default::default()
             };
             let mut c = Coordinator::new(cfg, policy);
             for id in 0..12u64 {

@@ -10,7 +10,13 @@
 //! * **the hot loop** iterates the running set only — completed jobs drop
 //!   out via [`JobLedger::retire`] and are never touched again;
 //! * **lookups** are by stable job id, matching the id-keyed
-//!   [`crate::sched::SchedContext`] the allocator warm-starts from.
+//!   [`crate::sched::SchedContext`] the allocator warm-starts from;
+//! * **predictor sync** is driven by the **dirty set** — the ids that
+//!   received loss samples since the last [`JobLedger::take_dirty`] — so
+//!   the coordinator refits O(jobs-that-changed) predictors per epoch,
+//!   not O(active jobs). Activation marks a job dirty (it observes its
+//!   initial loss); [`JobLedger::retire`] removes it, so a job completed
+//!   mid-epoch is never refit again.
 
 use super::job::{Job, JobSpec};
 use super::source::LossSource;
@@ -75,9 +81,17 @@ pub struct LedgerEntry {
 /// assert_eq!(ledger.counts(), (1, 1, 0));
 /// assert_eq!(ledger.running_ids(), vec![1]);
 ///
-/// // Retiring a completed job drops it out of the hot loop for good.
+/// // Activation observed the initial loss: job 1 awaits a predictor
+/// // sync. Draining the dirty set hands the refit work to the caller.
+/// assert_eq!(ledger.take_dirty(), vec![1]);
+/// assert!(ledger.dirty_ids().is_empty());
+///
+/// // New samples re-mark it; retiring a completed job drops it out of
+/// // the hot loop — and the dirty set — for good.
+/// ledger.mark_dirty(1);
 /// ledger.retire(1);
 /// assert_eq!(ledger.counts(), (1, 0, 1));
+/// assert_eq!(ledger.dirty_len(), 0);
 /// ```
 #[derive(Default)]
 pub struct JobLedger {
@@ -87,6 +101,9 @@ pub struct JobLedger {
     pending: BinaryHeap<Reverse<(Arrival, u64)>>,
     /// Ids of currently running jobs.
     running: BTreeSet<u64>,
+    /// Ids that received loss samples since the last dirty-set drain
+    /// (always a subset of `running`).
+    dirty: BTreeSet<u64>,
     /// Completed-job count (jobs retired from the running set).
     completed: usize,
 }
@@ -123,6 +140,9 @@ impl JobLedger {
             entry.job.activate(now);
             entry.activated_at = now;
             self.running.insert(id);
+            // Activation observes the initial loss, so the fresh job needs
+            // a predictor sync.
+            self.dirty.insert(id);
             activated += 1;
         }
         activated
@@ -153,13 +173,42 @@ impl JobLedger {
         self.jobs.get(&id).map(|e| e.activated_at).unwrap_or(f64::NAN)
     }
 
-    /// Drop a completed job out of the running set. Idempotent; the job's
-    /// record stays in the ledger for tracing, but the hot loop never
-    /// visits it again.
+    /// Record that job `id` received loss samples since the last dirty-set
+    /// drain, so the next predictor sync must visit it. Only running jobs
+    /// can be dirty; marking anything else is a no-op.
+    pub fn mark_dirty(&mut self, id: u64) {
+        if self.running.contains(&id) {
+            self.dirty.insert(id);
+        }
+    }
+
+    /// Ids in the dirty set, in ascending id order (the set itself is
+    /// drained by [`JobLedger::take_dirty`]).
+    pub fn dirty_ids(&self) -> Vec<u64> {
+        self.dirty.iter().copied().collect()
+    }
+
+    /// Number of jobs awaiting a predictor sync.
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Drain the dirty set: the ids that received samples since the last
+    /// drain, in ascending id order. The caller owns the sync — the ledger
+    /// forgets these ids until new samples are marked.
+    pub fn take_dirty(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.dirty).into_iter().collect()
+    }
+
+    /// Drop a completed job out of the running set (and out of the dirty
+    /// set — a job completed mid-epoch must never be refit again).
+    /// Idempotent; the job's record stays in the ledger for tracing, but
+    /// the hot loop never visits it again.
     pub fn retire(&mut self, id: u64) {
         if self.running.remove(&id) {
             self.completed += 1;
         }
+        self.dirty.remove(&id);
     }
 
     /// `(pending, running, completed)` job counts — O(1), no scan.
@@ -271,6 +320,53 @@ mod tests {
         let mut ledger = JobLedger::new();
         ledger.submit(spec(1, 0.0), source(1));
         ledger.submit(spec(1, 5.0), source(2));
+    }
+
+    #[test]
+    fn activation_and_samples_drive_the_dirty_set() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(1, 0.0), source(1));
+        ledger.submit(spec(2, 0.0), source(2));
+        assert_eq!(ledger.dirty_len(), 0, "pending jobs are never dirty");
+        ledger.activate_due(0.0);
+        assert_eq!(ledger.dirty_ids(), vec![1, 2]);
+        assert_eq!(ledger.take_dirty(), vec![1, 2]);
+        assert_eq!(ledger.take_dirty(), Vec::<u64>::new(), "drain is one-shot");
+        ledger.mark_dirty(2);
+        ledger.mark_dirty(2); // idempotent
+        ledger.mark_dirty(99); // unknown id: no-op
+        assert_eq!(ledger.dirty_ids(), vec![2]);
+    }
+
+    #[test]
+    fn retired_jobs_leave_the_dirty_set_for_good() {
+        // A job that completes mid-epoch has just produced samples (it is
+        // dirty) — retiring it must remove it from the dirty set so the
+        // next predictor sync never refits it, while counts stay
+        // consistent throughout.
+        let mut ledger = JobLedger::new();
+        for id in 0..3 {
+            ledger.submit(spec(id, 0.0), source(id + 1));
+        }
+        ledger.activate_due(0.0);
+        assert_eq!(ledger.counts(), (0, 3, 0));
+        assert_eq!(ledger.dirty_len(), 3);
+
+        ledger.retire(1);
+        assert_eq!(ledger.counts(), (0, 2, 1));
+        assert_eq!(ledger.dirty_ids(), vec![0, 2], "retired job left the dirty set");
+        // Marking a retired job is a no-op: it can never be refit again.
+        ledger.mark_dirty(1);
+        assert_eq!(ledger.dirty_ids(), vec![0, 2]);
+
+        // Idempotent retire keeps both sets and counts stable.
+        ledger.retire(1);
+        assert_eq!(ledger.counts(), (0, 2, 1));
+        assert_eq!(ledger.dirty_len(), 2);
+
+        // The survivors sync as usual.
+        assert_eq!(ledger.take_dirty(), vec![0, 2]);
+        assert_eq!(ledger.counts(), (0, 2, 1));
     }
 
     #[test]

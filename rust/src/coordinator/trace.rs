@@ -19,6 +19,16 @@ pub struct EpochRecord {
     /// Wall-clock nanoseconds the allocation decision took (real time —
     /// this is the quantity Fig 6 reports).
     pub sched_nanos: u64,
+    /// Wall-clock nanoseconds of the predictor sync (selective refits)
+    /// that preceded the allocation.
+    pub refit_nanos: u64,
+    /// Convergence-curve refits actually performed this epoch. With
+    /// selective sync this tracks jobs that received samples, not the
+    /// active-job count.
+    pub refits: usize,
+    /// Jobs in the ledger's dirty set at sync time (received samples
+    /// since the previous sync). `refits ≤ dirty_jobs ≤ active_jobs`.
+    pub dirty_jobs: usize,
     /// Number of active jobs considered.
     pub active_jobs: usize,
     /// Per-job grants.
@@ -34,6 +44,9 @@ pub struct JobTrace {
     pub name: String,
     /// Arrival time.
     pub arrival: f64,
+    /// Maximum cores the job could use (its partition count) — lets
+    /// retrospective checks reconstruct each epoch's grantable demand.
+    pub max_cores: u32,
     /// Activation time (first epoch the job ran in).
     pub activated: f64,
     /// Completion time (None if still running at window end).
@@ -107,6 +120,9 @@ impl Trace {
                 obj(vec![
                     ("time", Value::Num(e.time)),
                     ("sched_nanos", Value::Num(e.sched_nanos as f64)),
+                    ("refit_nanos", Value::Num(e.refit_nanos as f64)),
+                    ("refits", Value::Num(e.refits as f64)),
+                    ("dirty_jobs", Value::Num(e.dirty_jobs as f64)),
                     ("active_jobs", Value::Num(e.active_jobs as f64)),
                     (
                         "entries",
@@ -134,6 +150,7 @@ impl Trace {
                     ("id", Value::Num(j.id as f64)),
                     ("name", Value::Str(j.name.clone())),
                     ("arrival", Value::Num(j.arrival)),
+                    ("max_cores", Value::Num(j.max_cores as f64)),
                     ("activated", Value::Num(j.activated)),
                     (
                         "completion",
@@ -186,6 +203,7 @@ mod tests {
             id: 1,
             name: "t".into(),
             arrival: 0.0,
+            max_cores: 8,
             activated: 1.0,
             completion: Some(10.0),
             floor: Some(1.0),
@@ -220,6 +238,9 @@ mod tests {
             epochs: vec![EpochRecord {
                 time: 3.0,
                 sched_nanos: 1000,
+                refit_nanos: 500,
+                refits: 1,
+                dirty_jobs: 1,
                 active_jobs: 1,
                 entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5 }],
             }],
@@ -240,8 +261,24 @@ mod tests {
     fn mean_sched_millis() {
         let mut t = Trace::default();
         assert_eq!(t.mean_sched_millis(), 0.0);
-        t.epochs.push(EpochRecord { time: 0.0, sched_nanos: 2_000_000, active_jobs: 1, entries: vec![] });
-        t.epochs.push(EpochRecord { time: 1.0, sched_nanos: 4_000_000, active_jobs: 1, entries: vec![] });
+        t.epochs.push(EpochRecord {
+            time: 0.0,
+            sched_nanos: 2_000_000,
+            refit_nanos: 0,
+            refits: 0,
+            dirty_jobs: 0,
+            active_jobs: 1,
+            entries: vec![],
+        });
+        t.epochs.push(EpochRecord {
+            time: 1.0,
+            sched_nanos: 4_000_000,
+            refit_nanos: 0,
+            refits: 0,
+            dirty_jobs: 0,
+            active_jobs: 1,
+            entries: vec![],
+        });
         assert!((t.mean_sched_millis() - 3.0).abs() < 1e-12);
     }
 }

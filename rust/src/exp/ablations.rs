@@ -59,6 +59,7 @@ fn run_with(
             cluster: cfg.cluster,
             epoch_secs: cfg.epoch_secs,
             cold_start_optimism,
+            ..Default::default()
         },
         policy,
     );

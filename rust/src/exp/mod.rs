@@ -11,6 +11,7 @@
 //! | [`churn_scalability`] | churn — incremental vs from-scratch decisions |
 //! | [`churn_epoch_loop`] | churn — end-to-end coordinator epoch latency   |
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
+//! | [`quality_fidelity`] | Figs 3–5 invariants as a seeded regression suite |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
@@ -18,7 +19,10 @@
 //! the churn scenario are allocator microbenchmarks (churn measures the
 //! warm-start path against from-scratch under steady-state job turnover),
 //! while [`churn_epoch_loop`] drives the same churn regime through the
-//! full coordinator epoch loop and reports whole-epoch latency.
+//! full coordinator epoch loop and reports whole-epoch latency (including
+//! the selective-refit split). [`quality_fidelity`] turns the Fig 3–5
+//! comparisons into a deterministic pass/fail gate so scheduler-path
+//! optimisations are checked against the paper's headline results.
 
 mod ablations;
 mod real_runs;
@@ -33,4 +37,7 @@ pub use scalability::{
     churn_decision_cost, churn_epoch_loop, churn_scalability, epoch_loop_cost, fig6_sched_time,
     time_decision, ChurnConfig, ChurnCost, EpochLoopConfig, EpochLoopCost,
 };
-pub use sim_runs::{fig3_allocation, fig4_avg_loss, fig5_time_to, run_sim_trace, SimConfig};
+pub use sim_runs::{
+    fig3_allocation, fig4_avg_loss, fig5_time_to, quality_fidelity, run_sim_trace,
+    FidelityConfig, FidelityReport, SimConfig,
+};

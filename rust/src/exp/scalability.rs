@@ -8,9 +8,11 @@
 //!   production scheduler actually lives in, where cluster state changes
 //!   by a handful of jobs per epoch.
 //! * Churn (end-to-end): the same steady-state regime driven through the
-//!   full [`Coordinator`] epoch loop — ledger activation, predictor
-//!   refits, allocation, placement diffs, job advancement — reporting
-//!   whole-epoch latency percentiles, not just the allocation kernel.
+//!   full [`Coordinator`] epoch loop — ledger activation, selective
+//!   predictor refits (dirty set only), allocation, placement diffs, job
+//!   advancement — reporting whole-epoch latency percentiles plus the
+//!   refit-vs-allocate split and refits-per-epoch (which tracks
+//!   jobs-with-new-samples, not population size).
 
 use super::report::{render_table, ExpOutput};
 use crate::cluster::{ClusterSpec, CostModel};
@@ -284,7 +286,7 @@ pub fn churn_scalability(
 /// Full-coordinator churn configuration. Unlike [`ChurnConfig`] (which
 /// microbenchmarks the allocator alone on synthetic gain oracles), this
 /// drives [`Coordinator::step_epoch`] end to end, so every measured epoch
-/// pays for ledger activation, per-job predictor refits, the allocation
+/// pays for ledger activation, selective predictor refits, the allocation
 /// decision, placement diffs and job advancement.
 #[derive(Debug, Clone)]
 pub struct EpochLoopConfig {
@@ -305,6 +307,10 @@ pub struct EpochLoopConfig {
     pub warmup_epochs: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Enable the residual-gated refit amortization knob
+    /// ([`CoordinatorConfig::refit_amortization`]): jobs whose newest
+    /// samples the fitted curve already explains defer their refit.
+    pub refit_amortization: bool,
 }
 
 /// End-to-end epoch-latency measurements from one [`epoch_loop_cost`] run.
@@ -315,6 +321,13 @@ pub struct EpochLoopCost {
     /// Allocation-decision wall-clock per measured epoch (ms) — the
     /// subset of the epoch the allocator microbenchmark sees.
     pub sched_millis: Vec<f64>,
+    /// Predictor-sync (selective refit) wall-clock per measured epoch
+    /// (ms) — the other dominant term of the epoch bill.
+    pub refit_millis: Vec<f64>,
+    /// Curve refits actually performed per measured epoch.
+    pub refits: Vec<f64>,
+    /// Dirty-set size (jobs with new samples) per measured epoch.
+    pub dirty_jobs: Vec<f64>,
     /// Jobs that completed during the measured epochs.
     pub completed: usize,
     /// Jobs that arrived during the measured epochs.
@@ -337,6 +350,27 @@ impl EpochLoopCost {
     /// Mean allocation-decision latency (ms).
     pub fn mean_sched_millis(&self) -> f64 {
         crate::util::stats::mean(&self.sched_millis)
+    }
+
+    /// Mean predictor-sync (refit) latency (ms).
+    pub fn mean_refit_millis(&self) -> f64 {
+        crate::util::stats::mean(&self.refit_millis)
+    }
+
+    /// Refit-latency percentile (ms); NaN with no epochs.
+    pub fn refit_percentile_millis(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.refit_millis, q)
+    }
+
+    /// Mean refits per measured epoch — with selective sync this tracks
+    /// jobs-with-new-samples, not the active-job count.
+    pub fn mean_refits(&self) -> f64 {
+        crate::util::stats::mean(&self.refits)
+    }
+
+    /// Mean dirty-set size per measured epoch.
+    pub fn mean_dirty(&self) -> f64 {
+        crate::util::stats::mean(&self.dirty_jobs)
     }
 }
 
@@ -380,7 +414,8 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
     let coord_cfg = CoordinatorConfig {
         cluster: spec,
         epoch_secs: EPOCH_SECS,
-        cold_start_optimism: true,
+        refit_amortization: cfg.refit_amortization,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(coord_cfg, Box::new(SlaqPolicy::new()));
     let mut rng = Rng::new(cfg.seed);
@@ -415,6 +450,9 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
         cost.epoch_millis.push(start.elapsed().as_secs_f64() * 1e3);
         let record = coord.last_epoch().expect("epoch just ran");
         cost.sched_millis.push(record.sched_nanos as f64 / 1e6);
+        cost.refit_millis.push(record.refit_nanos as f64 / 1e6);
+        cost.refits.push(record.refits as f64);
+        cost.dirty_jobs.push(record.dirty_jobs as f64);
         active_sum += coord.job_counts().1;
     }
     cost.completed = coord.job_counts().2 - completed_before;
@@ -439,6 +477,9 @@ pub fn churn_epoch_loop(
         "epoch_ms_p50",
         "epoch_ms_p95",
         "sched_ms_mean",
+        "refit_ms_mean",
+        "refits_mean",
+        "dirty_mean",
         "mean_active",
         "completed",
     ]);
@@ -451,6 +492,7 @@ pub fn churn_epoch_loop(
             epochs,
             warmup_epochs: 2,
             seed: 20818,
+            refit_amortization: false,
         };
         let cost = epoch_loop_cost(&cfg);
         csv.row_f64(&[
@@ -461,6 +503,9 @@ pub fn churn_epoch_loop(
             cost.percentile_millis(50.0),
             cost.percentile_millis(95.0),
             cost.mean_sched_millis(),
+            cost.mean_refit_millis(),
+            cost.mean_refits(),
+            cost.mean_dirty(),
             cost.mean_active,
             cost.completed as f64,
         ]);
@@ -470,15 +515,26 @@ pub fn churn_epoch_loop(
             format!("{:.2} ms", cost.percentile_millis(50.0)),
             format!("{:.2} ms", cost.percentile_millis(95.0)),
             format!("{:.2} ms", cost.mean_sched_millis()),
-            format!("{:.0}", cost.mean_active),
+            format!("{:.2} ms", cost.mean_refit_millis()),
+            format!("{:.0}/{:.0}", cost.mean_refits(), cost.mean_active),
             cost.completed.to_string(),
         ]);
     }
     let summary = format!(
         "Churn (end-to-end) — full coordinator epoch latency at {cores} cores, \
-         {churn_per_epoch} arrivals per epoch\n{}",
+         {churn_per_epoch} arrivals per epoch (refits are selective: \
+         jobs-with-new-samples, not population)\n{}",
         render_table(
-            &["jobs", "epoch mean", "epoch p50", "epoch p95", "alloc mean", "active", "completed"],
+            &[
+                "jobs",
+                "epoch mean",
+                "epoch p50",
+                "epoch p95",
+                "alloc mean",
+                "refit mean",
+                "refits/active",
+                "completed",
+            ],
             &rows
         )
     );
@@ -540,23 +596,122 @@ mod tests {
             epochs: 5,
             warmup_epochs: 2,
             seed: 3,
+            refit_amortization: false,
         };
         let cost = epoch_loop_cost(&cfg);
         assert_eq!(cost.epoch_millis.len(), 5);
         assert_eq!(cost.sched_millis.len(), 5);
+        assert_eq!(cost.refit_millis.len(), 5);
+        assert_eq!(cost.refits.len(), 5);
         assert_eq!(cost.arrived, 30);
         assert!(cost.mean_millis() > 0.0 && cost.mean_millis() < 60_000.0);
-        // The allocation decision is a strict subset of the epoch.
+        // The allocation decision and the predictor sync are both strict
+        // subsets of the epoch.
         assert!(cost.mean_sched_millis() <= cost.mean_millis());
+        assert!(cost.mean_refit_millis() <= cost.mean_millis());
         // The long-lived population stays active throughout.
         assert!(
             cost.mean_active >= 100.0,
             "population collapsed: mean active {}",
             cost.mean_active
         );
+        // Selective sync: refits track the dirty set, never the
+        // population.
+        assert!(cost.mean_refits() <= cost.mean_dirty() + 1e-9);
+        assert!(cost.mean_dirty() <= cost.mean_active + 1e-9);
+        assert!(cost.mean_refits() > 0.0, "steady-state epochs must refit someone");
         // Short-lived churn jobs complete inside the measured window.
         assert!(cost.completed > 0, "no churn job completed");
         assert!(!cost.percentile_millis(95.0).is_nan());
+        assert!(!cost.refit_percentile_millis(95.0).is_nan());
+    }
+
+    #[test]
+    fn amortized_refits_never_exceed_exact_refits() {
+        let mk = |amortize: bool| EpochLoopConfig {
+            jobs: 80,
+            cores: 256,
+            churn_per_epoch: 4,
+            epochs: 6,
+            warmup_epochs: 3,
+            seed: 9,
+            refit_amortization: amortize,
+        };
+        let exact = epoch_loop_cost(&mk(false));
+        let amortized = epoch_loop_cost(&mk(true));
+        let sum = |xs: &[f64]| xs.iter().sum::<f64>();
+        // Deferral can only shrink the refit bill; once fits diverge the
+        // trajectories are no longer lockstep, so allow epsilon (one
+        // refit per measured epoch) of trajectory slack.
+        assert!(
+            sum(&amortized.refits) <= sum(&exact.refits) + 6.0,
+            "amortization must not inflate refits: {} vs {}",
+            sum(&amortized.refits),
+            sum(&exact.refits)
+        );
+        // The accounting invariant holds regardless of deferral.
+        for (r, d) in amortized.refits.iter().zip(&amortized.dirty_jobs) {
+            assert!(r <= d, "refits {r} above dirty {d}");
+        }
+    }
+
+    #[test]
+    fn churn_cost_percentile_edge_cases() {
+        // Empty: every percentile is NaN, the means are 0.
+        let empty = ChurnCost::default();
+        for q in [0.0, 1.0, 50.0, 100.0] {
+            assert!(empty.percentile_millis(q).is_nan(), "q={q}");
+        }
+        assert_eq!(empty.mean_millis(), 0.0);
+
+        // Single sample: every percentile collapses onto it.
+        let one = ChurnCost { epoch_millis: vec![7.5], ..Default::default() };
+        for q in [0.0, 1.0, 50.0, 100.0] {
+            assert_eq!(one.percentile_millis(q), 7.5, "q={q}");
+        }
+
+        // Multiple samples: q=0 is the min, q=100 the max, and q=1.0 (the
+        // 1st percentile, not the max!) interpolates near the bottom.
+        let many = ChurnCost { epoch_millis: vec![4.0, 1.0, 3.0, 2.0], ..Default::default() };
+        assert_eq!(many.percentile_millis(0.0), 1.0);
+        assert_eq!(many.percentile_millis(100.0), 4.0);
+        let p1 = many.percentile_millis(1.0);
+        assert!((p1 - 1.03).abs() < 1e-9, "1st percentile {p1}");
+        // Out-of-range quantiles clamp rather than panic.
+        assert_eq!(many.percentile_millis(-5.0), 1.0);
+        assert_eq!(many.percentile_millis(250.0), 4.0);
+    }
+
+    #[test]
+    fn epoch_loop_cost_percentile_edge_cases() {
+        let empty = EpochLoopCost::default();
+        for q in [0.0, 1.0, 50.0, 100.0] {
+            assert!(empty.percentile_millis(q).is_nan(), "q={q}");
+            assert!(empty.refit_percentile_millis(q).is_nan(), "q={q}");
+        }
+        assert_eq!(empty.mean_millis(), 0.0);
+        assert_eq!(empty.mean_refit_millis(), 0.0);
+        assert_eq!(empty.mean_refits(), 0.0);
+
+        let one = EpochLoopCost {
+            epoch_millis: vec![3.25],
+            refit_millis: vec![1.5],
+            ..Default::default()
+        };
+        for q in [0.0, 1.0, 50.0, 100.0] {
+            assert_eq!(one.percentile_millis(q), 3.25, "q={q}");
+            assert_eq!(one.refit_percentile_millis(q), 1.5, "q={q}");
+        }
+
+        let many = EpochLoopCost {
+            epoch_millis: vec![10.0, 0.0],
+            refit_millis: vec![2.0, 6.0],
+            ..Default::default()
+        };
+        assert_eq!(many.percentile_millis(0.0), 0.0);
+        assert_eq!(many.percentile_millis(100.0), 10.0);
+        assert!((many.percentile_millis(1.0) - 0.1).abs() < 1e-9);
+        assert!((many.refit_percentile_millis(50.0) - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -38,7 +38,11 @@ impl Default for SimConfig {
 pub fn run_sim_trace(cfg: &SimConfig, policy: &str) -> Trace {
     let policy = policy_by_name(policy).unwrap_or_else(|| panic!("unknown policy {policy}"));
     let mut coord = Coordinator::new(
-        CoordinatorConfig { cluster: cfg.cluster, epoch_secs: cfg.epoch_secs, cold_start_optimism: true },
+        CoordinatorConfig {
+            cluster: cfg.cluster,
+            epoch_secs: cfg.epoch_secs,
+            ..Default::default()
+        },
         policy,
     );
     let mut rng = Rng::new(cfg.trace.seed ^ 0xD15C);
@@ -56,16 +60,17 @@ fn norm_loss(trace: &Trace, job: u64, loss: f64) -> f64 {
     trace.job(job).expect("job in trace").norm_loss(loss)
 }
 
-/// Fig 3: fraction of allocated cores granted to job groups ranked by
-/// normalized loss — (i) top 25% (highest loss), (ii) next 25%,
-/// (iii) bottom 50% (nearly converged). Paper: SLAQ gives ~60% to (i) and
-/// ~22% to (iii).
-pub fn fig3_allocation(trace: &Trace) -> ExpOutput {
-    let mut csv = Csv::new(&["time", "high25_share", "mid25_share", "low50_share"]);
-    let mut shares_sum = [0.0f64; 3];
-    let mut epochs_counted = 0usize;
+/// Per-epoch core shares by normalized-loss group — top 25%, next 25%,
+/// bottom 50% (the Fig 3 grouping). Returns the per-epoch
+/// `[time, high, mid, low]` rows (epochs with at least `min_jobs` entries
+/// and a nonzero grant) and the across-epoch average shares. Shared by
+/// [`fig3_allocation`] and the quality-fidelity suite so both pin the
+/// same definition.
+fn loss_group_shares(trace: &Trace, min_jobs: usize) -> (Vec<[f64; 4]>, [f64; 3]) {
+    let mut rows: Vec<[f64; 4]> = Vec::new();
+    let mut sums = [0.0f64; 3];
     for e in &trace.epochs {
-        if e.entries.len() < 4 {
+        if e.entries.len() < min_jobs {
             continue;
         }
         let mut by_loss: Vec<(f64, u32)> = e
@@ -87,17 +92,29 @@ pub fn fig3_allocation(trace: &Trace) -> ExpOutput {
         let high = sum_range(0..q1) / total as f64;
         let mid = sum_range(q1..q2) / total as f64;
         let low = sum_range(q2..n) / total as f64;
-        csv.row_f64(&[e.time, high, mid, low]);
-        shares_sum[0] += high;
-        shares_sum[1] += mid;
-        shares_sum[2] += low;
-        epochs_counted += 1;
+        rows.push([e.time, high, mid, low]);
+        sums[0] += high;
+        sums[1] += mid;
+        sums[2] += low;
     }
-    let denom = epochs_counted.max(1) as f64;
+    let denom = rows.len().max(1) as f64;
+    (rows, [sums[0] / denom, sums[1] / denom, sums[2] / denom])
+}
+
+/// Fig 3: fraction of allocated cores granted to job groups ranked by
+/// normalized loss — (i) top 25% (highest loss), (ii) next 25%,
+/// (iii) bottom 50% (nearly converged). Paper: SLAQ gives ~60% to (i) and
+/// ~22% to (iii).
+pub fn fig3_allocation(trace: &Trace) -> ExpOutput {
+    let mut csv = Csv::new(&["time", "high25_share", "mid25_share", "low50_share"]);
+    let (per_epoch, avg) = loss_group_shares(trace, 4);
+    for r in &per_epoch {
+        csv.row_f64(&[r[0], r[1], r[2], r[3]]);
+    }
     let rows = vec![vec![
-        format!("{:.1}%", 100.0 * shares_sum[0] / denom),
-        format!("{:.1}%", 100.0 * shares_sum[1] / denom),
-        format!("{:.1}%", 100.0 * shares_sum[2] / denom),
+        format!("{:.1}%", 100.0 * avg[0]),
+        format!("{:.1}%", 100.0 * avg[1]),
+        format!("{:.1}%", 100.0 * avg[2]),
     ]];
     let summary = format!(
         "Fig 3 — average core share by loss group (paper SLAQ: ~60% / ~18% / ~22%)\n{}",
@@ -191,6 +208,259 @@ pub fn fig5_time_to(slaq: &Trace, fair: &Trace) -> ExpOutput {
     ExpOutput { id: "fig5".into(), csv, summary }
 }
 
+/// Configuration of the quality-fidelity regression suite: a seeded,
+/// deterministic run of the full simulated trace under SLAQ
+/// (deterministic variant) and fair, checked against the paper-level
+/// invariants of Figs 3–5.
+#[derive(Debug, Clone)]
+pub struct FidelityConfig {
+    /// The shared simulation (trace, cluster, epoch length, duration).
+    pub sim: SimConfig,
+    /// Epochs ignored at the head of both traces (cold start: predictors
+    /// bootstrapping, population ramping up).
+    pub warmup_epochs: usize,
+    /// Width (in epochs) of each mean-loss checkpoint window.
+    pub checkpoint_epochs: usize,
+    /// Absolute slack (normalized-loss units) on each per-checkpoint
+    /// mean-loss comparison — absorbs tie-break-level noise without
+    /// letting a real regression through.
+    pub loss_tolerance: f64,
+    /// Minimum jobs that must reach a loss-reduction target under *both*
+    /// policies for the time-to comparison to count; fewer is itself a
+    /// violation (the invariant must never pass vacuously).
+    pub min_paired_jobs: usize,
+}
+
+impl Default for FidelityConfig {
+    fn default() -> Self {
+        Self {
+            sim: SimConfig {
+                trace: TraceConfig { jobs: 40, mean_interarrival: 10.0, seed: 20818 },
+                cluster: ClusterSpec { nodes: 12, cores_per_node: 16 },
+                epoch_secs: 3.0,
+                duration: 1000.0,
+            },
+            warmup_epochs: 40,
+            checkpoint_epochs: 40,
+            // The expected SLAQ-vs-fair gap is ~0.1+ normalized-loss
+            // units (paper: 73% lower); 0.03 absorbs checkpoint noise
+            // while still catching any real inversion.
+            loss_tolerance: 0.03,
+            min_paired_jobs: 6,
+        }
+    }
+}
+
+/// Everything one [`quality_fidelity`] run measured, plus the violations
+/// (empty = all invariants held).
+#[derive(Debug, Clone)]
+pub struct FidelityReport {
+    /// Workload seed the run used.
+    pub seed: u64,
+    /// `(window start time, slaq mean, fair mean)` normalized-loss
+    /// checkpoints after warm-up.
+    pub checkpoints: Vec<(f64, f64, f64)>,
+    /// Overall mean normalized loss across running jobs, SLAQ (Fig 4).
+    pub slaq_mean_loss: f64,
+    /// Overall mean normalized loss across running jobs, fair (Fig 4).
+    pub fair_mean_loss: f64,
+    /// SLAQ's average core share to the top-25% highest-loss jobs (Fig 3).
+    pub share_high25: f64,
+    /// SLAQ's average core share to the bottom-50% (nearly converged).
+    pub share_low50: f64,
+    /// `(fraction, slaq mean secs, fair mean secs, paired jobs)` for the
+    /// 90%/95% loss-reduction targets (Fig 5), paired over jobs that
+    /// reached the target under both policies.
+    pub time_to: Vec<(f64, f64, f64, usize)>,
+    /// Human-readable invariant violations; empty when the suite passes.
+    pub violations: Vec<String>,
+}
+
+impl FidelityReport {
+    /// True when every invariant held.
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Panic with every violation when the suite failed.
+    pub fn assert_ok(&self) {
+        assert!(
+            self.is_ok(),
+            "quality-fidelity violations (seed {}):\n{}",
+            self.seed,
+            self.violations.join("\n")
+        );
+    }
+}
+
+/// Run the quality-fidelity regression suite once.
+///
+/// Runs [`run_sim_trace`] under `slaq-det` (the deterministic SLAQ
+/// variant — bit-reproducible decision paths) and `fair`, then checks:
+///
+/// * **capacity** — every epoch's grants sum to exactly
+///   `min(capacity, Σ caps)` under both policies (work conservation, no
+///   oversubscription), and Fig 3 group shares sum to 1;
+/// * **Fig 4** — SLAQ's mean normalized loss across running jobs is at or
+///   below fair's at every post-warm-up checkpoint (within
+///   `loss_tolerance`), and strictly below it overall;
+/// * **Fig 5** — mean time to 90% and 95% loss reduction is strictly
+///   better under SLAQ, paired over jobs that reached the target under
+///   both policies (at least `min_paired_jobs` of them);
+/// * **Fig 3** — SLAQ grants the top-25% highest-loss jobs a larger
+///   average core share than the bottom 50%.
+pub fn quality_fidelity(cfg: &FidelityConfig) -> FidelityReport {
+    let slaq = run_sim_trace(&cfg.sim, "slaq-det");
+    let fair = run_sim_trace(&cfg.sim, "fair");
+    let mut violations: Vec<String> = Vec::new();
+    let capacity = cfg.sim.cluster.capacity() as u64;
+
+    // Capacity / work conservation, both policies, every epoch.
+    for (name, t) in [("slaq", &slaq), ("fair", &fair)] {
+        let caps: std::collections::BTreeMap<u64, u64> =
+            t.jobs.iter().map(|j| (j.id, j.max_cores as u64)).collect();
+        for e in &t.epochs {
+            let total: u64 = e.entries.iter().map(|en| en.cores as u64).sum();
+            let demand: u64 = e.entries.iter().map(|en| caps[&en.job]).sum();
+            let grantable = demand.min(capacity);
+            if total != grantable {
+                violations.push(format!(
+                    "[cap] {name} t={:.0}: granted {total} cores, grantable {grantable}",
+                    e.time
+                ));
+            }
+        }
+    }
+
+    // Fig 4: per-epoch mean normalized loss, compared per checkpoint
+    // window after warm-up (both traces share the epoch grid).
+    let series = |t: &Trace| -> Vec<Option<f64>> {
+        t.epochs
+            .iter()
+            .map(|e| {
+                if e.entries.is_empty() {
+                    None
+                } else {
+                    Some(
+                        e.entries
+                            .iter()
+                            .map(|en| norm_loss(t, en.job, en.loss))
+                            .sum::<f64>()
+                            / e.entries.len() as f64,
+                    )
+                }
+            })
+            .collect()
+    };
+    let (ss, fs) = (series(&slaq), series(&fair));
+    let n_epochs = ss.len().min(fs.len());
+    let window_mean = |xs: &[Option<f64>], i: usize, j: usize| -> Option<f64> {
+        let vals: Vec<f64> = xs[i..j].iter().flatten().copied().collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::mean(&vals))
+        }
+    };
+    let mut checkpoints = Vec::new();
+    let mut i = cfg.warmup_epochs;
+    while i < n_epochs {
+        let j = (i + cfg.checkpoint_epochs).min(n_epochs);
+        if let (Some(sv), Some(fv)) = (window_mean(&ss, i, j), window_mean(&fs, i, j)) {
+            let t = slaq.epochs[i].time;
+            checkpoints.push((t, sv, fv));
+            if sv > fv + cfg.loss_tolerance {
+                violations.push(format!(
+                    "[loss] checkpoint t={t:.0}: slaq {sv:.4} above fair {fv:.4} + {:.3}",
+                    cfg.loss_tolerance
+                ));
+            }
+        }
+        i = j;
+    }
+    if checkpoints.is_empty() {
+        violations.push("[loss] no comparable checkpoints after warm-up".into());
+    }
+    let overall = |xs: &[Option<f64>]| -> f64 {
+        let vals: Vec<f64> = xs.iter().flatten().copied().collect();
+        crate::util::stats::mean(&vals)
+    };
+    let slaq_mean_loss = overall(&ss);
+    let fair_mean_loss = overall(&fs);
+    // Written as a bound bool so a NaN mean counts as a violation too.
+    let overall_better = slaq_mean_loss < fair_mean_loss;
+    if !overall_better {
+        violations.push(format!(
+            "[loss] overall: slaq mean {slaq_mean_loss:.4} not below fair {fair_mean_loss:.4}"
+        ));
+    }
+
+    // Fig 5: paired time-to-reduction means (jobs that reached the
+    // target under both policies — unpaired means would reward a policy
+    // for *failing* to bring slow jobs to the target at all).
+    let mut time_to = Vec::new();
+    for &fraction in &[0.90, 0.95] {
+        let mut s_sum = 0.0;
+        let mut f_sum = 0.0;
+        let mut paired = 0usize;
+        for j in &slaq.jobs {
+            let Some(ts) = j.time_to_reduction(fraction) else { continue };
+            let Some(fj) = fair.job(j.id) else { continue };
+            let Some(tf) = fj.time_to_reduction(fraction) else { continue };
+            s_sum += ts;
+            f_sum += tf;
+            paired += 1;
+        }
+        if paired < cfg.min_paired_jobs {
+            violations.push(format!(
+                "[time-to] {:.0}%: only {paired} jobs reached the target under both policies \
+                 (need {})",
+                100.0 * fraction,
+                cfg.min_paired_jobs
+            ));
+        }
+        let ms = s_sum / paired.max(1) as f64;
+        let mf = f_sum / paired.max(1) as f64;
+        time_to.push((fraction, ms, mf, paired));
+        let strictly_better = ms < mf;
+        if paired > 0 && !strictly_better {
+            violations.push(format!(
+                "[time-to] {:.0}%: slaq {ms:.1}s not strictly better than fair {mf:.1}s \
+                 over {paired} paired jobs",
+                100.0 * fraction
+            ));
+        }
+    }
+
+    // Fig 3: loss-ranked share ordering on the SLAQ trace, and the
+    // grouping's internal consistency (shares sum to 1).
+    let (share_rows, shares) = loss_group_shares(&slaq, 8);
+    for r in &share_rows {
+        let sum = r[1] + r[2] + r[3];
+        if (sum - 1.0).abs() > 1e-9 {
+            violations.push(format!("[shares] t={:.0}: shares sum to {sum}", r[0]));
+        }
+    }
+    let shares_ordered = shares[0] > shares[2];
+    if !shares_ordered {
+        violations.push(format!(
+            "[shares] high-loss 25% share {:.3} not above low-50% share {:.3}",
+            shares[0], shares[2]
+        ));
+    }
+
+    FidelityReport {
+        seed: cfg.sim.trace.seed,
+        checkpoints,
+        slaq_mean_loss,
+        fair_mean_loss,
+        share_high25: shares[0],
+        share_low50: shares[2],
+        time_to,
+        violations,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +507,55 @@ mod tests {
         let parts: Vec<f64> = line.split(',').map(|x| x.parse().unwrap()).collect();
         let sum: f64 = parts[1..].iter().sum();
         assert!((sum - 1.0).abs() < 1e-6, "shares sum {sum}");
+    }
+
+    #[test]
+    fn quality_fidelity_suite_holds_across_seeds() {
+        // The paper-level regression gate: Fig 3/4/5 invariants must hold
+        // deterministically under (at least) three workload seeds. Debug
+        // builds check one seed (LM refits dominate and debug is ~10x
+        // slower); the CI release job (`cargo test --release -q
+        // quality_fidelity`) runs the full three-seed gate.
+        let seeds: &[u64] = if cfg!(debug_assertions) {
+            &[20818]
+        } else {
+            &[20818, 7, 424242]
+        };
+        for &seed in seeds {
+            let mut cfg = FidelityConfig::default();
+            cfg.sim.trace.seed = seed;
+            let report = quality_fidelity(&cfg);
+            report.assert_ok();
+            assert!(report.slaq_mean_loss < report.fair_mean_loss);
+            assert!(report.share_high25 > report.share_low50);
+            assert!(!report.checkpoints.is_empty());
+            assert_eq!(report.time_to.len(), 2);
+        }
+    }
+
+    #[test]
+    fn quality_fidelity_is_bit_deterministic() {
+        // Re-running the suite must reproduce every measured number
+        // exactly — the property that makes these regressions debuggable.
+        let cfg = FidelityConfig {
+            sim: SimConfig {
+                trace: TraceConfig { jobs: 16, mean_interarrival: 8.0, seed: 5 },
+                cluster: ClusterSpec { nodes: 6, cores_per_node: 16 },
+                epoch_secs: 3.0,
+                duration: 400.0,
+            },
+            warmup_epochs: 20,
+            checkpoint_epochs: 20,
+            loss_tolerance: 1.0, // determinism is the subject, not quality
+            min_paired_jobs: 0,
+        };
+        let a = quality_fidelity(&cfg);
+        let b = quality_fidelity(&cfg);
+        assert_eq!(a.checkpoints, b.checkpoints);
+        assert_eq!(a.slaq_mean_loss, b.slaq_mean_loss);
+        assert_eq!(a.fair_mean_loss, b.fair_mean_loss);
+        assert_eq!(a.time_to, b.time_to);
+        assert_eq!(a.violations, b.violations);
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //! cost is proportional to what changed, not to cluster size:
 //!
 //! * [`coordinator::JobLedger`] — id-indexed job store with an
-//!   arrival-ordered pending heap and an explicit running set; epoch
-//!   stepping never rescans the full submission history.
+//!   arrival-ordered pending heap, an explicit running set, and a dirty
+//!   set (jobs with new loss samples) that drives selective predictor
+//!   refits; epoch stepping never rescans the full submission history
+//!   and never refits a predictor whose job produced no samples.
 //! * [`sched::SchedContext`] — the previous epoch's grant keyed by job id;
 //!   [`sched::SlaqPolicy`] warm-starts its marginal-gain search from it
 //!   (`O(jobs)` evaluations at steady state instead of `O(capacity)`).
@@ -30,7 +32,10 @@
 //!
 //! The `churn` experiment (`slaq exp churn`, `benches/sched_scalability`)
 //! measures the incremental path against from-scratch under steady-state
-//! job turnover at 1000–4000 jobs.
+//! job turnover at 1000–4000 jobs, including the refit-vs-allocate split;
+//! the quality side is pinned by [`exp::quality_fidelity`], a seeded
+//! deterministic SLAQ-vs-fair regression suite over the paper's Fig 3–5
+//! invariants.
 
 pub mod cluster;
 pub mod coordinator;

@@ -1,6 +1,8 @@
 //! Per-job online predictor: maintains the loss history, refits the
-//! convergence curve each scheduling epoch, and answers "what loss will this
-//! job reach by iteration k?" queries for the allocator.
+//! convergence curve lazily (only when new observations arrived — the
+//! `dirty` flag the coordinator's selective sync keys on), and answers
+//! "what loss will this job reach by iteration k?" queries for the
+//! allocator.
 
 use super::fit::{fit_history, FitConfig, FittedCurve};
 use super::models::CurveKind;
@@ -53,7 +55,22 @@ pub struct OnlinePredictor {
     errors: Vec<PredictionError>,
     /// Fit window: keep this many recent samples.
     window: usize,
+    /// Newest history iteration covered by the current fit (None before
+    /// the first fit). Drives the amortization rule in
+    /// [`OnlinePredictor::refresh_fit_deferrable`].
+    fitted_through: Option<u64>,
+    /// Dirty refreshes that reached the fitting path (cost counter for the
+    /// refit-split benchmarks).
+    fit_count: u64,
+    /// Refits skipped because the current fit already explained every new
+    /// sample (amortization counter).
+    deferred_refits: u64,
 }
+
+/// Amortization slack: new samples are "statistically indistinguishable"
+/// from the fitted curve while their mean squared prediction error stays
+/// within this factor of the fit's own weighted residual (≈ 2σ).
+const DEFER_SLACK: f64 = 4.0;
 
 impl OnlinePredictor {
     /// Create a predictor for a job whose optimizer belongs to `kind`.
@@ -80,6 +97,9 @@ impl OnlinePredictor {
             pending: Vec::new(),
             errors: Vec::new(),
             window,
+            fitted_through: None,
+            fit_count: 0,
+            deferred_refits: 0,
         }
     }
 
@@ -147,14 +167,107 @@ impl OnlinePredictor {
         self.dirty = true;
     }
 
+    /// True when observations arrived since the last fit sync — the signal
+    /// the coordinator's selective refit path keys on.
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Clear and return the dirty flag *without* refitting. The caller
+    /// takes over the refit decision: a subsequent [`refresh_fit`] is a
+    /// no-op until new observations arrive.
+    ///
+    /// [`refresh_fit`]: OnlinePredictor::refresh_fit
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
+    }
+
+    /// Dirty refreshes that reached the fitting path so far.
+    pub fn fit_count(&self) -> u64 {
+        self.fit_count
+    }
+
+    /// Refits skipped by the amortization rule so far.
+    pub fn deferred_refits(&self) -> u64 {
+        self.deferred_refits
+    }
+
+    /// Like [`refresh_fit`], but with `defer_stable` set it skips the
+    /// (expensive) refit when the current fit already explains every
+    /// sample that arrived since it was computed — prediction error within
+    /// the fit's own residual — so long-stable jobs drop out of the
+    /// per-epoch refit bill entirely. Returns `true` iff a refit ran.
+    ///
+    /// A deferral consumes the dirty flag but does not advance the checked
+    /// frontier: the error gate always re-evaluates *every* sample newer
+    /// than the last actual fit, so repeated deferrals keep accumulating
+    /// toward the staleness cap. Deferral therefore never pins an ancient
+    /// curve — once more than a quarter of the fit window postdates the
+    /// fit, or the fit is itself unreliable, the refit always runs.
+    ///
+    /// [`refresh_fit`]: OnlinePredictor::refresh_fit
+    pub fn refresh_fit_deferrable(&mut self, defer_stable: bool) -> bool {
+        if !self.dirty {
+            return false;
+        }
+        if defer_stable && self.fit_explains_new_samples() {
+            self.dirty = false;
+            self.deferred_refits += 1;
+            return false;
+        }
+        self.refresh_fit();
+        true
+    }
+
+    /// Amortization check: does the current fit predict the samples newer
+    /// than itself to within [`DEFER_SLACK`]× its own weighted residual?
+    fn fit_explains_new_samples(&self) -> bool {
+        let Some(fit) = self.fit.as_ref() else { return false };
+        let Some(through) = self.fitted_through else { return false };
+        // An unreliable fit (family fallback territory) must always refit.
+        if fit.relative_residual > 0.25 {
+            return false;
+        }
+        let new: Vec<f64> = self
+            .history
+            .samples()
+            .iter()
+            .filter(|s| s.iteration > through)
+            .map(|s| {
+                let r = s.loss - fit.predict(s.iteration as f64);
+                r * r
+            })
+            .collect();
+        if new.is_empty() {
+            return true;
+        }
+        // Staleness cap: refit once a quarter-window of samples postdates
+        // the fit, however well it still tracks.
+        if new.len() * 4 >= self.window.max(4) {
+            return false;
+        }
+        let mse = new.iter().sum::<f64>() / new.len() as f64;
+        // A noiseless curve fits to numerical precision (residual ≈ 0)
+        // while its extrapolation carries rounding-level error, so the
+        // residual gate alone would never defer; sub-ppm error relative
+        // to the current loss scale is indistinguishable regardless.
+        let scale = self.history.last().map(|s| s.loss.abs()).unwrap_or(1.0).max(1e-12);
+        let floor = (1e-6 * scale) * (1e-6 * scale);
+        mse.is_finite() && mse <= (DEFER_SLACK * fit.residual).max(floor)
+    }
+
     /// Refit the convergence curve if new observations arrived since the
     /// last fit. The coordinator calls this once per scheduling epoch per
-    /// active job, right before building the allocator's gain oracles.
+    /// *dirty* job (see [`OnlinePredictor::refresh_fit_deferrable`] and the
+    /// ledger's dirty set), right before building the allocator's gain
+    /// oracles. A no-op on a clean predictor.
     pub fn refresh_fit(&mut self) {
         if !self.dirty {
             return;
         }
         self.dirty = false;
+        self.fit_count += 1;
+        self.fitted_through = self.history.last().map(|s| s.iteration);
         self.fit = fit_history(&self.history, self.kind, &self.cfg);
         // Fallback: if the declared family fits poorly, try the other one
         // (paper: categories are a prior, not ground truth).
@@ -456,6 +569,156 @@ mod tests {
         let red = p.predicted_normalized_reduction(10.0);
         let direct = p.normalizer().normalize(p.current_loss().unwrap() - pred);
         assert!((red - direct).abs() < 0.05 * direct.max(1e-9));
+    }
+
+    #[test]
+    fn dirty_flag_tracks_observations() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        assert!(!p.is_dirty());
+        p.observe(0, 5.0, 0.0);
+        assert!(p.is_dirty());
+        p.refresh_fit();
+        assert!(!p.is_dirty());
+        // Rejected (non-finite) samples must not mark the fit stale.
+        p.observe(1, f64::NAN, 1.0);
+        assert!(!p.is_dirty());
+        p.observe(2, 4.0, 2.0);
+        assert!(p.take_dirty());
+        assert!(!p.is_dirty());
+        // Taking the flag hands the refit decision to the caller: the
+        // next refresh is a no-op until new samples arrive.
+        let fits_before = p.fit_count();
+        p.refresh_fit();
+        assert_eq!(p.fit_count(), fits_before);
+    }
+
+    #[test]
+    fn refresh_fit_is_a_noop_when_not_dirty() {
+        crate::testkit::forall("clean refresh is a no-op", 40, |g| {
+            let kind = if g.bool(0.5) { CurveKind::Exponential } else { CurveKind::Sublinear };
+            let mut p = OnlinePredictor::new(kind);
+            let m = g.f64_in(1.0, 8.0);
+            let mu = g.f64_in(0.7, 0.95);
+            let c = g.f64_in(0.1, 1.0);
+            let n = g.usize_in(2, 40) as u64;
+            for k in 0..n {
+                p.observe(k, m * mu.powf(k as f64) + c, k as f64);
+            }
+            assert!(p.is_dirty());
+            p.refresh_fit();
+            assert!(!p.is_dirty());
+            let fits = p.fit_count();
+            let params = p.fit().map(|f| f.model.params());
+            // Clean predictor: neither sync path may touch the fit.
+            p.refresh_fit();
+            assert!(!p.refresh_fit_deferrable(g.bool(0.5)));
+            assert_eq!(p.fit_count(), fits);
+            assert_eq!(p.fit().map(|f| f.model.params()), params);
+        });
+    }
+
+    #[test]
+    fn selective_refit_equals_refit_all_on_interleavings() {
+        // The coordinator's selective path syncs a predictor only when it
+        // is dirty; the historical path swept every predictor each epoch.
+        // On arbitrary observe/refit interleavings the two must agree
+        // exactly — `refresh_fit` on a clean predictor is a no-op, so the
+        // extra sweep calls cannot change any state.
+        crate::testkit::forall("selective ≡ refit-all (one predictor)", 30, |g| {
+            let kind = if g.bool(0.5) { CurveKind::Exponential } else { CurveKind::Sublinear };
+            let mut selective = OnlinePredictor::new(kind);
+            let mut sweep = OnlinePredictor::new(kind);
+            let m = g.f64_in(1.0, 8.0);
+            let mu = g.f64_in(0.7, 0.95);
+            let c = g.f64_in(0.1, 1.0);
+            let steps = g.usize_in(5, 50);
+            let mut k = 0u64;
+            for _ in 0..steps {
+                if g.bool(0.7) {
+                    let loss = m * mu.powf(k as f64) + c;
+                    selective.observe(k, loss, k as f64);
+                    sweep.observe(k, loss, k as f64);
+                    k += 1;
+                } else {
+                    if selective.is_dirty() {
+                        selective.refresh_fit();
+                    }
+                    sweep.refresh_fit(); // unconditional sweep
+                }
+                assert_eq!(selective.is_dirty(), sweep.is_dirty());
+                match (selective.fit(), sweep.fit()) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(a.model.params(), b.model.params()),
+                    _ => panic!("fit presence diverged"),
+                }
+                match (selective.predict_loss_after(7), sweep.predict_loss_after(7)) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(a, b, "predictions diverged"),
+                    _ => panic!("prediction presence diverged"),
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn amortized_refresh_defers_stable_fits_and_stays_accurate() {
+        // A long exponential with small deterministic observation noise:
+        // after the fit locks on, per-epoch syncs with small batches of
+        // on-curve samples should defer (their error matches the fit's
+        // own residual), and the stale-but-accurate fit must keep
+        // predicting within the paper's 5% bound.
+        let f = |k: f64| (5.0 * 0.95f64.powf(k) + 1.0) * (1.0 + 0.004 * k.sin());
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        for k in 0..30u64 {
+            p.observe(k, f(k as f64), k as f64);
+        }
+        p.refresh_fit();
+        let fits_after_warmup = p.fit_count();
+        let mut k = 30u64;
+        for _ in 0..6 {
+            for _ in 0..3 {
+                p.observe(k, f(k as f64), k as f64);
+                k += 1;
+            }
+            p.refresh_fit_deferrable(true);
+        }
+        assert!(
+            p.deferred_refits() > 0,
+            "stable on-curve batches should defer at least once"
+        );
+        assert!(
+            p.fit_count() <= fits_after_warmup + 6,
+            "deferral must not inflate the fit count"
+        );
+        let pred = p.predict_loss_after(10).unwrap();
+        let truth = f((k - 1 + 10) as f64);
+        assert!((pred - truth).abs() / truth < 0.05, "pred {pred} truth {truth}");
+        // The staleness cap: pile up more than a quarter window of new
+        // samples and the next deferrable sync must really refit.
+        let fits = p.fit_count();
+        for _ in 0..40 {
+            p.observe(k, f(k as f64), k as f64);
+            k += 1;
+        }
+        assert!(p.refresh_fit_deferrable(true), "staleness cap must force a refit");
+        assert_eq!(p.fit_count(), fits + 1);
+    }
+
+    #[test]
+    fn amortization_refits_when_the_curve_shifts() {
+        // Fit a clean curve, then feed samples from a very different
+        // curve: the residual gate must notice and refit immediately.
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        for k in 0..30u64 {
+            p.observe(k, 5.0 * 0.95f64.powf(k as f64) + 1.0, k as f64);
+        }
+        p.refresh_fit();
+        let fits = p.fit_count();
+        for k in 30..33u64 {
+            p.observe(k, 10.0, k as f64); // loss jumps off the fitted curve
+        }
+        assert!(p.refresh_fit_deferrable(true), "off-curve samples must refit");
+        assert_eq!(p.fit_count(), fits + 1);
     }
 
     #[test]

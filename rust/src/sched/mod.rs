@@ -396,10 +396,15 @@ pub trait Policy: Send {
     }
 }
 
-/// Construct a policy by name (CLI convenience).
+/// Construct a policy by name (CLI convenience). `"slaq-det"` is the
+/// deterministic SLAQ variant ([`SlaqPolicy::deterministic`]): identical
+/// objective, but the warm-or-scratch choice never consults wall-clock
+/// measurements, so runs are bit-reproducible — the quality-fidelity
+/// regression suite schedules with it.
 pub fn policy_by_name(name: &str) -> Option<Box<dyn Policy>> {
     match name {
         "slaq" => Some(Box::new(SlaqPolicy::new())),
+        "slaq-det" => Some(Box::new(SlaqPolicy::deterministic())),
         "fair" => Some(Box::new(FairPolicy::new())),
         "fifo" => Some(Box::new(FifoPolicy::new())),
         "static" => Some(Box::new(StaticPolicy::new())),
@@ -461,7 +466,7 @@ mod tests {
 
     #[test]
     fn policy_by_name_resolves() {
-        for n in ["slaq", "fair", "fifo", "static"] {
+        for n in ["slaq", "slaq-det", "fair", "fifo", "static"] {
             assert_eq!(policy_by_name(n).unwrap().name(), n);
         }
         assert!(policy_by_name("nope").is_none());

@@ -59,7 +59,9 @@
 //! cannot — the paths are allocation-equivalent, though per-job grants may
 //! differ on exact marginal ties). Benchmarks that must isolate one path
 //! deterministically hold the model cold (see `exp::churn_decision_cost`)
-//! or call [`Policy::allocate`] directly.
+//! or call [`Policy::allocate`] directly; simulations that must be
+//! bit-reproducible end to end use [`SlaqPolicy::deterministic`]
+//! (`"slaq-det"`), which pins the choice to the static prior.
 
 use super::{Allocation, DecisionStats, JobRequest, Policy, SchedContext};
 use std::cmp::{Ordering, Reverse};
@@ -110,6 +112,12 @@ pub struct SlaqPolicy {
     /// Grant every job one core before greedy allocation (paper default;
     /// disable only for the starvation ablation).
     starvation_floor: bool,
+    /// When false, the adaptive warm-or-scratch model is never consulted:
+    /// the static half-matched prior decides every epoch, so the decision
+    /// path — and with it every per-job grant — depends only on the
+    /// request stream, never on wall-clock measurements. Reproducible
+    /// simulations and equivalence properties need this.
+    adaptive_threshold: bool,
 }
 
 impl Default for SlaqPolicy {
@@ -119,6 +127,7 @@ impl Default for SlaqPolicy {
             last_warm_start: false,
             cost_model: DecisionStats::default(),
             starvation_floor: true,
+            adaptive_threshold: true,
         }
     }
 }
@@ -127,6 +136,17 @@ impl SlaqPolicy {
     /// New allocator (with the paper's starvation floor).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Deterministic variant: identical objective and search, but the
+    /// warm-or-scratch choice follows the static half-matched prior
+    /// instead of the wall-clock-fed adaptive model, so two runs over the
+    /// same request stream take the same decision path and produce
+    /// bitwise-identical grants. Used by the quality-fidelity regression
+    /// suite and the selective-refit equivalence property (resolved by
+    /// [`super::policy_by_name`] as `"slaq-det"`).
+    pub fn deterministic() -> Self {
+        Self { adaptive_threshold: false, ..Self::default() }
     }
 
     /// Ablation variant: pure greedy, no per-job floor. Converged jobs can
@@ -339,7 +359,7 @@ impl SlaqPolicy {
 
 impl Policy for SlaqPolicy {
     fn name(&self) -> &'static str {
-        "slaq"
+        if self.adaptive_threshold { "slaq" } else { "slaq-det" }
     }
 
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
@@ -478,12 +498,16 @@ impl Policy for SlaqPolicy {
 
         // Adaptive threshold: once both paths have measured costs, take
         // the path the model predicts cheaper for this epoch's churn.
-        // While the model is cold, the static prior decides (warm-start
-        // only when at least half the requests carry a prior grant).
-        let try_warm = self
-            .cost_model
-            .prefer_warm(warm_units, scratch_units)
-            .unwrap_or(matched * 2 >= requests.len());
+        // While the model is cold (or the policy is the deterministic
+        // variant), the static prior decides (warm-start only when at
+        // least half the requests carry a prior grant).
+        let try_warm = if self.adaptive_threshold {
+            self.cost_model
+                .prefer_warm(warm_units, scratch_units)
+                .unwrap_or(matched * 2 >= requests.len())
+        } else {
+            matched * 2 >= requests.len()
+        };
         if !try_warm {
             let start = Instant::now();
             let alloc = self.allocate(requests, capacity);
@@ -889,6 +913,32 @@ mod tests {
         assert!(!q.last_warm_start);
         assert_eq!(q.cost_model.scratch_samples(), 1);
         assert!(q.decision_stats().is_some(), "slaq publishes its model");
+    }
+
+    #[test]
+    fn deterministic_variant_ignores_the_cost_model() {
+        let gains: Vec<ConcaveGain> =
+            (0..8).map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[16; 8]);
+        let mut scratch = SlaqPolicy::new();
+        let base = scratch.allocate(&rs, 64);
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &base);
+
+        // Poison the model so the adaptive threshold would rebuild; the
+        // deterministic variant must still follow the static prior (every
+        // request matches → warm), and two runs must agree bitwise.
+        let mut p = SlaqPolicy::deterministic();
+        assert_eq!(p.name(), "slaq-det");
+        p.cost_model.observe_warm(1, 1_000_000);
+        p.cost_model.observe_scratch(1_000_000, 1);
+        let a = p.allocate_ctx(&ctx, &rs, 64);
+        assert!(p.last_warm_start, "static prior must decide, not the model");
+        check_invariants(&rs, 64, &a);
+
+        let mut q = SlaqPolicy::deterministic();
+        let b = q.allocate_ctx(&ctx, &rs, 64);
+        assert_eq!(a.cores, b.cores, "identical inputs must give identical grants");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod sim;
+
 /// Case-local generator handed to property bodies.
 pub struct Gen {
     rng: Rng,
@@ -25,6 +27,12 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Generator seeded directly, for deterministic single-case tests
+    /// that reuse the property generators outside [`forall`].
+    pub fn from_seed(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), case_seed: seed }
+    }
+
     /// Raw u64.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()

@@ -1,0 +1,132 @@
+//! Seeded simulation generators for property tests: random churn
+//! workloads (mixed curve families, costs, caps, lifetimes and arrival
+//! patterns) that drive the [`Coordinator`] end to end.
+//!
+//! Two coordinators fed the same templates through
+//! [`submit_templates`] with the same source seed observe bitwise-
+//! identical loss streams — the foundation the selective-refit ≡
+//! refit-all equivalence property and the quality-fidelity suite build
+//! on.
+
+use super::Gen;
+use crate::cluster::CostModel;
+use crate::coordinator::{Coordinator, JobSpec};
+use crate::predictor::{CurveKind, CurveModel};
+use crate::util::rng::Rng;
+use crate::workload::JobTemplate;
+
+/// Sample one random job template arriving at `arrival`.
+///
+/// Mirrors the diversity of [`crate::workload::sample_job`] but with
+/// cheaper iterations and a short-lived share (tight iteration caps), so
+/// property-test traces see arrivals *and* completions inside a few
+/// dozen epochs.
+pub fn random_job(g: &mut Gen, id: u64, arrival: f64) -> JobTemplate {
+    let magnitude = 10f64.powf(g.f64_in(-1.0, 1.5));
+    let floor = magnitude * g.f64_in(0.05, 0.3);
+    let (kind, curve) = if g.bool(0.5) {
+        let c = 1.0 / magnitude.max(1e-9);
+        let b = c * g.f64_in(0.03, 0.25);
+        let a = b * g.f64_in(0.0, 0.05);
+        (CurveKind::Sublinear, CurveModel::Sublinear { a, b, c, d: floor })
+    } else {
+        let mu = g.f64_in(0.8, 0.96);
+        (CurveKind::Exponential, CurveModel::Exponential { m: magnitude, mu, c: floor })
+    };
+    let short_lived = g.bool(0.4);
+    let spec = JobSpec {
+        id,
+        name: format!("prop-{id}"),
+        kind,
+        cost: CostModel::new(g.f64_in(0.02, 0.1), g.f64_in(0.5, 6.0)),
+        max_cores: g.usize_in(4, 33) as u32,
+        arrival,
+        target_fraction: g.f64_in(0.9, 0.99),
+        max_iterations: if short_lived { g.usize_in(3, 15) as u64 } else { 10_000 },
+        target_hint: None,
+    };
+    JobTemplate { spec, curve, noise: 0.005 }
+}
+
+/// A random churn trace: `jobs` templates with arrivals spread over
+/// `[0, horizon)` (job 0 arrives at 0 so the first epoch is never empty).
+pub fn random_churn_templates(g: &mut Gen, jobs: usize, horizon: f64) -> Vec<JobTemplate> {
+    (0..jobs)
+        .map(|id| {
+            let arrival = if id == 0 { 0.0 } else { g.f64_in(0.0, horizon) };
+            random_job(g, id as u64, arrival)
+        })
+        .collect()
+}
+
+/// Submit every template with loss sources forked from one RNG seeded at
+/// `seed`. Feeding two coordinators the same `templates` and `seed`
+/// gives them bitwise-identical workloads.
+pub fn submit_templates(coord: &mut Coordinator, templates: &[JobTemplate], seed: u64) {
+    let mut rng = Rng::new(seed);
+    for t in templates {
+        let source = t.make_source(&mut rng);
+        coord.submit(t.spec.clone(), source);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn random_jobs_are_valid_and_diverse() {
+        let mut short_lived = 0usize;
+        let mut long_lived = 0usize;
+        forall("random_job validity", 40, |g| {
+            let ts = random_churn_templates(g, 12, 50.0);
+            assert_eq!(ts.len(), 12);
+            assert_eq!(ts[0].spec.arrival, 0.0);
+            for (i, t) in ts.iter().enumerate() {
+                assert_eq!(t.spec.id, i as u64);
+                assert!(t.spec.arrival >= 0.0 && t.spec.arrival < 50.0);
+                assert!(t.spec.max_cores >= 4 && t.spec.max_cores <= 32);
+                assert!(t.curve.is_decreasing_on(0.0, 200.0));
+                assert!(t.curve.eval(0.0) > t.curve.asymptote());
+                if t.spec.max_iterations < 10_000 {
+                    short_lived += 1;
+                } else {
+                    long_lived += 1;
+                }
+            }
+        });
+        assert!(short_lived > 0, "traces must include quick-finishing jobs");
+        assert!(long_lived > 0, "traces must include long-tail jobs");
+    }
+
+    #[test]
+    fn same_seed_gives_identical_workloads() {
+        use crate::coordinator::CoordinatorConfig;
+        use crate::cluster::ClusterSpec;
+        use crate::sched::SlaqPolicy;
+
+        let mut g = Gen::from_seed(99);
+        let ts = random_churn_templates(&mut g, 8, 20.0);
+        let mk = || {
+            let cfg = CoordinatorConfig {
+                cluster: ClusterSpec { nodes: 2, cores_per_node: 8 },
+                epoch_secs: 2.0,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+            submit_templates(&mut c, &ts, 7);
+            c.run_until(40.0);
+            c.into_trace()
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(ea.entries.len(), eb.entries.len());
+            for (xa, xb) in ea.entries.iter().zip(&eb.entries) {
+                assert_eq!((xa.job, xa.cores), (xb.job, xb.cores));
+                assert_eq!(xa.loss, xb.loss);
+            }
+        }
+    }
+}

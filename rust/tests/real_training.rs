@@ -107,7 +107,7 @@ fn slaq_coordinator_schedules_real_jobs_end_to_end() {
     let cfg = CoordinatorConfig {
         cluster: ClusterSpec { nodes: 1, cores_per_node: 8 },
         epoch_secs: 2.0,
-        cold_start_optimism: true,
+        ..Default::default()
     };
     let mut coord = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
     for (i, algo) in [AlgoKind::LogregGd, AlgoKind::Kmeans, AlgoKind::NewtonLogreg]

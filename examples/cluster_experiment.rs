@@ -17,6 +17,7 @@ fn main() {
         cluster: ClusterSpec::paper_testbed(),
         epoch_secs: 3.0,
         duration: 1800.0,
+        threads: 0, // all cores: sharded refits + materialized gain tables
     };
     println!(
         "simulating {} jobs on {} cores under slaq + fair…",

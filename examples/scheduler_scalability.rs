@@ -2,7 +2,9 @@
 //! time for thousands of jobs across thousands of cores) plus the two
 //! churn scenarios: the allocator microbenchmark (incremental warm-start
 //! vs from-scratch decisions) and the end-to-end coordinator epoch loop
-//! (ledger activation, predictor refits, allocation, placement diffs).
+//! (ledger activation, sharded predictor refits, gain-table builds,
+//! allocation, placement diffs) at 1000–16000 jobs, once on the serial
+//! reference path and once on the machine's full parallelism.
 //!
 //! Run with:  cargo run --release --example scheduler_scalability
 
@@ -15,6 +17,9 @@ fn main() {
     let churn = churn_scalability(&[1000, 2000, 4000], 16384, 32, 12);
     println!("{}", churn.summary);
 
-    let epoch = churn_epoch_loop(&[1000, 2000, 4000], 16384, 32, 12);
-    println!("{}", epoch.summary);
+    let populations = [1000, 2000, 4000, 8000, 16000];
+    let serial = churn_epoch_loop(&populations, 16384, 32, 12, 1);
+    println!("{}", serial.summary);
+    let parallel = churn_epoch_loop(&populations, 16384, 32, 12, 0);
+    println!("{}", parallel.summary);
 }

@@ -67,11 +67,28 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) {
     let _ = bench_stats(name, warmup, iters, f);
 }
 
-/// Write benchmark statistics to `path` as a JSON array.
+/// Write benchmark statistics to `path` as a JSON object:
+/// `{schema, host, command, entries: [...]}`. The metadata header is what
+/// makes a committed snapshot auditable — it records which machine and
+/// command produced the numbers, so PR-over-PR comparisons only trust
+/// matching hosts.
 #[allow(dead_code)]
-pub fn write_bench_json(path: &str, stats: &[BenchStats]) -> std::io::Result<()> {
-    let body: Vec<String> = stats.iter().map(|s| format!("  {}", s.to_json())).collect();
-    std::fs::write(path, format!("[\n{}\n]\n", body.join(",\n")))
+pub fn write_bench_json(path: &str, command: &str, stats: &[BenchStats]) -> std::io::Result<()> {
+    let body: Vec<String> = stats.iter().map(|s| format!("    {}", s.to_json())).collect();
+    let host = format!(
+        "{}-{} x{}",
+        std::env::consts::OS,
+        std::env::consts::ARCH,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    std::fs::write(
+        path,
+        format!(
+            "{{\n  \"schema\": \"slaq-bench-v2\",\n  \"host\": \"{host}\",\n  \
+             \"command\": \"{command}\",\n  \"entries\": [\n{}\n  ]\n}}\n",
+            body.join(",\n")
+        ),
+    )
 }
 
 fn fmt(secs: f64) -> String {

@@ -1,19 +1,24 @@
 //! Bench: Fig 6 — SLAQ allocation decision time at scale, the jobs×cores
 //! sweep the paper plots, the churn scenario comparing the incremental
 //! (warm-start) decision path against from-scratch, and the end-to-end
-//! coordinator epoch loop under the same churn regime.
+//! coordinator epoch loop under the same churn regime at 1000–16000 jobs.
 //!
-//! Besides the human-readable tables, the run emits `BENCH_sched.json` — a
-//! machine-readable array of `{name, mean_secs, p50_secs, p95_secs, iters}`
-//! objects — so CI and plotting scripts can track decision latency. The
-//! `epoch_loop_*` entries are whole-epoch latencies (ledger activation,
-//! selective predictor refits, allocation, placement diffs, job
-//! advancement), the `churn_*` entries the allocation kernel alone. The
-//! refit split gets its own entries: `epoch_loop_refit_*` is the
-//! predictor-sync latency inside each epoch, and
-//! `epoch_loop_refits_per_epoch_*` reports *counts* (refits and dirty
-//! jobs per epoch, in the mean/p50 fields) — with selective sync these
-//! track jobs-with-new-samples, not the active-job count.
+//! Besides the human-readable tables, the run emits `BENCH_sched.json` —
+//! `{schema, host, command, entries}` where `entries` is an array of
+//! `{name, mean_secs, p50_secs, p95_secs, iters}` objects — so CI and
+//! plotting scripts can track decision latency, and a snapshot from the
+//! pinned machine is committed at the repo root for PR-over-PR
+//! comparison. The `epoch_loop_*` entries are whole-epoch latencies
+//! (ledger activation, selective predictor refits, gain-table builds,
+//! allocation, placement diffs, job advancement) on the machine's full
+//! parallelism; `epoch_loop_*_t{N}` entries sweep the worker-thread knob
+//! at the 4000-job cell (t1 = the serial reference path); the `churn_*`
+//! entries are the allocation kernel alone. The split entries:
+//! `epoch_loop_refit_*` is the predictor-sync latency inside each epoch,
+//! `epoch_loop_gain_*` the materialized gain-table build (zero at t1),
+//! and `epoch_loop_refits_per_epoch_*` reports *counts* (refits and
+//! dirty jobs per epoch, in the mean/p50 fields) — with selective sync
+//! these track jobs-with-new-samples, not the active-job count.
 
 #[path = "common.rs"]
 mod common;
@@ -80,8 +85,10 @@ fn main() {
     }
 
     println!("== churn: end-to-end coordinator epochs (full decision loop) ==");
-    let mut largest_cell: Option<slaq::exp::EpochLoopCost> = None;
-    for (jobs, cores, churn) in [(1000usize, 4096u32, 16usize), (2000, 8192, 24), (4000, 16384, 32)] {
+    // Publish one entry set per cell at the machine's full parallelism
+    // (threads: 0) — the headline configuration — plus the refit / gain /
+    // count splits.
+    let epoch_cell = |all: &mut Vec<BenchStats>, jobs: usize, cores: u32, churn: usize, threads: usize, suffix: &str| {
         let cfg = EpochLoopConfig {
             jobs,
             cores,
@@ -90,17 +97,19 @@ fn main() {
             warmup_epochs: 3,
             seed: 7,
             refit_amortization: false,
+            threads,
         };
         let cost = epoch_loop_cost(&cfg);
         println!(
-            "epoch_loop_{jobs}x{cores}_r{churn}: epoch mean {:.2} ms (p50 {:.2}, p95 {:.2}), \
-             allocation {:.2} ms, refit {:.2} ms ({:.0} refits / {:.0} dirty / {:.0} active), \
-             {} completed / {} arrived",
+            "epoch_loop_{jobs}x{cores}_r{churn}{suffix}: epoch mean {:.2} ms (p50 {:.2}, \
+             p95 {:.2}), allocation {:.2} ms, refit {:.2} ms, gain build {:.2} ms \
+             ({:.0} refits / {:.0} dirty / {:.0} active), {} completed / {} arrived",
             cost.mean_millis(),
             cost.percentile_millis(50.0),
             cost.percentile_millis(95.0),
             cost.mean_sched_millis(),
             cost.mean_refit_millis(),
+            cost.mean_gain_millis(),
             cost.mean_refits(),
             cost.mean_dirty(),
             cost.mean_active,
@@ -108,18 +117,27 @@ fn main() {
             cost.arrived,
         );
         all.push(BenchStats {
-            name: format!("epoch_loop_{jobs}x{cores}_r{churn}"),
+            name: format!("epoch_loop_{jobs}x{cores}_r{churn}{suffix}"),
             mean: cost.mean_millis() / 1e3,
             p50: cost.percentile_millis(50.0) / 1e3,
             p95: cost.percentile_millis(95.0) / 1e3,
             iters: cost.epoch_millis.len(),
         });
-        // The refit-vs-allocate split: predictor-sync latency…
+        // The epoch's three-way cost split: predictor-sync latency…
         all.push(BenchStats {
-            name: format!("epoch_loop_refit_{jobs}x{cores}_r{churn}"),
+            name: format!("epoch_loop_refit_{jobs}x{cores}_r{churn}{suffix}"),
             mean: cost.mean_refit_millis() / 1e3,
             p50: cost.refit_percentile_millis(50.0) / 1e3,
             p95: cost.refit_percentile_millis(95.0) / 1e3,
+            iters: cost.epoch_millis.len(),
+        });
+        // …the materialized gain-table build (zero on the t1 serial
+        // reference path)…
+        all.push(BenchStats {
+            name: format!("epoch_loop_gain_{jobs}x{cores}_r{churn}{suffix}"),
+            mean: cost.mean_gain_millis() / 1e3,
+            p50: cost.gain_percentile_millis(50.0) / 1e3,
+            p95: cost.gain_percentile_millis(95.0) / 1e3,
             iters: cost.epoch_millis.len(),
         });
         // …and the refit *counts* (mean = refits/epoch, p50 = dirty
@@ -128,23 +146,42 @@ fn main() {
         // `_per_epoch` suffix marks the entry as counts, not latencies
         // (see benches/common.rs).
         all.push(BenchStats {
-            name: format!("epoch_loop_refits_per_epoch_{jobs}x{cores}_r{churn}"),
+            name: format!("epoch_loop_refits_per_epoch_{jobs}x{cores}_r{churn}{suffix}"),
             mean: cost.mean_refits(),
             p50: cost.mean_dirty(),
             p95: cost.mean_active,
             iters: cost.epoch_millis.len(),
         });
-        if jobs == 4000 {
-            largest_cell = Some(cost);
+        cost
+    };
+
+    for (jobs, cores, churn) in [
+        (1000usize, 4096u32, 16usize),
+        (2000, 8192, 24),
+        (4000, 16384, 32),
+        (8000, 32768, 48),
+        (16000, 65536, 64),
+    ] {
+        epoch_cell(&mut all, jobs, cores, churn, 0, "");
+    }
+
+    println!("== churn: worker-thread sweep at the 4000-job cell ==");
+    // t1 is the serial reference path (oracle calls in the allocator, no
+    // tables, no workers); tN shards the refits and gain-table builds.
+    // Results are identical — only wall-clock moves.
+    let mut reference_cell: Option<slaq::exp::EpochLoopCost> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let cost = epoch_cell(&mut all, 4000, 16384, 32, threads, &format!("_t{threads}"));
+        if threads == 1 {
+            reference_cell = Some(cost);
         }
     }
 
-    println!("== churn: refit amortization at the largest cell ==");
+    println!("== churn: refit amortization at the 4000-job cell ==");
     {
-        // The exact (non-amortized) 4000x16384 run was already measured by
-        // the loop above — reuse it rather than repeating the most
-        // expensive cell of the bench.
-        let exact = largest_cell.expect("4000-job cell measured above");
+        // Compare against the serial (t1) run measured just above — the
+        // amortization knob is orthogonal to the thread sweep.
+        let exact = reference_cell.expect("4000-job t1 cell measured above");
         let amortized = epoch_loop_cost(&EpochLoopConfig {
             jobs: 4000,
             cores: 16384,
@@ -153,6 +190,7 @@ fn main() {
             warmup_epochs: 3,
             seed: 7,
             refit_amortization: true,
+            threads: 1,
         });
         println!(
             "epoch_loop_amortized_4000x16384_r32: refit {:.2} ms -> {:.2} ms, \
@@ -171,7 +209,7 @@ fn main() {
         });
     }
 
-    match write_bench_json("BENCH_sched.json", &all) {
+    match write_bench_json("BENCH_sched.json", "cargo bench --bench sched_scalability", &all) {
         Ok(()) => println!("\nwrote BENCH_sched.json ({} entries)", all.len()),
         Err(e) => eprintln!("could not write BENCH_sched.json: {e}"),
     }

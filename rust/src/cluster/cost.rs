@@ -46,6 +46,17 @@ impl CostModel {
         (n as u64, (total - n * t).max(0.0))
     }
 
+    /// *Fractional* iterations completable in a `secs`-second window at
+    /// `cores` cores, counting `credit` seconds of banked partial
+    /// progress. The scheduler's gain oracles use the fractional form so
+    /// marginal gains stay smooth when an extra core buys only part of an
+    /// iteration — this is the single definition both
+    /// `Job::iterations_achievable_f` and the coordinator's gain views
+    /// share, so the two can never drift apart.
+    pub fn fractional_iterations(&self, secs: f64, cores: u32, credit: f64) -> f64 {
+        (credit + secs) / self.iter_time(cores)
+    }
+
     /// The core count beyond which adding a core no longer reduces
     /// iteration time (only meaningful when `overhead_per_core > 0`).
     pub fn efficiency_cap(&self) -> u32 {
@@ -96,6 +107,20 @@ mod tests {
         let (n1, _) = c.iterations_in_window(10.0, 1, 0.0);
         let (n8, _) = c.iterations_in_window(10.0, 8, 0.0);
         assert!(n8 > n1);
+    }
+
+    #[test]
+    fn fractional_iterations_agree_with_the_integer_window() {
+        forall("fractional vs whole iterations", 100, |g| {
+            let c = CostModel::new(g.f64_in(0.01, 1.0), g.f64_in(0.1, 20.0));
+            let cores = g.usize_in(1, 64) as u32;
+            let secs = g.f64_in(0.0, 50.0);
+            let credit = g.f64_in(0.0, 5.0);
+            let frac = c.fractional_iterations(secs, cores, credit);
+            let (whole, _) = c.iterations_in_window(secs, cores, credit);
+            assert!(frac >= 0.0);
+            assert_eq!(whole, frac.floor() as u64, "floor(fractional) must equal whole");
+        });
     }
 
     #[test]

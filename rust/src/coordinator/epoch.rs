@@ -1,15 +1,43 @@
 //! The epoch-driven scheduling loop, built around persistent, delta-aware
 //! state: the [`JobLedger`] (id-indexed jobs, arrival heap, running set,
 //! and the dirty set driving selective predictor refits), the
-//! [`SchedContext`] (previous grant, for policy warm starts) and the
-//! node pool's placement-diff application.
+//! [`SchedContext`] (previous grant + this epoch's materialized gain
+//! table, for policy warm starts) and the node pool's placement-diff
+//! application.
+//!
+//! ## The deterministic parallel epoch pipeline
+//!
+//! With `threads > 1` the two data-parallel stages of an epoch — the
+//! dirty-set predictor refits and the gain-table build — are sharded
+//! across `std::thread::scope` workers; the decision loop itself stays a
+//! single thread, per the paper. Determinism is by construction:
+//!
+//! * each shard works on *disjoint, preassigned* slots (a predictor is
+//!   refit by exactly one worker; a gain-table row is filled by exactly
+//!   one worker into its fixed arena range), so no output depends on
+//!   which worker ran first;
+//! * shard results merge in stable job-id order (predictors return to
+//!   their ledger rows by id; table rows were laid out in request order
+//!   before any worker started), and the only cross-shard aggregate is
+//!   an integer refit count;
+//! * only plain data crosses threads: `&mut OnlinePredictor` rows (the
+//!   predictor is owned data, `Send + Sync` by construction — asserted
+//!   at compile time in `predictor/online.rs`) and `&mut [f64]` arena
+//!   slices. The job rows themselves, which hold non-`Sync`
+//!   [`LossSource`] boxes, never leave the coordinator thread.
+//!
+//! Hence `slaq-det` runs are bit-identical at any thread count
+//! (property-tested below), and `threads: 1` remains the serial
+//! reference path — direct oracle calls inside the allocator, no tables,
+//! no worker threads.
 
 use super::job::{JobState, JobSpec, Job};
 use super::ledger::JobLedger;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
-use crate::cluster::{ClusterSpec, NodePool};
-use crate::sched::{GainModel, JobRequest, Policy, SchedContext};
+use crate::cluster::{ClusterSpec, CostModel, NodePool};
+use crate::predictor::OnlinePredictor;
+use crate::sched::{GainModel, GainTable, JobRequest, Policy, SchedContext};
 use std::time::Instant;
 
 /// Coordinator configuration.
@@ -37,6 +65,14 @@ pub struct CoordinatorConfig {
     /// refit bill, so the quality-fidelity suite pins its behaviour
     /// separately.
     pub refit_amortization: bool,
+    /// Worker threads for the epoch pipeline's data-parallel stages (the
+    /// dirty-set predictor refits and the gain-table build). `0` (the
+    /// default) resolves to the machine's available parallelism at
+    /// coordinator construction; `1` keeps the fully serial reference
+    /// path — oracle calls inside the allocator, no materialized tables,
+    /// no worker threads. Deterministic policies produce bit-identical
+    /// runs at every setting (see the module docs).
+    pub threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,6 +83,7 @@ impl Default for CoordinatorConfig {
             cold_start_optimism: true,
             selective_refits: true,
             refit_amortization: false,
+            threads: 0,
         }
     }
 }
@@ -61,23 +98,76 @@ impl Default for CoordinatorConfig {
 /// SLAQ treats it optimistically (every achievable iteration is worth the
 /// maximum normalized delta of 1.0), which front-loads resources into new
 /// jobs — exactly the behaviour the paper wants for fresh arrivals.
+///
+/// The oracle is a plain *view* (`&OnlinePredictor` plus copied cost-model
+/// scalars) rather than a `&Job` borrow: `Job` carries its boxed
+/// [`LossSource`] (not `Sync`), while this view is `Sync` and can be
+/// handed to the gain-table build workers.
 struct JobGain<'a> {
-    job: &'a Job,
+    predictor: &'a OnlinePredictor,
+    cost: CostModel,
+    credit: f64,
+    cap: u32,
     window: f64,
     cold_start_optimism: bool,
 }
 
+impl<'a> JobGain<'a> {
+    fn new(job: &'a Job, window: f64, cold_start_optimism: bool) -> Self {
+        Self {
+            predictor: &job.predictor,
+            cost: job.spec.cost,
+            credit: job.credit,
+            cap: job.spec.max_cores,
+            window,
+            cold_start_optimism,
+        }
+    }
+
+    /// The job's core cap (also its gain-table row length).
+    fn cap(&self) -> u32 {
+        self.cap
+    }
+}
+
 impl GainModel for JobGain<'_> {
     fn gain(&self, cores: u32) -> f64 {
-        let dk = self.job.iterations_achievable_f(self.window, cores);
+        if cores == 0 {
+            return 0.0;
+        }
+        // Shared definition with `Job::iterations_achievable_f`, so table
+        // rows (filled from this view) and the serial oracle path are
+        // bit-identical and can never drift from the job progress model.
+        let dk = self.cost.fractional_iterations(self.window, cores, self.credit);
         if dk <= 0.0 {
             return 0.0;
         }
-        if self.cold_start_optimism && self.job.predictor.history().len() < 3 {
+        if self.cold_start_optimism && self.predictor.history().len() < 3 {
             return dk;
         }
-        self.job.predictor.predicted_normalized_reduction(dk)
+        self.predictor.predicted_normalized_reduction(dk)
     }
+}
+
+/// Reusable per-epoch buffers. With these (plus the gain arena in the
+/// [`SchedContext`] and the policy's own heap scratch), a steady-state
+/// `step_epoch` allocates little beyond what escapes into the trace —
+/// the epoch record with its entries and the grant vector — plus the
+/// borrow-scoped gain-view and request vectors, which cannot persist
+/// across epochs because they borrow the ledger.
+#[derive(Default)]
+struct EpochScratch {
+    /// Running ids (ascending).
+    active: Vec<u64>,
+    /// Drained dirty ids (ascending).
+    dirty: Vec<u64>,
+    /// `(job id, cores)` placement targets.
+    targets: Vec<(u64, u32)>,
+    /// Epoch-start losses, parallel to `active`.
+    losses: Vec<f64>,
+    /// Predictors moved out of the ledger for a sharded refit (empty
+    /// between epochs; keeps its capacity).
+    refit_batch: Vec<(u64, OnlinePredictor)>,
 }
 
 /// The SLAQ coordinator: owns the job ledger, the node pool, the policy
@@ -90,12 +180,21 @@ pub struct Coordinator {
     sched_ctx: SchedContext,
     time: f64,
     epochs: Vec<EpochRecord>,
+    /// Resolved worker-thread count (`cfg.threads`, with 0 resolved to
+    /// the machine's available parallelism at construction).
+    threads: usize,
+    scratch: EpochScratch,
 }
 
 impl Coordinator {
     /// New coordinator with the given policy.
     pub fn new(cfg: CoordinatorConfig, policy: Box<dyn Policy>) -> Self {
         let pool = NodePool::new(cfg.cluster);
+        let threads = if cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.threads
+        };
         Self {
             cfg,
             policy,
@@ -104,7 +203,15 @@ impl Coordinator {
             sched_ctx: SchedContext::new(),
             time: 0.0,
             epochs: Vec::new(),
+            threads,
+            scratch: EpochScratch::default(),
         }
+    }
+
+    /// Resolved worker-thread count for the epoch pipeline's
+    /// data-parallel stages (1 = serial reference path).
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Submit a job (may arrive in the future). Job ids must be unique.
@@ -134,18 +241,28 @@ impl Coordinator {
     /// heap) and never revisits completed jobs; predictor refits visit
     /// only the ledger's dirty set (jobs with new loss samples); the
     /// allocator receives the persistent [`SchedContext`] so warm-start
-    /// policies pay for what changed, not for cluster capacity.
+    /// policies pay for what changed, not for cluster capacity. With
+    /// `threads > 1` the refits and the gain-table build are sharded
+    /// across scoped workers (see the module docs for the determinism
+    /// argument), and the large per-epoch buffers (id lists, placement
+    /// targets, losses, the refit batch, the gain arena, the policy's
+    /// heaps) come from reusable scratch pools, so steady-state epoch
+    /// allocations are limited to what escapes into the trace plus a few
+    /// small borrow-scoped vectors (the gain views and request list).
     pub fn step_epoch(&mut self) {
         let t0 = self.time;
         let window = self.cfg.epoch_secs;
+        let threads = self.threads;
 
         // 1. Activate arrivals — O(arrivals), driven by the arrival heap.
         // Activation observes each job's initial loss, which enters it
         // into the ledger's dirty set.
         self.ledger.activate_due(t0);
 
-        // 2. The running set (completed jobs have already dropped out).
-        let active = self.ledger.running_ids();
+        // 2. The running set (completed jobs have already dropped out),
+        // into a buffer reused across epochs.
+        let mut active = std::mem::take(&mut self.scratch.active);
+        self.ledger.running_ids_into(&mut active);
 
         // 3. Predictor sync: refit only the jobs that received samples
         // since the last sync — O(jobs-that-changed), not O(active). The
@@ -154,95 +271,167 @@ impl Coordinator {
         // clean predictors, so the two paths produce identical fits (the
         // quality-fidelity equivalence property pins this down).
         let refit_start = Instant::now();
-        let dirty = self.ledger.take_dirty();
+        let mut dirty = std::mem::take(&mut self.scratch.dirty);
+        self.ledger.take_dirty_into(&mut dirty);
         let dirty_jobs = dirty.len();
         let sync_ids: &[u64] = if self.cfg.selective_refits { &dirty } else { &active };
+        let amortize = self.cfg.refit_amortization;
         let mut refits = 0usize;
-        for &id in sync_ids {
-            let job = self.ledger.job_mut(id).expect("synced job in ledger");
-            if job.predictor.refresh_fit_deferrable(self.cfg.refit_amortization) {
-                refits += 1;
+        if threads <= 1 || sync_ids.len() < 2 {
+            // Serial reference path.
+            for &id in sync_ids {
+                let job = self.ledger.job_mut(id).expect("synced job in ledger");
+                if job.predictor.refresh_fit_deferrable(amortize) {
+                    refits += 1;
+                }
             }
+        } else {
+            // Sharded refits. Each dirty predictor is *moved* out of its
+            // ledger row (plain `Send + Sync` data — the job row itself,
+            // which holds the non-`Sync` loss source, stays put), refit by
+            // exactly one worker, and returned to its row in the stable
+            // ascending-id order of `sync_ids`. Every output has a
+            // preassigned slot and the only cross-shard aggregate is an
+            // integer sum, so the merged state is bit-identical at any
+            // thread count.
+            let mut batch = std::mem::take(&mut self.scratch.refit_batch);
+            debug_assert!(batch.is_empty());
+            for &id in sync_ids {
+                let job = self.ledger.job_mut(id).expect("synced job in ledger");
+                let placeholder = OnlinePredictor::new(job.spec.kind);
+                batch.push((id, std::mem::replace(&mut job.predictor, placeholder)));
+            }
+            let len = batch.len();
+            let chunk = (len / threads + usize::from(len % threads != 0)).max(1);
+            refits = std::thread::scope(|s| {
+                let workers: Vec<_> = batch
+                    .chunks_mut(chunk)
+                    .map(|shard| {
+                        s.spawn(move || {
+                            let mut done = 0usize;
+                            for (_, predictor) in shard.iter_mut() {
+                                if predictor.refresh_fit_deferrable(amortize) {
+                                    done += 1;
+                                }
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                workers.into_iter().map(|w| w.join().expect("refit worker panicked")).sum()
+            });
+            for (id, predictor) in batch.drain(..) {
+                self.ledger.job_mut(id).expect("synced job in ledger").predictor = predictor;
+            }
+            self.scratch.refit_batch = batch;
         }
         let refit_nanos = refit_start.elapsed().as_nanos() as u64;
 
+        let capacity = self.cfg.cluster.capacity();
+        let gain_nanos;
         let sched_nanos;
         let allocation;
-        let targets: Vec<(u64, u32)>;
+        let mut targets = std::mem::take(&mut self.scratch.targets);
+        targets.clear();
+        let mut losses = std::mem::take(&mut self.scratch.losses);
+        losses.clear();
         let entries: Vec<EpochEntry>;
         {
-            // One ledger lookup per job, shared by the gain oracles and
-            // the epoch record below.
-            let jobs: Vec<&Job> = active
-                .iter()
-                .map(|&id| self.ledger.job(id).expect("running job"))
-                .collect();
-            let gains: Vec<JobGain<'_>> = jobs
-                .iter()
-                .map(|&job| JobGain {
-                    job,
-                    window,
-                    cold_start_optimism: self.cfg.cold_start_optimism,
-                })
-                .collect();
+            // One ledger lookup per job: the gain views for the allocator
+            // and the epoch-start losses for the record below.
+            let mut gains: Vec<JobGain<'_>> = Vec::with_capacity(active.len());
+            for &id in active.iter() {
+                let job = self.ledger.job(id).expect("running job");
+                gains.push(JobGain::new(job, window, self.cfg.cold_start_optimism));
+                losses.push(job.current_loss());
+            }
+
+            // 4. Materialize the gain tables (threads > 1, and only for
+            // policies that actually read them — fair/FIFO/static never
+            // consult gains, so building them a table would be pure
+            // waste): every job's gain curve evaluated once into the
+            // context's flat arena, sharded by contiguous row ranges, so
+            // the allocator's innermost loops become O(1) lookups. Timed
+            // separately — the epoch's third cost split next to refits
+            // and allocation. The fill goes through the shared
+            // `GainTable::fill_shard` (one definition of the row layout)
+            // over the same `JobGain` views the serial path hands the
+            // allocator, so table entries are bit-identical to oracle
+            // calls.
+            {
+                let table = self.sched_ctx.gain_table_mut();
+                if threads > 1 && self.policy.wants_gain_table() {
+                    let gain_start = Instant::now();
+                    table.reset(active.iter().zip(&gains).map(|(&id, g)| (id, g.cap())));
+                    let gains_ref: &[JobGain<'_>] = &gains;
+                    let shards = table.shards_mut(threads);
+                    std::thread::scope(|s| {
+                        for (rows, slice) in shards {
+                            s.spawn(move || {
+                                GainTable::fill_shard(
+                                    rows,
+                                    slice,
+                                    |r| gains_ref[r].cap() as usize,
+                                    |r, c| gains_ref[r].gain(c),
+                                )
+                            });
+                        }
+                    });
+                    table.mark_ready();
+                    gain_nanos = gain_start.elapsed().as_nanos() as u64;
+                } else {
+                    table.invalidate();
+                    gain_nanos = 0;
+                }
+            }
+
             let requests: Vec<JobRequest<'_>> = active
                 .iter()
                 .zip(&gains)
-                .map(|(&id, g)| JobRequest {
-                    id,
-                    max_cores: g.job.spec.max_cores,
-                    gain: g,
-                })
+                .map(|(&id, g)| JobRequest { id, max_cores: g.cap(), gain: g })
                 .collect();
 
-            // 4. Allocate (this is the decision Fig 6 times). The context
-            // carries the previous grant for the warm-start path.
+            // 5. Allocate (this is the decision Fig 6 times). The context
+            // carries the previous grant for the warm-start path and the
+            // freshly built gain table.
             let start = Instant::now();
-            allocation =
-                self.policy
-                    .allocate_ctx(&self.sched_ctx, &requests, self.cfg.cluster.capacity());
+            allocation = self.policy.allocate_ctx(&self.sched_ctx, &requests, capacity);
             sched_nanos = start.elapsed().as_nanos() as u64;
 
-            // Persist this epoch's grant for the next warm start, and
+            // Persist this epoch's grant for the next warm start (which
+            // also retires the table — its rows describe this epoch), and
             // republish the policy's decision-cost model so context
             // observers (benchmarks, traces) can read it.
             self.sched_ctx.record(&requests, &allocation);
             if let Some(stats) = self.policy.decision_stats() {
                 self.sched_ctx.record_stats(stats);
             }
-            targets = requests
-                .iter()
-                .zip(&allocation.cores)
-                .map(|(r, &cores)| (r.id, cores))
-                .collect();
+            targets.extend(requests.iter().zip(&allocation.cores).map(|(r, &cores)| (r.id, cores)));
             // Epoch record (losses at epoch start, before jobs advance).
             entries = active
                 .iter()
-                .zip(&jobs)
+                .zip(&losses)
                 .zip(&allocation.cores)
-                .map(|((&id, &job), &cores)| EpochEntry {
-                    job: id,
-                    cores,
-                    loss: job.current_loss(),
-                })
+                .map(|((&id, &loss), &cores)| EpochEntry { job: id, cores, loss })
                 .collect();
         }
 
-        // 5. Apply only the placement deltas (shrink first, then grow).
+        // 6. Apply only the placement deltas (shrink first, then grow).
         self.pool.apply_diff(&targets);
 
-        // 6. Record the epoch before advancing.
+        // 7. Record the epoch before advancing.
         self.epochs.push(EpochRecord {
             time: t0,
             sched_nanos,
             refit_nanos,
+            gain_nanos,
             refits,
             dirty_jobs,
             active_jobs: active.len(),
             entries,
         });
 
-        // 7. Advance jobs through the window; jobs that completed
+        // 8. Advance jobs through the window; jobs that completed
         // iterations re-enter the dirty set for the next sync, while
         // completed jobs leave the running set, the dirty set, the node
         // pool and the scheduling context for good.
@@ -259,6 +448,12 @@ impl Coordinator {
                 self.sched_ctx.forget(id);
             }
         }
+
+        // Return the reusable buffers to the scratch pool.
+        self.scratch.active = active;
+        self.scratch.dirty = dirty;
+        self.scratch.targets = targets;
+        self.scratch.losses = losses;
 
         self.time = t0 + window;
     }
@@ -517,6 +712,7 @@ mod tests {
                     cold_start_optimism: true,
                     selective_refits: selective,
                     refit_amortization: false,
+                    threads: 1,
                 };
                 let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
                 sim::submit_templates(&mut c, &templates, src_seed);
@@ -547,6 +743,120 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn parallel_epoch_pipeline_is_bit_identical_to_serial() {
+        // The tentpole's safety net: sharding the refits and materializing
+        // the gain tables (threads > 1) must be *indistinguishable* from
+        // the serial reference path (threads = 1, direct oracle calls) —
+        // same per-epoch allocations, same loss trajectories, same
+        // completions — on arbitrary churn traces, at every thread count.
+        // Uses the deterministic SLAQ variant so decision paths never
+        // depend on wall clock. This doubles as the coordinator-level
+        // "gain-table allocation ≡ direct-oracle allocation" property:
+        // the serial run evaluates oracles inside the allocator, the
+        // parallel runs allocate purely from the materialized tables.
+        use crate::testkit::{forall, sim};
+        forall("threads=1 ≡ threads=N coordinators", 4, |g| {
+            let templates = sim::random_churn_templates(g, 12, 30.0);
+            let src_seed = g.u64();
+            let run = |threads: usize| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+                    epoch_secs: 2.0,
+                    cold_start_optimism: true,
+                    selective_refits: true,
+                    refit_amortization: false,
+                    threads,
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                assert_eq!(c.threads(), threads);
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(60.0);
+                c.into_trace()
+            };
+            let serial = run(1);
+            for threads in [2usize, 4] {
+                let par = run(threads);
+                assert_eq!(serial.epochs.len(), par.epochs.len());
+                for (a, b) in serial.epochs.iter().zip(&par.epochs) {
+                    assert_eq!(a.active_jobs, b.active_jobs, "active sets diverged at t={}", a.time);
+                    assert_eq!(a.refits, b.refits, "refit counts diverged at t={}", a.time);
+                    assert_eq!(a.dirty_jobs, b.dirty_jobs);
+                    assert_eq!(a.entries.len(), b.entries.len());
+                    for (x, y) in a.entries.iter().zip(&b.entries) {
+                        assert_eq!(x.job, y.job);
+                        assert_eq!(
+                            x.cores, y.cores,
+                            "allocations diverged at t={} ({} threads)",
+                            a.time, threads
+                        );
+                        assert_eq!(
+                            x.loss, y.loss,
+                            "losses diverged at t={} ({} threads)",
+                            a.time, threads
+                        );
+                    }
+                }
+                assert_eq!(serial.jobs.len(), par.jobs.len());
+                for (a, b) in serial.jobs.iter().zip(&par.jobs) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.completion, b.completion, "completion diverged for job {}", a.id);
+                    assert_eq!(a.samples, b.samples, "loss samples diverged for job {}", a.id);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_pipeline_records_the_gain_split() {
+        // threads > 1: the gain-table build is timed as its own epoch
+        // split; threads = 1: the serial reference path never builds one.
+        let mut parallel = Coordinator::new(
+            CoordinatorConfig { threads: 2, ..small_cluster() },
+            Box::new(SlaqPolicy::new()),
+        );
+        assert_eq!(parallel.threads(), 2);
+        for id in 0..4 {
+            parallel.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        parallel.step_epoch();
+        parallel.step_epoch();
+        assert!(
+            parallel.sched_context().gain_table().is_none(),
+            "recording the epoch must retire its table"
+        );
+
+        let mut serial = Coordinator::new(
+            CoordinatorConfig { threads: 1, ..small_cluster() },
+            Box::new(SlaqPolicy::new()),
+        );
+        for id in 0..4 {
+            serial.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        serial.step_epoch();
+        assert_eq!(
+            serial.last_epoch().unwrap().gain_nanos,
+            0,
+            "serial reference path must not pay a table build"
+        );
+
+        // A policy that never reads gains must not be built a table, even
+        // with workers available.
+        let mut fair = Coordinator::new(
+            CoordinatorConfig { threads: 2, ..small_cluster() },
+            Box::new(FairPolicy::new()),
+        );
+        for id in 0..4 {
+            fair.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        fair.step_epoch();
+        assert_eq!(
+            fair.last_epoch().unwrap().gain_nanos,
+            0,
+            "gain-blind policies must skip the table build"
+        );
     }
 
     #[test]

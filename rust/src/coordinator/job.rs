@@ -192,12 +192,13 @@ impl Job {
 
     /// Fractional iterations achievable in a `window`-second epoch with
     /// `cores` cores. The allocator uses the fractional form so marginal
-    /// gains stay smooth when an extra core buys only part of an iteration.
+    /// gains stay smooth when an extra core buys only part of an iteration
+    /// (shared definition: [`CostModel::fractional_iterations`]).
     pub fn iterations_achievable_f(&self, window: f64, cores: u32) -> f64 {
         if cores == 0 {
             return 0.0;
         }
-        (self.credit + window) / self.spec.cost.iter_time(cores)
+        self.spec.cost.fractional_iterations(window, cores, self.credit)
     }
 }
 

@@ -150,7 +150,17 @@ impl JobLedger {
 
     /// Ids of the currently running jobs, in ascending id order.
     pub fn running_ids(&self) -> Vec<u64> {
-        self.running.iter().copied().collect()
+        let mut out = Vec::with_capacity(self.running.len());
+        self.running_ids_into(&mut out);
+        out
+    }
+
+    /// Fill `out` with the running ids (ascending), reusing its capacity —
+    /// the epoch loop's allocation-free form of
+    /// [`JobLedger::running_ids`].
+    pub fn running_ids_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.running.iter().copied());
     }
 
     /// The running set.
@@ -197,7 +207,16 @@ impl JobLedger {
     /// drain, in ascending id order. The caller owns the sync — the ledger
     /// forgets these ids until new samples are marked.
     pub fn take_dirty(&mut self) -> Vec<u64> {
-        std::mem::take(&mut self.dirty).into_iter().collect()
+        let mut out = Vec::with_capacity(self.dirty.len());
+        self.take_dirty_into(&mut out);
+        out
+    }
+
+    /// Drain the dirty set into `out` (ascending id order), reusing its
+    /// capacity — the allocation-free form of [`JobLedger::take_dirty`].
+    pub fn take_dirty_into(&mut self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(std::mem::take(&mut self.dirty));
     }
 
     /// Drop a completed job out of the running set (and out of the dirty
@@ -367,6 +386,26 @@ mod tests {
         // The survivors sync as usual.
         assert_eq!(ledger.take_dirty(), vec![0, 2]);
         assert_eq!(ledger.counts(), (0, 2, 1));
+    }
+
+    #[test]
+    fn reusable_buffers_match_the_allocating_accessors() {
+        let mut ledger = JobLedger::new();
+        for id in [5u64, 1, 9] {
+            ledger.submit(spec(id, 0.0), source(id));
+        }
+        ledger.activate_due(0.0);
+        let mut buf = vec![42u64; 8]; // stale contents must be replaced
+        ledger.running_ids_into(&mut buf);
+        assert_eq!(buf, ledger.running_ids());
+        assert_eq!(buf, vec![1, 5, 9]);
+
+        let mut dirty_buf = Vec::new();
+        ledger.take_dirty_into(&mut dirty_buf);
+        assert_eq!(dirty_buf, vec![1, 5, 9]);
+        assert_eq!(ledger.dirty_len(), 0, "drain must empty the set");
+        ledger.take_dirty_into(&mut dirty_buf);
+        assert!(dirty_buf.is_empty(), "second drain clears the buffer");
     }
 
     #[test]

@@ -22,6 +22,10 @@ pub struct EpochRecord {
     /// Wall-clock nanoseconds of the predictor sync (selective refits)
     /// that preceded the allocation.
     pub refit_nanos: u64,
+    /// Wall-clock nanoseconds of the materialized gain-table build (zero
+    /// on the serial reference path, which evaluates oracles inside the
+    /// allocator instead).
+    pub gain_nanos: u64,
     /// Convergence-curve refits actually performed this epoch. With
     /// selective sync this tracks jobs that received samples, not the
     /// active-job count.
@@ -121,6 +125,7 @@ impl Trace {
                     ("time", Value::Num(e.time)),
                     ("sched_nanos", Value::Num(e.sched_nanos as f64)),
                     ("refit_nanos", Value::Num(e.refit_nanos as f64)),
+                    ("gain_nanos", Value::Num(e.gain_nanos as f64)),
                     ("refits", Value::Num(e.refits as f64)),
                     ("dirty_jobs", Value::Num(e.dirty_jobs as f64)),
                     ("active_jobs", Value::Num(e.active_jobs as f64)),
@@ -239,6 +244,7 @@ mod tests {
                 time: 3.0,
                 sched_nanos: 1000,
                 refit_nanos: 500,
+                gain_nanos: 250,
                 refits: 1,
                 dirty_jobs: 1,
                 active_jobs: 1,
@@ -265,6 +271,7 @@ mod tests {
             time: 0.0,
             sched_nanos: 2_000_000,
             refit_nanos: 0,
+            gain_nanos: 0,
             refits: 0,
             dirty_jobs: 0,
             active_jobs: 1,
@@ -274,6 +281,7 @@ mod tests {
             time: 1.0,
             sched_nanos: 4_000_000,
             refit_nanos: 0,
+            gain_nanos: 0,
             refits: 0,
             dirty_jobs: 0,
             active_jobs: 1,

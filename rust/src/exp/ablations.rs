@@ -59,6 +59,7 @@ fn run_with(
             cluster: cfg.cluster,
             epoch_secs: cfg.epoch_secs,
             cold_start_optimism,
+            threads: cfg.threads,
             ..Default::default()
         },
         policy,
@@ -189,6 +190,7 @@ mod tests {
             cluster: ClusterSpec { nodes: 4, cores_per_node: 16 },
             epoch_secs: 3.0,
             duration: 300.0,
+            threads: 1,
         }
     }
 

@@ -9,10 +9,14 @@
 //!   by a handful of jobs per epoch.
 //! * Churn (end-to-end): the same steady-state regime driven through the
 //!   full [`Coordinator`] epoch loop — ledger activation, selective
-//!   predictor refits (dirty set only), allocation, placement diffs, job
-//!   advancement — reporting whole-epoch latency percentiles plus the
-//!   refit-vs-allocate split and refits-per-epoch (which tracks
-//!   jobs-with-new-samples, not population size).
+//!   predictor refits (dirty set only), gain-table builds, allocation,
+//!   placement diffs, job advancement — reporting whole-epoch latency
+//!   percentiles plus the refit / gain-build / allocate split and
+//!   refits-per-epoch (which tracks jobs-with-new-samples, not
+//!   population size). [`EpochLoopConfig::threads`] selects the epoch
+//!   pipeline: `1` is the serial reference path, `> 1` shards the refits
+//!   and gain-table builds across workers (bit-identical results for
+//!   deterministic policies), and the sweep scales to 8000–16000 jobs.
 
 use super::report::{render_table, ExpOutput};
 use crate::cluster::{ClusterSpec, CostModel};
@@ -311,6 +315,11 @@ pub struct EpochLoopConfig {
     /// ([`CoordinatorConfig::refit_amortization`]): jobs whose newest
     /// samples the fitted curve already explains defer their refit.
     pub refit_amortization: bool,
+    /// Worker threads for the epoch pipeline
+    /// ([`CoordinatorConfig::threads`]): `0` = available parallelism,
+    /// `1` = the serial reference path (no sharded refits, no
+    /// materialized gain tables).
+    pub threads: usize,
 }
 
 /// End-to-end epoch-latency measurements from one [`epoch_loop_cost`] run.
@@ -324,6 +333,10 @@ pub struct EpochLoopCost {
     /// Predictor-sync (selective refit) wall-clock per measured epoch
     /// (ms) — the other dominant term of the epoch bill.
     pub refit_millis: Vec<f64>,
+    /// Gain-table build wall-clock per measured epoch (ms). Zero on the
+    /// serial reference path (`threads: 1`), which evaluates gain oracles
+    /// inside the allocator instead of materializing them.
+    pub gain_millis: Vec<f64>,
     /// Curve refits actually performed per measured epoch.
     pub refits: Vec<f64>,
     /// Dirty-set size (jobs with new samples) per measured epoch.
@@ -360,6 +373,16 @@ impl EpochLoopCost {
     /// Refit-latency percentile (ms); NaN with no epochs.
     pub fn refit_percentile_millis(&self, q: f64) -> f64 {
         crate::util::stats::percentile(&self.refit_millis, q)
+    }
+
+    /// Mean gain-table build latency (ms).
+    pub fn mean_gain_millis(&self) -> f64 {
+        crate::util::stats::mean(&self.gain_millis)
+    }
+
+    /// Gain-table build latency percentile (ms); NaN with no epochs.
+    pub fn gain_percentile_millis(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.gain_millis, q)
     }
 
     /// Mean refits per measured epoch — with selective sync this tracks
@@ -415,6 +438,7 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
         cluster: spec,
         epoch_secs: EPOCH_SECS,
         refit_amortization: cfg.refit_amortization,
+        threads: cfg.threads,
         ..Default::default()
     };
     let mut coord = Coordinator::new(coord_cfg, Box::new(SlaqPolicy::new()));
@@ -451,6 +475,7 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
         let record = coord.last_epoch().expect("epoch just ran");
         cost.sched_millis.push(record.sched_nanos as f64 / 1e6);
         cost.refit_millis.push(record.refit_nanos as f64 / 1e6);
+        cost.gain_millis.push(record.gain_nanos as f64 / 1e6);
         cost.refits.push(record.refits as f64);
         cost.dirty_jobs.push(record.dirty_jobs as f64);
         active_sum += coord.job_counts().1;
@@ -462,22 +487,29 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
 }
 
 /// End-to-end churn sweep: whole-epoch latency percentiles across
-/// population sizes, driven through the full coordinator loop.
+/// population sizes, driven through the full coordinator loop at the
+/// given worker-thread count (`0` = available parallelism, `1` = the
+/// serial reference path).
 pub fn churn_epoch_loop(
     jobs_list: &[usize],
     cores: u32,
     churn_per_epoch: usize,
     epochs: usize,
+    threads: usize,
 ) -> ExpOutput {
     let mut csv = Csv::new(&[
         "jobs",
         "cores",
         "churn_per_epoch",
+        "threads",
         "epoch_ms_mean",
         "epoch_ms_p50",
         "epoch_ms_p95",
         "sched_ms_mean",
         "refit_ms_mean",
+        "gain_ms_mean",
+        "gain_ms_p50",
+        "gain_ms_p95",
         "refits_mean",
         "dirty_mean",
         "mean_active",
@@ -493,17 +525,22 @@ pub fn churn_epoch_loop(
             warmup_epochs: 2,
             seed: 20818,
             refit_amortization: false,
+            threads,
         };
         let cost = epoch_loop_cost(&cfg);
         csv.row_f64(&[
             jobs as f64,
             cores as f64,
             churn_per_epoch as f64,
+            threads as f64,
             cost.mean_millis(),
             cost.percentile_millis(50.0),
             cost.percentile_millis(95.0),
             cost.mean_sched_millis(),
             cost.mean_refit_millis(),
+            cost.mean_gain_millis(),
+            cost.gain_percentile_millis(50.0),
+            cost.gain_percentile_millis(95.0),
             cost.mean_refits(),
             cost.mean_dirty(),
             cost.mean_active,
@@ -516,14 +553,17 @@ pub fn churn_epoch_loop(
             format!("{:.2} ms", cost.percentile_millis(95.0)),
             format!("{:.2} ms", cost.mean_sched_millis()),
             format!("{:.2} ms", cost.mean_refit_millis()),
+            format!("{:.2} ms", cost.mean_gain_millis()),
             format!("{:.0}/{:.0}", cost.mean_refits(), cost.mean_active),
             cost.completed.to_string(),
         ]);
     }
     let summary = format!(
         "Churn (end-to-end) — full coordinator epoch latency at {cores} cores, \
-         {churn_per_epoch} arrivals per epoch (refits are selective: \
-         jobs-with-new-samples, not population)\n{}",
+         {churn_per_epoch} arrivals per epoch, {} worker threads (refits are \
+         selective: jobs-with-new-samples, not population; the gain split is \
+         the materialized-table build, 0 on the serial path)\n{}",
+        if threads == 0 { "auto".to_string() } else { threads.to_string() },
         render_table(
             &[
                 "jobs",
@@ -532,6 +572,7 @@ pub fn churn_epoch_loop(
                 "epoch p95",
                 "alloc mean",
                 "refit mean",
+                "gain mean",
                 "refits/active",
                 "completed",
             ],
@@ -597,11 +638,13 @@ mod tests {
             warmup_epochs: 2,
             seed: 3,
             refit_amortization: false,
+            threads: 1,
         };
         let cost = epoch_loop_cost(&cfg);
         assert_eq!(cost.epoch_millis.len(), 5);
         assert_eq!(cost.sched_millis.len(), 5);
         assert_eq!(cost.refit_millis.len(), 5);
+        assert_eq!(cost.gain_millis.len(), 5);
         assert_eq!(cost.refits.len(), 5);
         assert_eq!(cost.arrived, 30);
         assert!(cost.mean_millis() > 0.0 && cost.mean_millis() < 60_000.0);
@@ -609,6 +652,8 @@ mod tests {
         // subsets of the epoch.
         assert!(cost.mean_sched_millis() <= cost.mean_millis());
         assert!(cost.mean_refit_millis() <= cost.mean_millis());
+        // Serial reference path: no materialized tables, no gain split.
+        assert_eq!(cost.mean_gain_millis(), 0.0);
         // The long-lived population stays active throughout.
         assert!(
             cost.mean_active >= 100.0,
@@ -627,6 +672,31 @@ mod tests {
     }
 
     #[test]
+    fn parallel_epoch_loop_records_the_gain_split() {
+        let cfg = EpochLoopConfig {
+            jobs: 60,
+            cores: 256,
+            churn_per_epoch: 3,
+            epochs: 4,
+            warmup_epochs: 1,
+            seed: 5,
+            refit_amortization: false,
+            threads: 2,
+        };
+        let cost = epoch_loop_cost(&cfg);
+        assert_eq!(cost.gain_millis.len(), 4);
+        // The parallel pipeline materializes tables every epoch; the
+        // build is timed (it may round to 0 ms, but the split must be a
+        // strict subset of the epoch and its percentiles well-formed).
+        assert!(cost.mean_gain_millis() <= cost.mean_millis());
+        assert!(!cost.gain_percentile_millis(50.0).is_nan());
+        assert!(!cost.gain_percentile_millis(95.0).is_nan());
+        assert!(
+            cost.gain_percentile_millis(50.0) <= cost.gain_percentile_millis(95.0) + 1e-12
+        );
+    }
+
+    #[test]
     fn amortized_refits_never_exceed_exact_refits() {
         let mk = |amortize: bool| EpochLoopConfig {
             jobs: 80,
@@ -636,6 +706,7 @@ mod tests {
             warmup_epochs: 3,
             seed: 9,
             refit_amortization: amortize,
+            threads: 1,
         };
         let exact = epoch_loop_cost(&mk(false));
         let amortized = epoch_loop_cost(&mk(true));
@@ -688,37 +759,48 @@ mod tests {
         for q in [0.0, 1.0, 50.0, 100.0] {
             assert!(empty.percentile_millis(q).is_nan(), "q={q}");
             assert!(empty.refit_percentile_millis(q).is_nan(), "q={q}");
+            assert!(empty.gain_percentile_millis(q).is_nan(), "q={q}");
         }
         assert_eq!(empty.mean_millis(), 0.0);
         assert_eq!(empty.mean_refit_millis(), 0.0);
+        assert_eq!(empty.mean_gain_millis(), 0.0);
         assert_eq!(empty.mean_refits(), 0.0);
 
         let one = EpochLoopCost {
             epoch_millis: vec![3.25],
             refit_millis: vec![1.5],
+            gain_millis: vec![0.75],
             ..Default::default()
         };
         for q in [0.0, 1.0, 50.0, 100.0] {
             assert_eq!(one.percentile_millis(q), 3.25, "q={q}");
             assert_eq!(one.refit_percentile_millis(q), 1.5, "q={q}");
+            assert_eq!(one.gain_percentile_millis(q), 0.75, "q={q}");
         }
 
         let many = EpochLoopCost {
             epoch_millis: vec![10.0, 0.0],
             refit_millis: vec![2.0, 6.0],
+            gain_millis: vec![1.0, 3.0],
             ..Default::default()
         };
         assert_eq!(many.percentile_millis(0.0), 0.0);
         assert_eq!(many.percentile_millis(100.0), 10.0);
         assert!((many.percentile_millis(1.0) - 0.1).abs() < 1e-9);
         assert!((many.refit_percentile_millis(50.0) - 4.0).abs() < 1e-9);
+        assert!((many.gain_percentile_millis(50.0) - 2.0).abs() < 1e-9);
+        assert_eq!(many.gain_percentile_millis(0.0), 1.0);
+        assert_eq!(many.gain_percentile_millis(100.0), 3.0);
     }
 
     #[test]
     fn epoch_loop_output_has_one_row_per_population() {
-        let out = churn_epoch_loop(&[40, 80], 256, 3, 3);
+        let out = churn_epoch_loop(&[40, 80], 256, 3, 3, 1);
         assert_eq!(out.csv.len(), 2);
         assert_eq!(out.id, "churn_epoch");
         assert!(out.summary.contains("end-to-end"));
+        assert!(out.summary.contains("1 worker threads"));
+        let auto = churn_epoch_loop(&[40], 256, 3, 2, 0);
+        assert!(auto.summary.contains("auto worker threads"));
     }
 }

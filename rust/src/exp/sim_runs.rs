@@ -21,6 +21,12 @@ pub struct SimConfig {
     pub epoch_secs: f64,
     /// Virtual duration to simulate (seconds).
     pub duration: f64,
+    /// Worker threads for the coordinator's epoch pipeline
+    /// ([`CoordinatorConfig::threads`]): `0` = available parallelism,
+    /// `1` (the default here) = the serial reference path. Deterministic
+    /// policies produce bit-identical traces at every setting, so this
+    /// only changes wall-clock, never results.
+    pub threads: usize,
 }
 
 impl Default for SimConfig {
@@ -30,6 +36,7 @@ impl Default for SimConfig {
             cluster: ClusterSpec::paper_testbed(),
             epoch_secs: 3.0,
             duration: 3000.0,
+            threads: 1,
         }
     }
 }
@@ -41,6 +48,7 @@ pub fn run_sim_trace(cfg: &SimConfig, policy: &str) -> Trace {
         CoordinatorConfig {
             cluster: cfg.cluster,
             epoch_secs: cfg.epoch_secs,
+            threads: cfg.threads,
             ..Default::default()
         },
         policy,
@@ -239,6 +247,7 @@ impl Default for FidelityConfig {
                 cluster: ClusterSpec { nodes: 12, cores_per_node: 16 },
                 epoch_secs: 3.0,
                 duration: 1000.0,
+                threads: 1,
             },
             warmup_epochs: 40,
             checkpoint_epochs: 40,
@@ -472,6 +481,7 @@ mod tests {
             cluster: ClusterSpec { nodes: 4, cores_per_node: 16 },
             epoch_secs: 3.0,
             duration: 400.0,
+            threads: 1,
         }
     }
 
@@ -515,7 +525,14 @@ mod tests {
         // deterministically under (at least) three workload seeds. Debug
         // builds check one seed (LM refits dominate and debug is ~10x
         // slower); the CI release job (`cargo test --release -q
-        // quality_fidelity`) runs the full three-seed gate.
+        // quality_fidelity`) runs the full three-seed gate — once with
+        // `SLAQ_THREADS=1` (serial reference) and once with
+        // `SLAQ_THREADS=4` (sharded refits + materialized gain tables),
+        // which must be indistinguishable.
+        let threads: usize = std::env::var("SLAQ_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
         let seeds: &[u64] = if cfg!(debug_assertions) {
             &[20818]
         } else {
@@ -524,6 +541,7 @@ mod tests {
         for &seed in seeds {
             let mut cfg = FidelityConfig::default();
             cfg.sim.trace.seed = seed;
+            cfg.sim.threads = threads;
             let report = quality_fidelity(&cfg);
             report.assert_ok();
             assert!(report.slaq_mean_loss < report.fair_mean_loss);
@@ -533,22 +551,27 @@ mod tests {
         }
     }
 
-    #[test]
-    fn quality_fidelity_is_bit_deterministic() {
-        // Re-running the suite must reproduce every measured number
-        // exactly — the property that makes these regressions debuggable.
-        let cfg = FidelityConfig {
+    fn small_fidelity_cfg() -> FidelityConfig {
+        FidelityConfig {
             sim: SimConfig {
                 trace: TraceConfig { jobs: 16, mean_interarrival: 8.0, seed: 5 },
                 cluster: ClusterSpec { nodes: 6, cores_per_node: 16 },
                 epoch_secs: 3.0,
                 duration: 400.0,
+                threads: 1,
             },
             warmup_epochs: 20,
             checkpoint_epochs: 20,
             loss_tolerance: 1.0, // determinism is the subject, not quality
             min_paired_jobs: 0,
-        };
+        }
+    }
+
+    #[test]
+    fn quality_fidelity_is_bit_deterministic() {
+        // Re-running the suite must reproduce every measured number
+        // exactly — the property that makes these regressions debuggable.
+        let cfg = small_fidelity_cfg();
         let a = quality_fidelity(&cfg);
         let b = quality_fidelity(&cfg);
         assert_eq!(a.checkpoints, b.checkpoints);
@@ -556,6 +579,28 @@ mod tests {
         assert_eq!(a.fair_mean_loss, b.fair_mean_loss);
         assert_eq!(a.time_to, b.time_to);
         assert_eq!(a.violations, b.violations);
+    }
+
+    #[test]
+    fn quality_fidelity_is_thread_count_invariant() {
+        // The whole fidelity report — checkpoints, means, shares,
+        // time-to, violations — must be bitwise identical whether the
+        // epoch pipeline runs serial or sharded: the suite schedules with
+        // `slaq-det`, whose decision paths never consult wall clock, and
+        // the parallel stages merge in stable job-id order.
+        let serial = quality_fidelity(&small_fidelity_cfg());
+        for threads in [2usize, 4] {
+            let mut cfg = small_fidelity_cfg();
+            cfg.sim.threads = threads;
+            let par = quality_fidelity(&cfg);
+            assert_eq!(serial.checkpoints, par.checkpoints, "{threads} threads");
+            assert_eq!(serial.slaq_mean_loss, par.slaq_mean_loss, "{threads} threads");
+            assert_eq!(serial.fair_mean_loss, par.fair_mean_loss, "{threads} threads");
+            assert_eq!(serial.share_high25, par.share_high25, "{threads} threads");
+            assert_eq!(serial.share_low50, par.share_low50, "{threads} threads");
+            assert_eq!(serial.time_to, par.time_to, "{threads} threads");
+            assert_eq!(serial.violations, par.violations, "{threads} threads");
+        }
     }
 
     #[test]

@@ -27,15 +27,22 @@
 //! * [`sched::SchedContext`] — the previous epoch's grant keyed by job id;
 //!   [`sched::SlaqPolicy`] warm-starts its marginal-gain search from it
 //!   (`O(jobs)` evaluations at steady state instead of `O(capacity)`).
+//! * [`sched::GainTable`] — the epoch's materialized gain surface: every
+//!   job's predicted-gain curve evaluated once into a flat SoA arena, so
+//!   the allocator's innermost loops do O(1) lookups; built sharded
+//!   across worker threads alongside the dirty-set refits
+//!   ([`coordinator::CoordinatorConfig::threads`]), with bit-identical
+//!   results at any thread count for deterministic policies.
 //! * [`cluster::NodePool::apply_diff`] — placements update via shrink/grow
 //!   deltas only.
 //!
 //! The `churn` experiment (`slaq exp churn`, `benches/sched_scalability`)
 //! measures the incremental path against from-scratch under steady-state
-//! job turnover at 1000–4000 jobs, including the refit-vs-allocate split;
-//! the quality side is pinned by [`exp::quality_fidelity`], a seeded
+//! job turnover at 1000–16000 jobs, including the three-way
+//! refit / gain-build / allocate split and a worker-thread sweep; the
+//! quality side is pinned by [`exp::quality_fidelity`], a seeded
 //! deterministic SLAQ-vs-fair regression suite over the paper's Fig 3–5
-//! invariants.
+//! invariants, gated in CI at both ends of the thread knob.
 
 pub mod cluster;
 pub mod coordinator;

@@ -82,8 +82,9 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("reps", "3", "timing repetitions for fig 6")
         .flag("churn", "32", "jobs replaced per epoch in the churn scenario")
         .flag("churn-epochs", "12", "measured steady-state epochs for churn")
-        .flag("churn-jobs", "1000,2000,4000", "population sizes for churn")
+        .flag("churn-jobs", "1000,2000,4000,8000,16000", "population sizes for churn")
         .flag("churn-cores", "16384", "cluster capacity for churn")
+        .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
         .flag("seed", "20818", "workload seed")
         .flag("log", "info", "log level");
     let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
@@ -133,6 +134,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             cluster: ClusterSpec::paper_testbed(),
             epoch_secs: 3.0,
             duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))?,
+            threads: parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
         };
         log::info!("simulating {} jobs under slaq…", cfg.trace.jobs);
         let slaq_trace = exp::run_sim_trace(&cfg, "slaq");
@@ -174,6 +176,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             churn_cores,
             churn_rate,
             churn_epochs,
+            parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
         ));
     }
 
@@ -191,6 +194,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             cluster: ClusterSpec::paper_testbed(),
             epoch_secs: 3.0,
             duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))? / 2.0,
+            threads: parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
         };
         if wants_ablate("ablate-hints") {
             log::info!("ablation: target hints on non-convex mix…");
@@ -255,6 +259,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .flag("seed", "20818", "workload seed")
         .flag("nodes", "20", "worker nodes")
         .flag("cores-per-node", "32", "cores per node")
+        .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
         .flag("dump", "", "write the full trace as JSON to this path");
     let parsed = cli.parse(args).map_err(|e| anyhow!("{e}"))?;
     let cfg = exp::SimConfig {
@@ -269,6 +274,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         },
         epoch_secs: 3.0,
         duration: parsed.get_as::<f64>("duration").map_err(|e| anyhow!(e))?,
+        threads: parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
     };
     let trace = exp::run_sim_trace(&cfg, parsed.get("policy"));
     if !parsed.get("dump").is_empty() {

@@ -3,6 +3,15 @@
 //! `dirty` flag the coordinator's selective sync keys on), and answers
 //! "what loss will this job reach by iteration k?" queries for the
 //! allocator.
+//!
+//! The predictor is deliberately *plain owned data* — histories, fitted
+//! curves, counters; no interior mutability, no shared handles, no I/O.
+//! That makes it `Send + Sync` by construction (asserted at compile time
+//! below), which is what lets the coordinator's parallel epoch pipeline
+//! shard `&mut OnlinePredictor` rows across worker threads for the
+//! dirty-set refits and share `&OnlinePredictor` views for the gain-table
+//! build, while the job rows that own non-`Sync` loss sources stay on the
+//! coordinator thread.
 
 use super::fit::{fit_history, FitConfig, FittedCurve};
 use super::models::CurveKind;
@@ -71,6 +80,16 @@ pub struct OnlinePredictor {
 /// from the fitted curve while their mean squared prediction error stays
 /// within this factor of the fit's own weighted residual (≈ 2σ).
 const DEFER_SLACK: f64 = 4.0;
+
+// The epoch pipeline's refit shards move `&mut OnlinePredictor` across
+// scoped worker threads and its gain-table build shares `&OnlinePredictor`
+// views; both are sound exactly because the predictor is plain owned
+// data. Keep it that way — this assertion turns any future `Rc`/`RefCell`
+// regression into a compile error.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<OnlinePredictor>()
+};
 
 impl OnlinePredictor {
     /// Create a predictor for a job whose optimizer belongs to `kind`.

@@ -22,11 +22,20 @@
 //!   warm-started search seeded from the prior grant that falls back to the
 //!   from-scratch path when the job set shifted too much.
 //! * [`DecisionStats`] is the online cost model behind the warm-or-scratch
-//!   choice: EWMAs of the measured per-work-unit cost of each path. Once
-//!   both paths have been observed, the policy takes whichever the model
-//!   predicts cheaper for this epoch's churn, instead of a fixed
-//!   churn-fraction threshold. The coordinator republishes the policy's
-//!   model through [`SchedContext::decision_stats`] after every epoch.
+//!   choice: a two-term linear model per path (nanoseconds per job plus
+//!   nanoseconds per core moved), fitted online from the measured cost of
+//!   each timed decision. Once both paths have been observed, the policy
+//!   takes whichever the model predicts cheaper for this epoch's churn,
+//!   instead of a fixed churn-fraction threshold. The coordinator
+//!   republishes the policy's model through
+//!   [`SchedContext::decision_stats`] after every epoch.
+//! * [`GainTable`] is the epoch's materialized gain surface: each job's
+//!   predicted-gain curve evaluated once into a flat SoA arena so the
+//!   allocator's innermost loops do O(1) array lookups instead of
+//!   repeated virtual oracle calls. The epoch driver builds it (sharded
+//!   across worker threads) and hands it to the policy through
+//!   [`SchedContext::gain_table`]; allocations computed from the table
+//!   are bit-identical to the direct-oracle path.
 //!
 //! Policies implemented:
 //! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator, with the
@@ -91,33 +100,105 @@ impl Allocation {
     }
 }
 
-/// Online decision-cost model: EWMAs of the measured cost of the two
-/// allocation paths, in nanoseconds per *work unit* (one work unit ≈ one
-/// gain-oracle evaluation's worth of search effort).
+/// One allocation path's two-term cost model: `nanos ≈ ns_per_job · jobs
+/// + ns_per_move · moves`, fitted online by exponentially-decayed least
+/// squares over the timed decisions that took this path.
+///
+/// The decayed 2×2 normal equations are closed under a constant decay, so
+/// the whole model is five running sums plus a sample counter — `Copy`,
+/// deterministic, and solvable in O(1) with a tiny ridge term that keeps
+/// the system invertible when the observed `(jobs, moves)` pairs are
+/// collinear (in which case the split between the two coefficients is
+/// arbitrary but their predictions along the observed ray stay exact).
+#[derive(Debug, Clone, Copy, Default)]
+struct PathModel {
+    /// Decayed sums of squares/products of the regressors and target:
+    /// `Σ jobs²`, `Σ jobs·moves`, `Σ moves²`, `Σ jobs·nanos`,
+    /// `Σ moves·nanos`.
+    jj: f64,
+    jm: f64,
+    mm: f64,
+    jt: f64,
+    mt: f64,
+    samples: u64,
+}
+
+impl PathModel {
+    /// Weight multiplier applied to history per new sample (the two-term
+    /// analogue of an EWMA with α = 0.25).
+    const DECAY: f64 = 0.75;
+
+    fn observe(&mut self, jobs: u64, moves: u64, nanos: u64) {
+        let (j, m, t) = (jobs as f64, moves as f64, nanos as f64);
+        self.jj = Self::DECAY * self.jj + j * j;
+        self.jm = Self::DECAY * self.jm + j * m;
+        self.mm = Self::DECAY * self.mm + m * m;
+        self.jt = Self::DECAY * self.jt + j * t;
+        self.mt = Self::DECAY * self.mt + m * t;
+        self.samples += 1;
+    }
+
+    /// `(ns_per_job, ns_per_move)`, once at least one decision was timed.
+    fn coefficients(&self) -> Option<(f64, f64)> {
+        if self.samples == 0 {
+            return None;
+        }
+        // Ridge-regularized 2×2 solve; the ridge is relative to the
+        // regressor magnitudes so it never distorts a well-conditioned
+        // system but keeps a collinear one solvable.
+        let ridge = 1e-6 * (self.jj + self.mm) + 1e-12;
+        let (a, b, c) = (self.jj + ridge, self.jm, self.mm + ridge);
+        let det = a * c - b * b;
+        // NaN-safe: an overflowed (infinite) sum can make `det` NaN.
+        if det.is_nan() || det <= 0.0 {
+            return None;
+        }
+        let per_job = (self.jt * c - self.mt * b) / det;
+        let per_move = (self.mt * a - self.jt * b) / det;
+        // Costs are nonnegative; clamp the (rare) noise-driven negatives.
+        Some((per_job.max(0.0), per_move.max(0.0)))
+    }
+
+    fn predict(&self, jobs: u64, moves: u64) -> Option<f64> {
+        let (per_job, per_move) = self.coefficients()?;
+        Some(per_job * jobs as f64 + per_move * moves as f64)
+    }
+}
+
+/// Online decision-cost model: a two-term linear model per allocation
+/// path, `cost ≈ ns_per_job · jobs + ns_per_move · moves` — the per-job
+/// term covers seeding/estimation work that scales with the request
+/// vector, the per-move term the search work that scales with how many
+/// single-core moves the path performs (repair mismatch for the warm
+/// path, the full grantable total for a rebuild). Two terms predict the
+/// warm-vs-scratch break-even faithfully under bursty churn, where a
+/// single blended per-unit figure systematically mis-prices epochs whose
+/// job count and move count diverge.
 ///
 /// [`SlaqPolicy`] feeds the model with every timed [`Policy::allocate_ctx`]
 /// decision and consults [`DecisionStats::prefer_warm`] to choose between
 /// the warm-start repair and the from-scratch rebuild, replacing the old
 /// hard-coded "at least half the requests must carry a prior grant" rule
 /// with a threshold that adapts to where the break-even actually sits on
-/// this machine and workload.
+/// this machine and workload. Both fitted coefficients of each path are
+/// published (`warm_coefficients` / `scratch_coefficients`).
 ///
 /// ```
 /// use slaq::sched::DecisionStats;
 ///
 /// let mut model = DecisionStats::default();
-/// assert_eq!(model.prefer_warm(10, 100), None); // cold: no samples yet
-/// model.observe_warm(100, 1_000); // 10 ns per work unit
-/// model.observe_scratch(100, 2_000); // 20 ns per work unit
-/// assert_eq!(model.prefer_warm(10, 100), Some(true));
-/// assert_eq!(model.prefer_warm(1_000, 10), Some(false));
+/// assert_eq!(model.prefer_warm(100, 10, 100), None); // cold: no samples
+/// model.observe_warm(100, 10, 1_100); // cheap repair
+/// model.observe_scratch(100, 100, 4_000); // pricey rebuild
+/// assert_eq!(model.prefer_warm(100, 10, 100), Some(true));
+/// // A burst that would move ten thousand cores overwhelms the per-move
+/// // term: the rebuild is modeled cheaper.
+/// assert_eq!(model.prefer_warm(100, 10_000, 10), Some(false));
 /// ```
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DecisionStats {
-    warm_ns_per_unit: Option<f64>,
-    scratch_ns_per_unit: Option<f64>,
-    warm_samples: u64,
-    scratch_samples: u64,
+    warm: PathModel,
+    scratch: PathModel,
     /// Decisions since the warm path was last measured.
     since_warm: u64,
     /// Decisions since the from-scratch path was last measured.
@@ -125,83 +206,76 @@ pub struct DecisionStats {
 }
 
 impl DecisionStats {
-    /// EWMA weight of the newest sample.
-    const ALPHA: f64 = 0.25;
-
     /// Force a measurement of the untaken path after this many decisions
-    /// without one. The EWMAs only update for the path actually taken, so
-    /// without re-probing a single outlier (an aborted repair, an OS
+    /// without one. The models only update for the path actually taken,
+    /// so without re-probing a single outlier (an aborted repair, an OS
     /// preemption spike) could lock the model out of a path forever; the
     /// periodic probe keeps both estimates fresh at an amortized cost of
     /// one off-path decision in [`DecisionStats::REPROBE_EVERY`].
     pub const REPROBE_EVERY: u64 = 16;
 
-    fn fold(slot: &mut Option<f64>, x: f64) {
-        *slot = Some(match *slot {
-            None => x,
-            Some(v) => Self::ALPHA * x + (1.0 - Self::ALPHA) * v,
-        });
-    }
-
-    /// Fold in one measured warm-start decision (`units` of estimated
-    /// search work, `nanos` of wall clock). Aborted warm attempts should
-    /// be recorded too — wasted repair work is exactly what the model must
-    /// learn to avoid.
-    pub fn observe_warm(&mut self, units: u64, nanos: u64) {
-        if units == 0 {
+    /// Fold in one measured warm-start decision: `jobs` requests were
+    /// seeded, the repair was expected to perform `moves` single-core
+    /// moves, and the decision took `nanos` of wall clock. Aborted warm
+    /// attempts should be recorded too — wasted repair work is exactly
+    /// what the model must learn to avoid.
+    pub fn observe_warm(&mut self, jobs: u64, moves: u64, nanos: u64) {
+        if jobs == 0 && moves == 0 {
             return;
         }
-        Self::fold(&mut self.warm_ns_per_unit, nanos as f64 / units as f64);
-        self.warm_samples += 1;
+        self.warm.observe(jobs, moves, nanos);
         self.since_warm = 0;
         self.since_scratch += 1;
     }
 
-    /// Fold in one measured from-scratch decision.
-    pub fn observe_scratch(&mut self, units: u64, nanos: u64) {
-        if units == 0 {
+    /// Fold in one measured from-scratch decision (`moves` = the
+    /// grantable total the rebuild had to hand out one core at a time).
+    pub fn observe_scratch(&mut self, jobs: u64, moves: u64, nanos: u64) {
+        if jobs == 0 && moves == 0 {
             return;
         }
-        Self::fold(&mut self.scratch_ns_per_unit, nanos as f64 / units as f64);
-        self.scratch_samples += 1;
+        self.scratch.observe(jobs, moves, nanos);
         self.since_scratch = 0;
         self.since_warm += 1;
     }
 
-    /// EWMA cost of the warm path (ns per work unit), once observed.
-    pub fn warm_ns_per_unit(&self) -> Option<f64> {
-        self.warm_ns_per_unit
+    /// Fitted warm-path coefficients `(ns_per_job, ns_per_move)`.
+    pub fn warm_coefficients(&self) -> Option<(f64, f64)> {
+        self.warm.coefficients()
     }
 
-    /// EWMA cost of the from-scratch path (ns per work unit), once observed.
-    pub fn scratch_ns_per_unit(&self) -> Option<f64> {
-        self.scratch_ns_per_unit
+    /// Fitted from-scratch coefficients `(ns_per_job, ns_per_move)`.
+    pub fn scratch_coefficients(&self) -> Option<(f64, f64)> {
+        self.scratch.coefficients()
     }
 
     /// Warm-path decisions folded in so far.
     pub fn warm_samples(&self) -> u64 {
-        self.warm_samples
+        self.warm.samples
     }
 
     /// From-scratch decisions folded in so far.
     pub fn scratch_samples(&self) -> u64 {
-        self.scratch_samples
+        self.scratch.samples
     }
 
-    /// Predicted warm-path cost in nanoseconds for `units` of work.
-    pub fn predict_warm_nanos(&self, units: u64) -> Option<f64> {
-        self.warm_ns_per_unit.map(|c| c * units as f64)
+    /// Predicted warm-path cost (ns) for an epoch with `jobs` requests
+    /// and `moves` repair moves.
+    pub fn predict_warm_nanos(&self, jobs: u64, moves: u64) -> Option<f64> {
+        self.warm.predict(jobs, moves)
     }
 
-    /// Predicted from-scratch cost in nanoseconds for `units` of work.
-    pub fn predict_scratch_nanos(&self, units: u64) -> Option<f64> {
-        self.scratch_ns_per_unit.map(|c| c * units as f64)
+    /// Predicted from-scratch cost (ns) for an epoch with `jobs` requests
+    /// and a grantable total of `moves` cores.
+    pub fn predict_scratch_nanos(&self, jobs: u64, moves: u64) -> Option<f64> {
+        self.scratch.predict(jobs, moves)
     }
 
     /// The adaptive threshold: `Some(true)` when the modeled warm-start
-    /// cost for `warm_units` of repair work undercuts the modeled
-    /// from-scratch cost for `scratch_units` of rebuild work, `None` while
-    /// the model is too cold to say (callers fall back to a static prior).
+    /// cost (`jobs` requests, `warm_moves` repair moves) undercuts the
+    /// modeled from-scratch cost (`jobs` requests, `scratch_moves` grant
+    /// moves), `None` while the model is too cold to say (callers fall
+    /// back to a static prior).
     ///
     /// Two probe rules keep the model two-sided: a path that has gone
     /// [`DecisionStats::REPROBE_EVERY`] decisions without a measurement is
@@ -209,8 +283,8 @@ impl DecisionStats {
     /// was never measured at all because the cold-start prior consistently
     /// chose the other path. Without them a stale or one-sided history
     /// could lock the scheduler out of a path permanently.
-    pub fn prefer_warm(&self, warm_units: u64, scratch_units: u64) -> Option<bool> {
-        match (self.warm_ns_per_unit, self.scratch_ns_per_unit) {
+    pub fn prefer_warm(&self, jobs: u64, warm_moves: u64, scratch_moves: u64) -> Option<bool> {
+        match (self.warm.predict(jobs, warm_moves), self.scratch.predict(jobs, scratch_moves)) {
             (None, None) => None,
             // Bootstrap: one side has never been measured; sample it after
             // REPROBE_EVERY one-sided decisions so the model can engage.
@@ -219,7 +293,7 @@ impl DecisionStats {
             }
             (None, Some(_)) => (self.since_warm >= Self::REPROBE_EVERY).then_some(true),
             (Some(w), Some(s)) => {
-                let model_says_warm = w * warm_units as f64 <= s * scratch_units as f64;
+                let model_says_warm = w <= s;
                 if model_says_warm && self.since_scratch >= Self::REPROBE_EVERY {
                     Some(false)
                 } else if !model_says_warm && self.since_warm >= Self::REPROBE_EVERY {
@@ -232,6 +306,215 @@ impl DecisionStats {
     }
 }
 
+/// Materialized gain table: every request's predicted-quality-gain curve
+/// evaluated once per epoch into a flat, contiguous structure-of-arrays
+/// arena — one `f64` row per job, indexed by core count up to the job's
+/// cap — so the allocator's innermost loops (the warm-start exchange
+/// repair and the from-scratch CELF heap) do O(1) array lookups instead
+/// of repeated predictor/curve evaluations through a virtual oracle.
+///
+/// Layout: row `i` (request order) occupies
+/// `values[offsets[i] .. offsets[i + 1]]`, entry `k` holding the gain at
+/// `k + 1` cores (`gain(0) = 0` by convention and is never stored). The
+/// arena is reusable scratch: [`GainTable::reset`] re-lays rows without
+/// reallocating at steady state, and the epoch pipeline fills disjoint
+/// row ranges from parallel workers via [`GainTable::shards_mut`] —
+/// every row has a preassigned slot, so the filled table (and therefore
+/// every allocation computed from it) is bit-identical at any worker
+/// count and to the direct-oracle path (property-tested in
+/// `sched/prop_tests.rs`).
+///
+/// ```
+/// use slaq::sched::{GainTable, JobRequest};
+///
+/// let g = |cores: u32| (cores as f64).sqrt();
+/// let requests = vec![
+///     JobRequest { id: 7, max_cores: 3, gain: &g },
+///     JobRequest { id: 9, max_cores: 2, gain: &g },
+/// ];
+/// let mut table = GainTable::new();
+/// table.build(&requests);
+/// assert!(table.is_ready());
+/// assert_eq!(table.rows(), 2);
+/// assert_eq!(table.gain(0, 0), 0.0);
+/// assert_eq!(table.gain(1, 2), 2f64.sqrt());
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct GainTable {
+    /// Flat arena of gain values (all rows, contiguous).
+    values: Vec<f64>,
+    /// Row boundaries: `rows + 1` entries once laid out, empty before.
+    offsets: Vec<usize>,
+    /// Job id per row — the identity stamp [`GainTable::matches`] checks,
+    /// so a ready table can never be misread against a different request
+    /// vector that happens to have the same length.
+    ids: Vec<u64>,
+    /// True once every row holds this epoch's values.
+    ready: bool,
+}
+
+impl GainTable {
+    /// Empty table (no arena allocated yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rows in the current layout.
+    pub fn rows(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// Entries in row `row` (the job's core cap at layout time).
+    pub fn row_len(&self, row: usize) -> usize {
+        self.offsets[row + 1] - self.offsets[row]
+    }
+
+    /// Total entries across all rows.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when no rows are laid out.
+    pub fn is_empty(&self) -> bool {
+        self.rows() == 0
+    }
+
+    /// True when the table holds a fully built snapshot for the current
+    /// epoch's request vector.
+    pub fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    /// Drop the snapshot. The arena's allocation is kept for reuse.
+    pub fn invalidate(&mut self) {
+        self.ready = false;
+    }
+
+    /// Lay out one row per `(job id, cap)` pair (in request order),
+    /// reusing the arena allocation. The table is not ready until the
+    /// rows are filled and [`GainTable::mark_ready`] is called.
+    pub fn reset(&mut self, jobs: impl IntoIterator<Item = (u64, u32)>) {
+        self.ready = false;
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.ids.clear();
+        let mut total = 0usize;
+        for (id, cap) in jobs {
+            total += cap as usize;
+            self.offsets.push(total);
+            self.ids.push(id);
+        }
+        self.values.clear();
+        self.values.resize(total, 0.0);
+    }
+
+    /// Mark the filled arena as this epoch's snapshot.
+    pub fn mark_ready(&mut self) {
+        self.ready = true;
+    }
+
+    /// True when this table is a ready snapshot for exactly this request
+    /// vector: same length, same job ids row for row, and every row at
+    /// least as long as the request's cap. This is the staleness guard a
+    /// policy must check before trusting lookups — a row count alone
+    /// would let a table built for a different, equal-length request set
+    /// be silently misread.
+    pub fn matches(&self, requests: &[JobRequest<'_>]) -> bool {
+        self.ready
+            && self.ids.len() == requests.len()
+            && requests
+                .iter()
+                .enumerate()
+                .all(|(i, r)| self.ids[i] == r.id && self.row_len(i) >= r.max_cores as usize)
+    }
+
+    /// O(1) lookup: the gain of request `row` at `cores` cores. Panics on
+    /// a lookup beyond the row's cap — reading a neighboring job's row
+    /// must never succeed silently.
+    #[inline]
+    pub fn gain(&self, row: usize, cores: u32) -> f64 {
+        if cores == 0 {
+            return 0.0;
+        }
+        let idx = self.offsets[row] + cores as usize - 1;
+        assert!(idx < self.offsets[row + 1], "gain lookup beyond row {row}'s cap");
+        self.values[idx]
+    }
+
+    /// Fill one shard produced by [`GainTable::shards_mut`]: row `r` of
+    /// `rows` takes the next `row_len(r)` entries of `slice`, entry `k`
+    /// holding `gain(r, k + 1)`. [`GainTable::build`], the parallel epoch
+    /// pipeline and the property tests all share this one definition, so
+    /// the arena layout convention lives in exactly one place.
+    pub fn fill_shard(
+        rows: std::ops::Range<usize>,
+        slice: &mut [f64],
+        row_len: impl Fn(usize) -> usize,
+        gain: impl Fn(usize, u32) -> f64,
+    ) {
+        let mut off = 0usize;
+        for r in rows {
+            let len = row_len(r);
+            for (k, slot) in slice[off..off + len].iter_mut().enumerate() {
+                *slot = gain(r, k as u32 + 1);
+            }
+            off += len;
+        }
+        debug_assert_eq!(off, slice.len(), "shard layout out of sync with row lengths");
+    }
+
+    /// Serial build: lay out and fill every row from the requests' own
+    /// gain oracles (row order = request order, row `i` capped at
+    /// `requests[i].max_cores`). The parallel epoch pipeline performs the
+    /// same fill sharded across workers via [`GainTable::shards_mut`].
+    pub fn build(&mut self, requests: &[JobRequest<'_>]) {
+        self.reset(requests.iter().map(|r| (r.id, r.max_cores)));
+        let rows = self.offsets.len().saturating_sub(1);
+        let offsets = &self.offsets;
+        Self::fill_shard(
+            0..rows,
+            &mut self.values,
+            |r| offsets[r + 1] - offsets[r],
+            |r, c| requests[r].gain.gain(c),
+        );
+        self.ready = true;
+    }
+
+    /// Split the laid-out arena into at most `shards` contiguous row
+    /// ranges (balanced by entry count) for parallel filling. Within a
+    /// shard `(rows, slice)`, row `r` occupies the next `row_len(r)`
+    /// entries of `slice` in row order.
+    pub fn shards_mut(&mut self, shards: usize) -> Vec<(std::ops::Range<usize>, &mut [f64])> {
+        let offsets = &self.offsets;
+        let rows = offsets.len().saturating_sub(1);
+        let mut rest: &mut [f64] = &mut self.values;
+        if rows == 0 {
+            return Vec::new();
+        }
+        let shards = shards.clamp(1, rows);
+        let target = (rest.len() / shards + usize::from(rest.len() % shards != 0)).max(1);
+        let mut out = Vec::with_capacity(shards);
+        let mut row = 0usize;
+        while row < rows {
+            let start_row = row;
+            row += 1;
+            if out.len() + 1 == shards {
+                row = rows; // last shard takes everything left
+            } else {
+                while row < rows && offsets[row + 1] - offsets[start_row] <= target {
+                    row += 1;
+                }
+            }
+            let len = offsets[row] - offsets[start_row];
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            out.push((start_row..row, head));
+        }
+        debug_assert!(rest.is_empty(), "shard layout left arena entries unassigned");
+        out
+    }
+}
+
 /// Persistent scheduler state carried across epochs.
 ///
 /// The context owns the previous epoch's grant keyed by stable job id, so a
@@ -239,6 +522,9 @@ impl DecisionStats {
 /// search structures. The coordinator records each epoch's outcome via
 /// [`SchedContext::record`] and evicts completed jobs with
 /// [`SchedContext::forget`]; both are O(active jobs), never O(all jobs).
+/// It also carries the epoch's materialized [`GainTable`] (when the epoch
+/// driver built one) so delta-aware policies can replace per-heap-op
+/// oracle calls with O(1) lookups.
 ///
 /// ```
 /// use slaq::sched::{Allocation, JobRequest, SchedContext};
@@ -262,6 +548,7 @@ pub struct SchedContext {
     prev: HashMap<u64, u32>,
     epoch: u64,
     stats: Option<DecisionStats>,
+    table: GainTable,
 }
 
 impl SchedContext {
@@ -272,7 +559,12 @@ impl SchedContext {
 
     /// Build a context from explicit `(job id, cores)` grants.
     pub fn from_grants(grants: impl IntoIterator<Item = (u64, u32)>) -> Self {
-        Self { prev: grants.into_iter().collect(), epoch: 1, stats: None }
+        Self {
+            prev: grants.into_iter().collect(),
+            epoch: 1,
+            stats: None,
+            table: GainTable::new(),
+        }
     }
 
     /// Number of epochs recorded so far.
@@ -297,7 +589,9 @@ impl SchedContext {
 
     /// Absorb this epoch's outcome: the grant of every request, keyed by
     /// id. Replaces the previous grant set (jobs that left the request set
-    /// drop out automatically).
+    /// drop out automatically) and invalidates the epoch's gain table —
+    /// the materialized rows describe the request vector just scheduled,
+    /// not the next one.
     pub fn record(&mut self, requests: &[JobRequest<'_>], alloc: &Allocation) {
         debug_assert_eq!(requests.len(), alloc.cores.len());
         self.prev.clear();
@@ -305,6 +599,21 @@ impl SchedContext {
             self.prev.insert(r.id, c);
         }
         self.epoch += 1;
+        self.table.invalidate();
+    }
+
+    /// This epoch's materialized gain table, when the epoch driver built
+    /// one (rows in request order). `None` on the serial reference path
+    /// and after [`SchedContext::record`] retires the epoch.
+    pub fn gain_table(&self) -> Option<&GainTable> {
+        self.table.is_ready().then_some(&self.table)
+    }
+
+    /// Mutable access to the reusable gain-table arena, for the epoch
+    /// driver that lays out and fills it before calling
+    /// [`Policy::allocate_ctx`].
+    pub fn gain_table_mut(&mut self) -> &mut GainTable {
+        &mut self.table
     }
 
     /// Evict one job (e.g. on completion) without waiting for the next
@@ -393,6 +702,16 @@ pub trait Policy: Send {
     /// every epoch. The default reports none.
     fn decision_stats(&self) -> Option<DecisionStats> {
         None
+    }
+
+    /// True when this policy reads the epoch's materialized [`GainTable`]
+    /// out of the [`SchedContext`]. The epoch driver skips the (sharded,
+    /// but still O(Σ caps)) table build entirely for policies that never
+    /// look at gains — fair/FIFO/static allocate from request shape
+    /// alone, so building them a table would be pure waste. The default
+    /// reports false; gain-driven policies override.
+    fn wants_gain_table(&self) -> bool {
+        false
     }
 }
 
@@ -507,31 +826,55 @@ mod tests {
     #[test]
     fn cost_model_prefers_the_modeled_cheaper_path() {
         let mut m = DecisionStats::default();
-        assert_eq!(m.prefer_warm(10, 100), None, "cold model must defer");
-        m.observe_warm(100, 1_000); // 10 ns/unit
-        assert_eq!(m.prefer_warm(10, 100), None, "one-sided model must defer");
-        m.observe_scratch(100, 2_000); // 20 ns/unit
-        assert_eq!(m.prefer_warm(10, 100), Some(true));
-        assert_eq!(m.prefer_warm(1_000, 10), Some(false));
+        assert_eq!(m.prefer_warm(10, 10, 100), None, "cold model must defer");
+        m.observe_warm(100, 10, 1_100);
+        assert_eq!(m.prefer_warm(10, 10, 100), None, "one-sided model must defer");
+        m.observe_scratch(100, 100, 4_000);
+        // Small repair vs a full rebuild: the warm model wins.
+        assert_eq!(m.prefer_warm(100, 10, 100), Some(true));
+        // A huge repair mismatch overwhelms the per-move term.
+        assert_eq!(m.prefer_warm(100, 10_000, 10), Some(false));
         assert_eq!(m.warm_samples(), 1);
         assert_eq!(m.scratch_samples(), 1);
-        assert_eq!(m.predict_warm_nanos(10), Some(100.0));
-        assert_eq!(m.predict_scratch_nanos(10), Some(200.0));
+        // Single-sample models reproduce the observed decision exactly
+        // (up to the ridge term).
+        let w = m.predict_warm_nanos(100, 10).unwrap();
+        assert!((w - 1_100.0).abs() < 5.0, "warm prediction {w}");
+        let s = m.predict_scratch_nanos(100, 100).unwrap();
+        assert!((s - 4_000.0).abs() < 5.0, "scratch prediction {s}");
     }
 
     #[test]
-    fn cost_model_ewma_tracks_drift() {
+    fn cost_model_separates_per_job_and_per_move_costs() {
+        // Feed decisions drawn exactly from cost = 5·jobs + 2·moves with
+        // well-spread (jobs, moves) mixes: the decayed least squares must
+        // recover both coefficients — the thing the old single-unit EWMA
+        // could not do, and the reason bursty churn (jobs steady, moves
+        // spiking) mis-priced the break-even.
         let mut m = DecisionStats::default();
-        m.observe_scratch(1, 1_000); // 1000 ns/unit
-        for _ in 0..64 {
-            m.observe_scratch(1, 100); // drifts toward 100 ns/unit
+        for (jobs, moves) in [(100u64, 0u64), (0, 100), (50, 80), (120, 10), (30, 200)] {
+            m.observe_scratch(jobs, moves, 5 * jobs + 2 * moves);
         }
-        let v = m.scratch_ns_per_unit().unwrap();
-        assert!((v - 100.0).abs() < 1.0, "EWMA stuck at {v}");
-        // Zero-unit observations are ignored rather than dividing by zero.
-        m.observe_warm(0, 123);
+        let (per_job, per_move) = m.scratch_coefficients().expect("model fitted");
+        assert!((per_job - 5.0).abs() < 0.05, "per-job {per_job}");
+        assert!((per_move - 2.0).abs() < 0.05, "per-move {per_move}");
+        let p = m.predict_scratch_nanos(60, 40).unwrap();
+        assert!((p - 380.0).abs() < 2.0, "prediction {p}");
+    }
+
+    #[test]
+    fn cost_model_decay_tracks_drift() {
+        let mut m = DecisionStats::default();
+        m.observe_scratch(1, 0, 1_000); // 1000 ns/job
+        for _ in 0..64 {
+            m.observe_scratch(1, 0, 100); // drifts toward 100 ns/job
+        }
+        let (per_job, _) = m.scratch_coefficients().unwrap();
+        assert!((per_job - 100.0).abs() < 1.0, "decayed fit stuck at {per_job}");
+        // Zero-work observations are ignored rather than fitting on noise.
+        m.observe_warm(0, 0, 123);
         assert_eq!(m.warm_samples(), 0);
-        assert_eq!(m.warm_ns_per_unit(), None);
+        assert!(m.warm_coefficients().is_none());
     }
 
     #[test]
@@ -540,41 +883,42 @@ mod tests {
         // Only the warm path is ever measured (an always-matched
         // steady-state history where the prior always picks warm).
         for _ in 0..DecisionStats::REPROBE_EVERY {
-            assert_eq!(m.prefer_warm(10, 10), None, "one-sided: defer to the prior");
-            m.observe_warm(100, 100);
+            assert_eq!(m.prefer_warm(10, 10, 10), None, "one-sided: defer to the prior");
+            m.observe_warm(100, 10, 100);
         }
         // The scratch side has never been sampled: force one measurement.
-        assert_eq!(m.prefer_warm(10, 10), Some(false));
-        m.observe_scratch(100, 100);
+        assert_eq!(m.prefer_warm(10, 10, 10), Some(false));
+        m.observe_scratch(100, 10, 100);
         // Both sides observed: the adaptive model engages.
-        assert!(m.prefer_warm(10, 10).is_some());
+        assert!(m.prefer_warm(10, 10, 10).is_some());
         assert_eq!(m.scratch_samples(), 1);
 
         // And symmetrically from a scratch-only history.
         let mut m = DecisionStats::default();
         for _ in 0..DecisionStats::REPROBE_EVERY {
-            assert_eq!(m.prefer_warm(10, 10), None);
-            m.observe_scratch(100, 100);
+            assert_eq!(m.prefer_warm(10, 10, 10), None);
+            m.observe_scratch(100, 10, 100);
         }
-        assert_eq!(m.prefer_warm(10, 10), Some(true));
+        assert_eq!(m.prefer_warm(10, 10, 10), Some(true));
     }
 
     #[test]
     fn cost_model_reprobes_the_untaken_path() {
         let mut m = DecisionStats::default();
-        m.observe_scratch(100, 100); // 1 ns/unit — scratch looks cheap
-        m.observe_warm(100, 100_000); // 1000 ns/unit — warm looks ruinous
+        m.observe_scratch(100, 10, 100); // scratch looks cheap
+        m.observe_warm(100, 10, 100_000); // warm looks ruinous
         // The model favors scratch; keep taking (and measuring) scratch.
         for _ in 0..DecisionStats::REPROBE_EVERY {
-            assert_eq!(m.prefer_warm(10, 10), Some(false));
-            m.observe_scratch(100, 100);
+            assert_eq!(m.prefer_warm(10, 10, 10), Some(false));
+            m.observe_scratch(100, 10, 100);
         }
         // The warm estimate is now stale: the model forces a re-probe …
-        assert_eq!(m.prefer_warm(10, 10), Some(true));
+        assert_eq!(m.prefer_warm(10, 10, 10), Some(true));
         // … and the fresh measurement heals the inflated estimate.
-        m.observe_warm(100, 100);
-        assert!(m.warm_ns_per_unit().unwrap() < 1000.0);
-        assert_eq!(m.prefer_warm(10, 10), Some(false), "probe counter reset");
+        m.observe_warm(100, 10, 100);
+        let healed = m.predict_warm_nanos(100, 10).unwrap();
+        assert!(healed < 100_000.0, "warm estimate still inflated: {healed}");
+        assert_eq!(m.prefer_warm(10, 10, 10), Some(false), "probe counter reset");
     }
 
     #[test]
@@ -582,11 +926,136 @@ mod tests {
         let mut ctx = SchedContext::new();
         assert!(ctx.decision_stats().is_none());
         let mut stats = DecisionStats::default();
-        stats.observe_warm(10, 50);
+        stats.observe_warm(10, 0, 50);
         ctx.record_stats(stats);
         let seen = ctx.decision_stats().expect("stats recorded");
         assert_eq!(seen.warm_samples(), 1);
-        assert_eq!(seen.warm_ns_per_unit(), Some(5.0));
+        let (per_job, _) = seen.warm_coefficients().expect("coefficients published");
+        assert!((per_job - 5.0).abs() < 0.01, "per-job {per_job}");
+    }
+
+    #[test]
+    fn gain_table_layout_and_lookup() {
+        let g = |cores: u32| cores as f64 * 1.5;
+        let reqs = vec![
+            JobRequest { id: 0, max_cores: 3, gain: &g },
+            JobRequest { id: 1, max_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 2, gain: &g },
+        ];
+        let mut t = GainTable::new();
+        assert!(t.is_empty());
+        assert!(!t.is_ready());
+        t.build(&reqs);
+        assert!(t.is_ready());
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.len(), 5);
+        assert_eq!((t.row_len(0), t.row_len(1), t.row_len(2)), (3, 0, 2));
+        assert_eq!(t.gain(0, 0), 0.0, "gain(0) is 0 by convention");
+        for c in 1..=3u32 {
+            assert_eq!(t.gain(0, c), c as f64 * 1.5);
+        }
+        assert_eq!(t.gain(2, 2), 3.0);
+        t.invalidate();
+        assert!(!t.is_ready(), "invalidation drops the snapshot");
+        assert_eq!(t.rows(), 3, "…but keeps the layout for reuse");
+    }
+
+    #[test]
+    fn gain_table_shards_partition_the_arena() {
+        let g = |cores: u32| (cores as f64).ln_1p();
+        let caps = [5u32, 1, 0, 8, 3, 3, 2];
+        let reqs: Vec<JobRequest<'_>> = caps
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| JobRequest { id: i as u64, max_cores: c, gain: &g })
+            .collect();
+        // Reference: the serial build.
+        let mut serial = GainTable::new();
+        serial.build(&reqs);
+
+        for shards in [1usize, 2, 3, 16] {
+            let mut t = GainTable::new();
+            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c)));
+            let pieces = t.shards_mut(shards);
+            assert!(pieces.len() <= shards.max(1));
+            // The ranges must partition the rows in order, and each slice
+            // must hold exactly its rows' entries — filled through the
+            // same `fill_shard` the epoch pipeline uses.
+            let mut next_row = 0usize;
+            for (rows, slice) in pieces {
+                assert_eq!(rows.start, next_row);
+                next_row = rows.end;
+                GainTable::fill_shard(rows, slice, |r| caps[r] as usize, |_, c| g(c));
+            }
+            assert_eq!(next_row, caps.len());
+            t.mark_ready();
+            assert!(t.matches(&reqs), "sharded table must stamp the same identity");
+            // Sharded fill ≡ serial build, bitwise.
+            for (r, &cap) in caps.iter().enumerate() {
+                for c in 1..=cap {
+                    assert_eq!(t.gain(r, c), serial.gain(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gain_table_identity_stamp_rejects_mismatched_requests() {
+        let g = |cores: u32| cores as f64;
+        let reqs = vec![
+            JobRequest { id: 1, max_cores: 3, gain: &g },
+            JobRequest { id: 2, max_cores: 2, gain: &g },
+        ];
+        let mut t = GainTable::new();
+        t.build(&reqs);
+        assert!(t.matches(&reqs));
+        // Same length, different id: rejected.
+        let swapped = vec![
+            JobRequest { id: 1, max_cores: 3, gain: &g },
+            JobRequest { id: 7, max_cores: 2, gain: &g },
+        ];
+        assert!(!t.matches(&swapped), "equal-length id mismatch must be rejected");
+        // Same ids but a grown cap: the row cannot cover every lookup.
+        let grown = vec![
+            JobRequest { id: 1, max_cores: 4, gain: &g },
+            JobRequest { id: 2, max_cores: 2, gain: &g },
+        ];
+        assert!(!t.matches(&grown), "a row shorter than the cap must be rejected");
+        // Different length: rejected.
+        assert!(!t.matches(&reqs[..1]));
+        // Not ready: rejected even for the original requests.
+        t.invalidate();
+        assert!(!t.matches(&reqs));
+    }
+
+    #[test]
+    #[should_panic(expected = "gain lookup beyond row")]
+    fn gain_table_lookup_beyond_cap_panics() {
+        let g = |cores: u32| cores as f64;
+        let reqs = vec![
+            JobRequest { id: 0, max_cores: 2, gain: &g },
+            JobRequest { id: 1, max_cores: 2, gain: &g },
+        ];
+        let mut t = GainTable::new();
+        t.build(&reqs);
+        // Row 0 holds 2 entries; index 3 would silently read row 1's
+        // first entry if the bound were unchecked.
+        let _ = t.gain(0, 3);
+    }
+
+    #[test]
+    fn context_gain_table_lifecycle() {
+        let g = |cores: u32| cores as f64;
+        let reqs = vec![JobRequest { id: 3, max_cores: 4, gain: &g }];
+        let mut ctx = SchedContext::new();
+        assert!(ctx.gain_table().is_none(), "no table before the driver builds one");
+        ctx.gain_table_mut().build(&reqs);
+        let t = ctx.gain_table().expect("built table is visible");
+        assert_eq!(t.gain(0, 2), 2.0);
+        // Recording the epoch retires the table: its rows describe the
+        // request vector just scheduled.
+        ctx.record(&reqs, &Allocation { cores: vec![4] });
+        assert!(ctx.gain_table().is_none(), "record() must invalidate the table");
     }
 
     #[test]

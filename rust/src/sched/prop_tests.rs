@@ -6,7 +6,10 @@
 //! * the work-conserving policies (slaq / fair / fifo) exhaust capacity or
 //!   cap out;
 //! * warm-start SLAQ is allocation-equivalent (equal total predicted gain)
-//!   to from-scratch SLAQ on identical inputs, for arbitrary prior grants.
+//!   to from-scratch SLAQ on identical inputs, for arbitrary prior grants;
+//! * the materialized gain table is a transparent view: allocations read
+//!   through [`GainTable`] rows are *bitwise* identical to allocations
+//!   read through the oracles the rows were evaluated from.
 
 use super::test_support::{check_invariants, check_work_conserving, ConcaveGain};
 use super::*;
@@ -98,6 +101,50 @@ fn warm_start_slaq_equals_from_scratch_slaq() {
             (gw - gs).abs() <= 1e-9 * gs.abs().max(1.0),
             "warm gain {gw} != scratch gain {gs} (ctx {} jobs, capacity {capacity}, caps {caps:?})",
             ctx.len(),
+        );
+    });
+}
+
+#[test]
+fn gain_table_allocation_equals_direct_oracle_allocation() {
+    // The tentpole's safety net at the sched layer: materializing the
+    // gain curves into the flat arena and allocating from O(1) lookups
+    // must be *indistinguishable* — same per-job grants, bit for bit —
+    // from evaluating the oracles inside the search, across random
+    // request sets, capacities and prior-grant contexts (which steer the
+    // decision through the warm repair, the from-scratch rebuild, and
+    // the scarce-floor path alike).
+    forall("gain table ≡ direct oracle (grants)", 80, |g| {
+        let n = g.usize_in(1, 24);
+        let gains = random_gains(g, n);
+        let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 14) as u32).collect();
+        let reqs = build(&gains, &caps);
+        let capacity = g.usize_in(0, 140) as u32;
+
+        // Random prior grants over a random subset (sometimes empty, so
+        // the first-epoch path is exercised too).
+        let mut grants = Vec::new();
+        for i in 0..n {
+            if g.bool(0.6) {
+                grants.push((i as u64, g.usize_in(0, 16) as u32));
+            }
+        }
+        let oracle_ctx = SchedContext::from_grants(grants);
+        let mut table_ctx = oracle_ctx.clone();
+        table_ctx.gain_table_mut().build(&reqs);
+
+        let mut via_table = SlaqPolicy::deterministic();
+        let a = via_table.allocate_ctx(&table_ctx, &reqs, capacity);
+        check_invariants(&reqs, capacity, &a);
+        let mut via_oracle = SlaqPolicy::deterministic();
+        let b = via_oracle.allocate_ctx(&oracle_ctx, &reqs, capacity);
+        assert_eq!(
+            a.cores, b.cores,
+            "table and oracle views diverged (capacity {capacity}, caps {caps:?})"
+        );
+        assert_eq!(
+            via_table.last_warm_start, via_oracle.last_warm_start,
+            "the two views must take the same decision path"
         );
     });
 }

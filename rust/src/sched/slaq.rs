@@ -14,6 +14,25 @@
 //! curves the lazy marginal can only shrink, so a fresh re-evaluation that
 //! still tops the heap is safe to grant — `O(C log J)` gain evaluations.
 //!
+//! ## Gain views: oracle calls or materialized tables
+//!
+//! Every search below reads gains through a *gain view* — a
+//! `Fn(request index, cores) -> f64`. On the reference path the view
+//! forwards to each request's [`super::GainModel`] oracle (a virtual call
+//! into the predictor per heap operation). When the epoch driver has
+//! materialized this epoch's [`super::GainTable`] into the
+//! [`SchedContext`], the view is an O(1) indexed load from a flat f64
+//! arena instead — better constants and cache locality in the innermost
+//! loop, with bit-identical results (the table rows are evaluated through
+//! the same oracles, once each). [`Policy::allocate_ctx`] picks the table
+//! view automatically whenever `ctx.gain_table()` matches the request
+//! vector.
+//!
+//! The policy also keeps its search scratch (the marginal heaps and the
+//! per-job gain accumulator) across calls, so a steady-state warm
+//! decision allocates nothing beyond the returned grant vector (the
+//! from-scratch path additionally builds its floor-candidate list).
+//!
 //! ## Warm start (incremental path)
 //!
 //! Between scheduling epochs the cluster state changes *incrementally*: a
@@ -42,17 +61,19 @@
 //! ## The adaptive warm-or-scratch threshold
 //!
 //! Whether the warm repair beats a from-scratch rebuild depends on how
-//! much churned: the repair pays `O(J)` to seed plus one move per core of
-//! mismatch between the seeded total and capacity, while the rebuild pays
-//! `O(J + C)`. Instead of the historical fixed rule ("warm-start only when
-//! at least half the requests carry a prior grant"), the policy keeps an
-//! online cost model ([`super::DecisionStats`]): EWMAs of the measured
-//! nanoseconds-per-work-unit of each path, fed by every timed
-//! [`Policy::allocate_ctx`] decision. Once both paths have been observed,
-//! each epoch takes whichever path the model predicts cheaper for that
-//! epoch's churn; while the model is cold, the static half-matched prior
-//! decides. The model is exposed via [`Policy::decision_stats`] and
-//! republished through [`SchedContext::decision_stats`].
+//! much churned: the repair pays a per-job seeding term plus one move per
+//! core of mismatch between the seeded total and capacity, while the
+//! rebuild pays per-job setup plus one move per grantable core. Instead
+//! of the historical fixed rule ("warm-start only when at least half the
+//! requests carry a prior grant"), the policy keeps an online two-term
+//! cost model ([`super::DecisionStats`]): per path, decayed least-squares
+//! estimates of nanoseconds-per-job and nanoseconds-per-core-moved, fed
+//! by every timed [`Policy::allocate_ctx`] decision. Once both paths have
+//! been observed, each epoch takes whichever path the model predicts
+//! cheaper for that epoch's churn; while the model is cold, the static
+//! half-matched prior decides. The model is exposed via
+//! [`Policy::decision_stats`] and republished through
+//! [`SchedContext::decision_stats`].
 //!
 //! Because the model is fed by wall-clock measurements, *which path runs*
 //! can vary between two identically-seeded runs (the total predicted gain
@@ -70,6 +91,7 @@ use std::time::Instant;
 
 /// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th
 /// core (up-heap), or of its `at_alloc`-th held core (down-heap).
+#[derive(Debug)]
 struct Entry {
     marginal: f64,
     idx: usize,
@@ -100,9 +122,9 @@ impl Ord for Entry {
 /// The paper's quality-driven allocator.
 #[derive(Debug)]
 pub struct SlaqPolicy {
-    /// Count of gain-oracle evaluations in the last `allocate` /
-    /// `allocate_ctx` call (exposed for the Fig 6 scalability analysis and
-    /// the churn benchmark).
+    /// Count of gain-view evaluations (oracle calls or table lookups) in
+    /// the last `allocate` / `allocate_ctx` call (exposed for the Fig 6
+    /// scalability analysis and the churn benchmark).
     pub last_evaluations: u64,
     /// True when the last `allocate_ctx` call took the warm-start path.
     pub last_warm_start: bool,
@@ -118,6 +140,13 @@ pub struct SlaqPolicy {
     /// request stream, never on wall-clock measurements. Reproducible
     /// simulations and equivalence properties need this.
     adaptive_threshold: bool,
+    /// Reusable search scratch: gain at the current allocation per job.
+    gain_at: Vec<f64>,
+    /// Reusable up-heap (next-core marginals); the from-scratch greedy
+    /// uses it as its single lazy heap.
+    up: BinaryHeap<Entry>,
+    /// Reusable down-heap (last-held-core marginals), warm repair only.
+    down: BinaryHeap<Reverse<Entry>>,
 }
 
 impl Default for SlaqPolicy {
@@ -128,6 +157,9 @@ impl Default for SlaqPolicy {
             cost_model: DecisionStats::default(),
             starvation_floor: true,
             adaptive_threshold: true,
+            gain_at: Vec::new(),
+            up: BinaryHeap::new(),
+            down: BinaryHeap::new(),
         }
     }
 }
@@ -157,212 +189,16 @@ impl SlaqPolicy {
         Self { starvation_floor: false, ..Self::default() }
     }
 
-    /// Warm-started allocation seeded from the previous grant. Returns
-    /// `None` when the repair loop overruns its move budget (gains shifted
-    /// too much — the caller falls back to the from-scratch path).
-    fn warm_allocate(
-        &self,
-        ctx: &SchedContext,
+    /// From-scratch greedy over an arbitrary gain view. The public
+    /// [`Policy::allocate`] wires the per-request oracles in;
+    /// [`Policy::allocate_ctx`] substitutes O(1) table lookups when the
+    /// epoch's [`super::GainTable`] is available.
+    fn scratch_allocate_with<G: Fn(usize, u32) -> f64>(
+        &mut self,
         requests: &[JobRequest<'_>],
+        gain: G,
         capacity: u32,
-        evals: &mut u64,
-    ) -> Option<Allocation> {
-        let n = requests.len();
-        let mut cores = vec![0u32; n];
-        let mut gain_at = vec![0.0f64; n];
-        let mut total: u64 = 0;
-
-        // Seed: the prior grant where one exists, the starvation floor for
-        // fresh arrivals, clamped into each job's feasible range.
-        for (i, r) in requests.iter().enumerate() {
-            if r.max_cores == 0 {
-                continue;
-            }
-            let seed = ctx.prev_grant(r.id).unwrap_or(1).clamp(1, r.max_cores);
-            cores[i] = seed;
-            total += seed as u64;
-        }
-
-        // Marginal heaps at the seeded allocation. Invariant maintained
-        // throughout: whenever `cores[i]` changes, fresh entries for job
-        // `i` are pushed into both heaps (where a move exists), so a
-        // validated pop always reflects the true extreme marginal. Stale
-        // entries are detected by `at_alloc` and re-evaluated on pop.
-        let mut up: BinaryHeap<Entry> = BinaryHeap::with_capacity(n + 1);
-        let mut down: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(n + 1);
-        for (i, r) in requests.iter().enumerate() {
-            let c = cores[i];
-            if c == 0 {
-                continue;
-            }
-            *evals += 1;
-            let g_c = r.gain.gain(c);
-            gain_at[i] = g_c;
-            if c < r.max_cores {
-                *evals += 1;
-                up.push(Entry { marginal: r.gain.gain(c + 1) - g_c, idx: i, at_alloc: c });
-            }
-            if c > 1 {
-                *evals += 1;
-                down.push(Reverse(Entry {
-                    marginal: g_c - r.gain.gain(c - 1),
-                    idx: i,
-                    at_alloc: c,
-                }));
-            }
-        }
-
-        let cap = capacity as u64;
-        // Repair budget: past this many heap operations a warm start no
-        // longer beats rebuilding, so give up and let the caller fall back.
-        let budget = 4 * n as u64 + 2 * total.abs_diff(cap) + 64;
-        let mut steps: u64 = 0;
-
-        // Phase 1 — shed: the seeded grant can exceed today's room (jobs
-        // shrank their caps, or capacity dropped). Release the cores whose
-        // loss hurts least.
-        while total > cap {
-            steps += 1;
-            if steps > budget {
-                return None;
-            }
-            let Reverse(e) = down.pop()?;
-            let i = e.idx;
-            if cores[i] <= 1 {
-                continue;
-            }
-            if e.at_alloc != cores[i] {
-                *evals += 1;
-                let m = gain_at[i] - requests[i].gain.gain(cores[i] - 1);
-                down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
-                continue;
-            }
-            let c = cores[i];
-            cores[i] = c - 1;
-            gain_at[i] -= e.marginal;
-            total -= 1;
-            // Regaining the released core would be worth exactly `e.marginal`.
-            up.push(Entry { marginal: e.marginal, idx: i, at_alloc: c - 1 });
-            if c - 1 > 1 {
-                *evals += 1;
-                let m = gain_at[i] - requests[i].gain.gain(c - 2);
-                down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: c - 1 }));
-            }
-        }
-
-        // Phase 2 — grow: plain greedy over freed/new capacity.
-        while total < cap {
-            steps += 1;
-            if steps > budget {
-                return None;
-            }
-            let Some(e) = up.pop() else { break }; // every job capped
-            let i = e.idx;
-            if cores[i] >= requests[i].max_cores {
-                continue;
-            }
-            if e.at_alloc != cores[i] {
-                *evals += 1;
-                let m = requests[i].gain.gain(cores[i] + 1) - gain_at[i];
-                up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
-                continue;
-            }
-            let c = cores[i];
-            cores[i] = c + 1;
-            gain_at[i] += e.marginal;
-            total += 1;
-            down.push(Reverse(Entry { marginal: e.marginal, idx: i, at_alloc: c + 1 }));
-            if c + 1 < requests[i].max_cores {
-                *evals += 1;
-                let m = requests[i].gain.gain(c + 2) - gain_at[i];
-                up.push(Entry { marginal: m, idx: i, at_alloc: c + 1 });
-            }
-        }
-
-        // Phase 3 — exchange: move single cores from the least valuable
-        // grant to the most valuable want until no move improves the
-        // objective. Each move strictly increases total predicted gain, so
-        // the loop terminates; for concave gains the resulting local
-        // optimum equals the from-scratch greedy optimum.
-        loop {
-            let ue = loop {
-                let Some(e) = up.pop() else { break None };
-                let i = e.idx;
-                if cores[i] >= requests[i].max_cores {
-                    continue;
-                }
-                if e.at_alloc != cores[i] {
-                    steps += 1;
-                    if steps > budget {
-                        return None;
-                    }
-                    *evals += 1;
-                    let m = requests[i].gain.gain(cores[i] + 1) - gain_at[i];
-                    up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
-                    continue;
-                }
-                break Some(e);
-            };
-            let Some(ue) = ue else { break };
-            let de = loop {
-                let Some(Reverse(e)) = down.pop() else { break None };
-                let i = e.idx;
-                if cores[i] <= 1 {
-                    continue;
-                }
-                if e.at_alloc != cores[i] {
-                    steps += 1;
-                    if steps > budget {
-                        return None;
-                    }
-                    *evals += 1;
-                    let m = gain_at[i] - requests[i].gain.gain(cores[i] - 1);
-                    down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
-                    continue;
-                }
-                break Some(e);
-            };
-            let Some(de) = de else { break };
-            if ue.idx == de.idx || ue.marginal <= de.marginal {
-                // Converged: the best possible move does not improve the
-                // objective. (For a concave oracle the same job can never
-                // head both heaps with `ue > de`.)
-                break;
-            }
-            steps += 1;
-            if steps > budget {
-                return None;
-            }
-            let (a, b) = (ue.idx, de.idx);
-            cores[a] += 1;
-            gain_at[a] += ue.marginal;
-            cores[b] -= 1;
-            gain_at[b] -= de.marginal;
-            // Mirror entries are known without re-evaluating the oracle.
-            down.push(Reverse(Entry { marginal: ue.marginal, idx: a, at_alloc: cores[a] }));
-            up.push(Entry { marginal: de.marginal, idx: b, at_alloc: cores[b] });
-            if cores[a] < requests[a].max_cores {
-                *evals += 1;
-                let m = requests[a].gain.gain(cores[a] + 1) - gain_at[a];
-                up.push(Entry { marginal: m, idx: a, at_alloc: cores[a] });
-            }
-            if cores[b] > 1 {
-                *evals += 1;
-                let m = gain_at[b] - requests[b].gain.gain(cores[b] - 1);
-                down.push(Reverse(Entry { marginal: m, idx: b, at_alloc: cores[b] }));
-            }
-        }
-
-        Some(Allocation { cores })
-    }
-}
-
-impl Policy for SlaqPolicy {
-    fn name(&self) -> &'static str {
-        if self.adaptive_threshold { "slaq" } else { "slaq-det" }
-    }
-
-    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+    ) -> Allocation {
         self.last_warm_start = false;
         let mut evals: u64 = 0;
         let n = requests.len();
@@ -390,7 +226,7 @@ impl Policy for SlaqPolicy {
                 .iter()
                 .map(|&i| {
                     evals += 1;
-                    (requests[i].gain.gain(1), i)
+                    (gain(i, 1), i)
                 })
                 .collect();
             by_gain.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal));
@@ -401,9 +237,10 @@ impl Policy for SlaqPolicy {
             return Allocation { cores };
         }
 
-        // Phase 2 — greedy marginal gains with a lazy heap.
-        let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(n);
-        let mut gain_at = vec![0.0f64; n]; // gain at current allocation
+        // Phase 2 — greedy marginal gains with a lazy heap (reused scratch).
+        self.up.clear();
+        self.gain_at.clear();
+        self.gain_at.resize(n, 0.0);
         for i in 0..n {
             if (self.starvation_floor && cores[i] == 0) || cores[i] >= requests[i].max_cores {
                 continue;
@@ -412,16 +249,16 @@ impl Policy for SlaqPolicy {
                 0.0 // gain(0) = 0 by convention (no-floor mode)
             } else {
                 evals += 1;
-                requests[i].gain.gain(cores[i])
+                gain(i, cores[i])
             };
             evals += 1;
-            let g2 = requests[i].gain.gain(cores[i] + 1);
-            gain_at[i] = g1;
-            heap.push(Entry { marginal: g2 - g1, idx: i, at_alloc: cores[i] });
+            let g2 = gain(i, cores[i] + 1);
+            self.gain_at[i] = g1;
+            self.up.push(Entry { marginal: g2 - g1, idx: i, at_alloc: cores[i] });
         }
 
         while remaining > 0 {
-            let top = match heap.pop() {
+            let top = match self.up.pop() {
                 Some(e) => e,
                 None => break, // every job capped
             };
@@ -430,23 +267,21 @@ impl Policy for SlaqPolicy {
                 // Stale: re-evaluate at the current allocation and re-push.
                 if cores[i] < requests[i].max_cores {
                     evals += 1;
-                    let g2 = requests[i].gain.gain(cores[i] + 1);
-                    heap.push(Entry {
-                        marginal: g2 - gain_at[i],
-                        idx: i,
-                        at_alloc: cores[i],
-                    });
+                    let g2 = gain(i, cores[i] + 1);
+                    let m = g2 - self.gain_at[i];
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
                 }
                 continue;
             }
             // Grant one core.
             cores[i] += 1;
             remaining -= 1;
-            gain_at[i] += top.marginal;
+            self.gain_at[i] += top.marginal;
             if cores[i] < requests[i].max_cores {
                 evals += 1;
-                let g2 = requests[i].gain.gain(cores[i] + 1);
-                heap.push(Entry { marginal: g2 - gain_at[i], idx: i, at_alloc: cores[i] });
+                let g2 = gain(i, cores[i] + 1);
+                let m = g2 - self.gain_at[i];
+                self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
             }
         }
 
@@ -454,29 +289,236 @@ impl Policy for SlaqPolicy {
         Allocation { cores }
     }
 
-    fn allocate_ctx(
+    /// Warm-started allocation seeded from the previous grant, over an
+    /// arbitrary gain view. Returns `None` when the repair loop overruns
+    /// its move budget (gains shifted too much — the caller falls back to
+    /// the from-scratch path).
+    fn warm_allocate_with<G: Fn(usize, u32) -> f64>(
         &mut self,
         ctx: &SchedContext,
         requests: &[JobRequest<'_>],
+        gain: G,
+        capacity: u32,
+        evals: &mut u64,
+    ) -> Option<Allocation> {
+        let n = requests.len();
+        let mut cores = vec![0u32; n];
+        self.gain_at.clear();
+        self.gain_at.resize(n, 0.0);
+        let mut total: u64 = 0;
+
+        // Seed: the prior grant where one exists, the starvation floor for
+        // fresh arrivals, clamped into each job's feasible range.
+        for (i, r) in requests.iter().enumerate() {
+            if r.max_cores == 0 {
+                continue;
+            }
+            let seed = ctx.prev_grant(r.id).unwrap_or(1).clamp(1, r.max_cores);
+            cores[i] = seed;
+            total += seed as u64;
+        }
+
+        // Marginal heaps at the seeded allocation (reused scratch).
+        // Invariant maintained throughout: whenever `cores[i]` changes,
+        // fresh entries for job `i` are pushed into both heaps (where a
+        // move exists), so a validated pop always reflects the true
+        // extreme marginal. Stale entries are detected by `at_alloc` and
+        // re-evaluated on pop.
+        self.up.clear();
+        self.down.clear();
+        for (i, r) in requests.iter().enumerate() {
+            let c = cores[i];
+            if c == 0 {
+                continue;
+            }
+            *evals += 1;
+            let g_c = gain(i, c);
+            self.gain_at[i] = g_c;
+            if c < r.max_cores {
+                *evals += 1;
+                let m = gain(i, c + 1) - g_c;
+                self.up.push(Entry { marginal: m, idx: i, at_alloc: c });
+            }
+            if c > 1 {
+                *evals += 1;
+                let m = g_c - gain(i, c - 1);
+                self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: c }));
+            }
+        }
+
+        let cap = capacity as u64;
+        // Repair budget: past this many heap operations a warm start no
+        // longer beats rebuilding, so give up and let the caller fall back.
+        let budget = 4 * n as u64 + 2 * total.abs_diff(cap) + 64;
+        let mut steps: u64 = 0;
+
+        // Phase 1 — shed: the seeded grant can exceed today's room (jobs
+        // shrank their caps, or capacity dropped). Release the cores whose
+        // loss hurts least.
+        while total > cap {
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let Reverse(e) = self.down.pop()?;
+            let i = e.idx;
+            if cores[i] <= 1 {
+                continue;
+            }
+            if e.at_alloc != cores[i] {
+                *evals += 1;
+                let m = self.gain_at[i] - gain(i, cores[i] - 1);
+                self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                continue;
+            }
+            let c = cores[i];
+            cores[i] = c - 1;
+            self.gain_at[i] -= e.marginal;
+            total -= 1;
+            // Regaining the released core would be worth exactly `e.marginal`.
+            self.up.push(Entry { marginal: e.marginal, idx: i, at_alloc: c - 1 });
+            if c - 1 > 1 {
+                *evals += 1;
+                let m = self.gain_at[i] - gain(i, c - 2);
+                self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: c - 1 }));
+            }
+        }
+
+        // Phase 2 — grow: plain greedy over freed/new capacity.
+        while total < cap {
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let Some(e) = self.up.pop() else { break }; // every job capped
+            let i = e.idx;
+            if cores[i] >= requests[i].max_cores {
+                continue;
+            }
+            if e.at_alloc != cores[i] {
+                *evals += 1;
+                let m = gain(i, cores[i] + 1) - self.gain_at[i];
+                self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                continue;
+            }
+            let c = cores[i];
+            cores[i] = c + 1;
+            self.gain_at[i] += e.marginal;
+            total += 1;
+            self.down.push(Reverse(Entry { marginal: e.marginal, idx: i, at_alloc: c + 1 }));
+            if c + 1 < requests[i].max_cores {
+                *evals += 1;
+                let m = gain(i, c + 2) - self.gain_at[i];
+                self.up.push(Entry { marginal: m, idx: i, at_alloc: c + 1 });
+            }
+        }
+
+        // Phase 3 — exchange: move single cores from the least valuable
+        // grant to the most valuable want until no move improves the
+        // objective. Each move strictly increases total predicted gain, so
+        // the loop terminates; for concave gains the resulting local
+        // optimum equals the from-scratch greedy optimum.
+        loop {
+            let ue = loop {
+                let Some(e) = self.up.pop() else { break None };
+                let i = e.idx;
+                if cores[i] >= requests[i].max_cores {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    steps += 1;
+                    if steps > budget {
+                        return None;
+                    }
+                    *evals += 1;
+                    let m = gain(i, cores[i] + 1) - self.gain_at[i];
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                    continue;
+                }
+                break Some(e);
+            };
+            let Some(ue) = ue else { break };
+            let de = loop {
+                let Some(Reverse(e)) = self.down.pop() else { break None };
+                let i = e.idx;
+                if cores[i] <= 1 {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    steps += 1;
+                    if steps > budget {
+                        return None;
+                    }
+                    *evals += 1;
+                    let m = self.gain_at[i] - gain(i, cores[i] - 1);
+                    self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                    continue;
+                }
+                break Some(e);
+            };
+            let Some(de) = de else { break };
+            if ue.idx == de.idx || ue.marginal <= de.marginal {
+                // Converged: the best possible move does not improve the
+                // objective. (For a concave oracle the same job can never
+                // head both heaps with `ue > de`.)
+                break;
+            }
+            steps += 1;
+            if steps > budget {
+                return None;
+            }
+            let (a, b) = (ue.idx, de.idx);
+            cores[a] += 1;
+            self.gain_at[a] += ue.marginal;
+            cores[b] -= 1;
+            self.gain_at[b] -= de.marginal;
+            // Mirror entries are known without re-evaluating the oracle.
+            self.down.push(Reverse(Entry { marginal: ue.marginal, idx: a, at_alloc: cores[a] }));
+            self.up.push(Entry { marginal: de.marginal, idx: b, at_alloc: cores[b] });
+            if cores[a] < requests[a].max_cores {
+                *evals += 1;
+                let m = gain(a, cores[a] + 1) - self.gain_at[a];
+                self.up.push(Entry { marginal: m, idx: a, at_alloc: cores[a] });
+            }
+            if cores[b] > 1 {
+                *evals += 1;
+                let m = self.gain_at[b] - gain(b, cores[b] - 1);
+                self.down.push(Reverse(Entry { marginal: m, idx: b, at_alloc: cores[b] }));
+            }
+        }
+
+        Some(Allocation { cores })
+    }
+
+    /// The delta-aware decision over an arbitrary gain view: estimate both
+    /// paths' work, consult the adaptive cost model (or the static prior),
+    /// run the chosen search, and feed the measured cost back.
+    fn allocate_ctx_with<G: Fn(usize, u32) -> f64 + Copy>(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        gain: G,
         capacity: u32,
     ) -> Allocation {
         if requests.is_empty() || capacity == 0 || !self.starvation_floor || ctx.is_empty() {
-            return self.allocate(requests, capacity);
+            return self.scratch_allocate_with(requests, gain, capacity);
         }
         let eligible = requests.iter().filter(|r| r.max_cores > 0).count() as u64;
         if eligible > capacity as u64 {
             // Scarce-floor regime: the from-scratch top-k path handles it.
-            return self.allocate(requests, capacity);
+            return self.scratch_allocate_with(requests, gain, capacity);
         }
 
-        // Work estimates for the two paths, in gain-evaluation-sized
-        // units. The warm repair pays O(J) to seed plus one move per core
-        // of mismatch between the seeded total and the grantable total; a
-        // rebuild pays O(J + grantable). Both searches stop at the jobs'
-        // combined caps when those bind before capacity does, so the
-        // grantable total is min(capacity, Σ caps). `seeded` mirrors the
-        // warm path's seeding rule exactly (prior grant where one exists,
-        // the floor otherwise, clamped into the job's feasible range).
+        // Work estimates for the two paths. Both pay a per-job term (the
+        // warm repair to seed, the rebuild to set up its heap); the move
+        // terms differ: the repair performs one move per core of mismatch
+        // between the seeded total and the grantable total, the rebuild
+        // hands out every grantable core one move at a time. Both searches
+        // stop at the jobs' combined caps when those bind before capacity
+        // does, so the grantable total is min(capacity, Σ caps). `seeded`
+        // mirrors the warm path's seeding rule exactly (prior grant where
+        // one exists, the floor otherwise, clamped into the job's feasible
+        // range).
         let mut matched = 0usize;
         let mut seeded: u64 = 0;
         let mut caps_total: u64 = 0;
@@ -493,34 +535,34 @@ impl Policy for SlaqPolicy {
         }
         let n = requests.len() as u64;
         let grantable = (capacity as u64).min(caps_total);
-        let warm_units = n + seeded.abs_diff(grantable);
-        let scratch_units = n + grantable;
+        let warm_moves = seeded.abs_diff(grantable);
+        let scratch_moves = grantable;
 
         // Adaptive threshold: once both paths have measured costs, take
-        // the path the model predicts cheaper for this epoch's churn.
-        // While the model is cold (or the policy is the deterministic
-        // variant), the static prior decides (warm-start only when at
-        // least half the requests carry a prior grant).
+        // the path the two-term model predicts cheaper for this epoch's
+        // churn. While the model is cold (or the policy is the
+        // deterministic variant), the static prior decides (warm-start
+        // only when at least half the requests carry a prior grant).
         let try_warm = if self.adaptive_threshold {
             self.cost_model
-                .prefer_warm(warm_units, scratch_units)
+                .prefer_warm(n, warm_moves, scratch_moves)
                 .unwrap_or(matched * 2 >= requests.len())
         } else {
             matched * 2 >= requests.len()
         };
         if !try_warm {
             let start = Instant::now();
-            let alloc = self.allocate(requests, capacity);
+            let alloc = self.scratch_allocate_with(requests, gain, capacity);
             self.cost_model
-                .observe_scratch(scratch_units, start.elapsed().as_nanos() as u64);
+                .observe_scratch(n, scratch_moves, start.elapsed().as_nanos() as u64);
             return alloc;
         }
 
         let mut evals = 0u64;
         let start = Instant::now();
-        if let Some(alloc) = self.warm_allocate(ctx, requests, capacity, &mut evals) {
+        if let Some(alloc) = self.warm_allocate_with(ctx, requests, gain, capacity, &mut evals) {
             self.cost_model
-                .observe_warm(warm_units, start.elapsed().as_nanos() as u64);
+                .observe_warm(n, warm_moves, start.elapsed().as_nanos() as u64);
             self.last_evaluations = evals;
             self.last_warm_start = true;
             return alloc;
@@ -529,17 +571,48 @@ impl Policy for SlaqPolicy {
         // work to the warm model so the threshold learns from it, then
         // rebuild.
         self.cost_model
-            .observe_warm(warm_units, start.elapsed().as_nanos() as u64);
+            .observe_warm(n, warm_moves, start.elapsed().as_nanos() as u64);
         let start = Instant::now();
-        let alloc = self.allocate(requests, capacity);
+        let alloc = self.scratch_allocate_with(requests, gain, capacity);
         self.cost_model
-            .observe_scratch(scratch_units, start.elapsed().as_nanos() as u64);
+            .observe_scratch(n, scratch_moves, start.elapsed().as_nanos() as u64);
         self.last_evaluations += evals; // count the aborted warm attempt too
         alloc
+    }
+}
+
+impl Policy for SlaqPolicy {
+    fn name(&self) -> &'static str {
+        if self.adaptive_threshold { "slaq" } else { "slaq-det" }
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        self.scratch_allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity)
+    }
+
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        // Prefer the epoch's materialized gain table when its identity
+        // stamp matches this request vector (same job ids, row for row):
+        // O(1) arena loads in the innermost loops, bit-identical to the
+        // oracle path.
+        if let Some(table) = ctx.gain_table().filter(|t| t.matches(requests)) {
+            self.allocate_ctx_with(ctx, requests, |i, c| table.gain(i, c), capacity)
+        } else {
+            self.allocate_ctx_with(ctx, requests, |i, c| requests[i].gain.gain(c), capacity)
+        }
     }
 
     fn decision_stats(&self) -> Option<DecisionStats> {
         Some(self.cost_model)
+    }
+
+    fn wants_gain_table(&self) -> bool {
+        true
     }
 }
 
@@ -873,8 +946,8 @@ mod tests {
         // Every request matches, so the static prior would warm-start —
         // but the primed model says the warm path is ruinously expensive.
         let mut p = SlaqPolicy::new();
-        p.cost_model.observe_warm(1, 1_000_000);
-        p.cost_model.observe_scratch(1_000_000, 1);
+        p.cost_model.observe_warm(8, 8, 8_000_000);
+        p.cost_model.observe_scratch(8, 64, 72);
         let a = p.allocate_ctx(&ctx, &rs, 64);
         assert!(!p.last_warm_start, "model predicts scratch cheaper");
         check_invariants(&rs, 64, &a);
@@ -882,8 +955,8 @@ mod tests {
         // The other direction: only 1 of 8 requests matches (the static
         // prior would rebuild), but the model says repair is nearly free.
         let mut q = SlaqPolicy::new();
-        q.cost_model.observe_warm(1_000_000, 1);
-        q.cost_model.observe_scratch(1, 1_000_000);
+        q.cost_model.observe_warm(8, 64, 72);
+        q.cost_model.observe_scratch(8, 64, 8_000_000);
         let ctx2 = SchedContext::from_grants([(0u64, 4u32)]);
         let b = q.allocate_ctx(&ctx2, &rs, 64);
         assert!(q.last_warm_start, "model predicts warm cheaper");
@@ -930,8 +1003,8 @@ mod tests {
         // request matches → warm), and two runs must agree bitwise.
         let mut p = SlaqPolicy::deterministic();
         assert_eq!(p.name(), "slaq-det");
-        p.cost_model.observe_warm(1, 1_000_000);
-        p.cost_model.observe_scratch(1_000_000, 1);
+        p.cost_model.observe_warm(8, 8, 8_000_000);
+        p.cost_model.observe_scratch(8, 64, 72);
         let a = p.allocate_ctx(&ctx, &rs, 64);
         assert!(p.last_warm_start, "static prior must decide, not the model");
         check_invariants(&rs, 64, &a);
@@ -939,6 +1012,73 @@ mod tests {
         let mut q = SlaqPolicy::deterministic();
         let b = q.allocate_ctx(&ctx, &rs, 64);
         assert_eq!(a.cores, b.cores, "identical inputs must give identical grants");
+    }
+
+    #[test]
+    fn gain_table_view_matches_direct_oracle_calls() {
+        // Same requests, same context — one policy reads gains through the
+        // materialized table, the other through the oracles. The grants
+        // must agree bitwise on both the warm and the from-scratch path.
+        let gains: Vec<ConcaveGain> = (0..12)
+            .map(|i| ConcaveGain { scale: 0.4 + (i % 5) as f64, rate: 0.1 + 0.05 * (i % 3) as f64 })
+            .collect();
+        let caps: Vec<u32> = (0..12).map(|i| 4 + (i % 7) as u32).collect();
+        let rs = reqs(&gains, &caps);
+
+        // Warm path: a context with matching prior grants.
+        let mut seed_policy = SlaqPolicy::deterministic();
+        let seed = seed_policy.allocate(&rs, 40);
+        let mut oracle_ctx = SchedContext::new();
+        oracle_ctx.record(&rs, &seed);
+        let mut table_ctx = oracle_ctx.clone();
+        table_ctx.gain_table_mut().build(&rs);
+        assert!(table_ctx.gain_table().is_some());
+
+        let mut via_table = SlaqPolicy::deterministic();
+        let a = via_table.allocate_ctx(&table_ctx, &rs, 40);
+        let mut via_oracle = SlaqPolicy::deterministic();
+        let b = via_oracle.allocate_ctx(&oracle_ctx, &rs, 40);
+        assert!(via_table.last_warm_start && via_oracle.last_warm_start);
+        assert_eq!(a.cores, b.cores, "table warm path diverged from oracle");
+
+        // From-scratch path: a disjoint context forces the fallback.
+        let disjoint = SchedContext::from_grants((500..512).map(|i| (i, 3)));
+        let mut table_scratch_ctx = disjoint.clone();
+        table_scratch_ctx.gain_table_mut().build(&rs);
+        let mut p1 = SlaqPolicy::deterministic();
+        let c = p1.allocate_ctx(&table_scratch_ctx, &rs, 40);
+        let mut p2 = SlaqPolicy::deterministic();
+        let d = p2.allocate_ctx(&disjoint, &rs, 40);
+        assert!(!p1.last_warm_start && !p2.last_warm_start);
+        assert_eq!(c.cores, d.cores, "table scratch path diverged from oracle");
+
+        // A table whose rows don't match the request vector is ignored
+        // rather than misread.
+        let short = &rs[..6];
+        let mut stale = SchedContext::new();
+        stale.gain_table_mut().build(&rs); // 12 rows
+        let mut p3 = SlaqPolicy::deterministic();
+        let e = p3.allocate_ctx(&stale, short, 40);
+        check_invariants(short, 40, &e);
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused_across_calls() {
+        // Back-to-back decisions must produce identical results — the
+        // reused heaps/gain buffers carry no state between calls.
+        let gains: Vec<ConcaveGain> =
+            (0..20).map(|i| ConcaveGain { scale: 1.0 + (i % 4) as f64, rate: 0.25 }).collect();
+        let rs = reqs(&gains, &[12u32; 20]);
+        let mut p = SlaqPolicy::new();
+        let first = p.allocate(&rs, 100);
+        let second = p.allocate(&rs, 100);
+        assert_eq!(first.cores, second.cores);
+        // Interleave a warm call and re-check the from-scratch result.
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &first);
+        let _ = p.allocate_ctx(&ctx, &rs, 90);
+        let third = p.allocate(&rs, 100);
+        assert_eq!(first.cores, third.cores);
     }
 
     #[test]

@@ -1,0 +1,15 @@
+//! Locality scenario: rack-aware vs rack-blind placement on a multi-rack
+//! cluster, at the churn scale (4000–16000 jobs). Prints the mean rack
+//! span, cross-rack cores moved per epoch and the fidelity-style
+//! invariant verdict for each population size.
+//!
+//! Run with:  cargo run --release --example locality_placement
+
+use slaq::exp::locality_placement;
+
+fn main() {
+    // 2 zones × 8 racks over the 16384-core (512-node) churn cluster;
+    // the same sweep `slaq exp locality` runs.
+    let out = locality_placement(&[4000, 8000, 16000], 16384, 2, 8, 32, 12, 0);
+    println!("{}", out.summary);
+}

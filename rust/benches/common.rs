@@ -72,8 +72,19 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) {
 /// makes a committed snapshot auditable — it records which machine and
 /// command produced the numbers, so PR-over-PR comparisons only trust
 /// matching hosts.
+///
+/// Refuses (with `InvalidInput`) to write an empty `entries` list: a run
+/// that measured nothing must never clobber a committed snapshot with a
+/// blank file — exactly the accident that shipped an empty
+/// `BENCH_sched.json` once.
 #[allow(dead_code)]
 pub fn write_bench_json(path: &str, command: &str, stats: &[BenchStats]) -> std::io::Result<()> {
+    if stats.is_empty() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("refusing to overwrite {path} with an empty entries list"),
+        ));
+    }
     let body: Vec<String> = stats.iter().map(|s| format!("    {}", s.to_json())).collect();
     let host = format!(
         "{}-{} x{}",

@@ -18,13 +18,19 @@
 //! `epoch_loop_gain_*` the materialized gain-table build (zero at t1),
 //! and `epoch_loop_refits_per_epoch_*` reports *counts* (refits and
 //! dirty jobs per epoch, in the mean/p50 fields) — with selective sync
-//! these track jobs-with-new-samples, not the active-job count.
+//! these track jobs-with-new-samples, not the active-job count. The
+//! `placement_*_per_epoch_*` entries are the locality scenario's
+//! placement-quality counts: mean rack span and cross-rack cores moved
+//! per epoch, rack-aware vs rack-blind on a 16-rack topology.
 
 #[path = "common.rs"]
 mod common;
 
 use common::{bench_stats, write_bench_json, BenchStats};
-use slaq::exp::{churn_decision_cost, epoch_loop_cost, fig6_sched_time, ChurnConfig, EpochLoopConfig};
+use slaq::exp::{
+    churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost, ChurnConfig,
+    EpochLoopConfig, LocalityConfig,
+};
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
 use slaq::workload::SyntheticGain;
@@ -174,6 +180,51 @@ fn main() {
         let cost = epoch_cell(&mut all, 4000, 16384, 32, threads, &format!("_t{threads}"));
         if threads == 1 {
             reference_cell = Some(cost);
+        }
+    }
+
+    println!("== locality: rack-aware vs rack-blind placement (2×8 racks) ==");
+    // Placement-quality cells: mean rack span per epoch (counts, not
+    // latencies — hence the `_per_epoch` suffix; mean = mean-of-epoch-
+    // means, p50/p95 = percentiles of the per-epoch mean span), plus the
+    // cross-rack cores moved per epoch.
+    for (jobs, cores, churn) in [(4000usize, 16384u32, 32usize), (8000, 32768, 48)] {
+        let cfg = LocalityConfig {
+            jobs,
+            cores,
+            zones: 2,
+            racks_per_zone: 8,
+            churn_per_epoch: churn,
+            epochs: 10,
+            warmup_epochs: 3,
+            seed: 7,
+            threads: 0,
+        };
+        for (mode, aware) in [("aware", true), ("blind", false)] {
+            let cost = locality_cost(&cfg, aware);
+            println!(
+                "placement_{mode}_{jobs}x{cores}: mean span {:.3} (p95 {:.3}), \
+                 {:.1} cross-rack cores/epoch, {} completed, conserving: {}",
+                cost.mean_mean_span(),
+                cost.span_percentile(95.0),
+                cost.mean_cross_rack(),
+                cost.completed,
+                cost.work_conserving(),
+            );
+            all.push(BenchStats {
+                name: format!("placement_span_per_epoch_{mode}_{jobs}x{cores}"),
+                mean: cost.mean_mean_span(),
+                p50: cost.span_percentile(50.0),
+                p95: cost.span_percentile(95.0),
+                iters: cost.epochs,
+            });
+            all.push(BenchStats {
+                name: format!("placement_cross_rack_per_epoch_{mode}_{jobs}x{cores}"),
+                mean: cost.mean_cross_rack(),
+                p50: slaq::util::stats::percentile(&cost.cross_rack, 50.0),
+                p95: slaq::util::stats::percentile(&cost.cross_rack, 95.0),
+                iters: cost.epochs,
+            });
         }
     }
 

@@ -35,11 +35,34 @@ impl CostModel {
             + self.overhead_per_core * cores as f64
     }
 
+    /// [`CostModel::iter_time`] under a multiplicative locality slowdown
+    /// (see [`LocalityModel::slowdown`]). `slowdown = 1.0` is bit-for-bit
+    /// the unscaled time, so flat topologies pay nothing for the hook.
+    pub fn iter_time_scaled(&self, cores: u32, slowdown: f64) -> f64 {
+        debug_assert!(slowdown >= 1.0, "locality slowdown below 1: {slowdown}");
+        self.iter_time(cores) * slowdown
+    }
+
     /// Iterations completable in a window of `secs` seconds at `cores`
     /// cores, given `credit` seconds of leftover partial progress.
     /// Returns `(completed_iterations, new_credit)`.
     pub fn iterations_in_window(&self, secs: f64, cores: u32, credit: f64) -> (u64, f64) {
-        let t = self.iter_time(cores);
+        self.iterations_in_window_scaled(secs, cores, credit, 1.0)
+    }
+
+    /// [`CostModel::iterations_in_window`] with every iteration stretched
+    /// by the locality `slowdown` factor — the single iteration clock the
+    /// simulator uses, so fragmented placements genuinely slow
+    /// convergence (and `slowdown = 1.0` reproduces the unscaled clock
+    /// bit for bit).
+    pub fn iterations_in_window_scaled(
+        &self,
+        secs: f64,
+        cores: u32,
+        credit: f64,
+        slowdown: f64,
+    ) -> (u64, f64) {
+        let t = self.iter_time_scaled(cores, slowdown);
         let total = credit + secs;
         let n = (total / t).floor();
         // Clamp: floating-point cancellation can leave a tiny negative.
@@ -50,11 +73,27 @@ impl CostModel {
     /// `cores` cores, counting `credit` seconds of banked partial
     /// progress. The scheduler's gain oracles use the fractional form so
     /// marginal gains stay smooth when an extra core buys only part of an
-    /// iteration — this is the single definition both
-    /// `Job::iterations_achievable_f` and the coordinator's gain views
-    /// share, so the two can never drift apart.
+    /// iteration. This is the unscaled (`slowdown = 1.0`) clock;
+    /// `Job::iterations_achievable_f` uses it, while the coordinator's
+    /// gain views call [`CostModel::fractional_iterations_scaled`] with
+    /// the job's locality slowdown — on a flat topology (slowdown 1.0)
+    /// the two are bit-identical and can never drift apart.
     pub fn fractional_iterations(&self, secs: f64, cores: u32, credit: f64) -> f64 {
-        (credit + secs) / self.iter_time(cores)
+        self.fractional_iterations_scaled(secs, cores, credit, 1.0)
+    }
+
+    /// [`CostModel::fractional_iterations`] under a locality slowdown —
+    /// what the coordinator's gain views use, so the scheduler's
+    /// predicted quality-per-second genuinely feels a fragmented
+    /// placement (`slowdown = 1.0` is bit-for-bit unscaled).
+    pub fn fractional_iterations_scaled(
+        &self,
+        secs: f64,
+        cores: u32,
+        credit: f64,
+        slowdown: f64,
+    ) -> f64 {
+        (credit + secs) / self.iter_time_scaled(cores, slowdown)
     }
 
     /// The core count beyond which adding a core no longer reduces
@@ -66,6 +105,60 @@ impl CostModel {
             // d/da (W/a + o*a) = 0  =>  a = sqrt(W/o)
             ((self.work_core_secs / self.overhead_per_core).sqrt().floor() as u32).max(1)
         }
+    }
+}
+
+/// Per-iteration locality penalty: BSP iterations synchronize gradients
+/// across every worker each step, so a job whose cores straddle racks
+/// pays cross-rack bandwidth/latency on every iteration. The model is a
+/// multiplicative slowdown in the job's rack span — `1.0` at one rack,
+/// `+slowdown_per_extra_rack` per additional rack, capped at
+/// `max_slowdown` — consumed by both the simulator's iteration clock
+/// ([`CostModel::iterations_in_window_scaled`]) and the scheduler's gain
+/// views, so SLAQ's quality-per-second predictions feel fragmentation.
+///
+/// ```
+/// use slaq::cluster::LocalityModel;
+///
+/// let m = LocalityModel::default();
+/// assert_eq!(m.slowdown(0), 1.0); // unplaced
+/// assert_eq!(m.slowdown(1), 1.0); // single rack: no penalty
+/// assert!(m.slowdown(2) > 1.0);
+/// assert!(m.slowdown(100) <= m.max_slowdown);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LocalityModel {
+    /// Added fraction of iteration time per rack beyond the first.
+    pub slowdown_per_extra_rack: f64,
+    /// Cap on the total multiplicative slowdown.
+    pub max_slowdown: f64,
+}
+
+impl Default for LocalityModel {
+    /// A moderate penalty: +15% iteration time per extra rack, capped at
+    /// 2× — in the range reported for rack-crossing parameter traffic on
+    /// oversubscribed cluster networks.
+    fn default() -> Self {
+        Self { slowdown_per_extra_rack: 0.15, max_slowdown: 2.0 }
+    }
+}
+
+impl LocalityModel {
+    /// No penalty whatever the span (topology-blind execution).
+    pub fn none() -> Self {
+        Self { slowdown_per_extra_rack: 0.0, max_slowdown: 1.0 }
+    }
+
+    /// Multiplicative iteration-time factor for a placement spanning
+    /// `rack_span` racks. Spans of 0 (no cores) and 1 cost exactly 1.0,
+    /// so flat topologies — where every placement spans at most one
+    /// rack — are provably unaffected.
+    pub fn slowdown(&self, rack_span: usize) -> f64 {
+        if rack_span <= 1 {
+            return 1.0;
+        }
+        let raw = 1.0 + self.slowdown_per_extra_rack * (rack_span - 1) as f64;
+        raw.clamp(1.0, self.max_slowdown.max(1.0))
     }
 }
 
@@ -127,6 +220,50 @@ mod tests {
     #[should_panic]
     fn zero_cores_rejected() {
         CostModel::new(1.0, 1.0).iter_time(0);
+    }
+
+    #[test]
+    fn unit_slowdown_is_bit_identical_to_the_unscaled_clock() {
+        forall("slowdown 1.0 ≡ unscaled", 100, |g| {
+            let c = CostModel::new(g.f64_in(0.0, 2.0), g.f64_in(0.1, 50.0));
+            let cores = g.usize_in(1, 64) as u32;
+            let secs = g.f64_in(0.0, 50.0);
+            let credit = g.f64_in(0.0, 5.0);
+            assert_eq!(c.iter_time_scaled(cores, 1.0), c.iter_time(cores));
+            assert_eq!(
+                c.iterations_in_window_scaled(secs, cores, credit, 1.0),
+                c.iterations_in_window(secs, cores, credit)
+            );
+            assert_eq!(
+                c.fractional_iterations_scaled(secs, cores, credit, 1.0),
+                c.fractional_iterations(secs, cores, credit)
+            );
+        });
+    }
+
+    #[test]
+    fn slowdown_stretches_iterations_monotonically() {
+        let c = CostModel::new(0.0, 2.0); // 2s per iter at 1 core
+        let (n1, _) = c.iterations_in_window_scaled(8.0, 1, 0.0, 1.0);
+        let (n2, _) = c.iterations_in_window_scaled(8.0, 1, 0.0, 2.0);
+        assert_eq!((n1, n2), (4, 2), "2x slowdown halves completed iterations");
+        assert!(c.fractional_iterations_scaled(8.0, 1, 0.0, 2.0)
+            < c.fractional_iterations_scaled(8.0, 1, 0.0, 1.0));
+    }
+
+    #[test]
+    fn locality_model_penalizes_span_with_a_cap() {
+        let m = LocalityModel { slowdown_per_extra_rack: 0.25, max_slowdown: 1.6 };
+        assert_eq!(m.slowdown(0), 1.0);
+        assert_eq!(m.slowdown(1), 1.0);
+        assert!((m.slowdown(2) - 1.25).abs() < 1e-12);
+        assert!((m.slowdown(3) - 1.5).abs() < 1e-12);
+        assert_eq!(m.slowdown(4), 1.6, "cap binds");
+        assert_eq!(m.slowdown(1000), 1.6);
+        let off = LocalityModel::none();
+        for span in 0..10 {
+            assert_eq!(off.slowdown(span), 1.0);
+        }
     }
 
     #[test]

@@ -9,9 +9,19 @@
 //! 2. iterative BSP execution: one training iteration processes the whole
 //!    (partitioned) dataset, so its wall time scales like
 //!    `t(a) = t_serial + W / a` for `a` allocated cores.
+//!
+//! Beyond the paper's flat pool, the substrate models a two-level
+//! rack/zone topology ([`Topology`], [`TopologySpec`]): placement prefers
+//! racks a job already occupies ([`NodePool`]'s locality-aware grow), and
+//! a per-iteration locality penalty ([`LocalityModel`]) slows the BSP
+//! clock for placements that straddle racks. On a flat (single-rack)
+//! topology — what [`ClusterSpec::paper_testbed`] maps to — both layers
+//! are provably inert, preserving the paper's behavior bit for bit.
 
 mod cost;
 mod nodes;
+mod topology;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, LocalityModel};
 pub use nodes::{ClusterSpec, NodePool, Placement, PlacementDelta};
+pub use topology::{Topology, TopologySpec};

@@ -19,7 +19,23 @@
 //! needs to stay cheap at thousands of nodes. The indexed path is
 //! placement-equivalent to the historical sort-per-call path (property
 //! tested below against a verbatim reference implementation).
+//!
+//! ## Rack-aware placement
+//!
+//! The index is additionally bucketed **per rack** (one `free count →
+//! node set` map per rack of the pool's [`Topology`]). With locality
+//! awareness on (the default), a grow orders new-node candidates by
+//! `(rack the job already occupies, free cores, node id)`: every free
+//! node in a rack the job already holds cores on beats every node
+//! elsewhere, and within a tier the historical `(free asc, node asc)`
+//! tie-break applies — fully deterministic. On a flat (single-rack)
+//! topology every candidate shares the one rack, so the ordering
+//! degenerates to the legacy `(free, node)` walk and placement is
+//! bit-for-bit identical to the pre-topology pool (property-tested).
+//! [`PlacementDelta::cross_rack_moves`] accounts the cores a grow had to
+//! place on racks the job did not already occupy.
 
+use super::topology::Topology;
 use std::collections::{BTreeMap, BTreeSet};
 
 /// Static description of the cluster.
@@ -46,6 +62,10 @@ impl ClusterSpec {
 /// Where a job's cores live: `node -> cores held on that node`.
 pub type Placement = BTreeMap<u32, u32>;
 
+/// Free-space index shape: free-core count → nodes with exactly that
+/// many free cores (only free > 0 nodes appear; no empty buckets).
+type FreeIndex = BTreeMap<u32, BTreeSet<u32>>;
+
 /// Summary of one epoch's placement update (see [`NodePool::apply_diff`]).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PlacementDelta {
@@ -57,6 +77,10 @@ pub struct PlacementDelta {
     pub released_cores: u32,
     /// Cores claimed by the grow phase.
     pub claimed_cores: u32,
+    /// Cores the grow phase had to place on racks the job did not
+    /// already occupy (a brand-new job's first rack is its home, not a
+    /// cross-rack move). Always 0 on a flat topology.
+    pub cross_rack_moves: u32,
 }
 
 impl PlacementDelta {
@@ -75,6 +99,8 @@ impl PlacementDelta {
 #[derive(Debug, Clone)]
 pub struct NodePool {
     spec: ClusterSpec,
+    /// Node → rack → zone map (flat = one rack, the legacy pool).
+    topo: Topology,
     free: Vec<u32>,
     /// Total free cores, maintained incrementally ([`NodePool::free_cores`]
     /// is O(1), not a scan).
@@ -82,29 +108,79 @@ pub struct NodePool {
     /// Persistent free-space index: free-core count → nodes with exactly
     /// that many free cores. Only nodes with free > 0 appear; empty
     /// buckets are removed eagerly so range queries stay tight.
-    by_free: BTreeMap<u32, BTreeSet<u32>>,
+    by_free: FreeIndex,
+    /// The same index bucketed per rack (`by_free_rack[rack]` holds
+    /// exactly the free > 0 nodes of that rack), maintained in lockstep
+    /// with `by_free` so the locality-aware grow can query "least-free
+    /// node inside this rack" in O(log) without scanning the pool.
+    by_free_rack: Vec<FreeIndex>,
     placements: BTreeMap<u64, Placement>,
+    /// When true (the default), grows prefer racks the job already
+    /// occupies; when false, the legacy global `(free, node)` order is
+    /// used regardless of topology (the locality-blind baseline the
+    /// `exp::locality` scenario compares against).
+    locality_aware: bool,
 }
 
 impl NodePool {
-    /// Fresh pool with all cores free.
+    /// Fresh pool with all cores free on a flat (single-rack) topology —
+    /// bit-for-bit the legacy pool.
     pub fn new(spec: ClusterSpec) -> Self {
-        let mut by_free = BTreeMap::new();
+        Self::with_topology(spec, Topology::flat(spec.nodes))
+    }
+
+    /// Fresh pool with all cores free on an explicit topology.
+    pub fn with_topology(spec: ClusterSpec, topo: Topology) -> Self {
+        assert_eq!(
+            topo.nodes(),
+            spec.nodes,
+            "topology covers {} nodes, cluster has {}",
+            topo.nodes(),
+            spec.nodes
+        );
+        let mut by_free = FreeIndex::new();
+        let mut by_free_rack: Vec<FreeIndex> = vec![FreeIndex::new(); topo.racks() as usize];
         if spec.nodes > 0 && spec.cores_per_node > 0 {
             by_free.insert(spec.cores_per_node, (0..spec.nodes).collect::<BTreeSet<u32>>());
+            for n in 0..spec.nodes {
+                by_free_rack[topo.rack_of(n) as usize]
+                    .entry(spec.cores_per_node)
+                    .or_default()
+                    .insert(n);
+            }
         }
         Self {
             spec,
+            topo,
             free: vec![spec.cores_per_node; spec.nodes as usize],
             free_total: spec.capacity(),
             by_free,
+            by_free_rack,
             placements: BTreeMap::new(),
+            locality_aware: true,
         }
     }
 
     /// Cluster description.
     pub fn spec(&self) -> ClusterSpec {
         self.spec
+    }
+
+    /// The pool's rack/zone topology.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Whether grows prefer racks the job already occupies.
+    pub fn locality_aware(&self) -> bool {
+        self.locality_aware
+    }
+
+    /// Toggle the rack preference (see [`NodePool::locality_aware`]).
+    /// `false` restores the legacy global `(free, node)` candidate order
+    /// on any topology — the locality-blind baseline.
+    pub fn set_locality_aware(&mut self, aware: bool) {
+        self.locality_aware = aware;
     }
 
     /// Total free cores. O(1) — maintained, not recomputed.
@@ -204,7 +280,7 @@ impl NodePool {
                     "placement diff infeasible: job {job} needs {need} cores, {} free",
                     self.free_cores()
                 );
-                self.grow(job, need);
+                delta.cross_rack_moves += self.grow(job, need);
                 delta.grown_jobs += 1;
                 delta.claimed_cores += need;
             }
@@ -223,12 +299,14 @@ impl NodePool {
     }
 
     /// Move `node` to its new free-core count, updating the free vector,
-    /// the running total and the free-space index in one place.
+    /// the running total and both free-space indexes (global and
+    /// per-rack) in one place.
     fn set_free(&mut self, node: u32, new_free: u32) {
         let old = self.free[node as usize];
         if old == new_free {
             return;
         }
+        let rack = self.topo.rack_of(node) as usize;
         if old > 0 {
             if let Some(bucket) = self.by_free.get_mut(&old) {
                 bucket.remove(&node);
@@ -236,9 +314,16 @@ impl NodePool {
                     self.by_free.remove(&old);
                 }
             }
+            if let Some(bucket) = self.by_free_rack[rack].get_mut(&old) {
+                bucket.remove(&node);
+                if bucket.is_empty() {
+                    self.by_free_rack[rack].remove(&old);
+                }
+            }
         }
         if new_free > 0 {
             self.by_free.entry(new_free).or_default().insert(node);
+            self.by_free_rack[rack].entry(new_free).or_default().insert(node);
         }
         self.free_total = self.free_total - old + new_free;
         self.free[node as usize] = new_free;
@@ -259,7 +344,10 @@ impl NodePool {
             .or_insert(0) += cores;
     }
 
-    fn grow(&mut self, job: u64, mut need: u32) {
+    /// Grow `job` by `need` cores. Returns the cross-rack cores: cores
+    /// placed on racks the job did not occupy when the grow started (a
+    /// brand-new job's first rack is its home and never counts).
+    fn grow(&mut self, job: u64, mut need: u32) -> u32 {
         // Pack-first, in two phases, visiting exactly the nodes the grant
         // lands on.
         //
@@ -286,22 +374,63 @@ impl NodePool {
             self.take(job, node, take);
             need -= take;
         }
-        // Phase B — walk the free-space index from the least-free bucket
-        // up. Every node visited is either fully drained (and leaves the
-        // index) or receives the final partial grant, so the walk touches
-        // O(nodes-in-the-delta) entries. Reaching this phase implies phase
-        // A drained all of the job's own nodes, so no index entry needs
-        // skipping.
+        // Phase B — new nodes, ordered by (rack the job already occupies,
+        // free cores, node id). `occ` is the preference tier (racks the
+        // job holds cores on — it grows as the grant lands); `home` is the
+        // accounting snapshot for cross-rack moves. Both are O(span),
+        // independent of pool size. Reaching this phase implies phase A
+        // drained all of the job's own nodes, so no index entry needs
+        // skipping; every node visited is either fully drained (and
+        // leaves the indexes) or receives the final partial grant, so the
+        // walk touches O(nodes-in-the-delta) entries plus O(occupied
+        // racks) index peeks per claim.
+        let mut occ: BTreeSet<u32> = self
+            .placements
+            .get(&job)
+            .map(|p| p.keys().map(|&n| self.topo.rack_of(n)).collect())
+            .unwrap_or_default();
+        let mut home = occ.clone();
+        let mut cross = 0u32;
         while need > 0 {
-            let (bucket_free, node) = match self.by_free.iter().next() {
-                Some((&f, bucket)) => (f, *bucket.iter().next().expect("non-empty bucket")),
+            // Tier 1: the least-free node inside a rack the job already
+            // occupies. Tier 2 (occupied racks full, or locality off):
+            // the global (free, node) minimum — on the aware path that
+            // node is necessarily in a new rack.
+            let local = if self.locality_aware {
+                occ.iter()
+                    .filter_map(|&r| {
+                        self.by_free_rack[r as usize].iter().next().map(|(&f, bucket)| {
+                            (f, *bucket.iter().next().expect("non-empty bucket"))
+                        })
+                    })
+                    .min()
+            } else {
+                None
+            };
+            let global = || {
+                self.by_free
+                    .iter()
+                    .next()
+                    .map(|(&f, bucket)| (f, *bucket.iter().next().expect("non-empty bucket")))
+            };
+            let (bucket_free, node) = match local.or_else(global) {
+                Some(pick) => pick,
                 None => break, // pool exhausted; caller checked free_cores
             };
             let take = bucket_free.min(need);
+            let rack = self.topo.rack_of(node);
+            if home.is_empty() {
+                home.insert(rack); // first cores of a fresh job: its home rack
+            }
+            if !home.contains(&rack) {
+                cross += take;
+            }
+            occ.insert(rack);
             self.take(job, node, take);
             need -= take;
         }
         debug_assert_eq!(need, 0, "grow called without checking free_cores");
+        cross
     }
 
     fn shrink(&mut self, job: u64, mut excess: u32) {
@@ -337,9 +466,28 @@ impl NodePool {
         self.placements.get(&job).map(|p| p.len()).unwrap_or(0)
     }
 
+    /// Number of distinct racks the job spans (0 when it holds no cores;
+    /// always ≤ 1 on a flat topology). This is the span the locality
+    /// cost model ([`super::LocalityModel`]) converts into a
+    /// per-iteration slowdown.
+    pub fn rack_span(&self, job: u64) -> usize {
+        self.placements
+            .get(&job)
+            .map(|p| self.topo.rack_span(p))
+            .unwrap_or(0)
+    }
+
+    /// Number of distinct zones the job spans (0 when it holds no cores).
+    pub fn zone_span(&self, job: u64) -> usize {
+        self.placements
+            .get(&job)
+            .map(|p| self.topo.zone_span(p))
+            .unwrap_or(0)
+    }
+
     /// Internal consistency: free + held == capacity, no node
-    /// oversubscribed, and the maintained free-space index exactly matches
-    /// a freshly-built one.
+    /// oversubscribed, and the maintained free-space indexes (global and
+    /// per-rack) exactly match freshly-built ones.
     pub fn check_invariants(&self) {
         let mut used = vec![0u32; self.spec.nodes as usize];
         for p in self.placements.values() {
@@ -376,6 +524,26 @@ impl NodePool {
         assert!(
             self.by_free.values().all(|b| !b.is_empty()),
             "empty bucket left in the free-space index"
+        );
+        // The per-rack index must equal one rebuilt from scratch off the
+        // free vector (and carry no empty buckets).
+        assert_eq!(self.topo.nodes(), self.spec.nodes, "topology out of sync");
+        let mut rebuilt_rack: Vec<FreeIndex> = vec![FreeIndex::new(); self.topo.racks() as usize];
+        for n in 0..self.spec.nodes {
+            let f = self.free[n as usize];
+            if f > 0 {
+                rebuilt_rack[self.topo.rack_of(n) as usize]
+                    .entry(f)
+                    .or_default()
+                    .insert(n);
+            }
+        }
+        assert_eq!(self.by_free_rack, rebuilt_rack, "per-rack free-space index drifted");
+        assert!(
+            self.by_free_rack
+                .iter()
+                .all(|r| r.values().all(|b| !b.is_empty())),
+            "empty bucket left in a per-rack index"
         );
     }
 }
@@ -755,6 +923,181 @@ mod tests {
                         b.placement(job),
                         "job {job} placement diverged from the sorted reference"
                     );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn flat_pool_has_single_rack_spans_and_no_cross_rack_moves() {
+        // The legacy pool: one rack, so the locality layer is inert.
+        let mut p = pool4x8();
+        assert!(p.topology().is_flat());
+        assert_eq!(p.rack_span(1), 0, "no cores, no span");
+        let delta = p.apply_diff(&[(1, 20), (2, 8)]);
+        assert_eq!(delta.cross_rack_moves, 0);
+        assert_eq!(p.rack_span(1), 1);
+        assert_eq!(p.zone_span(1), 1);
+        assert!(p.span(1) >= 3, "20 cores need at least 3 of the 8-core nodes");
+        let delta = p.apply_diff(&[(1, 2), (2, 26)]);
+        assert_eq!(delta.cross_rack_moves, 0);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn aware_grow_prefers_the_occupied_rack() {
+        // racks [0,0,1,1]; job 3 holds a full node in rack 1. When it
+        // grows, the aware pool must pick rack 1's remaining node even
+        // though a less-free node exists in rack 0 — and the blind pool
+        // must take the legacy global (free, node) minimum instead.
+        let spec = ClusterSpec { nodes: 4, cores_per_node: 4 };
+        let setup = |aware: bool| {
+            let mut p = NodePool::with_topology(spec, Topology::uniform(1, 2, 4));
+            p.set_locality_aware(aware);
+            assert!(p.resize(1, 4)); // node 0 (rack 0), full
+            assert!(p.resize(2, 4)); // node 1 (rack 0), full
+            assert!(p.resize(3, 4)); // node 2 (rack 1), full
+            assert!(p.resize(1, 2)); // node 0 drops to 2 free
+            p
+        };
+
+        let mut aware = setup(true);
+        let delta = aware.apply_diff(&[(3, 6)]);
+        assert_eq!(delta.cross_rack_moves, 0, "rack-local grow is not a cross-rack move");
+        assert_eq!(aware.rack_span(3), 1, "job 3 stays inside rack 1");
+        assert_eq!(aware.free_on(3), 2, "the grant landed on rack 1's node 3");
+        aware.check_invariants();
+
+        let mut blind = setup(false);
+        let delta = blind.apply_diff(&[(3, 6)]);
+        assert_eq!(delta.cross_rack_moves, 2, "blind grow crossed into rack 0");
+        assert_eq!(blind.rack_span(3), 2);
+        assert_eq!(blind.free_on(0), 0, "legacy order picked the least-free node");
+        blind.check_invariants();
+    }
+
+    #[test]
+    fn cross_rack_accounting_excludes_a_fresh_jobs_home_rack() {
+        // One node per rack: a fresh 10-core job must span 3 racks, but
+        // only the spill beyond its first (home) rack counts as moved.
+        let spec = ClusterSpec { nodes: 4, cores_per_node: 4 };
+        let mut p = NodePool::with_topology(spec, Topology::uniform(1, 4, 4));
+        let delta = p.apply_diff(&[(1, 10)]);
+        assert_eq!(delta.claimed_cores, 10);
+        assert_eq!(delta.cross_rack_moves, 6, "4 home cores + 6 spilled");
+        assert_eq!(p.rack_span(1), 3);
+        // Growing further inside already-occupied racks adds no moves…
+        assert!(p.resize(1, 12));
+        assert_eq!(p.rack_span(1), 3, "phase A fills the job's own rack-3 node");
+        // …but spilling onto a fourth rack counts every spilled core.
+        let delta = p.apply_diff(&[(1, 15)]);
+        assert_eq!(delta.cross_rack_moves, 3);
+        assert_eq!(p.rack_span(1), 4);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn blind_multi_rack_pool_matches_the_sorted_reference() {
+        // Locality-blind placement must stay bit-for-bit the legacy
+        // (free, node) order on *any* topology — the baseline the
+        // locality scenario compares against, and the proof that the
+        // per-rack index alone changes nothing.
+        forall("blind multi-rack ≡ sorted reference", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 10) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let zones = g.usize_in(1, 3) as u32;
+            let racks_per_zone = g.usize_in(1, 4) as u32;
+            let jobs = g.usize_in(1, 6) as u64;
+            let mut a =
+                NodePool::with_topology(spec, Topology::uniform(zones, racks_per_zone, spec.nodes));
+            a.set_locality_aware(false);
+            let mut b = RefPool::new(spec);
+            for _ in 0..30 {
+                random_op(g, spec, jobs, &mut a, &mut b);
+                a.check_invariants();
+                for job in 0..jobs {
+                    assert_eq!(
+                        a.placement(job),
+                        b.placement(job),
+                        "job {job} placement diverged from the sorted reference"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn aware_multi_rack_pool_keeps_invariants_and_bounded_accounting() {
+        // Rack-aware placement under random churn: all structural
+        // invariants hold (including per-rack-index ≡ rebuilt, via
+        // check_invariants), held counts always land exactly on target,
+        // and cross-rack accounting never exceeds the claimed cores.
+        forall("aware multi-rack invariants", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 10) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let zones = g.usize_in(1, 3) as u32;
+            let racks_per_zone = g.usize_in(1, 4) as u32;
+            let topo = Topology::uniform(zones, racks_per_zone, spec.nodes);
+            let mut pool = NodePool::with_topology(spec, topo);
+            let jobs = g.usize_in(1, 6) as u64;
+            for _ in 0..25 {
+                // Random feasible whole-epoch diff.
+                let mut room = spec.capacity();
+                let targets: Vec<(u64, u32)> = (0..jobs)
+                    .map(|job| {
+                        let t = g.usize_in(0, (room + 1) as usize) as u32;
+                        room -= t;
+                        (job, t)
+                    })
+                    .collect();
+                let delta = pool.apply_diff(&targets);
+                assert!(
+                    delta.cross_rack_moves <= delta.claimed_cores,
+                    "cross-rack {} above claimed {}",
+                    delta.cross_rack_moves,
+                    delta.claimed_cores
+                );
+                for &(job, t) in &targets {
+                    assert_eq!(pool.held(job), t);
+                    let span = pool.rack_span(job);
+                    assert!(span <= pool.topology().racks() as usize);
+                    assert_eq!(span == 0, t == 0, "span/holding mismatch for job {job}");
+                    assert!(pool.zone_span(job) <= span.max(1));
+                }
+                pool.check_invariants();
+            }
+        });
+    }
+
+    #[test]
+    fn flat_topology_never_counts_cross_rack_moves() {
+        // On one rack every grow lands in the job's (only possible) home
+        // rack — the accounting must be identically zero however the
+        // placement churns.
+        forall("flat ⇒ cross_rack_moves = 0", 60, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(1, 8) as u32,
+                cores_per_node: g.usize_in(1, 16) as u32,
+            };
+            let jobs = g.usize_in(1, 6) as u64;
+            let mut pool = NodePool::new(spec);
+            for _ in 0..20 {
+                let mut room = spec.capacity();
+                let targets: Vec<(u64, u32)> = (0..jobs)
+                    .map(|job| {
+                        let t = g.usize_in(0, (room + 1) as usize) as u32;
+                        room -= t;
+                        (job, t)
+                    })
+                    .collect();
+                let delta = pool.apply_diff(&targets);
+                assert_eq!(delta.cross_rack_moves, 0, "flat topology moved across racks");
+                for job in 0..jobs {
+                    assert!(pool.rack_span(job) <= 1);
                 }
             }
         });

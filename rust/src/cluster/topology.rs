@@ -1,0 +1,305 @@
+//! Two-level cluster topology: zones → racks → nodes.
+//!
+//! The paper's testbed is a single flat pool of 20 EC2 nodes, but on real
+//! shared clusters *where* a job's cores land matters: distributed
+//! training iterations slow down when workers straddle racks (the
+//! worker-placement/communication coupling modeled by Bao et al.,
+//! "Online Job Scheduling in Distributed Machine Learning Clusters").
+//! This module gives the cluster model that structure without disturbing
+//! the flat case:
+//!
+//! * [`TopologySpec`] is the `Copy` description carried by configuration
+//!   ([`crate::coordinator::CoordinatorConfig::topology`]):
+//!   [`TopologySpec::Flat`] (one rack, one zone — the legacy pool, and
+//!   what [`super::ClusterSpec::paper_testbed`] maps to) or
+//!   [`TopologySpec::Uniform`] (zones × racks-per-zone, nodes split into
+//!   contiguous, balanced blocks).
+//! * [`Topology`] is the materialized per-node map ([`Topology::rack_of`],
+//!   [`Topology::zone_of`]) the [`super::NodePool`] consults on every
+//!   placement decision, plus the span metrics
+//!   ([`Topology::rack_span`], [`Topology::zone_span`]) the locality cost
+//!   model ([`super::LocalityModel`]) consumes.
+//!
+//! At one rack every placement spans exactly one rack, so the locality
+//! layer is provably a no-op on flat topologies — the invariant the
+//! quality-fidelity suite relies on (see `docs/ARCHITECTURE.md`).
+
+use super::nodes::Placement;
+
+/// `Copy` topology description, resolved into a [`Topology`] per pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// Single rack in a single zone: the legacy flat pool. Placement,
+    /// spans and locality penalties are bit-for-bit identical to the
+    /// pre-topology cluster model.
+    Flat,
+    /// `zones` zones of `racks_per_zone` racks each; nodes are split
+    /// into contiguous, balanced blocks across the racks in id order
+    /// (rack sizes differ by at most one; no rack is left empty when
+    /// `nodes ≥ racks`). Both counts must be nonzero.
+    Uniform {
+        /// Failure/latency domains above racks.
+        zones: u32,
+        /// Racks per zone.
+        racks_per_zone: u32,
+    },
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        Self::Flat
+    }
+}
+
+impl TopologySpec {
+    /// Total rack count this spec describes.
+    pub fn racks(&self) -> u32 {
+        match *self {
+            Self::Flat => 1,
+            Self::Uniform { zones, racks_per_zone } => zones * racks_per_zone,
+        }
+    }
+
+    /// Materialize the per-node map for a pool of `nodes` nodes.
+    pub fn build(&self, nodes: u32) -> Topology {
+        match *self {
+            Self::Flat => Topology::flat(nodes),
+            Self::Uniform { zones, racks_per_zone } => {
+                Topology::uniform(zones, racks_per_zone, nodes)
+            }
+        }
+    }
+}
+
+/// Materialized node → rack → zone map for one cluster.
+///
+/// Construction invariant: `rack_of` is non-decreasing in node id (both
+/// constructors assign contiguous blocks), and `zone_of_rack` is
+/// non-decreasing in rack id — which lets the span metrics stream over a
+/// placement's (ascending) node keys without allocating.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Rack id per node (`len == nodes`), non-decreasing.
+    rack_of: Vec<u32>,
+    /// Zone id per rack (`len == racks`), non-decreasing.
+    zone_of_rack: Vec<u32>,
+}
+
+impl Topology {
+    /// Single rack, single zone: the legacy flat pool.
+    pub fn flat(nodes: u32) -> Self {
+        Self { rack_of: vec![0; nodes as usize], zone_of_rack: vec![0] }
+    }
+
+    /// `zones × racks_per_zone` racks; node `n` goes to rack
+    /// `⌊n · racks / nodes⌋` — contiguous, balanced blocks by ascending
+    /// node id (rack sizes differ by at most one, and every rack gets at
+    /// least one node when `nodes ≥ racks`), rack `r` belonging to zone
+    /// `r / racks_per_zone`.
+    pub fn uniform(zones: u32, racks_per_zone: u32, nodes: u32) -> Self {
+        assert!(zones > 0 && racks_per_zone > 0, "topology needs at least one rack");
+        let racks = zones * racks_per_zone;
+        let rack_of = (0..nodes)
+            .map(|n| ((u64::from(n) * u64::from(racks)) / u64::from(nodes.max(1))) as u32)
+            .collect();
+        let zone_of_rack = (0..racks).map(|r| r / racks_per_zone).collect();
+        Self { rack_of, zone_of_rack }
+    }
+
+    /// Nodes this topology covers.
+    pub fn nodes(&self) -> u32 {
+        self.rack_of.len() as u32
+    }
+
+    /// Total rack count.
+    pub fn racks(&self) -> u32 {
+        self.zone_of_rack.len() as u32
+    }
+
+    /// Total zone count.
+    pub fn zones(&self) -> u32 {
+        self.zone_of_rack.iter().copied().max().map_or(1, |z| z + 1)
+    }
+
+    /// True when every node shares the single rack (the legacy pool).
+    pub fn is_flat(&self) -> bool {
+        self.racks() == 1
+    }
+
+    /// Rack of `node`.
+    #[inline]
+    pub fn rack_of(&self, node: u32) -> u32 {
+        self.rack_of[node as usize]
+    }
+
+    /// Zone of `node`.
+    #[inline]
+    pub fn zone_of(&self, node: u32) -> u32 {
+        self.zone_of_rack[self.rack_of(node) as usize]
+    }
+
+    /// Zone of `rack`.
+    #[inline]
+    pub fn zone_of_rack(&self, rack: u32) -> u32 {
+        self.zone_of_rack[rack as usize]
+    }
+
+    /// Distinct racks a placement spans (0 for an empty placement —
+    /// the locality metric the iteration cost model consumes).
+    /// Allocation-free: placement keys ascend and `rack_of` is
+    /// non-decreasing (see the struct docs), so distinct racks appear as
+    /// runs — this sits on the coordinator's per-epoch hot path.
+    pub fn rack_span(&self, placement: &Placement) -> usize {
+        let mut span = 0usize;
+        let mut last = None;
+        for &n in placement.keys() {
+            let r = self.rack_of(n);
+            if let Some(l) = last {
+                debug_assert!(l <= r, "rack_of not monotone: {l} then {r}");
+            }
+            if last != Some(r) {
+                span += 1;
+                last = Some(r);
+            }
+        }
+        span
+    }
+
+    /// Distinct zones a placement spans (0 for an empty placement).
+    /// Allocation-free, by the same monotonicity as
+    /// [`Topology::rack_span`].
+    pub fn zone_span(&self, placement: &Placement) -> usize {
+        let mut span = 0usize;
+        let mut last = None;
+        for &n in placement.keys() {
+            let z = self.zone_of(n);
+            if last != Some(z) {
+                span += 1;
+                last = Some(z);
+            }
+        }
+        span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_maps_every_node_to_one_rack() {
+        let t = Topology::flat(20);
+        assert_eq!(t.nodes(), 20);
+        assert_eq!(t.racks(), 1);
+        assert_eq!(t.zones(), 1);
+        assert!(t.is_flat());
+        for n in 0..20 {
+            assert_eq!(t.rack_of(n), 0);
+            assert_eq!(t.zone_of(n), 0);
+        }
+    }
+
+    #[test]
+    fn spec_flat_is_the_default() {
+        assert_eq!(TopologySpec::default(), TopologySpec::Flat);
+        assert_eq!(TopologySpec::Flat.racks(), 1);
+        assert_eq!(TopologySpec::Flat.build(4), Topology::flat(4));
+    }
+
+    #[test]
+    fn uniform_splits_nodes_into_contiguous_balanced_blocks() {
+        // 2 zones × 2 racks × 8 nodes = 2 nodes per rack.
+        let t = Topology::uniform(2, 2, 8);
+        assert_eq!(t.nodes(), 8);
+        assert_eq!(t.racks(), 4);
+        assert_eq!(t.zones(), 2);
+        assert!(!t.is_flat());
+        assert_eq!(
+            (0..8).map(|n| t.rack_of(n)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1, 2, 2, 3, 3]
+        );
+        assert_eq!(t.zone_of_rack(0), 0);
+        assert_eq!(t.zone_of_rack(1), 0);
+        assert_eq!(t.zone_of_rack(2), 1);
+        assert_eq!(t.zone_of_rack(3), 1);
+        assert_eq!(t.zone_of(0), 0);
+        assert_eq!(t.zone_of(7), 1);
+    }
+
+    #[test]
+    fn uniform_handles_non_divisible_node_counts() {
+        // 7 nodes over 3 racks: balanced 3/2/2 split — no rack empty.
+        let t = Topology::uniform(1, 3, 7);
+        assert_eq!(
+            (0..7).map(|n| t.rack_of(n)).collect::<Vec<_>>(),
+            vec![0, 0, 0, 1, 1, 2, 2]
+        );
+        // 9 nodes over 4 racks: 3/2/2/2 — the trailing rack is not
+        // starved (the failure mode of a ceil-chunked split).
+        let t = Topology::uniform(2, 2, 9);
+        let sizes = (0..4)
+            .map(|r| (0..9).filter(|&n| t.rack_of(n) == r).count())
+            .collect::<Vec<_>>();
+        assert_eq!(sizes, vec![3, 2, 2, 2]);
+        // More racks than nodes: some racks must stay empty, but ids are
+        // in range, spread monotonically, and all distinct.
+        let wide = Topology::uniform(1, 8, 3);
+        assert_eq!(wide.racks(), 8);
+        let ids: Vec<u32> = (0..3).map(|n| wide.rack_of(n)).collect();
+        assert!(ids.iter().all(|&r| r < 8));
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "one node per rack: {ids:?}");
+    }
+
+    #[test]
+    fn uniform_leaves_no_rack_empty_when_nodes_cover_racks() {
+        for (zones, rpz, nodes) in
+            [(1u32, 4u32, 9u32), (2, 8, 33), (2, 8, 512), (3, 3, 9), (1, 1, 5)]
+        {
+            let t = Topology::uniform(zones, rpz, nodes);
+            let racks = zones * rpz;
+            assert!(nodes >= racks, "test cell must cover every rack");
+            for r in 0..racks {
+                assert!(
+                    (0..nodes).any(|n| t.rack_of(n) == r),
+                    "rack {r} empty in uniform({zones}, {rpz}, {nodes})"
+                );
+            }
+            // Monotone (the span-streaming invariant) and in range.
+            for n in 1..nodes {
+                assert!(t.rack_of(n - 1) <= t.rack_of(n));
+                assert!(t.rack_of(n) < racks);
+            }
+        }
+    }
+
+    #[test]
+    fn spans_count_distinct_racks_and_zones() {
+        let t = Topology::uniform(2, 2, 8); // racks of 2 nodes
+        let empty = Placement::new();
+        assert_eq!(t.rack_span(&empty), 0);
+        assert_eq!(t.zone_span(&empty), 0);
+        let mut p = Placement::new();
+        p.insert(0, 4); // rack 0, zone 0
+        assert_eq!(t.rack_span(&p), 1);
+        assert_eq!(t.zone_span(&p), 1);
+        p.insert(1, 4); // same rack
+        assert_eq!(t.rack_span(&p), 1);
+        p.insert(2, 4); // rack 1, zone 0
+        assert_eq!(t.rack_span(&p), 2);
+        assert_eq!(t.zone_span(&p), 1);
+        p.insert(6, 4); // rack 3, zone 1
+        assert_eq!(t.rack_span(&p), 3);
+        assert_eq!(t.zone_span(&p), 2);
+    }
+
+    #[test]
+    fn flat_spans_are_always_at_most_one() {
+        let t = Topology::flat(6);
+        let mut p = Placement::new();
+        for n in 0..6 {
+            p.insert(n, 1);
+            assert_eq!(t.rack_span(&p), 1);
+            assert_eq!(t.zone_span(&p), 1);
+        }
+    }
+}

@@ -35,7 +35,7 @@ use super::job::{JobState, JobSpec, Job};
 use super::ledger::JobLedger;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
-use crate::cluster::{ClusterSpec, CostModel, NodePool};
+use crate::cluster::{ClusterSpec, CostModel, LocalityModel, NodePool, TopologySpec};
 use crate::predictor::OnlinePredictor;
 use crate::sched::{GainModel, GainTable, JobRequest, Policy, SchedContext};
 use std::time::Instant;
@@ -45,6 +45,19 @@ use std::time::Instant;
 pub struct CoordinatorConfig {
     /// Cluster topology.
     pub cluster: ClusterSpec,
+    /// Rack/zone structure over the cluster's nodes. The default
+    /// ([`TopologySpec::Flat`]) is the legacy single-rack pool, on which
+    /// the whole locality layer is provably inert.
+    pub topology: TopologySpec,
+    /// Per-iteration slowdown for placements that straddle racks,
+    /// consumed by both the simulator's iteration clock and the
+    /// scheduler's gain oracles. At one rack the factor is always 1.0.
+    pub locality: LocalityModel,
+    /// When true (the default) the node pool's grow path prefers racks a
+    /// job already occupies; `false` keeps the legacy global
+    /// `(free, node)` order — the locality-blind baseline the
+    /// `exp::locality` scenario compares against.
+    pub locality_aware: bool,
     /// Scheduling epoch length `T` (virtual seconds). The paper uses
     /// short epochs (a few seconds) for continuous rebalancing.
     pub epoch_secs: f64,
@@ -79,6 +92,9 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         Self {
             cluster: ClusterSpec::paper_testbed(),
+            topology: TopologySpec::Flat,
+            locality: LocalityModel::default(),
+            locality_aware: true,
             epoch_secs: 3.0,
             cold_start_optimism: true,
             selective_refits: true,
@@ -110,10 +126,14 @@ struct JobGain<'a> {
     cap: u32,
     window: f64,
     cold_start_optimism: bool,
+    /// Locality slowdown of the job's placement entering this epoch
+    /// (rack span → iteration-time factor; 1.0 on flat topologies), so
+    /// the predicted quality-per-epoch genuinely feels fragmentation.
+    slowdown: f64,
 }
 
 impl<'a> JobGain<'a> {
-    fn new(job: &'a Job, window: f64, cold_start_optimism: bool) -> Self {
+    fn new(job: &'a Job, window: f64, cold_start_optimism: bool, slowdown: f64) -> Self {
         Self {
             predictor: &job.predictor,
             cost: job.spec.cost,
@@ -121,6 +141,7 @@ impl<'a> JobGain<'a> {
             cap: job.spec.max_cores,
             window,
             cold_start_optimism,
+            slowdown,
         }
     }
 
@@ -135,10 +156,14 @@ impl GainModel for JobGain<'_> {
         if cores == 0 {
             return 0.0;
         }
-        // Shared definition with `Job::iterations_achievable_f`, so table
-        // rows (filled from this view) and the serial oracle path are
-        // bit-identical and can never drift from the job progress model.
-        let dk = self.cost.fractional_iterations(self.window, cores, self.credit);
+        // Shared definition with `Job::iterations_achievable_f` (and the
+        // same scaled clock `Job::advance_with_locality` runs on), so
+        // table rows (filled from this view) and the serial oracle path
+        // are bit-identical and can never drift from the job progress
+        // model.
+        let dk =
+            self.cost
+                .fractional_iterations_scaled(self.window, cores, self.credit, self.slowdown);
         if dk <= 0.0 {
             return 0.0;
         }
@@ -165,6 +190,9 @@ struct EpochScratch {
     targets: Vec<(u64, u32)>,
     /// Epoch-start losses, parallel to `active`.
     losses: Vec<f64>,
+    /// Post-placement rack spans, parallel to `active` (computed once
+    /// per epoch, shared by the trace entries and the advance loop).
+    spans: Vec<u32>,
     /// Predictors moved out of the ledger for a sharded refit (empty
     /// between epochs; keeps its capacity).
     refit_batch: Vec<(u64, OnlinePredictor)>,
@@ -189,7 +217,9 @@ pub struct Coordinator {
 impl Coordinator {
     /// New coordinator with the given policy.
     pub fn new(cfg: CoordinatorConfig, policy: Box<dyn Policy>) -> Self {
-        let pool = NodePool::new(cfg.cluster);
+        let mut pool =
+            NodePool::with_topology(cfg.cluster, cfg.topology.build(cfg.cluster.nodes));
+        pool.set_locality_aware(cfg.locality_aware);
         let threads = if cfg.threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -335,14 +365,18 @@ impl Coordinator {
         targets.clear();
         let mut losses = std::mem::take(&mut self.scratch.losses);
         losses.clear();
-        let entries: Vec<EpochEntry>;
+        let mut entries: Vec<EpochEntry>;
         {
             // One ledger lookup per job: the gain views for the allocator
-            // and the epoch-start losses for the record below.
+            // and the epoch-start losses for the record below. Each view
+            // carries the locality slowdown of the placement the job
+            // enters the epoch with (its current rack span), so predicted
+            // gains price fragmentation the same way execution pays it.
             let mut gains: Vec<JobGain<'_>> = Vec::with_capacity(active.len());
             for &id in active.iter() {
+                let slowdown = self.cfg.locality.slowdown(self.pool.rack_span(id));
                 let job = self.ledger.job(id).expect("running job");
-                gains.push(JobGain::new(job, window, self.cfg.cold_start_optimism));
+                gains.push(JobGain::new(job, window, self.cfg.cold_start_optimism, slowdown));
                 losses.push(job.current_loss());
             }
 
@@ -407,17 +441,29 @@ impl Coordinator {
                 self.sched_ctx.record_stats(stats);
             }
             targets.extend(requests.iter().zip(&allocation.cores).map(|(r, &cores)| (r.id, cores)));
-            // Epoch record (losses at epoch start, before jobs advance).
+            // Epoch record (losses at epoch start, before jobs advance;
+            // rack spans are stamped after the placement diff below).
             entries = active
                 .iter()
                 .zip(&losses)
                 .zip(&allocation.cores)
-                .map(|((&id, &loss), &cores)| EpochEntry { job: id, cores, loss })
+                .map(|((&id, &loss), &cores)| EpochEntry { job: id, cores, loss, rack_span: 0 })
                 .collect();
         }
 
-        // 6. Apply only the placement deltas (shrink first, then grow).
-        self.pool.apply_diff(&targets);
+        // 6. Apply only the placement deltas (shrink first, then grow) —
+        // the locality-aware grow prefers racks each job already
+        // occupies, and the delta accounts the cores that had to cross
+        // racks anyway. The post-placement spans are computed once into
+        // reusable scratch and shared by the trace entries and the
+        // advance loop below.
+        let placement_delta = self.pool.apply_diff(&targets);
+        let mut spans = std::mem::take(&mut self.scratch.spans);
+        spans.clear();
+        spans.extend(active.iter().map(|&id| self.pool.rack_span(id) as u32));
+        for (e, &span) in entries.iter_mut().zip(&spans) {
+            e.rack_span = span;
+        }
 
         // 7. Record the epoch before advancing.
         self.epochs.push(EpochRecord {
@@ -428,16 +474,21 @@ impl Coordinator {
             refits,
             dirty_jobs,
             active_jobs: active.len(),
+            cross_rack_moves: placement_delta.cross_rack_moves,
             entries,
         });
 
-        // 8. Advance jobs through the window; jobs that completed
-        // iterations re-enter the dirty set for the next sync, while
-        // completed jobs leave the running set, the dirty set, the node
-        // pool and the scheduling context for good.
-        for (&id, &cores) in active.iter().zip(&allocation.cores) {
+        // 8. Advance jobs through the window — on the iteration clock of
+        // the placement they actually received (fragmented placements run
+        // slower); jobs that completed iterations re-enter the dirty set
+        // for the next sync, while completed jobs leave the running set,
+        // the dirty set, the node pool and the scheduling context for
+        // good.
+        for ((&id, &cores), &span) in active.iter().zip(&allocation.cores).zip(&spans) {
+            let slowdown = self.cfg.locality.slowdown(span as usize);
             let job = self.ledger.job_mut(id).expect("running job");
-            let iterations = job.advance(t0, window, cores);
+            job.max_rack_span = job.max_rack_span.max(span);
+            let iterations = job.advance_with_locality(t0, window, cores, slowdown);
             let completed = job.state == JobState::Completed;
             if iterations > 0 {
                 self.ledger.mark_dirty(id);
@@ -454,6 +505,7 @@ impl Coordinator {
         self.scratch.dirty = dirty;
         self.scratch.targets = targets;
         self.scratch.losses = losses;
+        self.scratch.spans = spans;
 
         self.time = t0 + window;
     }
@@ -510,6 +562,7 @@ impl Coordinator {
                     name: j.spec.name,
                     arrival: j.spec.arrival,
                     max_cores: j.spec.max_cores,
+                    max_rack_span: j.max_rack_span,
                     activated: entry.activated_at,
                     completion: j.completion_time,
                     floor: j.source.known_floor(),
@@ -713,6 +766,7 @@ mod tests {
                     selective_refits: selective,
                     refit_amortization: false,
                     threads: 1,
+                    ..Default::default()
                 };
                 let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
                 sim::submit_templates(&mut c, &templates, src_seed);
@@ -769,6 +823,7 @@ mod tests {
                     selective_refits: true,
                     refit_amortization: false,
                     threads,
+                    ..Default::default()
                 };
                 let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
                 assert_eq!(c.threads(), threads);
@@ -857,6 +912,151 @@ mod tests {
             0,
             "gain-blind policies must skip the table build"
         );
+    }
+
+    #[test]
+    fn flat_topology_locality_layer_is_a_noop() {
+        // On a single rack every span is ≤ 1, so even a punitive
+        // locality model must leave the whole trace bit-identical to a
+        // zero-penalty run — the invariant that keeps the
+        // quality-fidelity suite green unchanged.
+        use crate::testkit::{forall, sim};
+        forall("flat ⇒ locality no-op", 4, |g| {
+            let templates = sim::random_churn_templates(g, 10, 25.0);
+            let src_seed = g.u64();
+            let run = |locality: LocalityModel| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+                    topology: TopologySpec::Flat,
+                    locality,
+                    epoch_secs: 2.0,
+                    threads: 1,
+                    ..Default::default()
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(50.0);
+                c.into_trace()
+            };
+            let off = run(LocalityModel::none());
+            let punitive = run(LocalityModel {
+                slowdown_per_extra_rack: 5.0,
+                max_slowdown: 50.0,
+            });
+            assert_eq!(off.epochs.len(), punitive.epochs.len());
+            for (a, b) in off.epochs.iter().zip(&punitive.epochs) {
+                assert_eq!(a.cross_rack_moves, 0);
+                assert_eq!(b.cross_rack_moves, 0);
+                assert_eq!(a.entries.len(), b.entries.len());
+                for (x, y) in a.entries.iter().zip(&b.entries) {
+                    assert!(x.rack_span <= 1, "flat span above 1");
+                    assert_eq!(x.rack_span, y.rack_span);
+                    assert_eq!(x.cores, y.cores, "grants diverged at t={}", a.time);
+                    assert_eq!(x.loss, y.loss, "losses diverged at t={}", a.time);
+                }
+            }
+            for (a, b) in off.jobs.iter().zip(&punitive.jobs) {
+                assert!(a.max_rack_span <= 1);
+                assert_eq!(a.completion, b.completion);
+                assert_eq!(a.samples, b.samples, "loss samples diverged for job {}", a.id);
+            }
+        });
+    }
+
+    #[test]
+    fn multi_rack_pipeline_is_bit_identical_at_any_thread_count() {
+        // The locality tie-break must stay deterministic through the
+        // parallel epoch pipeline: on a multi-rack topology with the
+        // penalty engaged, serial and sharded runs of `slaq-det` must
+        // agree bitwise — grants, losses, rack spans, cross-rack moves,
+        // completions.
+        use crate::testkit::{forall, sim};
+        forall("multi-rack threads=1 ≡ threads=N", 3, |g| {
+            let templates = sim::random_churn_templates(g, 10, 25.0);
+            let src_seed = g.u64();
+            let run = |threads: usize| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 4, cores_per_node: 8 },
+                    topology: TopologySpec::Uniform { zones: 2, racks_per_zone: 2 },
+                    epoch_secs: 2.0,
+                    threads,
+                    ..Default::default()
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(50.0);
+                c.into_trace()
+            };
+            let serial = run(1);
+            for threads in [2usize, 4] {
+                let par = run(threads);
+                assert_eq!(serial.epochs.len(), par.epochs.len());
+                for (a, b) in serial.epochs.iter().zip(&par.epochs) {
+                    assert_eq!(a.cross_rack_moves, b.cross_rack_moves, "t={}", a.time);
+                    assert_eq!(a.entries.len(), b.entries.len());
+                    for (x, y) in a.entries.iter().zip(&b.entries) {
+                        assert_eq!(x.job, y.job);
+                        assert_eq!(x.cores, y.cores, "t={} ({threads} threads)", a.time);
+                        assert_eq!(x.loss, y.loss, "t={} ({threads} threads)", a.time);
+                        assert_eq!(
+                            x.rack_span, y.rack_span,
+                            "spans diverged at t={} ({threads} threads)",
+                            a.time
+                        );
+                    }
+                }
+                for (a, b) in serial.jobs.iter().zip(&par.jobs) {
+                    assert_eq!(a.max_rack_span, b.max_rack_span, "job {}", a.id);
+                    assert_eq!(a.completion, b.completion, "job {}", a.id);
+                    assert_eq!(a.samples, b.samples, "job {}", a.id);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn locality_penalty_slows_fragmented_jobs() {
+        // One 16-core job on 2 × 8-core nodes. With the nodes in separate
+        // racks the placement spans 2 racks and (at +100% per extra rack)
+        // every iteration takes twice as long as on the flat variant —
+        // the trace must show the span, the slowdown and the cross-rack
+        // spill.
+        let run = |topology: TopologySpec| {
+            let cfg = CoordinatorConfig {
+                cluster: ClusterSpec { nodes: 2, cores_per_node: 8 },
+                topology,
+                locality: LocalityModel { slowdown_per_extra_rack: 1.0, max_slowdown: 4.0 },
+                epoch_secs: 2.0,
+                threads: 1,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
+            let mut spec = mk_spec(0, 0.0, CurveKind::Exponential);
+            spec.max_cores = 16;
+            spec.target_fraction = 0.99999; // keep running through the window
+            c.submit(spec, exp_source(1, 0.97));
+            c.run_until(20.0);
+            c.into_trace()
+        };
+        let flat = run(TopologySpec::Flat);
+        let split = run(TopologySpec::Uniform { zones: 1, racks_per_zone: 2 });
+
+        assert_eq!(flat.jobs[0].max_rack_span, 1);
+        assert_eq!(split.jobs[0].max_rack_span, 2);
+        // The 16-core grant spills one node's worth of cores across racks
+        // in the first placement epoch, and never moves again.
+        assert_eq!(split.epochs[0].cross_rack_moves, 8);
+        assert!(split.epochs.iter().skip(1).all(|e| e.cross_rack_moves == 0));
+        assert!(split.epochs.iter().all(|e| e.max_rack_span() == 2));
+        assert!((split.epochs[0].mean_rack_span() - 2.0).abs() < 1e-12);
+        // Fragmentation halves iteration throughput.
+        let iters = |t: &Trace| t.jobs[0].samples.last().map(|s| s.1).unwrap_or(0);
+        let (fi, si) = (iters(&flat), iters(&split));
+        assert!(
+            si * 2 <= fi + 2,
+            "2x slowdown should halve progress: flat {fi} vs split {si} iterations"
+        );
+        assert!(si > 0, "the fragmented job must still make progress");
     }
 
     #[test]

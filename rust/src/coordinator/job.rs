@@ -59,6 +59,9 @@ pub struct Job {
     pub credit: f64,
     /// Cores currently held.
     pub cores: u32,
+    /// Widest rack span the job's placement ever had (0 until it holds
+    /// cores on a cluster with topology; maintained by the coordinator).
+    pub max_rack_span: u32,
     /// Initial loss (set on activation).
     pub initial_loss: f64,
     /// Completion time, once completed.
@@ -92,6 +95,7 @@ impl Job {
             iteration: 0,
             credit: 0.0,
             cores: 0,
+            max_rack_span: 0,
             initial_loss: f64::NAN,
             completion_time: None,
             loss_trace: Vec::new(),
@@ -113,14 +117,32 @@ impl Job {
     /// `Completed` when the convergence criterion fires. Returns the number
     /// of iterations completed in this window.
     pub fn advance(&mut self, t0: f64, window: f64, cores: u32) -> u64 {
+        self.advance_with_locality(t0, window, cores, 1.0)
+    }
+
+    /// [`Job::advance`] under a locality slowdown: every iteration is
+    /// stretched by `slowdown` (≥ 1.0, from
+    /// [`crate::cluster::LocalityModel::slowdown`] applied to the job's
+    /// rack span), so fragmented placements genuinely converge slower.
+    /// `slowdown = 1.0` reproduces the unscaled clock bit for bit.
+    pub fn advance_with_locality(
+        &mut self,
+        t0: f64,
+        window: f64,
+        cores: u32,
+        slowdown: f64,
+    ) -> u64 {
         assert_eq!(self.state, JobState::Running);
         self.cores = cores;
         if cores == 0 {
             // Paused (allocation floor couldn't cover all jobs).
             return 0;
         }
-        let iter_time = self.spec.cost.iter_time(cores);
-        let (n, new_credit) = self.spec.cost.iterations_in_window(window, cores, self.credit);
+        let iter_time = self.spec.cost.iter_time_scaled(cores, slowdown);
+        let (n, new_credit) =
+            self.spec
+                .cost
+                .iterations_in_window_scaled(window, cores, self.credit, slowdown);
         let credit0 = self.credit;
         self.credit = new_credit;
         let mut done = 0;
@@ -191,9 +213,11 @@ impl Job {
     }
 
     /// Fractional iterations achievable in a `window`-second epoch with
-    /// `cores` cores. The allocator uses the fractional form so marginal
-    /// gains stay smooth when an extra core buys only part of an iteration
-    /// (shared definition: [`CostModel::fractional_iterations`]).
+    /// `cores` cores, on the *unscaled* clock (shared definition:
+    /// [`CostModel::fractional_iterations`]). On multi-rack topologies
+    /// the coordinator's gain views additionally apply the job's
+    /// locality slowdown ([`CostModel::fractional_iterations_scaled`]);
+    /// at one rack the two agree bit for bit.
     pub fn iterations_achievable_f(&self, window: f64, cores: u32) -> f64 {
         if cores == 0 {
             return 0.0;
@@ -320,6 +344,28 @@ mod tests {
             t += 3.0;
         }
         assert_eq!(j.state, JobState::Completed);
+    }
+
+    #[test]
+    fn locality_slowdown_stretches_the_iteration_clock() {
+        // iter_time(4) = 0.6s; at slowdown 2.0 each iteration takes 1.2s,
+        // so a 3.1s window completes 2 instead of 5.
+        let mut j = exp_job(9);
+        j.activate(0.0);
+        let n = j.advance_with_locality(0.0, 3.1, 4, 2.0);
+        assert_eq!(n, 2);
+        assert!(j.credit >= 0.0 && j.credit < 1.2);
+        // A unit slowdown is bit-identical to the plain advance.
+        let mut a = exp_job(10);
+        let mut b = exp_job(10); // same seed: identical loss stream
+        a.activate(0.0);
+        b.activate(0.0);
+        assert_eq!(
+            a.advance(0.0, 3.1, 4),
+            b.advance_with_locality(0.0, 3.1, 4, 1.0)
+        );
+        assert_eq!(a.credit, b.credit);
+        assert_eq!(a.loss_trace, b.loss_trace);
     }
 
     #[test]

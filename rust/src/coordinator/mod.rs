@@ -22,10 +22,15 @@
 //!    of cores (via its online predictor + cost model),
 //! 3. runs the configured [`crate::sched::Policy`] through its delta-aware
 //!    entry point to produce an allocation,
-//! 4. applies the placement delta onto worker nodes,
-//! 5. advances jobs through the epoch window, feeding completed-iteration
-//!    losses back into their predictors,
-//! 6. records everything into a [`Trace`].
+//! 4. applies the placement delta onto worker nodes — rack-aware: grows
+//!    prefer racks a job already occupies, and cross-rack spills are
+//!    accounted per epoch,
+//! 5. advances jobs through the epoch window on the iteration clock of
+//!    the placement they received (placements straddling racks run
+//!    slower, per [`crate::cluster::LocalityModel`]), feeding
+//!    completed-iteration losses back into their predictors,
+//! 6. records everything — grants, losses, rack spans, cross-rack moves —
+//!    into a [`Trace`].
 
 mod epoch;
 mod job;

@@ -9,6 +9,9 @@ pub struct EpochEntry {
     pub cores: u32,
     /// Loss at the start of the epoch.
     pub loss: f64,
+    /// Distinct racks the job's placement spans this epoch (0 when it
+    /// holds no cores; always ≤ 1 on a flat topology).
+    pub rack_span: u32,
 }
 
 /// One scheduling epoch.
@@ -35,8 +38,39 @@ pub struct EpochRecord {
     pub dirty_jobs: usize,
     /// Number of active jobs considered.
     pub active_jobs: usize,
+    /// Cores the epoch's placement diff had to put on racks their jobs
+    /// did not already occupy (see
+    /// [`crate::cluster::PlacementDelta::cross_rack_moves`]); always 0 on
+    /// a flat topology.
+    pub cross_rack_moves: u32,
     /// Per-job grants.
     pub entries: Vec<EpochEntry>,
+}
+
+impl EpochRecord {
+    /// Mean rack span across the jobs that hold cores this epoch (the
+    /// locality metric the `exp::locality` scenario tracks); 0.0 when no
+    /// job holds cores.
+    pub fn mean_rack_span(&self) -> f64 {
+        let mut sum = 0u64;
+        let mut placed = 0usize;
+        for e in &self.entries {
+            if e.cores > 0 {
+                sum += e.rack_span as u64;
+                placed += 1;
+            }
+        }
+        if placed == 0 {
+            0.0
+        } else {
+            sum as f64 / placed as f64
+        }
+    }
+
+    /// Widest rack span any job has this epoch.
+    pub fn max_rack_span(&self) -> u32 {
+        self.entries.iter().map(|e| e.rack_span).max().unwrap_or(0)
+    }
 }
 
 /// Completed per-job record.
@@ -51,6 +85,9 @@ pub struct JobTrace {
     /// Maximum cores the job could use (its partition count) — lets
     /// retrospective checks reconstruct each epoch's grantable demand.
     pub max_cores: u32,
+    /// Widest rack span the job's placement ever had (0 if it never held
+    /// cores; always ≤ 1 on a flat topology).
+    pub max_rack_span: u32,
     /// Activation time (first epoch the job ran in).
     pub activated: f64,
     /// Completion time (None if still running at window end).
@@ -129,6 +166,7 @@ impl Trace {
                     ("refits", Value::Num(e.refits as f64)),
                     ("dirty_jobs", Value::Num(e.dirty_jobs as f64)),
                     ("active_jobs", Value::Num(e.active_jobs as f64)),
+                    ("cross_rack_moves", Value::Num(e.cross_rack_moves as f64)),
                     (
                         "entries",
                         Value::Arr(
@@ -139,6 +177,7 @@ impl Trace {
                                         ("job", Value::Num(en.job as f64)),
                                         ("cores", Value::Num(en.cores as f64)),
                                         ("loss", Value::Num(en.loss)),
+                                        ("rack_span", Value::Num(en.rack_span as f64)),
                                     ])
                                 })
                                 .collect(),
@@ -156,6 +195,7 @@ impl Trace {
                     ("name", Value::Str(j.name.clone())),
                     ("arrival", Value::Num(j.arrival)),
                     ("max_cores", Value::Num(j.max_cores as f64)),
+                    ("max_rack_span", Value::Num(j.max_rack_span as f64)),
                     ("activated", Value::Num(j.activated)),
                     (
                         "completion",
@@ -209,6 +249,7 @@ mod tests {
             name: "t".into(),
             arrival: 0.0,
             max_cores: 8,
+            max_rack_span: 2,
             activated: 1.0,
             completion: Some(10.0),
             floor: Some(1.0),
@@ -248,7 +289,8 @@ mod tests {
                 refits: 1,
                 dirty_jobs: 1,
                 active_jobs: 1,
-                entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5 }],
+                cross_rack_moves: 3,
+                entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5, rack_span: 2 }],
             }],
             jobs: vec![jt()],
         };
@@ -259,8 +301,46 @@ mod tests {
         let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
         assert_eq!(jobs[0].get("name").unwrap().as_str(), Some("t"));
         assert_eq!(jobs[0].get("samples").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(jobs[0].get("max_rack_span").unwrap().as_f64(), Some(2.0));
         let epochs = parsed.get("epochs").unwrap().as_arr().unwrap();
         assert_eq!(epochs[0].get("time").unwrap().as_f64(), Some(3.0));
+        assert_eq!(epochs[0].get("cross_rack_moves").unwrap().as_f64(), Some(3.0));
+        let entry = &epochs[0].get("entries").unwrap().as_arr().unwrap()[0];
+        assert_eq!(entry.get("rack_span").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn rack_span_summaries_skip_unplaced_jobs() {
+        let rec = EpochRecord {
+            time: 0.0,
+            sched_nanos: 0,
+            refit_nanos: 0,
+            gain_nanos: 0,
+            refits: 0,
+            dirty_jobs: 0,
+            active_jobs: 3,
+            cross_rack_moves: 0,
+            entries: vec![
+                EpochEntry { job: 1, cores: 4, loss: 1.0, rack_span: 1 },
+                EpochEntry { job: 2, cores: 8, loss: 1.0, rack_span: 3 },
+                EpochEntry { job: 3, cores: 0, loss: 1.0, rack_span: 0 },
+            ],
+        };
+        assert!((rec.mean_rack_span() - 2.0).abs() < 1e-12, "unplaced job excluded");
+        assert_eq!(rec.max_rack_span(), 3);
+        let empty = EpochRecord {
+            time: 0.0,
+            sched_nanos: 0,
+            refit_nanos: 0,
+            gain_nanos: 0,
+            refits: 0,
+            dirty_jobs: 0,
+            active_jobs: 0,
+            cross_rack_moves: 0,
+            entries: vec![],
+        };
+        assert_eq!(empty.mean_rack_span(), 0.0);
+        assert_eq!(empty.max_rack_span(), 0);
     }
 
     #[test]
@@ -275,6 +355,7 @@ mod tests {
             refits: 0,
             dirty_jobs: 0,
             active_jobs: 1,
+            cross_rack_moves: 0,
             entries: vec![],
         });
         t.epochs.push(EpochRecord {
@@ -285,6 +366,7 @@ mod tests {
             refits: 0,
             dirty_jobs: 0,
             active_jobs: 1,
+            cross_rack_moves: 0,
             entries: vec![],
         });
         assert!((t.mean_sched_millis() - 3.0).abs() < 1e-12);

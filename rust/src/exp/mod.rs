@@ -10,6 +10,7 @@
 //! | [`fig6_sched_time`] | Fig 6 — scheduler decision time at scale        |
 //! | [`churn_scalability`] | churn — incremental vs from-scratch decisions |
 //! | [`churn_epoch_loop`] | churn — end-to-end coordinator epoch latency   |
+//! | [`locality_placement`] | locality — rack-aware vs rack-blind placement |
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
 //! | [`quality_fidelity`] | Figs 3–5 invariants as a seeded regression suite |
 //!
@@ -25,12 +26,17 @@
 //! optimisations are checked against the paper's headline results.
 
 mod ablations;
+mod locality;
 mod real_runs;
 mod report;
 mod scalability;
 mod sim_runs;
 
 pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
+pub use locality::{
+    locality_cost, locality_fidelity, locality_placement, LocalityConfig, LocalityCost,
+    LocalityReport,
+};
 pub use real_runs::{fig1_work_cdf, fig2_norm_delta, pred_accuracy, run_zoo_real, ZooRun};
 pub use report::{render_table, ExpOutput};
 pub use scalability::{

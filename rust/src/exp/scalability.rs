@@ -397,11 +397,52 @@ impl EpochLoopCost {
     }
 }
 
+/// Epoch length shared by the churn-style full-coordinator scenarios
+/// (the epoch-loop driver here and the locality comparison in
+/// `super::locality`), so they measure the same workload shape.
+pub(crate) const CHURN_EPOCH_SECS: f64 = 3.0;
+
+/// The churn scenarios' cluster shape: `cores` capacity on 32-core nodes
+/// (the paper's node size); values below 32 still get one full node.
+pub(crate) fn churn_cluster(cores: u32) -> ClusterSpec {
+    ClusterSpec { nodes: (cores / 32).max(1), cores_per_node: 32 }
+}
+
+/// Submit the shared churn workload: `jobs` long-lived steady-state jobs
+/// active from the first epoch plus `churn_per_epoch` short-lived
+/// arrivals per epoch over `total_epochs` epochs, all sourced from
+/// `rng` — two coordinators fed from identically-seeded RNGs receive
+/// bitwise-identical workloads.
+pub(crate) fn submit_churn_workload(
+    coord: &mut Coordinator,
+    rng: &mut Rng,
+    jobs: usize,
+    churn_per_epoch: usize,
+    total_epochs: usize,
+) {
+    let mut next_id = 0u64;
+    for _ in 0..jobs {
+        let template = churn_sim_job(rng, next_id, 0.0, false);
+        let source = template.make_source(rng);
+        coord.submit(template.spec, source);
+        next_id += 1;
+    }
+    for epoch in 0..total_epochs {
+        let t = CHURN_EPOCH_SECS * epoch as f64;
+        for _ in 0..churn_per_epoch {
+            let template = churn_sim_job(rng, next_id, t, true);
+            let source = template.make_source(rng);
+            coord.submit(template.spec, source);
+            next_id += 1;
+        }
+    }
+}
+
 /// Sample one job for the end-to-end churn population. Long-lived jobs
 /// model the steady-state population (deep convergence tails, effectively
 /// unbounded iteration budget); short-lived jobs model churn (cheap
 /// iterations, a tight iteration cap, so they finish within a few epochs).
-fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: bool) -> JobTemplate {
+pub(crate) fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: bool) -> JobTemplate {
     let m = rng.range_f64(0.5, 4.0);
     let mu = rng.range_f64(0.9, 0.99);
     let floor = m * rng.range_f64(0.05, 0.3);
@@ -432,34 +473,22 @@ fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: bool) -> Job
 /// activation, refits, allocation, placement diffs and completions — the
 /// decision loop a production coordinator actually runs.
 pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
-    const EPOCH_SECS: f64 = 3.0;
-    let spec = ClusterSpec { nodes: (cfg.cores / 32).max(1), cores_per_node: 32 };
     let coord_cfg = CoordinatorConfig {
-        cluster: spec,
-        epoch_secs: EPOCH_SECS,
+        cluster: churn_cluster(cfg.cores),
+        epoch_secs: CHURN_EPOCH_SECS,
         refit_amortization: cfg.refit_amortization,
         threads: cfg.threads,
         ..Default::default()
     };
     let mut coord = Coordinator::new(coord_cfg, Box::new(SlaqPolicy::new()));
     let mut rng = Rng::new(cfg.seed);
-    let mut next_id = 0u64;
-    for _ in 0..cfg.jobs {
-        let template = churn_sim_job(&mut rng, next_id, 0.0, false);
-        let source = template.make_source(&mut rng);
-        coord.submit(template.spec, source);
-        next_id += 1;
-    }
-    let total_epochs = cfg.warmup_epochs + cfg.epochs;
-    for epoch in 0..total_epochs {
-        let t = EPOCH_SECS * epoch as f64;
-        for _ in 0..cfg.churn_per_epoch {
-            let template = churn_sim_job(&mut rng, next_id, t, true);
-            let source = template.make_source(&mut rng);
-            coord.submit(template.spec, source);
-            next_id += 1;
-        }
-    }
+    submit_churn_workload(
+        &mut coord,
+        &mut rng,
+        cfg.jobs,
+        cfg.churn_per_epoch,
+        cfg.warmup_epochs + cfg.epochs,
+    );
 
     for _ in 0..cfg.warmup_epochs {
         coord.step_epoch();

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [flags]
+//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|pred|all> [flags]
 //!     regenerate paper figures (CSV under --out, summary to stdout)
 //! slaq train --algo <name> [--iters N] [--variant small|base]
 //!     run one real training job through the PJRT runtime
@@ -56,7 +56,7 @@ fn print_usage() {
     println!(
         "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
          usage:\n  \
-         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|pred|all> [--out DIR] [...]\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|pred|all> [--out DIR] [...]\n  \
          slaq train --algo <name> [--iters N] [--variant small|base]\n  \
          slaq run [--policy P] [--jobs N] [--duration S]\n  \
          slaq check\n\n\
@@ -84,6 +84,12 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("churn-epochs", "12", "measured steady-state epochs for churn")
         .flag("churn-jobs", "1000,2000,4000,8000,16000", "population sizes for churn")
         .flag("churn-cores", "16384", "cluster capacity for churn")
+        .flag("locality-jobs", "4000,8000,16000", "population sizes for the locality scenario")
+        .flag("locality-cores", "16384", "cluster capacity for the locality scenario")
+        .flag("locality-zones", "2", "zones of the locality scenario's topology")
+        .flag("locality-racks", "8", "racks per zone in the locality scenario")
+        .flag("locality-churn", "32", "arrivals per epoch in the locality scenario")
+        .flag("locality-epochs", "12", "measured epochs for the locality scenario")
         .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
         .flag("seed", "20818", "workload seed")
         .flag("log", "info", "log level");
@@ -176,6 +182,19 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             churn_cores,
             churn_rate,
             churn_epochs,
+            parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
+        ));
+    }
+
+    if wants("locality") {
+        log::info!("locality scenario: rack-aware vs rack-blind placement…");
+        outputs.push(exp::locality_placement(
+            &parsed.get_csv::<usize>("locality-jobs").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u32>("locality-cores").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u32>("locality-zones").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u32>("locality-racks").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<usize>("locality-churn").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<usize>("locality-epochs").map_err(|e| anyhow!(e))?,
             parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
         ));
     }

@@ -1000,6 +1000,49 @@ mod tests {
     }
 
     #[test]
+    fn gain_table_shards_edge_cases_never_panic_or_emit_empty_shards() {
+        // Every shard must carry at least one row, the ranges must
+        // partition 0..rows in order, and each slice must hold exactly
+        // its rows' entries — for the degenerate layouts the epoch
+        // pipeline can hand this: no rows, one row, rows == shards,
+        // rows < shards, zero-length rows, and one row far larger than
+        // the balanced chunk target.
+        let check = |caps: &[u32], shards: usize| {
+            let mut t = GainTable::new();
+            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c)));
+            let pieces = t.shards_mut(shards);
+            if caps.is_empty() {
+                assert!(pieces.is_empty(), "0 rows must yield 0 shards");
+                return;
+            }
+            assert!(!pieces.is_empty(), "rows present but no shards emitted");
+            assert!(pieces.len() <= shards.max(1), "more shards than requested");
+            let mut next_row = 0usize;
+            for (rows, slice) in &pieces {
+                assert!(rows.end > rows.start, "empty shard range {rows:?} (caps {caps:?})");
+                assert_eq!(rows.start, next_row, "ranges must partition in order");
+                next_row = rows.end;
+                let want: usize = caps[rows.start..rows.end].iter().map(|&c| c as usize).sum();
+                assert_eq!(slice.len(), want, "slice/range mismatch for {rows:?}");
+            }
+            assert_eq!(next_row, caps.len(), "rows dropped by the sharding");
+        };
+
+        check(&[], 4); // 0 rows
+        for shards in [1usize, 2, 7] {
+            check(&[5], shards); // 1 row (incl. shards > rows)
+            check(&[3, 3, 3], 3); // rows == shards, balanced
+            check(&[0, 0, 0], shards); // all rows empty (zero caps)
+            check(&[100, 1, 1], shards); // one giant row above the target
+            check(&[1, 1, 100], shards); // giant row last
+            check(&[1, 100, 1, 0, 2], shards); // giant row in the middle
+            check(&[2, 2], 7); // rows < shards
+        }
+        // shards = 0 clamps to 1 rather than panicking.
+        check(&[4, 2], 0);
+    }
+
+    #[test]
     fn gain_table_identity_stamp_rejects_mismatched_requests() {
         let g = |cores: u32| cores as f64;
         let reqs = vec![

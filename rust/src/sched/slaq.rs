@@ -989,6 +989,79 @@ mod tests {
     }
 
     #[test]
+    fn stale_outlier_cannot_permanently_lock_out_warm_starts() {
+        // Regression for the cold-start/staleness asymmetry: a single
+        // ruinous warm measurement (an OS preemption spike, an aborted
+        // repair) makes the two-term model prefer the from-scratch path
+        // on every following epoch. Only the from-scratch side then keeps
+        // receiving measurements, so without the periodic re-probe the
+        // warm estimate could stay poisoned forever. Drive the real
+        // policy epoch over epoch and require the warm path to come back.
+        let gains: Vec<ConcaveGain> =
+            (0..8).map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[16; 8]);
+        let mut p = SlaqPolicy::new();
+        let base = p.allocate(&rs, 64);
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &base);
+        // Poison: warm looks 100000x more expensive than it is.
+        p.cost_model.observe_warm(8, 8, 10_000_000_000);
+        p.cost_model.observe_scratch(8, 64, 100);
+
+        let mut warm_epochs = 0usize;
+        let mut healed_at = None;
+        for epoch in 0..4 * DecisionStats::REPROBE_EVERY as usize {
+            let alloc = p.allocate_ctx(&ctx, &rs, 64);
+            check_invariants(&rs, 64, &alloc);
+            if p.last_warm_start {
+                warm_epochs += 1;
+                healed_at.get_or_insert(epoch);
+            }
+            ctx.record(&rs, &alloc);
+        }
+        let healed_at = healed_at.expect("re-probe never forced a warm epoch");
+        assert!(
+            healed_at <= DecisionStats::REPROBE_EVERY as usize,
+            "warm path locked out past the re-probe horizon (first warm at {healed_at})"
+        );
+        // After the probe heals the estimate, steady-state epochs (fully
+        // matched context, tiny repair) should settle back onto the warm
+        // path rather than probing once and relapsing.
+        assert!(
+            warm_epochs > 1,
+            "warm path never re-engaged after the forced probe ({warm_epochs} warm epochs)"
+        );
+    }
+
+    #[test]
+    fn one_sided_cold_start_samples_the_unprobed_path() {
+        // The caller-fallback contract: while `prefer_warm` returns None
+        // (one-sided model), the static matched-fraction prior decides —
+        // and because the prior keeps picking the measured side, the
+        // bootstrap rule must eventually force one measurement of the
+        // other side. Fully-matched contexts make the prior always-warm;
+        // the scratch side must still get sampled.
+        let gains: Vec<ConcaveGain> =
+            (0..6).map(|_| ConcaveGain { scale: 2.0, rate: 0.4 }).collect();
+        let rs = reqs(&gains, &[8; 6]);
+        let mut p = SlaqPolicy::new();
+        let base = p.allocate(&rs, 24); // untimed: model still empty
+        let mut ctx = SchedContext::new();
+        ctx.record(&rs, &base);
+        assert_eq!(p.cost_model.scratch_samples() + p.cost_model.warm_samples(), 0);
+
+        for _ in 0..2 * DecisionStats::REPROBE_EVERY as usize {
+            let alloc = p.allocate_ctx(&ctx, &rs, 24);
+            ctx.record(&rs, &alloc);
+        }
+        assert!(p.cost_model.warm_samples() > 0, "prior-side path never measured");
+        assert!(
+            p.cost_model.scratch_samples() > 0,
+            "bootstrap re-probe never sampled the from-scratch path"
+        );
+    }
+
+    #[test]
     fn deterministic_variant_ignores_the_cost_model() {
         let gains: Vec<ConcaveGain> =
             (0..8).map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 }).collect();

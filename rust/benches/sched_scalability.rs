@@ -1,7 +1,8 @@
 //! Bench: Fig 6 — SLAQ allocation decision time at scale, the jobs×cores
 //! sweep the paper plots, the churn scenario comparing the incremental
 //! (warm-start) decision path against from-scratch, and the end-to-end
-//! coordinator epoch loop under the same churn regime at 1000–16000 jobs.
+//! coordinator epoch loop under the same churn regime at 1000–100 000
+//! jobs (the top cell via the sharded coordinator).
 //!
 //! Besides the human-readable tables, the run emits `BENCH_sched.json` —
 //! `{schema, host, command, entries}` where `entries` is an array of
@@ -19,9 +20,15 @@
 //! and `epoch_loop_refits_per_epoch_*` reports *counts* (refits and
 //! dirty jobs per epoch, in the mean/p50 fields) — with selective sync
 //! these track jobs-with-new-samples, not the active-job count. The
-//! `placement_*_per_epoch_*` entries are the locality scenario's
-//! placement-quality counts: mean rack span and cross-rack cores moved
-//! per epoch, rack-aware vs rack-blind on a 16-rack topology.
+//! `epoch_loop_sched_*` entries isolate the allocation-decision split
+//! (the latency the sharded coordinator drives sub-millisecond).
+//! `_s{N}` entries run the sharded coordinator (N zone shards, each with
+//! its own warm-start/gain-table/CELF allocator, budgets rebalanced by
+//! the broker every 8 epochs) — the configuration that scales the sweep
+//! to the 100 000-job cell. The `placement_*_per_epoch_*` entries are
+//! the locality scenario's placement-quality counts: mean rack span and
+//! cross-rack cores moved per epoch, rack-aware vs rack-blind on a
+//! 16-rack topology.
 
 #[path = "common.rs"]
 mod common;
@@ -94,7 +101,7 @@ fn main() {
     // Publish one entry set per cell at the machine's full parallelism
     // (threads: 0) — the headline configuration — plus the refit / gain /
     // count splits.
-    let epoch_cell = |all: &mut Vec<BenchStats>, jobs: usize, cores: u32, churn: usize, threads: usize, suffix: &str| {
+    let epoch_cell = |all: &mut Vec<BenchStats>, jobs: usize, cores: u32, churn: usize, threads: usize, shards: u32, suffix: &str| {
         let cfg = EpochLoopConfig {
             jobs,
             cores,
@@ -104,16 +111,19 @@ fn main() {
             seed: 7,
             refit_amortization: false,
             threads,
+            shards,
+            broker_epochs: 8,
         };
         let cost = epoch_loop_cost(&cfg);
         println!(
             "epoch_loop_{jobs}x{cores}_r{churn}{suffix}: epoch mean {:.2} ms (p50 {:.2}, \
-             p95 {:.2}), allocation {:.2} ms, refit {:.2} ms, gain build {:.2} ms \
-             ({:.0} refits / {:.0} dirty / {:.0} active), {} completed / {} arrived",
+             p95 {:.2}), allocation {:.3} ms (p95 {:.3}), refit {:.2} ms, gain build \
+             {:.2} ms ({:.0} refits / {:.0} dirty / {:.0} active), {} completed / {} arrived",
             cost.mean_millis(),
             cost.percentile_millis(50.0),
             cost.percentile_millis(95.0),
             cost.mean_sched_millis(),
+            cost.sched_percentile_millis(95.0),
             cost.mean_refit_millis(),
             cost.mean_gain_millis(),
             cost.mean_refits(),
@@ -127,6 +137,15 @@ fn main() {
             mean: cost.mean_millis() / 1e3,
             p50: cost.percentile_millis(50.0) / 1e3,
             p95: cost.percentile_millis(95.0) / 1e3,
+            iters: cost.epoch_millis.len(),
+        });
+        // The allocation-decision split alone — the latency the sharded
+        // coordinator is built to hold sub-millisecond at 100k jobs.
+        all.push(BenchStats {
+            name: format!("epoch_loop_sched_{jobs}x{cores}_r{churn}{suffix}"),
+            mean: cost.mean_sched_millis() / 1e3,
+            p50: cost.sched_percentile_millis(50.0) / 1e3,
+            p95: cost.sched_percentile_millis(95.0) / 1e3,
             iters: cost.epoch_millis.len(),
         });
         // The epoch's three-way cost split: predictor-sync latency…
@@ -168,7 +187,7 @@ fn main() {
         (8000, 32768, 48),
         (16000, 65536, 64),
     ] {
-        epoch_cell(&mut all, jobs, cores, churn, 0, "");
+        epoch_cell(&mut all, jobs, cores, churn, 0, 0, "");
     }
 
     println!("== churn: worker-thread sweep at the 4000-job cell ==");
@@ -177,10 +196,19 @@ fn main() {
     // Results are identical — only wall-clock moves.
     let mut reference_cell: Option<slaq::exp::EpochLoopCost> = None;
     for threads in [1usize, 2, 4, 8] {
-        let cost = epoch_cell(&mut all, 4000, 16384, 32, threads, &format!("_t{threads}"));
+        let cost = epoch_cell(&mut all, 4000, 16384, 32, threads, 0, &format!("_t{threads}"));
         if threads == 1 {
             reference_cell = Some(cost);
         }
+    }
+
+    println!("== churn: sharded coordinator at scale (8 zone shards) ==");
+    // The per-zone shard allocators + budget broker vs the flat path at
+    // the top of the flat sweep, then the 100k-job cell the flat
+    // coordinator cannot hold — the `epoch_loop_sched_*_s8` p95 is the
+    // sub-millisecond acceptance target.
+    for (jobs, cores, churn) in [(16000usize, 65536u32, 64usize), (100_000, 65536, 128)] {
+        epoch_cell(&mut all, jobs, cores, churn, 0, 8, "_s8");
     }
 
     println!("== locality: rack-aware vs rack-blind placement (2×8 racks) ==");
@@ -242,6 +270,8 @@ fn main() {
             seed: 7,
             refit_amortization: true,
             threads: 1,
+            shards: 0,
+            broker_epochs: 8,
         });
         println!(
             "epoch_loop_amortized_4000x16384_r32: refit {:.2} ms -> {:.2} ms, \

@@ -126,6 +126,14 @@ impl Topology {
         self.racks() == 1
     }
 
+    /// Number of nodes mapped into `zone` — the zone-keyed capacity
+    /// weight the sharded coordinator seeds its per-shard core budgets
+    /// from (each shard's initial budget is its zone's share of the
+    /// cluster, before the broker's first demand-driven rebalance).
+    pub fn zone_nodes(&self, zone: u32) -> u32 {
+        (0..self.nodes()).filter(|&n| self.zone_of(n) == zone).count() as u32
+    }
+
     /// Rack of `node`.
     #[inline]
     pub fn rack_of(&self, node: u32) -> u32 {
@@ -270,6 +278,17 @@ mod tests {
                 assert!(t.rack_of(n) < racks);
             }
         }
+    }
+
+    #[test]
+    fn zone_nodes_partition_the_cluster() {
+        for (zones, rpz, nodes) in [(1u32, 1u32, 5u32), (2, 2, 8), (3, 2, 7), (2, 8, 33)] {
+            let t = Topology::uniform(zones, rpz, nodes);
+            let total: u32 = (0..t.zones()).map(|z| t.zone_nodes(z)).sum();
+            assert_eq!(total, nodes, "zones must partition uniform({zones}, {rpz}, {nodes})");
+        }
+        let flat = Topology::flat(6);
+        assert_eq!(flat.zone_nodes(0), 6);
     }
 
     #[test]

@@ -7,37 +7,63 @@
 //!
 //! ## The deterministic parallel epoch pipeline
 //!
-//! With `threads > 1` the two data-parallel stages of an epoch — the
-//! dirty-set predictor refits and the gain-table build — are sharded
-//! across `std::thread::scope` workers; the decision loop itself stays a
-//! single thread, per the paper. Determinism is by construction:
+//! With `threads > 1` the data-parallel stages of an epoch — the
+//! dirty-set predictor refits, the gain-table build, and (in sharded
+//! mode) the per-shard decisions — run on a persistent
+//! [`WorkerPool`] created once in [`Coordinator::new`]; tasks are pinned
+//! to workers in stable submission order, so no per-epoch thread spawns
+//! and no scheduling-order dependence. Determinism is by construction:
 //!
-//! * each shard works on *disjoint, preassigned* slots (a predictor is
+//! * each task works on *disjoint, preassigned* slots (a predictor is
 //!   refit by exactly one worker; a gain-table row is filled by exactly
-//!   one worker into its fixed arena range), so no output depends on
-//!   which worker ran first;
-//! * shard results merge in stable job-id order (predictors return to
-//!   their ledger rows by id; table rows were laid out in request order
-//!   before any worker started), and the only cross-shard aggregate is
-//!   an integer refit count;
+//!   one worker into its fixed arena range; a shard's policy, context
+//!   and grant buffer are touched only by that shard's task), so no
+//!   output depends on which worker ran first;
+//! * task results merge in stable job-id/shard-id order (predictors
+//!   return to their ledger rows by id; table rows were laid out in
+//!   request order before any worker started; shard grants scatter back
+//!   through each shard's fixed index list), and the only cross-task
+//!   aggregates are integer counts;
 //! * only plain data crosses threads: `&mut OnlinePredictor` rows (the
 //!   predictor is owned data, `Send + Sync` by construction — asserted
-//!   at compile time in `predictor/online.rs`) and `&mut [f64]` arena
-//!   slices. The job rows themselves, which hold non-`Sync`
-//!   [`LossSource`] boxes, never leave the coordinator thread.
+//!   at compile time in `predictor/online.rs`), `&mut [f64]` arena
+//!   slices, and `&mut Shard` state. The job rows themselves, which
+//!   hold non-`Sync` [`LossSource`] boxes, never leave the coordinator
+//!   thread.
 //!
 //! Hence `slaq-det` runs are bit-identical at any thread count
 //! (property-tested below), and `threads: 1` remains the serial
 //! reference path — direct oracle calls inside the allocator, no tables,
 //! no worker threads.
+//!
+//! ## Sharded epochs and the budget broker
+//!
+//! With [`CoordinatorConfig::sharded`] the job population is partitioned
+//! across per-zone shards keyed by the topology (`job id mod zones` —
+//! stable, order-preserving within each shard). Each shard owns a full
+//! policy instance, its own [`SchedContext`] (previous grants + gain
+//! table), and a persistent grant buffer, and runs the existing
+//! warm-start/gain-table/CELF path over only its own jobs against a core
+//! *budget*; a top-level broker re-splits total capacity across the
+//! budgets every [`CoordinatorConfig::broker_epochs`] epochs from each
+//! shard's aggregate marginal-gain curve
+//! ([`crate::sched::rebalance_budgets`]). The common-case epoch is
+//! therefore O(shard) work done in parallel, not O(cluster). With one
+//! shard the broker always grants the whole capacity, so a flat-topology
+//! sharded run is bit-identical to the unsharded coordinator
+//! (property-tested below).
 
 use super::job::{JobState, JobSpec, Job};
 use super::ledger::JobLedger;
+use super::pool::WorkerPool;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
 use crate::cluster::{ClusterSpec, CostModel, LocalityModel, NodePool, TopologySpec};
 use crate::predictor::OnlinePredictor;
-use crate::sched::{GainModel, GainTable, JobRequest, Policy, SchedContext};
+use crate::sched::{
+    policy_by_name, rebalance_budgets, Allocation, GainModel, GainTable, JobRequest, Policy,
+    SchedContext, ShardDemand,
+};
 use std::time::Instant;
 
 /// Coordinator configuration.
@@ -79,13 +105,27 @@ pub struct CoordinatorConfig {
     /// separately.
     pub refit_amortization: bool,
     /// Worker threads for the epoch pipeline's data-parallel stages (the
-    /// dirty-set predictor refits and the gain-table build). `0` (the
-    /// default) resolves to the machine's available parallelism at
-    /// coordinator construction; `1` keeps the fully serial reference
-    /// path — oracle calls inside the allocator, no materialized tables,
-    /// no worker threads. Deterministic policies produce bit-identical
-    /// runs at every setting (see the module docs).
+    /// dirty-set predictor refits, the gain-table build, and the
+    /// per-shard decisions in sharded mode). `0` (the default) resolves
+    /// to the machine's available parallelism at coordinator
+    /// construction; `1` keeps the fully serial reference path — oracle
+    /// calls inside the allocator, no materialized tables, no worker
+    /// threads. Deterministic policies produce bit-identical runs at
+    /// every setting (see the module docs).
     pub threads: usize,
+    /// Partition the job population across per-zone shard schedulers
+    /// (one shard per topology zone, `job id mod zones`), each running
+    /// the full policy path over only its own jobs against a broker-set
+    /// core budget. Off by default — the flat single-allocator path. On
+    /// a single-zone topology the sharded pipeline is bit-identical to
+    /// the flat one (property-tested in this module).
+    pub sharded: bool,
+    /// Broker cadence for sharded mode: per-shard core budgets are
+    /// rebalanced from the shards' aggregate marginal-gain curves every
+    /// this many epochs (the first epoch always rebalances). Between
+    /// rebalances the budgets stay fixed, so common-case epochs do no
+    /// cross-shard work.
+    pub broker_epochs: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -100,6 +140,8 @@ impl Default for CoordinatorConfig {
             selective_refits: true,
             refit_amortization: false,
             threads: 0,
+            sharded: false,
+            broker_epochs: 8,
         }
     }
 }
@@ -196,6 +238,33 @@ struct EpochScratch {
     /// Predictors moved out of the ledger for a sharded refit (empty
     /// between epochs; keeps its capacity).
     refit_batch: Vec<(u64, OnlinePredictor)>,
+    /// The epoch's flat grant vector, written in place by the policy's
+    /// out-param path (or merged from the shard grants), so steady-state
+    /// epochs stop allocating a fresh grant per decision.
+    grant: Allocation,
+    /// Per-chunk refit counts for the pooled refit stage (threads-sized).
+    refit_counts: Vec<usize>,
+}
+
+/// One per-zone shard of the sharded coordinator: a full policy instance
+/// plus the persistent state its decisions evolve over. Every field is
+/// touched only by this shard's pipeline task (or the coordinator thread
+/// between phases), which is what makes the parallel decision phase
+/// deterministic.
+struct Shard {
+    /// This shard's own policy instance (same name/variant as the
+    /// coordinator's policy, resolved via [`policy_by_name`]).
+    policy: Box<dyn Policy>,
+    /// Shard-local scheduling context: previous grants and the shard's
+    /// materialized gain table.
+    ctx: SchedContext,
+    /// Core budget set by the broker at the last rebalance.
+    budget: u32,
+    /// Persistent grant buffer for the out-param decision path.
+    grant: Allocation,
+    /// Positions into this epoch's `active` list owned by the shard
+    /// (ascending — the stable merge order).
+    idx: Vec<usize>,
 }
 
 /// The SLAQ coordinator: owns the job ledger, the node pool, the policy
@@ -211,19 +280,52 @@ pub struct Coordinator {
     /// Resolved worker-thread count (`cfg.threads`, with 0 resolved to
     /// the machine's available parallelism at construction).
     threads: usize,
+    /// Persistent worker pool for the pipeline's data-parallel stages
+    /// (`Some` iff `threads > 1`), created once here and joined on drop —
+    /// no per-epoch thread spawns.
+    workers: Option<WorkerPool>,
+    /// Per-zone shards (empty unless `cfg.sharded`).
+    shards: Vec<Shard>,
     scratch: EpochScratch,
 }
 
 impl Coordinator {
     /// New coordinator with the given policy.
+    ///
+    /// In sharded mode ([`CoordinatorConfig::sharded`]) the policy's
+    /// [`Policy::name`] must resolve through [`policy_by_name`] so every
+    /// shard can own its own instance of the same variant; the built-in
+    /// policies all do.
     pub fn new(cfg: CoordinatorConfig, policy: Box<dyn Policy>) -> Self {
-        let mut pool =
-            NodePool::with_topology(cfg.cluster, cfg.topology.build(cfg.cluster.nodes));
+        let topology = cfg.topology.build(cfg.cluster.nodes);
+        let mut pool = NodePool::with_topology(cfg.cluster, topology.clone());
         pool.set_locality_aware(cfg.locality_aware);
         let threads = if cfg.threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             cfg.threads
+        };
+        let workers = (threads > 1).then(|| WorkerPool::new(threads));
+        let shards = if cfg.sharded {
+            // One shard per topology zone, each seeded with its zone's
+            // share of the cluster (zone node count × cores per node)
+            // until the broker's first demand-driven rebalance.
+            (0..topology.zones())
+                .map(|z| Shard {
+                    policy: policy_by_name(policy.name()).unwrap_or_else(|| {
+                        panic!(
+                            "sharded mode needs a registry policy, got {:?}",
+                            policy.name()
+                        )
+                    }),
+                    ctx: SchedContext::new(),
+                    budget: topology.zone_nodes(z) * cfg.cluster.cores_per_node,
+                    grant: Allocation::default(),
+                    idx: Vec::new(),
+                })
+                .collect()
+        } else {
+            Vec::new()
         };
         Self {
             cfg,
@@ -234,8 +336,30 @@ impl Coordinator {
             time: 0.0,
             epochs: Vec::new(),
             threads,
+            workers,
+            shards,
             scratch: EpochScratch::default(),
         }
+    }
+
+    /// Number of per-zone shards (0 when the coordinator is unsharded).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current per-shard core budgets, in shard id order (empty when
+    /// unsharded). After any epoch these always sum to the cluster
+    /// capacity — the broker's work-conservation invariant.
+    pub fn shard_budgets(&self) -> Vec<u32> {
+        self.shards.iter().map(|s| s.budget).collect()
+    }
+
+    /// Live-thread counter of the worker pool, for lifecycle tests.
+    #[cfg(test)]
+    fn worker_live_counter(
+        &self,
+    ) -> Option<std::sync::Arc<std::sync::atomic::AtomicUsize>> {
+        self.workers.as_ref().map(|w| w.live_counter())
     }
 
     /// Resolved worker-thread count for the epoch pipeline's
@@ -272,13 +396,14 @@ impl Coordinator {
     /// only the ledger's dirty set (jobs with new loss samples); the
     /// allocator receives the persistent [`SchedContext`] so warm-start
     /// policies pay for what changed, not for cluster capacity. With
-    /// `threads > 1` the refits and the gain-table build are sharded
-    /// across scoped workers (see the module docs for the determinism
-    /// argument), and the large per-epoch buffers (id lists, placement
-    /// targets, losses, the refit batch, the gain arena, the policy's
-    /// heaps) come from reusable scratch pools, so steady-state epoch
-    /// allocations are limited to what escapes into the trace plus a few
-    /// small borrow-scoped vectors (the gain views and request list).
+    /// `threads > 1` the refits, the gain-table build and (in sharded
+    /// mode) the per-shard decisions run on the persistent worker pool
+    /// (see the module docs for the determinism argument), and the large
+    /// per-epoch buffers (id lists, placement targets, losses, the refit
+    /// batch, the gain arena, the grant vector, the policy's heaps) come
+    /// from reusable scratch pools, so steady-state epoch allocations are
+    /// limited to what escapes into the trace plus a few small
+    /// borrow-scoped vectors (the gain views and request lists).
     pub fn step_epoch(&mut self) {
         let t0 = self.time;
         let window = self.cfg.epoch_secs;
@@ -333,23 +458,27 @@ impl Coordinator {
             }
             let len = batch.len();
             let chunk = (len / threads + usize::from(len % threads != 0)).max(1);
-            refits = std::thread::scope(|s| {
-                let workers: Vec<_> = batch
-                    .chunks_mut(chunk)
-                    .map(|shard| {
-                        s.spawn(move || {
-                            let mut done = 0usize;
-                            for (_, predictor) in shard.iter_mut() {
-                                if predictor.refresh_fit_deferrable(amortize) {
-                                    done += 1;
-                                }
+            let mut counts = std::mem::take(&mut self.scratch.refit_counts);
+            counts.clear();
+            counts.resize(batch.chunks(chunk).len(), 0);
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = batch
+                .chunks_mut(chunk)
+                .zip(counts.iter_mut())
+                .map(|(shard, slot)| {
+                    Box::new(move || {
+                        let mut done = 0usize;
+                        for (_, predictor) in shard.iter_mut() {
+                            if predictor.refresh_fit_deferrable(amortize) {
+                                done += 1;
                             }
-                            done
-                        })
-                    })
-                    .collect();
-                workers.into_iter().map(|w| w.join().expect("refit worker panicked")).sum()
-            });
+                        }
+                        *slot = done;
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            self.workers.as_ref().expect("threads > 1 implies a worker pool").run(tasks);
+            refits = counts.iter().sum();
+            self.scratch.refit_counts = counts;
             for (id, predictor) in batch.drain(..) {
                 self.ledger.job_mut(id).expect("synced job in ledger").predictor = predictor;
             }
@@ -360,7 +489,7 @@ impl Coordinator {
         let capacity = self.cfg.cluster.capacity();
         let gain_nanos;
         let sched_nanos;
-        let allocation;
+        let mut grant = std::mem::take(&mut self.scratch.grant);
         let mut targets = std::mem::take(&mut self.scratch.targets);
         targets.clear();
         let mut losses = std::mem::take(&mut self.scratch.losses);
@@ -380,73 +509,231 @@ impl Coordinator {
                 losses.push(job.current_loss());
             }
 
-            // 4. Materialize the gain tables (threads > 1, and only for
-            // policies that actually read them — fair/FIFO/static never
-            // consult gains, so building them a table would be pure
-            // waste): every job's gain curve evaluated once into the
-            // context's flat arena, sharded by contiguous row ranges, so
-            // the allocator's innermost loops become O(1) lookups. Timed
-            // separately — the epoch's third cost split next to refits
-            // and allocation. The fill goes through the shared
-            // `GainTable::fill_shard` (one definition of the row layout)
-            // over the same `JobGain` views the serial path hands the
-            // allocator, so table entries are bit-identical to oracle
-            // calls.
-            {
-                let table = self.sched_ctx.gain_table_mut();
-                if threads > 1 && self.policy.wants_gain_table() {
-                    let gain_start = Instant::now();
-                    table.reset(active.iter().zip(&gains).map(|(&id, g)| (id, g.cap())));
-                    let gains_ref: &[JobGain<'_>] = &gains;
-                    let shards = table.shards_mut(threads);
-                    std::thread::scope(|s| {
-                        for (rows, slice) in shards {
-                            s.spawn(move || {
-                                GainTable::fill_shard(
-                                    rows,
-                                    slice,
-                                    |r| gains_ref[r].cap() as usize,
-                                    |r, c| gains_ref[r].gain(c),
-                                )
-                            });
-                        }
-                    });
-                    table.mark_ready();
-                    gain_nanos = gain_start.elapsed().as_nanos() as u64;
+            if self.shards.is_empty() {
+                // 4. Materialize the gain table (threads > 1, and only
+                // for policies that actually read them — fair/FIFO/static
+                // never consult gains, so building them a table would be
+                // pure waste): every job's gain curve evaluated once into
+                // the context's flat arena, split into contiguous row
+                // ranges across the persistent worker pool, so the
+                // allocator's innermost loops become O(1) lookups. Timed
+                // separately — the epoch's third cost split next to
+                // refits and allocation. The fill goes through the shared
+                // `GainTable::fill_shard` (one definition of the row
+                // layout) over the same `JobGain` views the serial path
+                // hands the allocator, so table entries are bit-identical
+                // to oracle calls.
+                {
+                    let table = self.sched_ctx.gain_table_mut();
+                    if threads > 1 && self.policy.wants_gain_table() {
+                        let gain_start = Instant::now();
+                        table.reset(active.iter().zip(&gains).map(|(&id, g)| (id, g.cap())));
+                        let gains_ref: &[JobGain<'_>] = &gains;
+                        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = table
+                            .shards_mut(threads)
+                            .into_iter()
+                            .map(|(rows, slice)| {
+                                Box::new(move || {
+                                    GainTable::fill_shard(
+                                        rows,
+                                        slice,
+                                        |r| gains_ref[r].cap() as usize,
+                                        |r, c| gains_ref[r].gain(c),
+                                    )
+                                }) as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        self.workers
+                            .as_ref()
+                            .expect("threads > 1 implies a worker pool")
+                            .run(tasks);
+                        table.mark_ready();
+                        gain_nanos = gain_start.elapsed().as_nanos() as u64;
+                    } else {
+                        table.invalidate();
+                        gain_nanos = 0;
+                    }
+                }
+
+                let requests: Vec<JobRequest<'_>> = active
+                    .iter()
+                    .zip(&gains)
+                    .map(|(&id, g)| JobRequest { id, max_cores: g.cap(), gain: g })
+                    .collect();
+
+                // 5. Allocate (this is the decision Fig 6 times), writing
+                // into the persistent grant buffer — steady-state epochs
+                // reuse it instead of allocating a grant per decision.
+                // The context carries the previous grant for the
+                // warm-start path and the freshly built gain table.
+                let start = Instant::now();
+                self.policy.allocate_ctx_into(&self.sched_ctx, &requests, capacity, &mut grant);
+                sched_nanos = start.elapsed().as_nanos() as u64;
+
+                // Persist this epoch's grant for the next warm start
+                // (which also retires the table — its rows describe this
+                // epoch), and republish the policy's decision-cost model
+                // so context observers (benchmarks, traces) can read it.
+                self.sched_ctx.record(&requests, &grant);
+                if let Some(stats) = self.policy.decision_stats() {
+                    self.sched_ctx.record_stats(stats);
+                }
+            } else {
+                // 4'. Sharded epoch (see the module docs): partition the
+                // active positions by `id mod zones` (stable, ascending
+                // within each shard), materialize per-shard gain tables
+                // in parallel, let the broker re-split the core budgets
+                // on its cadence, then run every shard's decision
+                // concurrently against its own budget and merge the
+                // grants in shard-index order.
+                let ns = self.shards.len() as u64;
+                for shard in &mut self.shards {
+                    shard.idx.clear();
+                }
+                for (i, &id) in active.iter().enumerate() {
+                    self.shards[(id % ns) as usize].idx.push(i);
+                }
+                let gains_ref: &[JobGain<'_>] = &gains;
+                let active_ref: &[u64] = &active;
+
+                // Phase A — per-shard gain tables. Each shard's table is
+                // reset and filled by exactly one task over that shard's
+                // rows (same `JobGain` views, so table ≡ oracle bitwise).
+                let build_tables = threads > 1
+                    && self.shards.first().map(|s| s.policy.wants_gain_table()).unwrap_or(false);
+                let gain_start = Instant::now();
+                if build_tables {
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                        .shards
+                        .iter_mut()
+                        .map(|shard| {
+                            Box::new(move || {
+                                let Shard { ctx, idx, .. } = shard;
+                                let table = ctx.gain_table_mut();
+                                table.reset(
+                                    idx.iter().map(|&i| (active_ref[i], gains_ref[i].cap())),
+                                );
+                                for (rows, slice) in table.shards_mut(1) {
+                                    GainTable::fill_shard(
+                                        rows,
+                                        slice,
+                                        |r| gains_ref[idx[r]].cap() as usize,
+                                        |r, c| gains_ref[idx[r]].gain(c),
+                                    );
+                                }
+                                table.mark_ready();
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    self.workers
+                        .as_ref()
+                        .expect("threads > 1 implies a worker pool")
+                        .run(tasks);
                 } else {
-                    table.invalidate();
-                    gain_nanos = 0;
+                    for shard in &mut self.shards {
+                        shard.ctx.gain_table_mut().invalidate();
+                    }
+                }
+
+                // Broker — every `broker_epochs` epochs (always the
+                // first), re-split capacity across the shard budgets
+                // from each shard's aggregate demand curve: descending
+                // first-core gains and upgrade marginals, read from the
+                // fresh tables when built, the oracles otherwise (the
+                // same bits either way). Rides the gain split, not the
+                // decision split — it digests gain curves, and the sched
+                // percentiles must keep measuring the allocator itself.
+                if self.epochs.len() % self.cfg.broker_epochs.max(1) == 0 {
+                    let mut demand: Vec<ShardDemand> = Vec::with_capacity(self.shards.len());
+                    for shard in &self.shards {
+                        let mut d = ShardDemand::default();
+                        let table = shard.ctx.gain_table();
+                        for (row, &i) in shard.idx.iter().enumerate() {
+                            let cap = gains_ref[i].cap();
+                            if cap == 0 {
+                                continue;
+                            }
+                            d.eligible_jobs += 1;
+                            let g = |c: u32| match table {
+                                Some(t) => t.gain(row, c),
+                                None => gains_ref[i].gain(c),
+                            };
+                            let mut prev = g(1);
+                            d.first_core.push(prev);
+                            for k in 2..=cap {
+                                let gk = g(k);
+                                d.upgrades.push(gk - prev);
+                                prev = gk;
+                            }
+                        }
+                        d.finish(capacity as usize);
+                        demand.push(d);
+                    }
+                    let budgets = rebalance_budgets(capacity, &demand);
+                    for (shard, b) in self.shards.iter_mut().zip(budgets) {
+                        shard.budget = b;
+                    }
+                }
+                gain_nanos = gain_start.elapsed().as_nanos() as u64;
+
+                // Phase B — every shard's decision, concurrently. Each
+                // task touches only its own shard's policy/context/grant
+                // (plus shared `Sync` gain views), builds its request
+                // view locally, and records the grant for the shard's
+                // next warm start — O(shard) work per task.
+                let start = Instant::now();
+                let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                    .shards
+                    .iter_mut()
+                    .map(|shard| {
+                        Box::new(move || {
+                            let Shard { policy, ctx, budget, grant, idx } = shard;
+                            let requests: Vec<JobRequest<'_>> = idx
+                                .iter()
+                                .map(|&i| JobRequest {
+                                    id: active_ref[i],
+                                    max_cores: gains_ref[i].cap(),
+                                    gain: &gains_ref[i],
+                                })
+                                .collect();
+                            policy.allocate_ctx_into(ctx, &requests, *budget, grant);
+                            ctx.record(&requests, grant);
+                            if let Some(stats) = policy.decision_stats() {
+                                ctx.record_stats(stats);
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                match &self.workers {
+                    Some(pool) => pool.run(tasks),
+                    None => tasks.into_iter().for_each(|t| t()),
+                }
+                sched_nanos = start.elapsed().as_nanos() as u64;
+
+                // Merge: scatter the shard grants back through each
+                // shard's fixed index list — deterministic regardless of
+                // which worker ran which shard.
+                grant.cores.clear();
+                grant.cores.resize(active.len(), 0);
+                for shard in &self.shards {
+                    for (pos, &i) in shard.idx.iter().enumerate() {
+                        grant.cores[i] = shard.grant.cores[pos];
+                    }
+                }
+                if let Some(stats) =
+                    self.shards.first().and_then(|s| s.policy.decision_stats())
+                {
+                    self.sched_ctx.record_stats(stats);
                 }
             }
 
-            let requests: Vec<JobRequest<'_>> = active
-                .iter()
-                .zip(&gains)
-                .map(|(&id, g)| JobRequest { id, max_cores: g.cap(), gain: g })
-                .collect();
-
-            // 5. Allocate (this is the decision Fig 6 times). The context
-            // carries the previous grant for the warm-start path and the
-            // freshly built gain table.
-            let start = Instant::now();
-            allocation = self.policy.allocate_ctx(&self.sched_ctx, &requests, capacity);
-            sched_nanos = start.elapsed().as_nanos() as u64;
-
-            // Persist this epoch's grant for the next warm start (which
-            // also retires the table — its rows describe this epoch), and
-            // republish the policy's decision-cost model so context
-            // observers (benchmarks, traces) can read it.
-            self.sched_ctx.record(&requests, &allocation);
-            if let Some(stats) = self.policy.decision_stats() {
-                self.sched_ctx.record_stats(stats);
-            }
-            targets.extend(requests.iter().zip(&allocation.cores).map(|(r, &cores)| (r.id, cores)));
+            targets.extend(active.iter().zip(&grant.cores).map(|(&id, &cores)| (id, cores)));
             // Epoch record (losses at epoch start, before jobs advance;
             // rack spans are stamped after the placement diff below).
             entries = active
                 .iter()
                 .zip(&losses)
-                .zip(&allocation.cores)
+                .zip(&grant.cores)
                 .map(|((&id, &loss), &cores)| EpochEntry { job: id, cores, loss, rack_span: 0 })
                 .collect();
         }
@@ -484,7 +771,7 @@ impl Coordinator {
         // for the next sync, while completed jobs leave the running set,
         // the dirty set, the node pool and the scheduling context for
         // good.
-        for ((&id, &cores), &span) in active.iter().zip(&allocation.cores).zip(&spans) {
+        for ((&id, &cores), &span) in active.iter().zip(&grant.cores).zip(&spans) {
             let slowdown = self.cfg.locality.slowdown(span as usize);
             let job = self.ledger.job_mut(id).expect("running job");
             job.max_rack_span = job.max_rack_span.max(span);
@@ -497,6 +784,10 @@ impl Coordinator {
                 self.pool.release_all(id);
                 self.ledger.retire(id);
                 self.sched_ctx.forget(id);
+                if !self.shards.is_empty() {
+                    let ns = self.shards.len() as u64;
+                    self.shards[(id % ns) as usize].ctx.forget(id);
+                }
             }
         }
 
@@ -506,6 +797,7 @@ impl Coordinator {
         self.scratch.targets = targets;
         self.scratch.losses = losses;
         self.scratch.spans = spans;
+        self.scratch.grant = grant;
 
         self.time = t0 + window;
     }
@@ -1012,6 +1304,155 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn sharded_single_shard_is_bit_identical_to_flat() {
+        // The sharded tentpole's anchor invariant: on a single-zone
+        // topology the sharded pipeline degenerates to one shard whose
+        // broker budget is always the whole capacity, and must be
+        // indistinguishable from the flat coordinator — same grants,
+        // losses, completions, bit for bit — at any thread count and any
+        // broker cadence.
+        use crate::testkit::{forall, sim};
+        forall("sharded(1 zone) ≡ flat", 4, |g| {
+            let templates = sim::random_churn_templates(g, 12, 30.0);
+            let src_seed = g.u64();
+            let broker_epochs = g.usize_in(1, 6);
+            let run = |sharded: bool, threads: usize| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+                    epoch_secs: 2.0,
+                    threads,
+                    sharded,
+                    broker_epochs,
+                    ..Default::default()
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                assert_eq!(c.shard_count(), usize::from(sharded));
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(60.0);
+                c.into_trace()
+            };
+            let flat = run(false, 1);
+            for threads in [1usize, 2, 4] {
+                let shard = run(true, threads);
+                assert_eq!(flat.epochs.len(), shard.epochs.len());
+                for (a, b) in flat.epochs.iter().zip(&shard.epochs) {
+                    assert_eq!(a.entries.len(), b.entries.len());
+                    for (x, y) in a.entries.iter().zip(&b.entries) {
+                        assert_eq!(x.job, y.job);
+                        assert_eq!(
+                            x.cores, y.cores,
+                            "grants diverged at t={} ({threads} threads)",
+                            a.time
+                        );
+                        assert_eq!(
+                            x.loss, y.loss,
+                            "losses diverged at t={} ({threads} threads)",
+                            a.time
+                        );
+                    }
+                }
+                assert_eq!(flat.jobs.len(), shard.jobs.len());
+                for (a, b) in flat.jobs.iter().zip(&shard.jobs) {
+                    assert_eq!(a.completion, b.completion, "job {}", a.id);
+                    assert_eq!(a.samples, b.samples, "job {}", a.id);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn multi_zone_sharded_trace_is_invariant_to_thread_count() {
+        // The sharded `slaq-det` determinism guarantee: for a fixed shard
+        // count, traces are bit-identical at every thread count — shard
+        // tasks own disjoint state, grants merge through fixed index
+        // lists, and the broker split is a pure function of demand.
+        use crate::testkit::{forall, sim};
+        forall("sharded zones=2: threads=1 ≡ threads=N", 3, |g| {
+            let templates = sim::random_churn_templates(g, 12, 30.0);
+            let src_seed = g.u64();
+            let run = |threads: usize| {
+                let cfg = CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 4, cores_per_node: 8 },
+                    topology: TopologySpec::Uniform { zones: 2, racks_per_zone: 2 },
+                    epoch_secs: 2.0,
+                    threads,
+                    sharded: true,
+                    broker_epochs: 4,
+                    ..Default::default()
+                };
+                let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+                assert_eq!(c.shard_count(), 2);
+                sim::submit_templates(&mut c, &templates, src_seed);
+                c.run_until(50.0);
+                c.into_trace()
+            };
+            let serial = run(1);
+            for threads in [2usize, 4] {
+                let par = run(threads);
+                assert_eq!(serial.epochs.len(), par.epochs.len());
+                for (a, b) in serial.epochs.iter().zip(&par.epochs) {
+                    assert_eq!(a.entries.len(), b.entries.len());
+                    for (x, y) in a.entries.iter().zip(&b.entries) {
+                        assert_eq!(x.job, y.job);
+                        assert_eq!(x.cores, y.cores, "t={} ({threads} threads)", a.time);
+                        assert_eq!(x.loss, y.loss, "t={} ({threads} threads)", a.time);
+                        assert_eq!(x.rack_span, y.rack_span, "t={} ({threads} threads)", a.time);
+                    }
+                }
+                for (a, b) in serial.jobs.iter().zip(&par.jobs) {
+                    assert_eq!(a.completion, b.completion, "job {}", a.id);
+                    assert_eq!(a.samples, b.samples, "job {}", a.id);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn shard_budgets_conserve_capacity_over_a_run() {
+        // Work conservation end to end: the zone-keyed seed budgets and
+        // every broker rebalance must keep Σ budgets == capacity.
+        let cfg = CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 4, cores_per_node: 8 },
+            topology: TopologySpec::Uniform { zones: 2, racks_per_zone: 1 },
+            epoch_secs: 2.0,
+            threads: 2,
+            sharded: true,
+            broker_epochs: 3,
+            ..Default::default()
+        };
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+        assert_eq!(c.shard_count(), 2);
+        assert_eq!(c.shard_budgets().iter().sum::<u32>(), 32, "zone-keyed seed budgets");
+        for id in 0..10 {
+            c.submit(mk_spec(id, 0.4 * id as f64, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        for _ in 0..12 {
+            c.step_epoch();
+            assert_eq!(
+                c.shard_budgets().iter().sum::<u32>(),
+                32,
+                "broker violated work conservation"
+            );
+        }
+        c.pool().check_invariants();
+    }
+
+    #[test]
+    fn dropping_the_coordinator_joins_its_worker_pool() {
+        use std::sync::atomic::Ordering;
+        let cfg = CoordinatorConfig { threads: 4, ..small_cluster() };
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::new()));
+        for id in 0..4 {
+            c.submit(mk_spec(id, 0.0, CurveKind::Exponential), exp_source(id + 1, 0.9));
+        }
+        c.step_epoch();
+        let live = c.worker_live_counter().expect("threads > 1 implies a pool");
+        assert_eq!(live.load(Ordering::SeqCst), 4, "pool created once, in new()");
+        drop(c);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "worker threads leaked past drop");
     }
 
     #[test]

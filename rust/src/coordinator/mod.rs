@@ -35,10 +35,12 @@
 mod epoch;
 mod job;
 mod ledger;
+mod pool;
 mod source;
 mod trace;
 
 pub use epoch::{Coordinator, CoordinatorConfig};
+pub use pool::WorkerPool;
 pub use job::{Job, JobSpec, JobState};
 pub use ledger::{JobLedger, LedgerEntry};
 pub use source::{LossSource, NonConvexSource, ReplaySource, SyntheticSource};

@@ -1,0 +1,306 @@
+//! Persistent worker pool for the epoch pipeline's data-parallel stages.
+//!
+//! The PR 4 pipeline spawned fresh `std::thread::scope` workers for every
+//! epoch's refit and gain-table stages — two rounds of thread creation
+//! plus teardown per epoch, which starts to dominate the stage cost once
+//! per-shard work drops to microseconds (exactly the regime the sharded
+//! coordinator targets). This pool creates its workers once (in
+//! `Coordinator::new`), feeds them boxed tasks over per-worker channels,
+//! and joins them when the pool drops.
+//!
+//! ## Determinism
+//!
+//! Task `i` of a batch is pinned to worker `i % workers` in submission
+//! order, and each worker drains its channel FIFO — the assignment of
+//! work to workers is a pure function of the batch, never of thread
+//! timing. Pipeline outputs stay bit-identical for the same reason they
+//! did under `thread::scope`: every task writes a disjoint, preassigned
+//! slot, so nothing depends on completion order.
+//!
+//! ## Borrowed tasks
+//!
+//! [`WorkerPool::run`] accepts closures that borrow the caller's stack
+//! (a `'scope` lifetime) even though the worker threads are `'static`.
+//! This is sound because `run` does not return — normally or by panic —
+//! until every submitted task has completed (it counts completion
+//! messages), so the borrows outlive all worker-side use: the same
+//! guarantee `std::thread::scope` makes, enforced by blocking instead of
+//! by a scope.
+//!
+//! ## Panics
+//!
+//! A panicking task is caught on its worker (the worker thread itself
+//! never dies), reported back over the batch's completion channel, and
+//! re-raised on the caller once the whole batch has drained — a worker
+//! panic surfaces as a panic in the calling epoch, never as a hang, a
+//! leaked thread, or a half-poisoned pool, and the pool remains usable
+//! for the next batch.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One task's outcome: `Err` carries a caught panic payload to re-raise.
+type Outcome = Result<(), Box<dyn std::any::Any + Send + 'static>>;
+
+/// A boxed unit of work with the pool's (erased) `'static` lifetime.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Packet sent to a worker: the task plus its batch's completion channel.
+type Packet = (Task, Sender<Outcome>);
+
+/// A fixed-size pool of persistent worker threads (see the module docs).
+pub struct WorkerPool {
+    /// One channel per worker; dropping them all shuts the pool down.
+    senders: Vec<Sender<Packet>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Workers whose thread loop is currently running (each worker
+    /// increments it before entering the loop and decrements on exit) —
+    /// the observable the shutdown tests key on.
+    live: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent worker threads (`workers >= 1`).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "a worker pool needs at least one worker");
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = channel::<Packet>();
+            let live = Arc::clone(&live);
+            live.fetch_add(1, Ordering::SeqCst);
+            handles.push(std::thread::spawn(move || {
+                while let Ok((task, done)) = rx.recv() {
+                    let outcome = catch_unwind(AssertUnwindSafe(task));
+                    // A send can only fail while the pool is mid-drop and
+                    // the caller's batch receiver is gone; nothing to do.
+                    let _ = done.send(outcome);
+                }
+                live.fetch_sub(1, Ordering::SeqCst);
+            }));
+            senders.push(tx);
+        }
+        Self { senders, handles, live }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Workers whose thread loop is currently running. `workers()` while
+    /// the pool is alive; `0` once `Drop` has joined them (observed
+    /// through a clone of the counter taken before the drop).
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Clone of the live-worker counter, for observing shutdown after the
+    /// pool itself is gone.
+    pub fn live_counter(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.live)
+    }
+
+    /// Run a batch of tasks across the pool and block until every task
+    /// has completed. Task `i` runs on worker `i % workers()`, in
+    /// submission order within each worker.
+    ///
+    /// If any task panicked, the first submitted task's payload is
+    /// re-raised *after* the whole batch has drained (no task can still
+    /// be touching caller borrows when the panic propagates).
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let n = tasks.len();
+        let (done_tx, done_rx) = channel::<Outcome>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: erasing `'scope` to `'static` is sound because this
+            // function blocks until all `n` completion messages arrive
+            // (even on the panic path), so every task — and every borrow
+            // it captured — is finished with before `run` returns. The
+            // sends below cannot fail while `&self` is alive: workers
+            // only exit when `Drop` closes their channels.
+            let task: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
+            };
+            self.senders[i % self.senders.len()]
+                .send((task, done_tx.clone()))
+                .expect("worker thread exited while the pool is alive");
+        }
+        drop(done_tx);
+        let mut first_panic: Option<Box<dyn std::any::Any + Send + 'static>> = None;
+        for _ in 0..n {
+            match done_rx.recv().expect("worker dropped a task without reporting it") {
+                Ok(()) => {}
+                Err(payload) => {
+                    first_panic.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing every channel lets each worker finish its queue and
+        // exit its loop; joining guarantees no thread outlives the pool.
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn boxed<'a>(f: impl FnOnce() + Send + 'a) -> Box<dyn FnOnce() + Send + 'a> {
+        Box::new(f)
+    }
+
+    #[test]
+    fn tasks_write_their_preassigned_slots() {
+        let pool = WorkerPool::new(3);
+        let mut slots = vec![0u64; 10];
+        {
+            let tasks = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| boxed(move || *slot = (i as u64 + 1) * 7))
+                .collect();
+            pool.run(tasks);
+        }
+        for (i, &v) in slots.iter().enumerate() {
+            assert_eq!(v, (i as u64 + 1) * 7, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn borrowed_stack_state_is_visible_after_run() {
+        // The 'scope-erasure contract: tasks may borrow the caller's
+        // stack, and the writes are visible once run() returns.
+        let pool = WorkerPool::new(2);
+        let data = vec![1u32, 2, 3, 4, 5, 6];
+        let sum = AtomicU64::new(0);
+        let chunks: Vec<&[u32]> = data.chunks(2).collect();
+        let tasks = chunks
+            .into_iter()
+            .map(|chunk| {
+                let sum = &sum;
+                boxed(move || {
+                    let s: u32 = chunk.iter().sum();
+                    sum.fetch_add(s as u64, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(sum.load(Ordering::SeqCst), 21);
+    }
+
+    #[test]
+    fn tasks_pin_to_workers_in_submission_order() {
+        // Task i runs on worker i % workers: with 2 workers, tasks 0 and 2
+        // must share a thread, as must tasks 1 and 3 — and the two pairs
+        // must be on different threads.
+        let pool = WorkerPool::new(2);
+        let mut tids: Vec<Option<std::thread::ThreadId>> = vec![None; 4];
+        {
+            let tasks = tids
+                .iter_mut()
+                .map(|slot| boxed(move || *slot = Some(std::thread::current().id())))
+                .collect();
+            pool.run(tasks);
+        }
+        let tids: Vec<_> = tids.into_iter().map(|t| t.unwrap()).collect();
+        assert_eq!(tids[0], tids[2], "tasks 0 and 2 must pin to worker 0");
+        assert_eq!(tids[1], tids[3], "tasks 1 and 3 must pin to worker 1");
+        assert_ne!(tids[0], tids[1], "two workers must be distinct threads");
+    }
+
+    #[test]
+    fn empty_batches_are_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(Vec::new());
+        assert_eq!(pool.live_workers(), 2);
+    }
+
+    #[test]
+    fn drop_joins_every_worker_thread() {
+        let live = {
+            let pool = WorkerPool::new(4);
+            assert_eq!(pool.workers(), 4);
+            assert_eq!(pool.live_workers(), 4);
+            // Give the pool real work before shutdown.
+            let counter = AtomicU64::new(0);
+            let tasks = (0..8)
+                .map(|_| {
+                    let counter = &counter;
+                    boxed(move || {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            pool.run(tasks);
+            assert_eq!(counter.load(Ordering::SeqCst), 8);
+            pool.live_counter()
+            // pool drops here: channels close, workers exit, drop joins.
+        };
+        assert_eq!(
+            live.load(Ordering::SeqCst),
+            0,
+            "worker threads leaked past the pool's drop"
+        );
+    }
+
+    #[test]
+    fn panicking_task_propagates_after_the_batch_drains() {
+        let pool = WorkerPool::new(2);
+        let mut slots = vec![0u32; 5];
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    boxed(move || {
+                        if i == 2 {
+                            panic!("task 2 exploded");
+                        }
+                        *slot = 1;
+                    })
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        let payload = caught.expect_err("worker panic must surface as an error");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("");
+        assert!(msg.contains("task 2 exploded"), "unexpected payload: {msg}");
+        // The batch drained fully before the panic propagated: every other
+        // slot was written, and the pool is still fully usable.
+        for (i, &v) in slots.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(v, 1, "slot {i} must have been written");
+            }
+        }
+        assert_eq!(pool.live_workers(), 2, "panic must not kill worker threads");
+        let mut after = vec![0u32; 3];
+        {
+            let tasks = after.iter_mut().map(|s| boxed(move || *s = 9)).collect();
+            pool.run(tasks);
+        }
+        assert_eq!(after, vec![9, 9, 9], "pool must stay usable after a panic");
+    }
+}

@@ -20,8 +20,10 @@
 //! the churn scenario are allocator microbenchmarks (churn measures the
 //! warm-start path against from-scratch under steady-state job turnover),
 //! while [`churn_epoch_loop`] drives the same churn regime through the
-//! full coordinator epoch loop and reports whole-epoch latency (including
-//! the selective-refit split). [`quality_fidelity`] turns the Fig 3–5
+//! full coordinator epoch loop and reports whole-epoch and
+//! allocation-decision latency percentiles (including the selective-refit
+//! split), optionally side by side with the sharded coordinator
+//! (per-zone shard allocators under the slow-cadence budget broker). [`quality_fidelity`] turns the Fig 3–5
 //! comparisons into a deterministic pass/fail gate so scheduler-path
 //! optimisations are checked against the paper's headline results.
 

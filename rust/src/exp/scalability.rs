@@ -17,9 +17,15 @@
 //!   pipeline: `1` is the serial reference path, `> 1` shards the refits
 //!   and gain-table builds across workers (bit-identical results for
 //!   deterministic policies), and the sweep scales to 8000–16000 jobs.
+//!   [`EpochLoopConfig::shards`] additionally switches the coordinator to
+//!   the sharded mode (per-zone shard allocators under the slow-cadence
+//!   budget broker), turning the common-case epoch into O(shard) work —
+//!   the configuration that holds sub-millisecond decision latency at
+//!   100 000 jobs. The sweep reports whole-epoch *and* decision
+//!   percentiles so the two regimes can be compared row by row.
 
 use super::report::{render_table, ExpOutput};
-use crate::cluster::{ClusterSpec, CostModel};
+use crate::cluster::{ClusterSpec, CostModel, TopologySpec};
 use crate::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
 use crate::predictor::{CurveKind, CurveModel};
 use crate::sched::{DecisionStats, JobRequest, Policy, SchedContext, SlaqPolicy};
@@ -320,6 +326,15 @@ pub struct EpochLoopConfig {
     /// `1` = the serial reference path (no sharded refits, no
     /// materialized gain tables).
     pub threads: usize,
+    /// Zone shards for the sharded coordinator
+    /// ([`CoordinatorConfig::sharded`]): `0` runs the flat coordinator;
+    /// `N ≥ 1` builds a `TopologySpec::Uniform` cluster with `N` zones
+    /// (one rack each) and runs one shard allocator per zone under the
+    /// budget broker. Pick a value that divides the node count evenly.
+    pub shards: u32,
+    /// Broker rebalance cadence in epochs
+    /// ([`CoordinatorConfig::broker_epochs`]); ignored when `shards == 0`.
+    pub broker_epochs: usize,
 }
 
 /// End-to-end epoch-latency measurements from one [`epoch_loop_cost`] run.
@@ -363,6 +378,13 @@ impl EpochLoopCost {
     /// Mean allocation-decision latency (ms).
     pub fn mean_sched_millis(&self) -> f64 {
         crate::util::stats::mean(&self.sched_millis)
+    }
+
+    /// Allocation-decision latency percentile (ms); NaN with no epochs.
+    /// This is the number the sharded coordinator drives sub-millisecond
+    /// at 100k jobs (the p95 acceptance target).
+    pub fn sched_percentile_millis(&self, q: f64) -> f64 {
+        crate::util::stats::percentile(&self.sched_millis, q)
     }
 
     /// Mean predictor-sync (refit) latency (ms).
@@ -473,11 +495,19 @@ pub(crate) fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: b
 /// activation, refits, allocation, placement diffs and completions — the
 /// decision loop a production coordinator actually runs.
 pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
+    let sharded = cfg.shards > 0;
     let coord_cfg = CoordinatorConfig {
         cluster: churn_cluster(cfg.cores),
+        topology: if sharded {
+            TopologySpec::Uniform { zones: cfg.shards, racks_per_zone: 1 }
+        } else {
+            TopologySpec::Flat
+        },
         epoch_secs: CHURN_EPOCH_SECS,
         refit_amortization: cfg.refit_amortization,
         threads: cfg.threads,
+        sharded,
+        broker_epochs: cfg.broker_epochs.max(1),
         ..Default::default()
     };
     let mut coord = Coordinator::new(coord_cfg, Box::new(SlaqPolicy::new()));
@@ -515,26 +545,37 @@ pub fn epoch_loop_cost(cfg: &EpochLoopConfig) -> EpochLoopCost {
     cost
 }
 
-/// End-to-end churn sweep: whole-epoch latency percentiles across
-/// population sizes, driven through the full coordinator loop at the
-/// given worker-thread count (`0` = available parallelism, `1` = the
-/// serial reference path).
+/// End-to-end churn sweep: whole-epoch *and* allocation-decision latency
+/// percentiles across population sizes, driven through the full
+/// coordinator loop at the given worker-thread count (`0` = available
+/// parallelism, `1` = the serial reference path).
+///
+/// With `shards == 0` every population gets one flat-coordinator row.
+/// With `shards ≥ 1` each population additionally gets a sharded row
+/// (`sharded = 1` in the CSV): the same workload re-run through the
+/// per-zone shard allocators under the budget broker, so the flat and
+/// sharded decision percentiles sit side by side in one artifact.
 pub fn churn_epoch_loop(
     jobs_list: &[usize],
     cores: u32,
     churn_per_epoch: usize,
     epochs: usize,
     threads: usize,
+    shards: u32,
 ) -> ExpOutput {
     let mut csv = Csv::new(&[
         "jobs",
         "cores",
         "churn_per_epoch",
         "threads",
+        "sharded",
+        "shards",
         "epoch_ms_mean",
         "epoch_ms_p50",
         "epoch_ms_p95",
         "sched_ms_mean",
+        "sched_ms_p50",
+        "sched_ms_p95",
         "refit_ms_mean",
         "gain_ms_mean",
         "gain_ms_p50",
@@ -546,62 +587,73 @@ pub fn churn_epoch_loop(
     ]);
     let mut rows = Vec::new();
     for &jobs in jobs_list {
-        let cfg = EpochLoopConfig {
-            jobs,
-            cores,
-            churn_per_epoch,
-            epochs,
-            warmup_epochs: 2,
-            seed: 20818,
-            refit_amortization: false,
-            threads,
-        };
-        let cost = epoch_loop_cost(&cfg);
-        csv.row_f64(&[
-            jobs as f64,
-            cores as f64,
-            churn_per_epoch as f64,
-            threads as f64,
-            cost.mean_millis(),
-            cost.percentile_millis(50.0),
-            cost.percentile_millis(95.0),
-            cost.mean_sched_millis(),
-            cost.mean_refit_millis(),
-            cost.mean_gain_millis(),
-            cost.gain_percentile_millis(50.0),
-            cost.gain_percentile_millis(95.0),
-            cost.mean_refits(),
-            cost.mean_dirty(),
-            cost.mean_active,
-            cost.completed as f64,
-        ]);
-        rows.push(vec![
-            jobs.to_string(),
-            format!("{:.2} ms", cost.mean_millis()),
-            format!("{:.2} ms", cost.percentile_millis(50.0)),
-            format!("{:.2} ms", cost.percentile_millis(95.0)),
-            format!("{:.2} ms", cost.mean_sched_millis()),
-            format!("{:.2} ms", cost.mean_refit_millis()),
-            format!("{:.2} ms", cost.mean_gain_millis()),
-            format!("{:.0}/{:.0}", cost.mean_refits(), cost.mean_active),
-            cost.completed.to_string(),
-        ]);
+        for run_shards in std::iter::once(0u32).chain((shards > 0).then_some(shards)) {
+            let cfg = EpochLoopConfig {
+                jobs,
+                cores,
+                churn_per_epoch,
+                epochs,
+                warmup_epochs: 2,
+                seed: 20818,
+                refit_amortization: false,
+                threads,
+                shards: run_shards,
+                broker_epochs: 8,
+            };
+            let cost = epoch_loop_cost(&cfg);
+            csv.row_f64(&[
+                jobs as f64,
+                cores as f64,
+                churn_per_epoch as f64,
+                threads as f64,
+                f64::from(u32::from(run_shards > 0)),
+                f64::from(run_shards),
+                cost.mean_millis(),
+                cost.percentile_millis(50.0),
+                cost.percentile_millis(95.0),
+                cost.mean_sched_millis(),
+                cost.sched_percentile_millis(50.0),
+                cost.sched_percentile_millis(95.0),
+                cost.mean_refit_millis(),
+                cost.mean_gain_millis(),
+                cost.gain_percentile_millis(50.0),
+                cost.gain_percentile_millis(95.0),
+                cost.mean_refits(),
+                cost.mean_dirty(),
+                cost.mean_active,
+                cost.completed as f64,
+            ]);
+            rows.push(vec![
+                jobs.to_string(),
+                if run_shards > 0 { format!("sharded/{run_shards}") } else { "flat".into() },
+                format!("{:.2} ms", cost.mean_millis()),
+                format!("{:.2} ms", cost.percentile_millis(50.0)),
+                format!("{:.2} ms", cost.percentile_millis(95.0)),
+                format!("{:.3} ms", cost.sched_percentile_millis(50.0)),
+                format!("{:.3} ms", cost.sched_percentile_millis(95.0)),
+                format!("{:.2} ms", cost.mean_refit_millis()),
+                format!("{:.0}/{:.0}", cost.mean_refits(), cost.mean_active),
+                cost.completed.to_string(),
+            ]);
+        }
     }
     let summary = format!(
         "Churn (end-to-end) — full coordinator epoch latency at {cores} cores, \
          {churn_per_epoch} arrivals per epoch, {} worker threads (refits are \
-         selective: jobs-with-new-samples, not population; the gain split is \
-         the materialized-table build, 0 on the serial path)\n{}",
+         selective: jobs-with-new-samples, not population; \"alloc\" is the \
+         decision path alone — the sharded rows run per-zone shard allocators \
+         under the slow-cadence budget broker)\n{}",
         if threads == 0 { "auto".to_string() } else { threads.to_string() },
         render_table(
             &[
                 "jobs",
+                "mode",
                 "epoch mean",
                 "epoch p50",
                 "epoch p95",
-                "alloc mean",
+                "alloc p50",
+                "alloc p95",
                 "refit mean",
-                "gain mean",
                 "refits/active",
                 "completed",
             ],
@@ -668,6 +720,8 @@ mod tests {
             seed: 3,
             refit_amortization: false,
             threads: 1,
+            shards: 0,
+            broker_epochs: 8,
         };
         let cost = epoch_loop_cost(&cfg);
         assert_eq!(cost.epoch_millis.len(), 5);
@@ -711,6 +765,8 @@ mod tests {
             seed: 5,
             refit_amortization: false,
             threads: 2,
+            shards: 0,
+            broker_epochs: 8,
         };
         let cost = epoch_loop_cost(&cfg);
         assert_eq!(cost.gain_millis.len(), 4);
@@ -736,6 +792,8 @@ mod tests {
             seed: 9,
             refit_amortization: amortize,
             threads: 1,
+            shards: 0,
+            broker_epochs: 8,
         };
         let exact = epoch_loop_cost(&mk(false));
         let amortized = epoch_loop_cost(&mk(true));
@@ -824,12 +882,50 @@ mod tests {
 
     #[test]
     fn epoch_loop_output_has_one_row_per_population() {
-        let out = churn_epoch_loop(&[40, 80], 256, 3, 3, 1);
+        let out = churn_epoch_loop(&[40, 80], 256, 3, 3, 1, 0);
         assert_eq!(out.csv.len(), 2);
         assert_eq!(out.id, "churn_epoch");
         assert!(out.summary.contains("end-to-end"));
         assert!(out.summary.contains("1 worker threads"));
-        let auto = churn_epoch_loop(&[40], 256, 3, 2, 0);
+        let auto = churn_epoch_loop(&[40], 256, 3, 2, 0, 0);
         assert!(auto.summary.contains("auto worker threads"));
+    }
+
+    #[test]
+    fn sharded_epoch_loop_reports_decision_percentiles() {
+        let cfg = EpochLoopConfig {
+            jobs: 100,
+            cores: 256,
+            churn_per_epoch: 4,
+            epochs: 5,
+            warmup_epochs: 2,
+            seed: 13,
+            refit_amortization: false,
+            threads: 2,
+            shards: 2,
+            broker_epochs: 3,
+        };
+        let cost = epoch_loop_cost(&cfg);
+        assert_eq!(cost.sched_millis.len(), 5);
+        // The decision split is well-formed and a strict subset of the
+        // epoch — the acceptance metric for the 100k sweep.
+        assert!(!cost.sched_percentile_millis(50.0).is_nan());
+        assert!(!cost.sched_percentile_millis(95.0).is_nan());
+        assert!(
+            cost.sched_percentile_millis(50.0) <= cost.sched_percentile_millis(95.0) + 1e-12
+        );
+        assert!(cost.mean_sched_millis() <= cost.mean_millis());
+        // The sharded loop still runs the workload to completion.
+        assert!(cost.mean_active >= 80.0, "population collapsed: {}", cost.mean_active);
+        assert!(cost.completed > 0, "no churn job completed under sharding");
+    }
+
+    #[test]
+    fn sharded_sweep_emits_flat_and_sharded_rows() {
+        let out = churn_epoch_loop(&[40], 256, 3, 2, 1, 2);
+        // One flat row + one sharded row per population.
+        assert_eq!(out.csv.len(), 2);
+        assert!(out.summary.contains("sharded/2"));
+        assert!(out.summary.contains("flat"));
     }
 }

@@ -84,6 +84,8 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("churn-epochs", "12", "measured steady-state epochs for churn")
         .flag("churn-jobs", "1000,2000,4000,8000,16000", "population sizes for churn")
         .flag("churn-cores", "16384", "cluster capacity for churn")
+        .switch("sharded", "add sharded-coordinator rows to the end-to-end churn sweep")
+        .flag("churn-shards", "4", "zone shards for the sharded churn rows")
         .flag("locality-jobs", "4000,8000,16000", "population sizes for the locality scenario")
         .flag("locality-cores", "16384", "cluster capacity for the locality scenario")
         .flag("locality-zones", "2", "zones of the locality scenario's topology")
@@ -177,12 +179,18 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             churn_epochs,
         ));
         log::info!("churn scenario: end-to-end coordinator epochs…");
+        let shards = if parsed.switch("sharded") {
+            parsed.get_as::<u32>("churn-shards").map_err(|e| anyhow!(e))?
+        } else {
+            0
+        };
         outputs.push(exp::churn_epoch_loop(
             &jobs_list,
             churn_cores,
             churn_rate,
             churn_epochs,
             parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
+            shards,
         ));
     }
 

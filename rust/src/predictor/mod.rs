@@ -22,4 +22,4 @@ pub use fit::{fit_history, FitConfig, FittedCurve};
 pub use linalg::{polyfit_weighted, solve};
 pub use lm::{levenberg_marquardt, LmConfig, LmReport};
 pub use models::{CurveKind, CurveModel};
-pub use online::{OnlinePredictor, PredictionError};
+pub use online::{OnlinePredictor, PredictionError, ReductionEval};

@@ -423,6 +423,80 @@ impl OnlinePredictor {
         self.normalizer.normalize(reduction)
     }
 
+    /// Precompute a bulk evaluator for
+    /// [`predicted_normalized_reduction`] over many horizons of the
+    /// *same* predictor state — the gain-table build calls it once per
+    /// job row and then evaluates one horizon per core.
+    ///
+    /// The constructor hoists everything the scalar path recomputes per
+    /// call: the branch decision (hint vs fit vs geometric), the
+    /// `fit.predict(k)` anchor, the asymptote cap, and the
+    /// `last_delta * q` product of the geometric fallback. What stays
+    /// per-call is exactly the horizon-dependent tail — one `powf` (or
+    /// one `fit.predict(k + extra)`) per core — because folding those
+    /// into an incremental recurrence (`μ^(k+Δ) = μ^k · μ^Δ`) rounds
+    /// differently and would break the table ≡ oracle bit-identity the
+    /// scheduler's determinism tests pin.
+    ///
+    /// [`ReductionEval::at`] is bit-identical to
+    /// [`predicted_normalized_reduction`] for every `extra` (property-
+    /// tested below).
+    ///
+    /// [`predicted_normalized_reduction`]: OnlinePredictor::predicted_normalized_reduction
+    pub fn reduction_eval(&self) -> ReductionEval<'_> {
+        let normalizer = &self.normalizer;
+        let Some(last) = self.history.last() else {
+            return ReductionEval { normalizer, branch: EvalBranch::Empty };
+        };
+        let fit_unreliable = self
+            .fit
+            .as_ref()
+            .map(|f| f.relative_residual > 0.25)
+            .unwrap_or(true);
+        if fit_unreliable {
+            if let (Some(target), Some(rate)) = (self.target_hint, self.hint_rate.value()) {
+                let remaining = (last.loss - target).max(0.0);
+                let rate = rate.clamp(0.0, 1.0);
+                return ReductionEval {
+                    normalizer,
+                    branch: EvalBranch::Hint { remaining, keep: 1.0 - rate },
+                };
+            }
+        }
+        let geo = self.geo_tail();
+        match self.fit.as_ref() {
+            Some(fit) => {
+                let k = last.iteration as f64;
+                ReductionEval {
+                    normalizer,
+                    branch: EvalBranch::Fit {
+                        fit,
+                        at_k: fit.predict(k),
+                        k,
+                        cap: (last.loss - fit.model.asymptote()).max(0.0),
+                        geo,
+                    },
+                }
+            }
+            None => ReductionEval { normalizer, branch: EvalBranch::Geometric(geo) },
+        }
+    }
+
+    /// Hoisted constants of [`OnlinePredictor::geometric_reduction`]:
+    /// the horizon-independent `last_delta * q` product (exactly the
+    /// first multiplication the scalar path performs). Fewer than two
+    /// samples collapse to `aq = 0.0`, whose product with the positive
+    /// per-call tail is bitwise `0.0` — the scalar path's short-circuit.
+    fn geo_tail(&self) -> GeoTail {
+        let s = self.history.samples();
+        let aq = if s.len() >= 2 {
+            (s[s.len() - 2].loss - s[s.len() - 1].loss).max(0.0) * GEO_Q
+        } else {
+            0.0
+        };
+        GeoTail { aq }
+    }
+
     /// Register a prediction for the `extra`-th future iteration so its
     /// error can be measured when that iteration completes.
     pub fn record_prediction(&mut self, extra: u64) {
@@ -446,6 +520,80 @@ impl OnlinePredictor {
     /// Access the delta normalizer.
     pub fn normalizer(&self) -> &DeltaNormalizer {
         &self.normalizer
+    }
+}
+
+/// Geometric-decay factor of the model-free fallback (see
+/// [`OnlinePredictor::geometric_reduction`] — the same `q = 0.9`).
+const GEO_Q: f64 = 0.9;
+
+/// Horizon-independent part of the geometric fallback: `last_delta * q`.
+#[derive(Debug, Clone, Copy)]
+struct GeoTail {
+    aq: f64,
+}
+
+impl GeoTail {
+    /// `last_delta * q * (1 - q^extra) / (1 - q)` with the leading
+    /// product hoisted — the identical association order the scalar
+    /// path evaluates, so the rounding matches bit for bit.
+    #[inline]
+    fn eval(self, extra: f64) -> f64 {
+        self.aq * (1.0 - GEO_Q.powf(extra)) / (1.0 - GEO_Q)
+    }
+}
+
+/// Which prediction branch [`OnlinePredictor::reduction_eval`] resolved
+/// to; mirrors the scalar path's control flow exactly, with the
+/// horizon-independent operands precomputed.
+#[derive(Debug, Clone, Copy)]
+enum EvalBranch<'a> {
+    /// No history: every horizon predicts zero reduction.
+    Empty,
+    /// Unreliable fit plus a target hint: geometric progress toward the
+    /// target at the observed closing rate (`keep = 1 - rate`).
+    Hint { remaining: f64, keep: f64 },
+    /// Usable fit: curve-to-curve delta anchored at `at_k =
+    /// fit.predict(k)`, capped by the distance to the asymptote, with
+    /// the geometric fallback for horizons where the fit is locally
+    /// non-decreasing.
+    Fit { fit: &'a FittedCurve, at_k: f64, k: f64, cap: f64, geo: GeoTail },
+    /// No fit at all: the model-free geometric estimate.
+    Geometric(GeoTail),
+}
+
+/// Bulk evaluator over many horizons of one frozen predictor state.
+/// Built by [`OnlinePredictor::reduction_eval`]; `at(extra)` is
+/// bit-identical to
+/// [`OnlinePredictor::predicted_normalized_reduction`]`(extra)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ReductionEval<'a> {
+    normalizer: &'a DeltaNormalizer,
+    branch: EvalBranch<'a>,
+}
+
+impl ReductionEval<'_> {
+    /// Predicted normalized loss reduction after `extra` more
+    /// (possibly fractional) iterations.
+    pub fn at(&self, extra: f64) -> f64 {
+        if extra <= 0.0 {
+            return 0.0;
+        }
+        match self.branch {
+            EvalBranch::Empty => 0.0,
+            EvalBranch::Hint { remaining, keep } => {
+                self.normalizer.normalize(remaining * (1.0 - keep.powf(extra)))
+            }
+            EvalBranch::Fit { fit, at_k, k, cap, geo } => {
+                let raw = at_k - fit.predict(k + extra);
+                let reduction =
+                    if raw > 0.0 { raw.min(cap) } else { geo.eval(extra).max(0.0) };
+                self.normalizer.normalize(reduction)
+            }
+            EvalBranch::Geometric(geo) => {
+                self.normalizer.normalize(geo.eval(extra).max(0.0))
+            }
+        }
     }
 }
 
@@ -738,6 +886,85 @@ mod tests {
         }
         assert!(p.refresh_fit_deferrable(true), "off-curve samples must refit");
         assert_eq!(p.fit_count(), fits + 1);
+    }
+
+    #[test]
+    fn reduction_eval_is_bitwise_identical_to_the_scalar_path() {
+        // The gain-table build evaluates one row through reduction_eval();
+        // the CELF oracle path calls predicted_normalized_reduction()
+        // directly. The scheduler's table ≡ oracle determinism rests on
+        // these two agreeing bit for bit, on every branch.
+        crate::testkit::forall("reduction_eval ≡ scalar path", 60, |g| {
+            let kind =
+                if g.bool(0.5) { CurveKind::Exponential } else { CurveKind::Sublinear };
+            let mut p = OnlinePredictor::new(kind);
+            if g.bool(0.3) {
+                p.set_target_hint(g.f64_in(0.0, 2.0));
+            }
+            let n = g.usize_in(0, 40) as u64;
+            let m = g.f64_in(1.0, 8.0);
+            let mu = g.f64_in(0.6, 0.97);
+            let c = g.f64_in(0.0, 1.0);
+            let noisy = g.bool(0.5);
+            for k in 0..n {
+                let noise =
+                    if noisy { 1.0 + 0.2 * ((k as f64) * 1.7).sin() } else { 1.0 };
+                p.observe(k, (m * mu.powf(k as f64) + c) * noise, k as f64);
+            }
+            if g.bool(0.8) {
+                p.refresh_fit();
+            }
+            let eval = p.reduction_eval();
+            for _ in 0..12 {
+                let extra = g.f64_in(-1.0, 40.0);
+                let scalar = p.predicted_normalized_reduction(extra);
+                let bulk = eval.at(extra);
+                assert_eq!(
+                    scalar.to_bits(),
+                    bulk.to_bits(),
+                    "extra={extra}: scalar {scalar} vs bulk {bulk}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn reduction_eval_matches_on_every_branch() {
+        let horizons = [0.0, 0.3, 1.0, 2.5, 7.0, 33.0];
+        let check = |p: &OnlinePredictor, label: &str| {
+            let eval = p.reduction_eval();
+            for &e in &horizons {
+                assert_eq!(
+                    p.predicted_normalized_reduction(e).to_bits(),
+                    eval.at(e).to_bits(),
+                    "{label} diverged at extra={e}"
+                );
+            }
+        };
+        // Empty: no history at all.
+        check(&OnlinePredictor::new(CurveKind::Exponential), "empty");
+        // Geometric: samples but no fit yet.
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        p.observe(0, 5.0, 0.0);
+        check(&p, "geometric (one sample)");
+        p.observe(1, 4.0, 1.0);
+        check(&p, "geometric (two samples)");
+        // Fit: clean exponential, reliable curve.
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        feed(&mut p, |k| 5.0 * 0.9f64.powf(k) + 1.0, 25);
+        check(&p, "fit");
+        // Hint: non-convex history where the fit is unreliable.
+        let losses = [
+            10.0, 8.0, 8.9, 6.5, 7.2, 5.0, 5.6, 4.0, 4.5, 3.2, 3.6, 2.6, 2.9,
+            2.2, 2.45, 1.9, 2.05, 1.7,
+        ];
+        let mut p = OnlinePredictor::new(CurveKind::Sublinear);
+        p.set_target_hint(1.0);
+        for (k, &l) in losses.iter().enumerate() {
+            p.observe(k as u64, l, k as f64);
+        }
+        p.refresh_fit();
+        check(&p, "hint");
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Top-level core-budget broker for the sharded coordinator.
+//!
+//! Each per-zone shard runs the full warm-start/gain-table/CELF path over
+//! only its own jobs against a core *budget*; the broker is the slow-
+//! cadence piece that re-splits total cluster capacity across the shard
+//! budgets every K epochs from each shard's aggregate marginal-gain
+//! demand. Between rebalances the budgets stay fixed, so the common-case
+//! epoch does no cross-shard work at all.
+//!
+//! The split mirrors the flat allocator's two regimes, so that a single
+//! shard reproduces the flat path exactly and many shards track what the
+//! flat greedy would have granted each shard's population:
+//!
+//! * **Scarce floors** (more eligible jobs than cores): the flat policy
+//!   grants single-core floors to the top-`capacity` jobs by first-core
+//!   gain; the broker water-fills the budgets from the shards' descending
+//!   first-core gain lists.
+//! * **Plentiful** (every job can get its floor): every shard's budget
+//!   starts at its eligible-job count, and the remaining cores water-fill
+//!   from the shards' descending upgrade marginals (`Δg(k)`, `k ≥ 2`) —
+//!   the same diminishing-returns frontier the flat CELF heap walks.
+//!
+//! Work conservation is unconditional: the budgets always sum to exactly
+//! `capacity` (leftover cores that no demand curve claims are spread
+//! round-robin in shard id order), property-tested below. All ties break
+//! toward the lowest shard id, so the split is a pure deterministic
+//! function of its inputs — a requirement for the sharded `slaq-det`
+//! trace guarantees.
+
+/// One shard's aggregate demand curve, as seen at a rebalance point.
+///
+/// Both gain lists must be sorted descending (use
+/// [`ShardDemand::finish`]) and contain only finite values; they may be
+/// truncated to any length ≥ `min(eligible_jobs, capacity)` for
+/// `first_core` without changing the split.
+#[derive(Debug, Clone, Default)]
+pub struct ShardDemand {
+    /// Jobs in the shard that can use at least one core this epoch.
+    pub eligible_jobs: u64,
+    /// Descending first-core gains (`g(1)`), one per eligible job.
+    pub first_core: Vec<f64>,
+    /// Descending marginal gains of cores beyond the first
+    /// (`Δg(k) = g(k) − g(k−1)` for `k ≥ 2`), across all the shard's jobs.
+    pub upgrades: Vec<f64>,
+}
+
+impl ShardDemand {
+    /// Sort both gain lists descending and truncate them to `keep`
+    /// entries (no split ever consumes more than `capacity` entries of
+    /// either list). NaNs are dropped — a non-finite gain must never
+    /// steer the budget split.
+    pub fn finish(&mut self, keep: usize) {
+        for list in [&mut self.first_core, &mut self.upgrades] {
+            list.retain(|v| !v.is_nan());
+            list.sort_unstable_by(|a, b| b.partial_cmp(a).expect("NaNs were dropped"));
+            list.truncate(keep);
+        }
+    }
+}
+
+/// Greedy water-fill: hand out up to `cores` cores, each to the shard
+/// whose next (descending) stream entry is largest, ties to the lowest
+/// shard id. Returns the number of cores actually granted (streams can
+/// exhaust first); `counts` accumulates per-shard grants.
+fn water_fill(cores: u32, streams: &[&[f64]], counts: &mut [u32]) -> u32 {
+    let mut pos = vec![0usize; streams.len()];
+    let mut granted = 0u32;
+    while granted < cores {
+        let mut best: Option<(f64, usize)> = None;
+        for (s, stream) in streams.iter().enumerate() {
+            if let Some(&v) = stream.get(pos[s]) {
+                // Strict `>` keeps ties on the lowest shard id.
+                if best.map(|(bv, _)| v > bv).unwrap_or(true) {
+                    best = Some((v, s));
+                }
+            }
+        }
+        let Some((_, s)) = best else { break };
+        pos[s] += 1;
+        counts[s] += 1;
+        granted += 1;
+    }
+    granted
+}
+
+/// Split `capacity` cores into one budget per shard from the shards'
+/// aggregate demand curves (see the module docs for the regime rules).
+///
+/// Invariant: the returned budgets always sum to exactly `capacity`.
+pub fn rebalance_budgets(capacity: u32, demand: &[ShardDemand]) -> Vec<u32> {
+    assert!(!demand.is_empty(), "rebalance needs at least one shard");
+    let ns = demand.len();
+    let mut budgets = vec![0u32; ns];
+    if capacity == 0 {
+        return budgets;
+    }
+    let total_eligible: u64 = demand.iter().map(|d| d.eligible_jobs).sum();
+    let mut granted = 0u32;
+    if total_eligible > capacity as u64 {
+        // Scarce floors: the flat policy would grant single-core floors
+        // to the top-`capacity` jobs by first-core gain.
+        let streams: Vec<&[f64]> = demand.iter().map(|d| d.first_core.as_slice()).collect();
+        granted = water_fill(capacity, &streams, &mut budgets);
+    } else {
+        // Plentiful: floor every eligible job, then upgrades by marginal.
+        for (s, d) in demand.iter().enumerate() {
+            // Safe: total_eligible ≤ capacity, so each count fits in u32.
+            budgets[s] = d.eligible_jobs as u32;
+            granted += budgets[s];
+        }
+        let streams: Vec<&[f64]> = demand.iter().map(|d| d.upgrades.as_slice()).collect();
+        granted += water_fill(capacity - granted, &streams, &mut budgets);
+    }
+    // Work conservation: cores no demand curve claimed are still owned by
+    // someone — spread them round-robin in shard id order.
+    let mut s = 0usize;
+    while granted < capacity {
+        budgets[s % ns] += 1;
+        granted += 1;
+        s += 1;
+    }
+    budgets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demand(eligible: u64, first: &[f64], upgrades: &[f64]) -> ShardDemand {
+        let mut d = ShardDemand {
+            eligible_jobs: eligible,
+            first_core: first.to_vec(),
+            upgrades: upgrades.to_vec(),
+        };
+        d.finish(usize::MAX);
+        d
+    }
+
+    #[test]
+    fn single_shard_owns_the_whole_capacity() {
+        // The 1-shard ≡ flat guarantee starts here: whatever the demand
+        // looks like, one shard's budget must be the full capacity.
+        for d in [
+            demand(0, &[], &[]),
+            demand(3, &[0.5, 0.2, 0.1], &[0.05]),
+            demand(1000, &[0.9; 4], &[]),
+        ] {
+            assert_eq!(rebalance_budgets(64, &[d]), vec![64]);
+        }
+    }
+
+    #[test]
+    fn plentiful_regime_floors_every_eligible_job() {
+        let shards = vec![
+            demand(3, &[0.9, 0.8, 0.7], &[0.6, 0.1]),
+            demand(2, &[0.5, 0.4], &[0.65, 0.3]),
+        ];
+        let budgets = rebalance_budgets(8, &shards);
+        assert_eq!(budgets.iter().sum::<u32>(), 8);
+        assert!(budgets[0] >= 3 && budgets[1] >= 2, "floors violated: {budgets:?}");
+        // 3 upgrade cores by descending marginal: 0.65 (s1), 0.6 (s0),
+        // 0.3 (s1) → budgets [3+1, 2+2].
+        assert_eq!(budgets, vec![4, 4]);
+    }
+
+    #[test]
+    fn scarce_regime_splits_by_top_first_core_gains() {
+        // 4 cores, 6 eligible jobs: the top-4 first-core gains are
+        // 0.9, 0.8 (shard 0) and 0.85, 0.7 (shard 1).
+        let shards = vec![
+            demand(3, &[0.9, 0.8, 0.1], &[]),
+            demand(3, &[0.85, 0.7, 0.2], &[]),
+        ];
+        let budgets = rebalance_budgets(4, &shards);
+        assert_eq!(budgets, vec![2, 2]);
+
+        // Skewed: one shard holds all the valuable jobs.
+        let shards = vec![
+            demand(3, &[0.9, 0.8, 0.7], &[]),
+            demand(3, &[0.1, 0.05, 0.01], &[]),
+        ];
+        assert_eq!(rebalance_budgets(3, &shards), vec![3, 0]);
+    }
+
+    #[test]
+    fn ties_break_toward_the_lowest_shard_id() {
+        let shards = vec![
+            demand(2, &[0.5, 0.5], &[]),
+            demand(2, &[0.5, 0.5], &[]),
+        ];
+        // 1 core, identical gains everywhere: shard 0 wins the tie.
+        assert_eq!(rebalance_budgets(1, &shards), vec![1, 0]);
+        assert_eq!(rebalance_budgets(3, &shards), vec![2, 1]);
+    }
+
+    #[test]
+    fn leftover_cores_are_spread_round_robin() {
+        // Plentiful, but the upgrade curves are empty: the spare cores
+        // must still land somewhere (budgets sum to capacity).
+        let shards = vec![demand(1, &[0.9], &[]), demand(1, &[0.8], &[])];
+        let budgets = rebalance_budgets(7, &shards);
+        assert_eq!(budgets.iter().sum::<u32>(), 7);
+        assert_eq!(budgets, vec![4, 3], "round-robin from shard 0");
+    }
+
+    #[test]
+    fn zero_capacity_yields_zero_budgets() {
+        let shards = vec![demand(2, &[0.9, 0.1], &[0.2]), demand(0, &[], &[])];
+        assert_eq!(rebalance_budgets(0, &shards), vec![0, 0]);
+    }
+
+    #[test]
+    fn finish_sorts_descending_and_drops_nans() {
+        let mut d = ShardDemand {
+            eligible_jobs: 4,
+            first_core: vec![0.1, f64::NAN, 0.9, 0.5],
+            upgrades: vec![0.3, 0.7],
+        };
+        d.finish(2);
+        assert_eq!(d.first_core, vec![0.9, 0.5]);
+        assert_eq!(d.upgrades, vec![0.7, 0.3]);
+    }
+
+    #[test]
+    fn budgets_always_sum_to_capacity() {
+        // The broker's work-conservation invariant, over random shard
+        // counts, capacities, and demand shapes (including truncated,
+        // empty, and zero-gain curves).
+        crate::testkit::forall("Σ budgets == capacity", 120, |g| {
+            let ns = g.usize_in(1, 9);
+            let capacity = g.usize_in(0, 400) as u32;
+            let shards: Vec<ShardDemand> = (0..ns)
+                .map(|_| {
+                    let eligible = g.usize_in(0, 60) as u64;
+                    let listed = g.usize_in(0, eligible as usize);
+                    let mut d = ShardDemand {
+                        eligible_jobs: eligible,
+                        first_core: (0..listed).map(|_| g.f64_in(0.0, 1.0)).collect(),
+                        upgrades: (0..g.usize_in(0, 80))
+                            .map(|_| g.f64_in(0.0, 0.5))
+                            .collect(),
+                    };
+                    d.finish(capacity as usize);
+                    d
+                })
+                .collect();
+            let budgets = rebalance_budgets(capacity, &shards);
+            assert_eq!(budgets.len(), ns);
+            assert_eq!(
+                budgets.iter().sum::<u32>(),
+                capacity,
+                "work conservation violated: {budgets:?}"
+            );
+            // Determinism: the split is a pure function of its inputs.
+            assert_eq!(budgets, rebalance_budgets(capacity, &shards));
+        });
+    }
+
+    #[test]
+    fn plentiful_budgets_cover_floors_whenever_capacity_does() {
+        crate::testkit::forall("floors covered in the plentiful regime", 80, |g| {
+            let ns = g.usize_in(1, 6);
+            let shards: Vec<ShardDemand> = (0..ns)
+                .map(|_| {
+                    let eligible = g.usize_in(0, 20) as u64;
+                    let mut d = ShardDemand {
+                        eligible_jobs: eligible,
+                        first_core: (0..eligible).map(|_| g.f64_in(0.0, 1.0)).collect(),
+                        upgrades: (0..g.usize_in(0, 30))
+                            .map(|_| g.f64_in(0.0, 0.5))
+                            .collect(),
+                    };
+                    d.finish(usize::MAX);
+                    d
+                })
+                .collect();
+            let total: u64 = shards.iter().map(|d| d.eligible_jobs).sum();
+            let capacity = (total + g.usize_in(0, 50) as u64) as u32;
+            let budgets = rebalance_budgets(capacity, &shards);
+            for (s, d) in shards.iter().enumerate() {
+                assert!(
+                    budgets[s] as u64 >= d.eligible_jobs,
+                    "shard {s} floor uncovered: {budgets:?}"
+                );
+            }
+        });
+    }
+}

@@ -45,11 +45,13 @@
 //! * [`FifoPolicy`] — arrival-order allocation up to each job's cap.
 //! * [`StaticPolicy`] — rigid equal split (not work conserving).
 
+mod broker;
 mod fair;
 mod fifo;
 mod slaq;
 mod static_split;
 
+pub use broker::{rebalance_budgets, ShardDemand};
 pub use fair::FairPolicy;
 pub use fifo::FifoPolicy;
 pub use slaq::SlaqPolicy;
@@ -87,7 +89,7 @@ pub struct JobRequest<'a> {
 }
 
 /// An allocation: `cores[i]` is the grant for `requests[i]`.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Allocation {
     /// Core grant per request, in request order.
     pub cores: Vec<u32>,
@@ -452,12 +454,29 @@ impl GainTable {
         row_len: impl Fn(usize) -> usize,
         gain: impl Fn(usize, u32) -> f64,
     ) {
+        Self::fill_shard_rows(rows, slice, row_len, |r, row| {
+            for (k, slot) in row.iter_mut().enumerate() {
+                *slot = gain(r, k as u32 + 1);
+            }
+        });
+    }
+
+    /// Row-bulk variant of [`GainTable::fill_shard`]: hands each row's
+    /// whole slice (`row[k]` = gain at `k + 1` cores) to `fill_row` in one
+    /// call, so a caller with a precomputed per-row evaluator (the epoch
+    /// pipeline's bulk `ReductionEval` path) hoists its per-row setup out
+    /// of the per-core loop. `fill_shard` delegates here — the layout
+    /// convention still lives in exactly one place.
+    pub fn fill_shard_rows(
+        rows: std::ops::Range<usize>,
+        slice: &mut [f64],
+        row_len: impl Fn(usize) -> usize,
+        mut fill_row: impl FnMut(usize, &mut [f64]),
+    ) {
         let mut off = 0usize;
         for r in rows {
             let len = row_len(r);
-            for (k, slot) in slice[off..off + len].iter_mut().enumerate() {
-                *slot = gain(r, k as u32 + 1);
-            }
+            fill_row(r, &mut slice[off..off + len]);
             off += len;
         }
         debug_assert_eq!(off, slice.len(), "shard layout out of sync with row lengths");
@@ -694,6 +713,27 @@ pub trait Policy: Send {
     ) -> Allocation {
         let _ = ctx;
         self.allocate(requests, capacity)
+    }
+
+    /// Out-param variant of [`Policy::allocate_ctx`]: write the grant into
+    /// `out` (clearing whatever it held), reusing its buffer so
+    /// steady-state epochs stop allocating a fresh grant vector per
+    /// decision — at 100k jobs per epoch that is a 400 KB allocation on
+    /// the hottest path. Must produce exactly the allocation
+    /// [`Policy::allocate_ctx`] would (the grant is a pure function of
+    /// `(ctx, requests, capacity)` plus policy state; only the container
+    /// changes). The default delegates and copies; allocation-free
+    /// policies override.
+    fn allocate_ctx_into(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        out: &mut Allocation,
+    ) {
+        let alloc = self.allocate_ctx(ctx, requests, capacity);
+        out.cores.clear();
+        out.cores.extend_from_slice(&alloc.cores);
     }
 
     /// The decision-cost model this policy maintains across

@@ -198,14 +198,16 @@ impl SlaqPolicy {
         requests: &[JobRequest<'_>],
         gain: G,
         capacity: u32,
-    ) -> Allocation {
+        cores: &mut Vec<u32>,
+    ) {
         self.last_warm_start = false;
         let mut evals: u64 = 0;
         let n = requests.len();
-        let mut cores = vec![0u32; n];
+        cores.clear();
+        cores.resize(n, 0);
         if n == 0 || capacity == 0 {
             self.last_evaluations = 0;
-            return Allocation { cores };
+            return;
         }
 
         let mut remaining = capacity;
@@ -234,7 +236,7 @@ impl SlaqPolicy {
                 cores[i] = 1;
             }
             self.last_evaluations = evals;
-            return Allocation { cores };
+            return;
         }
 
         // Phase 2 — greedy marginal gains with a lazy heap (reused scratch).
@@ -286,13 +288,13 @@ impl SlaqPolicy {
         }
 
         self.last_evaluations = evals;
-        Allocation { cores }
     }
 
     /// Warm-started allocation seeded from the previous grant, over an
-    /// arbitrary gain view. Returns `None` when the repair loop overruns
-    /// its move budget (gains shifted too much — the caller falls back to
-    /// the from-scratch path).
+    /// arbitrary gain view, written into `cores`. Returns `false` when the
+    /// repair loop overruns its move budget (gains shifted too much — the
+    /// caller falls back to the from-scratch path, which re-initializes
+    /// `cores` itself).
     fn warm_allocate_with<G: Fn(usize, u32) -> f64>(
         &mut self,
         ctx: &SchedContext,
@@ -300,9 +302,11 @@ impl SlaqPolicy {
         gain: G,
         capacity: u32,
         evals: &mut u64,
-    ) -> Option<Allocation> {
+        cores: &mut Vec<u32>,
+    ) -> bool {
         let n = requests.len();
-        let mut cores = vec![0u32; n];
+        cores.clear();
+        cores.resize(n, 0);
         self.gain_at.clear();
         self.gain_at.resize(n, 0.0);
         let mut total: u64 = 0;
@@ -358,9 +362,11 @@ impl SlaqPolicy {
         while total > cap {
             steps += 1;
             if steps > budget {
-                return None;
+                return false;
             }
-            let Reverse(e) = self.down.pop()?;
+            let Some(Reverse(e)) = self.down.pop() else {
+                return false;
+            };
             let i = e.idx;
             if cores[i] <= 1 {
                 continue;
@@ -388,7 +394,7 @@ impl SlaqPolicy {
         while total < cap {
             steps += 1;
             if steps > budget {
-                return None;
+                return false;
             }
             let Some(e) = self.up.pop() else { break }; // every job capped
             let i = e.idx;
@@ -428,7 +434,7 @@ impl SlaqPolicy {
                 if e.at_alloc != cores[i] {
                     steps += 1;
                     if steps > budget {
-                        return None;
+                        return false;
                     }
                     *evals += 1;
                     let m = gain(i, cores[i] + 1) - self.gain_at[i];
@@ -447,7 +453,7 @@ impl SlaqPolicy {
                 if e.at_alloc != cores[i] {
                     steps += 1;
                     if steps > budget {
-                        return None;
+                        return false;
                     }
                     *evals += 1;
                     let m = self.gain_at[i] - gain(i, cores[i] - 1);
@@ -465,7 +471,7 @@ impl SlaqPolicy {
             }
             steps += 1;
             if steps > budget {
-                return None;
+                return false;
             }
             let (a, b) = (ue.idx, de.idx);
             cores[a] += 1;
@@ -487,7 +493,7 @@ impl SlaqPolicy {
             }
         }
 
-        Some(Allocation { cores })
+        true
     }
 
     /// The delta-aware decision over an arbitrary gain view: estimate both
@@ -499,14 +505,15 @@ impl SlaqPolicy {
         requests: &[JobRequest<'_>],
         gain: G,
         capacity: u32,
-    ) -> Allocation {
+        cores: &mut Vec<u32>,
+    ) {
         if requests.is_empty() || capacity == 0 || !self.starvation_floor || ctx.is_empty() {
-            return self.scratch_allocate_with(requests, gain, capacity);
+            return self.scratch_allocate_with(requests, gain, capacity, cores);
         }
         let eligible = requests.iter().filter(|r| r.max_cores > 0).count() as u64;
         if eligible > capacity as u64 {
             // Scarce-floor regime: the from-scratch top-k path handles it.
-            return self.scratch_allocate_with(requests, gain, capacity);
+            return self.scratch_allocate_with(requests, gain, capacity, cores);
         }
 
         // Work estimates for the two paths. Both pay a per-job term (the
@@ -552,32 +559,31 @@ impl SlaqPolicy {
         };
         if !try_warm {
             let start = Instant::now();
-            let alloc = self.scratch_allocate_with(requests, gain, capacity);
+            self.scratch_allocate_with(requests, gain, capacity, cores);
             self.cost_model
                 .observe_scratch(n, scratch_moves, start.elapsed().as_nanos() as u64);
-            return alloc;
+            return;
         }
 
         let mut evals = 0u64;
         let start = Instant::now();
-        if let Some(alloc) = self.warm_allocate_with(ctx, requests, gain, capacity, &mut evals) {
+        if self.warm_allocate_with(ctx, requests, gain, capacity, &mut evals, cores) {
             self.cost_model
                 .observe_warm(n, warm_moves, start.elapsed().as_nanos() as u64);
             self.last_evaluations = evals;
             self.last_warm_start = true;
-            return alloc;
+            return;
         }
         // Aborted warm attempt (repair budget overrun): charge the wasted
         // work to the warm model so the threshold learns from it, then
-        // rebuild.
+        // rebuild (the from-scratch path re-initializes `cores`).
         self.cost_model
             .observe_warm(n, warm_moves, start.elapsed().as_nanos() as u64);
         let start = Instant::now();
-        let alloc = self.scratch_allocate_with(requests, gain, capacity);
+        self.scratch_allocate_with(requests, gain, capacity, cores);
         self.cost_model
             .observe_scratch(n, scratch_moves, start.elapsed().as_nanos() as u64);
         self.last_evaluations += evals; // count the aborted warm attempt too
-        alloc
     }
 }
 
@@ -587,7 +593,14 @@ impl Policy for SlaqPolicy {
     }
 
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
-        self.scratch_allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity)
+        let mut out = Allocation::default();
+        self.scratch_allocate_with(
+            requests,
+            |i, c| requests[i].gain.gain(c),
+            capacity,
+            &mut out.cores,
+        );
+        out
     }
 
     fn allocate_ctx(
@@ -596,14 +609,33 @@ impl Policy for SlaqPolicy {
         requests: &[JobRequest<'_>],
         capacity: u32,
     ) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_ctx_into(ctx, requests, capacity, &mut out);
+        out
+    }
+
+    fn allocate_ctx_into(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        out: &mut Allocation,
+    ) {
         // Prefer the epoch's materialized gain table when its identity
         // stamp matches this request vector (same job ids, row for row):
         // O(1) arena loads in the innermost loops, bit-identical to the
-        // oracle path.
+        // oracle path. Writing through `out` lets steady-state epochs
+        // reuse one grant buffer instead of allocating per decision.
         if let Some(table) = ctx.gain_table().filter(|t| t.matches(requests)) {
-            self.allocate_ctx_with(ctx, requests, |i, c| table.gain(i, c), capacity)
+            self.allocate_ctx_with(ctx, requests, |i, c| table.gain(i, c), capacity, &mut out.cores)
         } else {
-            self.allocate_ctx_with(ctx, requests, |i, c| requests[i].gain.gain(c), capacity)
+            self.allocate_ctx_with(
+                ctx,
+                requests,
+                |i, c| requests[i].gain.gain(c),
+                capacity,
+                &mut out.cores,
+            )
         }
     }
 
@@ -986,6 +1018,42 @@ mod tests {
         assert!(!q.last_warm_start);
         assert_eq!(q.cost_model.scratch_samples(), 1);
         assert!(q.decision_stats().is_some(), "slaq publishes its model");
+    }
+
+    #[test]
+    fn allocate_ctx_into_reuses_the_buffer_bit_identically() {
+        // The out-param path must be the same decision procedure as the
+        // allocating one — same grants, bit for bit — while reusing one
+        // grant vector across epochs (including shrinking populations,
+        // where a stale longer buffer must not leak old entries).
+        forall("allocate_ctx_into ≡ allocate_ctx", 40, |g| {
+            let n = g.usize_in(1, 24);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain {
+                    scale: g.f64_in(0.1, 8.0),
+                    rate: g.f64_in(0.05, 0.9),
+                })
+                .collect();
+            let mut fresh = SlaqPolicy::deterministic();
+            let mut reused = SlaqPolicy::deterministic();
+            let mut ctx_a = SchedContext::new();
+            let mut ctx_b = SchedContext::new();
+            // Dirty buffer: stale junk from a "previous" larger epoch.
+            let mut out = Allocation { cores: vec![99; n + 7] };
+            for _ in 0..4 {
+                let live = g.usize_in(1, n);
+                let caps: Vec<u32> = (0..live).map(|_| g.usize_in(0, 9) as u32).collect();
+                let rs = reqs(&gains[..live], &caps);
+                let capacity = g.usize_in(0, 4 * live) as u32;
+                let a = fresh.allocate_ctx(&ctx_a, &rs, capacity);
+                reused.allocate_ctx_into(&ctx_b, &rs, capacity, &mut out);
+                assert_eq!(a, out, "out-param grant diverged from the allocating path");
+                assert_eq!(fresh.last_evaluations, reused.last_evaluations);
+                assert_eq!(fresh.last_warm_start, reused.last_warm_start);
+                ctx_a.record(&rs, &a);
+                ctx_b.record(&rs, &out);
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! Guard for the committed `BENCH_sched.json` snapshot at the repo root.
+//!
+//! The snapshot once shipped with an empty `entries` array — a run that
+//! measured nothing clobbered the committed numbers and nobody noticed
+//! until a dashboard went blank. `write_bench_json` now refuses to write
+//! an empty list at the producer side; this test is the consumer-side
+//! guard: the *committed* snapshot must either carry real entries or be
+//! explicitly labeled as an unmeasured placeholder (`host` starting with
+//! `UNMEASURED`), so a silent regression to a blank-but-plausible file
+//! fails CI.
+
+use std::path::Path;
+
+/// Pull the string value of a top-level `"key": "value"` pair out of the
+/// snapshot without a JSON dependency (the build is fully offline). Good
+/// enough for the flat, machine-written file `write_bench_json` emits.
+fn string_field(doc: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\"");
+    let rest = &doc[doc.find(&pat)? + pat.len()..];
+    let rest = &rest[rest.find(':')? + 1..];
+    let rest = &rest[rest.find('"')? + 1..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+fn snapshot() -> (String, &'static str) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sched.json");
+    (
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("BENCH_sched.json must stay committed at the repo root: {e}")),
+        "BENCH_sched.json",
+    )
+}
+
+#[test]
+fn snapshot_parses_and_declares_the_v2_schema() {
+    let (doc, name) = snapshot();
+    assert_eq!(
+        string_field(&doc, "schema").as_deref(),
+        Some("slaq-bench-v2"),
+        "{name} must declare the slaq-bench-v2 schema"
+    );
+    assert!(
+        string_field(&doc, "command").is_some_and(|c| c.contains("cargo bench")),
+        "{name} must record the command that produced it"
+    );
+    assert!(doc.contains("\"entries\""), "{name} lost its entries array");
+}
+
+#[test]
+fn snapshot_entries_are_never_silently_empty() {
+    let (doc, name) = snapshot();
+    let entries_start = doc.find("\"entries\"").expect("entries array present");
+    // Any real entry is an object; an empty array has no `{` after the key.
+    let has_entries = doc[entries_start..].contains('{');
+    if has_entries {
+        // Real measurements: every entry must carry the full stat tuple.
+        for field in ["\"name\"", "\"mean_secs\"", "\"p50_secs\"", "\"p95_secs\"", "\"iters\""] {
+            assert!(
+                doc[entries_start..].contains(field),
+                "{name} entries are missing {field}"
+            );
+        }
+    } else {
+        // A blank snapshot is only acceptable when it says so out loud.
+        let host = string_field(&doc, "host").unwrap_or_default();
+        assert!(
+            host.starts_with("UNMEASURED"),
+            "{name} has an empty entries list but does not declare itself \
+             UNMEASURED (host = {host:?}); regenerate it with \
+             `cargo bench --bench sched_scalability` on the pinned machine \
+             or restore the labeled placeholder"
+        );
+    }
+}

@@ -461,6 +461,38 @@ impl NodePool {
         }
     }
 
+    /// Every job's placement as plain data, job ids ascending — the
+    /// durable snapshot of the pool's mutable state (the free vector and
+    /// both free-space indexes are derivable from it).
+    pub fn placements_snapshot(&self) -> Vec<(u64, Vec<(u32, u32)>)> {
+        self.placements
+            .iter()
+            .map(|(&job, p)| (job, p.iter().map(|(&n, &c)| (n, c)).collect()))
+            .collect()
+    }
+
+    /// Re-claim a snapshot's placements on this (fresh) pool through the
+    /// same index-maintaining path live placement uses, so the restored
+    /// pool is bit-for-bit the pool that took the snapshot. Panics on a
+    /// non-fresh pool or a snapshot that oversubscribes a node (corrupt
+    /// durable state — the caller surfaces this as `InvalidData`).
+    pub fn restore_placements(&mut self, placements: &[(u64, Vec<(u32, u32)>)]) {
+        assert!(
+            self.placements.is_empty() && self.free_total == self.spec.capacity(),
+            "restore_placements needs a fresh pool"
+        );
+        for (job, nodes) in placements {
+            for &(node, cores) in nodes {
+                assert!(node < self.spec.nodes, "snapshot node {node} outside the cluster");
+                assert!(
+                    cores <= self.free[node as usize],
+                    "snapshot oversubscribes node {node}"
+                );
+                self.take(*job, node, cores);
+            }
+        }
+    }
+
     /// Number of distinct nodes the job spans (locality metric).
     pub fn span(&self, job: u64) -> usize {
         self.placements.get(&job).map(|p| p.len()).unwrap_or(0)
@@ -1101,6 +1133,28 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn placements_snapshot_restores_an_identical_pool() {
+        let spec = ClusterSpec { nodes: 4, cores_per_node: 4 };
+        let mut p = NodePool::with_topology(spec, Topology::uniform(1, 2, 4));
+        p.apply_diff(&[(1, 6), (2, 5)]);
+        let snap = p.placements_snapshot();
+        let mut q = NodePool::with_topology(spec, Topology::uniform(1, 2, 4));
+        q.restore_placements(&snap);
+        q.check_invariants();
+        for job in [1u64, 2] {
+            assert_eq!(q.placement(job), p.placement(job));
+        }
+        assert_eq!(q.free_cores(), p.free_cores());
+        // The restored pool must behave identically from here on — same
+        // indexes, so same future placement decisions.
+        let da = p.apply_diff(&[(1, 9), (2, 2)]);
+        let db = q.apply_diff(&[(1, 9), (2, 2)]);
+        assert_eq!(da, db);
+        assert_eq!(q.placement(1), p.placement(1));
+        assert_eq!(q.placement(2), p.placement(2));
     }
 
     #[test]

@@ -58,13 +58,40 @@ use super::ledger::JobLedger;
 use super::pool::WorkerPool;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
+use super::wal::{
+    config_bytes, read_snapshot, read_wal, truncate_wal, DurableState, SnapshotView, WalEpoch,
+    WalRecord, WalWriter, SNAP_FILE, WAL_FILE,
+};
 use crate::cluster::{ClusterSpec, CostModel, LocalityModel, NodePool, TopologySpec};
 use crate::predictor::OnlinePredictor;
 use crate::sched::{
     policy_by_name, rebalance_budgets, Allocation, GainModel, GainTable, JobRequest, Policy,
     SchedContext, ShardDemand,
 };
+use crate::util::codec::corrupt;
+use std::io;
+use std::path::Path;
 use std::time::Instant;
+
+/// Injectable kill points for the crash-recovery test harness
+/// (`testkit::crash`). A coordinator with a crash point set aborts
+/// [`Coordinator::step_epoch`] at that point — mid-epoch, after
+/// externally-invisible work has begun but before the epoch becomes
+/// durable — exactly as a `kill -9` there would, and is then discarded
+/// by the harness. Recovery must land on the previous epoch boundary
+/// either way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Die between the predictor-refit stage and the allocation decision:
+    /// in-memory predictors have already advanced and the dirty set is
+    /// drained, but nothing reached disk.
+    AfterRefit,
+    /// Die after the epoch fully executed in memory — grants applied,
+    /// jobs advanced, completions retired — but before its WAL record was
+    /// appended. The epoch never becomes durable and recovery replays to
+    /// the previous boundary.
+    BeforeWalAppend,
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -287,6 +314,12 @@ pub struct Coordinator {
     /// Per-zone shards (empty unless `cfg.sharded`).
     shards: Vec<Shard>,
     scratch: EpochScratch,
+    /// Durable half (state dir + open WAL + snapshot cadence) — `Some`
+    /// iff this coordinator was built by [`Coordinator::with_persistence`]
+    /// or [`Coordinator::recover_state`].
+    durable: Option<DurableState>,
+    /// Injected kill point for the crash-recovery harness.
+    crash_point: Option<CrashPoint>,
 }
 
 impl Coordinator {
@@ -339,7 +372,329 @@ impl Coordinator {
             workers,
             shards,
             scratch: EpochScratch::default(),
+            durable: None,
+            crash_point: None,
         }
+    }
+
+    /// New durable coordinator: every submission, cancellation and epoch
+    /// is logged to an append-only WAL under `dir` (created if missing),
+    /// and the full mutable state is snapshotted every `snapshot_every`
+    /// epochs. A crashed durable coordinator is rebuilt bit-identically
+    /// by [`Coordinator::recover_state`] on the same directory.
+    ///
+    /// This starts a *fresh* run: any previous WAL/snapshot in `dir` is
+    /// removed. The policy must resolve through [`policy_by_name`] (it is
+    /// re-instantiated by name on recovery) and every submitted source
+    /// must implement [`LossSource::descriptor`].
+    pub fn with_persistence(
+        cfg: CoordinatorConfig,
+        policy: Box<dyn Policy>,
+        dir: &Path,
+        snapshot_every: usize,
+    ) -> io::Result<Self> {
+        assert!(snapshot_every >= 1, "snapshot cadence must be >= 1 epoch");
+        assert!(
+            policy_by_name(policy.name()).is_some(),
+            "durable mode needs a registry policy, got {:?}",
+            policy.name()
+        );
+        std::fs::create_dir_all(dir)?;
+        match std::fs::remove_file(dir.join(SNAP_FILE)) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e),
+        }
+        let mut wal = WalWriter::create(&dir.join(WAL_FILE))?;
+        wal.append(&WalRecord::Genesis {
+            cfg: cfg.clone(),
+            policy: policy.name().to_string(),
+            snapshot_every: snapshot_every as u64,
+        })?;
+        let mut c = Self::new(cfg, policy);
+        c.durable = Some(DurableState { dir: dir.to_path_buf(), wal, snapshot_every });
+        Ok(c)
+    }
+
+    /// Rebuild a durable coordinator from its state directory after a
+    /// crash: load the snapshot if one exists, then replay the WAL tail
+    /// past the snapshot's high-water mark. For a deterministic policy
+    /// the recovered coordinator is *bit-identical* to the crashed one at
+    /// its last durable epoch boundary — same ledger, predictors,
+    /// placements, contexts and trace — so resuming it reproduces the
+    /// uninterrupted run exactly (property-tested in `testkit::crash`).
+    ///
+    /// A torn final WAL record (crash mid-append) is dropped and the file
+    /// truncated; a complete record with a bad checksum fails loudly,
+    /// as do any replay-verification mismatches (each replayed epoch is
+    /// cross-checked against its logged grants, losses, spans and
+    /// completions — the at-most-once guarantee on completion effects).
+    pub fn recover_state(dir: &Path) -> io::Result<Self> {
+        let wal_path = dir.join(WAL_FILE);
+        let readout = read_wal(&wal_path)?;
+        if readout.torn {
+            truncate_wal(&wal_path, readout.valid_len)?;
+        }
+        let snap = read_snapshot(dir)?;
+        // Resolve config, policy and cadence — cross-checked byte-for-byte
+        // when both the snapshot and the WAL genesis are present.
+        let (cfg, policy_name, snapshot_every) = match (&snap, readout.records.first()) {
+            (Some(s), Some(WalRecord::Genesis { cfg, policy, snapshot_every })) => {
+                if config_bytes(&s.cfg) != config_bytes(cfg) {
+                    return Err(corrupt("snapshot and WAL genesis disagree on the config"));
+                }
+                if s.policy != *policy || s.snapshot_every != *snapshot_every {
+                    return Err(corrupt("snapshot and WAL genesis disagree on policy/cadence"));
+                }
+                (s.cfg.clone(), s.policy.clone(), s.snapshot_every)
+            }
+            (Some(s), _) => (s.cfg.clone(), s.policy.clone(), s.snapshot_every),
+            (None, Some(WalRecord::Genesis { cfg, policy, snapshot_every })) => {
+                (cfg.clone(), policy.clone(), *snapshot_every)
+            }
+            (None, Some(_)) => return Err(corrupt("WAL does not start with a genesis record")),
+            (None, None) => {
+                return Err(corrupt("no snapshot and no WAL genesis: nothing to recover"))
+            }
+        };
+        let policy = policy_by_name(&policy_name).ok_or_else(|| {
+            corrupt(format!("unknown policy {policy_name:?} in durable state"))
+        })?;
+        let wal_records = readout.records.len() as u64;
+        let mut c = Self::new(cfg, policy);
+
+        // Snapshot restore: the complete mutable state at its boundary.
+        let mut skip = 0usize;
+        let mut snap_high_water = 0usize;
+        if let Some(s) = snap {
+            snap_high_water = s.wal_records as usize;
+            skip = snap_high_water.min(readout.records.len());
+            c.time = s.time;
+            c.epochs = s.epochs;
+            c.ledger = s.ledger;
+            c.pool.restore_placements(&s.placements);
+            c.sched_ctx.restore_grants(s.ctx_grants, s.ctx_epoch);
+            if s.shards.len() != c.shards.len() {
+                return Err(corrupt(format!(
+                    "snapshot has {} shards, config builds {}",
+                    s.shards.len(),
+                    c.shards.len()
+                )));
+            }
+            for (shard, (budget, epoch, grants)) in c.shards.iter_mut().zip(s.shards) {
+                shard.budget = budget;
+                shard.ctx.restore_grants(grants, epoch);
+            }
+        }
+
+        // Replay the WAL tail in append order.
+        for (i, rec) in readout.records.into_iter().enumerate() {
+            if i < skip {
+                continue;
+            }
+            match rec {
+                WalRecord::Genesis { .. } => {
+                    if i != 0 {
+                        return Err(corrupt(format!("genesis record mid-log (index {i})")));
+                    }
+                }
+                WalRecord::Submit { spec, source } => {
+                    c.ledger.submit(spec, source.instantiate());
+                }
+                WalRecord::Cancel { id } => {
+                    if !c.apply_cancel(id) {
+                        return Err(corrupt(format!(
+                            "logged cancel of job {id} was a no-op on replay"
+                        )));
+                    }
+                }
+                WalRecord::Epoch(ep) => c.replay_epoch(&ep)?,
+            }
+        }
+
+        let stale_snapshot = snap_high_water > wal_records as usize;
+        c.durable = Some(DurableState {
+            dir: dir.to_path_buf(),
+            wal: WalWriter::open_append(&wal_path, wal_records)?,
+            snapshot_every: snapshot_every as usize,
+        });
+        if stale_snapshot {
+            // The snapshot's WAL high-water mark exceeds what the file
+            // holds (the log was emptied or rotated externally). Future
+            // appends would land below the mark and a later recovery
+            // would wrongly skip them — rewrite the snapshot against the
+            // file as it is now.
+            c.snapshot_now()?;
+        }
+        Ok(c)
+    }
+
+    /// Re-execute one logged epoch during recovery. The live decision
+    /// phase is skipped — grants come from the log — but everything the
+    /// decisions *caused* is re-run through the same code paths as
+    /// [`Coordinator::step_epoch`] (activation, refits, placement diff,
+    /// job advance, retirement), each stage verified against the logged
+    /// record: epoch time, active set, dirty count, refit count, losses
+    /// (bitwise), cross-rack moves, rack spans and the completion list.
+    /// Completion effects are therefore applied at most once — replay
+    /// re-derives them and cross-checks, it never double-applies.
+    fn replay_epoch(&mut self, ep: &WalEpoch) -> io::Result<()> {
+        let t0 = self.time;
+        let window = self.cfg.epoch_secs;
+        let rec = &ep.record;
+        if rec.time.to_bits() != t0.to_bits() {
+            return Err(corrupt(format!(
+                "replay time skew: log epoch at t={}, state at t={t0}",
+                rec.time
+            )));
+        }
+
+        self.ledger.activate_due(t0);
+        let mut active: Vec<u64> = Vec::new();
+        self.ledger.running_ids_into(&mut active);
+        if active.len() != rec.entries.len() || rec.active_jobs != active.len() {
+            return Err(corrupt(format!(
+                "replay active-set skew at t={t0}: log {} entries, state {}",
+                rec.entries.len(),
+                active.len()
+            )));
+        }
+        for (e, &id) in rec.entries.iter().zip(&active) {
+            if e.job != id {
+                return Err(corrupt(format!(
+                    "replay active-set skew at t={t0}: log job {}, state job {id}",
+                    e.job
+                )));
+            }
+        }
+
+        let mut dirty: Vec<u64> = Vec::new();
+        self.ledger.take_dirty_into(&mut dirty);
+        if dirty.len() != rec.dirty_jobs {
+            return Err(corrupt(format!(
+                "replay dirty-set skew at t={t0}: log {}, state {}",
+                rec.dirty_jobs,
+                dirty.len()
+            )));
+        }
+        let sync_ids: &[u64] = if self.cfg.selective_refits { &dirty } else { &active };
+        let amortize = self.cfg.refit_amortization;
+        let mut refits = 0usize;
+        for &id in sync_ids {
+            let job = self.ledger.job_mut(id).expect("synced job in ledger");
+            if job.predictor.refresh_fit_deferrable(amortize) {
+                refits += 1;
+            }
+        }
+        if refits != rec.refits {
+            return Err(corrupt(format!(
+                "replay refit skew at t={t0}: log {}, state {refits}",
+                rec.refits
+            )));
+        }
+
+        for (e, &id) in rec.entries.iter().zip(&active) {
+            let loss = self.ledger.job(id).expect("running job").current_loss();
+            if loss.to_bits() != e.loss.to_bits() {
+                return Err(corrupt(format!(
+                    "replay loss skew for job {id} at t={t0}: log {}, state {loss}",
+                    e.loss
+                )));
+            }
+        }
+
+        // Apply the *logged* grants — the decision phase is what replay
+        // elides — through the same placement-diff path as a live epoch.
+        let targets: Vec<(u64, u32)> =
+            rec.entries.iter().map(|e| (e.job, e.cores)).collect();
+        let delta = self.pool.apply_diff(&targets);
+        if delta.cross_rack_moves != rec.cross_rack_moves {
+            return Err(corrupt(format!(
+                "replay placement skew at t={t0}: log {} cross-rack moves, state {}",
+                rec.cross_rack_moves, delta.cross_rack_moves
+            )));
+        }
+        for e in &rec.entries {
+            let span = self.pool.rack_span(e.job) as u32;
+            if span != e.rack_span {
+                return Err(corrupt(format!(
+                    "replay span skew for job {} at t={t0}: log {}, state {span}",
+                    e.job, e.rack_span
+                )));
+            }
+        }
+
+        // The logged record joins the trace verbatim (wall-clock nanos
+        // included), so a recovered trace is the original trace.
+        self.epochs.push(rec.clone());
+
+        let mut completed_ids: Vec<u64> = Vec::new();
+        for e in &rec.entries {
+            let (id, span) = (e.job, e.rack_span);
+            let slowdown = self.cfg.locality.slowdown(span as usize);
+            let job = self.ledger.job_mut(id).expect("running job");
+            job.max_rack_span = job.max_rack_span.max(span);
+            let iterations = job.advance_with_locality(t0, window, e.cores, slowdown);
+            let completed = job.state == JobState::Completed;
+            if iterations > 0 {
+                self.ledger.mark_dirty(id);
+            }
+            if completed {
+                completed_ids.push(id);
+                self.pool.release_all(id);
+                self.ledger.retire(id);
+                self.sched_ctx.forget(id);
+                if !self.shards.is_empty() {
+                    let ns = self.shards.len() as u64;
+                    self.shards[(id % ns) as usize].ctx.forget(id);
+                }
+            }
+        }
+        if completed_ids != ep.completed {
+            return Err(corrupt(format!(
+                "replay completion skew at t={t0}: log {:?}, state {completed_ids:?}",
+                ep.completed
+            )));
+        }
+
+        // Rebuild the scheduling contexts exactly as the live epoch left
+        // them: `record()` keyed every request (0-core grants included),
+        // then `forget()` removed the completions; the epoch counters
+        // equal the epochs recorded. (`completed_ids` is ascending — it
+        // was collected in `active` order.)
+        let epoch_no = self.epochs.len() as u64;
+        let survives = |id: u64| completed_ids.binary_search(&id).is_err();
+        if self.shards.is_empty() {
+            self.sched_ctx.restore_grants(
+                rec.entries
+                    .iter()
+                    .filter(|e| survives(e.job))
+                    .map(|e| (e.job, e.cores)),
+                epoch_no,
+            );
+        } else {
+            if ep.budgets.len() != self.shards.len() {
+                return Err(corrupt(format!(
+                    "replay budget skew at t={t0}: log {} shards, state {}",
+                    ep.budgets.len(),
+                    self.shards.len()
+                )));
+            }
+            let ns = self.shards.len() as u64;
+            for (si, shard) in self.shards.iter_mut().enumerate() {
+                shard.ctx.restore_grants(
+                    rec.entries
+                        .iter()
+                        .filter(|e| e.job % ns == si as u64 && survives(e.job))
+                        .map(|e| (e.job, e.cores)),
+                    epoch_no,
+                );
+                shard.budget = ep.budgets[si];
+            }
+        }
+
+        self.time = t0 + window;
+        Ok(())
     }
 
     /// Number of per-zone shards (0 when the coordinator is unsharded).
@@ -356,7 +711,7 @@ impl Coordinator {
 
     /// Live-thread counter of the worker pool, for lifecycle tests.
     #[cfg(test)]
-    fn worker_live_counter(
+    pub(super) fn worker_live_counter(
         &self,
     ) -> Option<std::sync::Arc<std::sync::atomic::AtomicUsize>> {
         self.workers.as_ref().map(|w| w.live_counter())
@@ -369,8 +724,100 @@ impl Coordinator {
     }
 
     /// Submit a job (may arrive in the future). Job ids must be unique.
+    ///
+    /// On a durable coordinator the submission is WAL-logged *before* it
+    /// takes effect (write-ahead), capturing the source's exact state —
+    /// RNG cursor included — so recovery resubmits the same job
+    /// bit-identically. Durable sources must implement
+    /// [`LossSource::descriptor`].
     pub fn submit(&mut self, spec: JobSpec, source: Box<dyn LossSource>) {
+        if let Some(d) = &mut self.durable {
+            let desc = source
+                .descriptor()
+                .expect("durable coordinator needs a serializable loss source");
+            d.wal
+                .append(&WalRecord::Submit { spec: spec.clone(), source: desc })
+                .expect("wal append (submit)");
+        }
         self.ledger.submit(spec, source);
+    }
+
+    /// Cancel a job. Pending jobs never activate; running jobs release
+    /// their cores and leave every hot set immediately. Returns `true`
+    /// when the cancel took effect (`false` for unknown, completed or
+    /// already-cancelled ids). Effective cancels are WAL-logged on
+    /// durable coordinators; no-ops are not.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if !self.apply_cancel(id) {
+            return false;
+        }
+        if let Some(d) = &mut self.durable {
+            d.wal.append(&WalRecord::Cancel { id }).expect("wal append (cancel)");
+        }
+        true
+    }
+
+    /// The state change behind [`Coordinator::cancel`], shared with WAL
+    /// replay (which must not re-log).
+    fn apply_cancel(&mut self, id: u64) -> bool {
+        match self.ledger.cancel(id) {
+            None => false,
+            Some(JobState::Pending) => true,
+            Some(was_running) => {
+                debug_assert_eq!(was_running, JobState::Running);
+                self.pool.release_all(id);
+                self.sched_ctx.forget(id);
+                if !self.shards.is_empty() {
+                    let ns = self.shards.len() as u64;
+                    self.shards[(id % ns) as usize].ctx.forget(id);
+                }
+                true
+            }
+        }
+    }
+
+    /// Arm a simulated kill for the crash-recovery harness: the next
+    /// [`Coordinator::step_epoch`] aborts at `point` (see [`CrashPoint`])
+    /// and the coordinator should then be discarded, as a killed process
+    /// would be.
+    pub fn set_crash_point(&mut self, point: CrashPoint) {
+        self.crash_point = Some(point);
+    }
+
+    /// Number of epochs executed so far.
+    pub fn epoch_count(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Whether this coordinator persists its state (built by
+    /// [`Coordinator::with_persistence`] / [`Coordinator::recover_state`]).
+    pub fn is_durable(&self) -> bool {
+        self.durable.is_some()
+    }
+
+    /// Write a snapshot of the full mutable state right now (durable
+    /// coordinators only; also done automatically every `snapshot_every`
+    /// epochs). Atomic: a crash mid-write leaves the previous snapshot.
+    pub fn snapshot_now(&mut self) -> io::Result<()> {
+        let d = self.durable.as_ref().expect("snapshot_now on a non-durable coordinator");
+        let view = SnapshotView {
+            cfg: &self.cfg,
+            policy: self.policy.name(),
+            snapshot_every: d.snapshot_every as u64,
+            time: self.time,
+            wal_records: d.wal.records(),
+            epochs: &self.epochs,
+            ledger: &self.ledger,
+            placements: self.pool.placements_snapshot(),
+            ctx_epoch: self.sched_ctx.epoch(),
+            ctx_grants: self.sched_ctx.grants(),
+            shards: self
+                .shards
+                .iter()
+                .map(|s| (s.budget, s.ctx.epoch(), s.ctx.grants()))
+                .collect(),
+        };
+        view.write(&d.dir)
     }
 
     /// Current virtual time.
@@ -485,6 +932,17 @@ impl Coordinator {
             self.scratch.refit_batch = batch;
         }
         let refit_nanos = refit_start.elapsed().as_nanos() as u64;
+
+        // Simulated mid-epoch kill (crash harness): nothing of this epoch
+        // has reached disk, so recovery lands on the previous boundary.
+        // The in-memory mutations above — refreshed fits, the drained
+        // dirty set — die with the process image, as they would under a
+        // real `kill -9` here.
+        if self.crash_point == Some(CrashPoint::AfterRefit) {
+            self.scratch.active = active;
+            self.scratch.dirty = dirty;
+            return;
+        }
 
         let capacity = self.cfg.cluster.capacity();
         let gain_nanos;
@@ -771,6 +1229,8 @@ impl Coordinator {
         // for the next sync, while completed jobs leave the running set,
         // the dirty set, the node pool and the scheduling context for
         // good.
+        let log_epoch = self.durable.is_some();
+        let mut completed_ids: Vec<u64> = Vec::new();
         for ((&id, &cores), &span) in active.iter().zip(&grant.cores).zip(&spans) {
             let slowdown = self.cfg.locality.slowdown(span as usize);
             let job = self.ledger.job_mut(id).expect("running job");
@@ -781,6 +1241,9 @@ impl Coordinator {
                 self.ledger.mark_dirty(id);
             }
             if completed {
+                if log_epoch {
+                    completed_ids.push(id);
+                }
                 self.pool.release_all(id);
                 self.ledger.retire(id);
                 self.sched_ctx.forget(id);
@@ -800,6 +1263,45 @@ impl Coordinator {
         self.scratch.grant = grant;
 
         self.time = t0 + window;
+
+        // Simulated kill after full in-memory execution but before the
+        // epoch record reached the WAL — the other half of the durability
+        // window. The epoch never becomes durable; recovery replays to
+        // the previous boundary.
+        if self.crash_point == Some(CrashPoint::BeforeWalAppend) {
+            return;
+        }
+        if log_epoch {
+            self.append_epoch_wal(completed_ids).expect("wal append (epoch)");
+        }
+    }
+
+    /// Make the epoch just executed durable: append its WAL record (the
+    /// trace record plus completions, post-broker shard budgets and the
+    /// decision-cost sample counters), then snapshot if the cadence says
+    /// so. Called as the last act of [`Coordinator::step_epoch`] — a
+    /// crash anywhere before this leaves the previous boundary durable.
+    fn append_epoch_wal(&mut self, completed: Vec<u64>) -> io::Result<()> {
+        let record =
+            self.epochs.last().expect("epoch record pushed before WAL append").clone();
+        let (warm_samples, scratch_samples) = self
+            .sched_ctx
+            .decision_stats()
+            .map(|s| (s.warm_samples(), s.scratch_samples()))
+            .unwrap_or((0, 0));
+        let ep = WalEpoch {
+            record,
+            completed,
+            budgets: self.shards.iter().map(|s| s.budget).collect(),
+            warm_samples,
+            scratch_samples,
+        };
+        let d = self.durable.as_mut().expect("durable state");
+        d.wal.append(&WalRecord::Epoch(Box::new(ep)))?;
+        if self.epochs.len() % self.durable.as_ref().unwrap().snapshot_every == 0 {
+            self.snapshot_now()?;
+        }
+        Ok(())
     }
 
     /// Run epochs until virtual time reaches `t_end`.

@@ -32,6 +32,44 @@ pub struct JobSpec {
     pub target_hint: Option<f64>,
 }
 
+impl JobSpec {
+    /// Append the spec to a durable-state buffer (see
+    /// [`crate::util::codec`]); shared by the job snapshot codec and the
+    /// WAL's submission records.
+    pub fn encode(&self, e: &mut crate::util::codec::Enc) {
+        e.put_u64(self.id);
+        e.put_str(&self.name);
+        e.put_u8(self.kind.to_byte());
+        e.put_f64(self.cost.serial_secs);
+        e.put_f64(self.cost.work_core_secs);
+        e.put_f64(self.cost.overhead_per_core);
+        e.put_u32(self.max_cores);
+        e.put_f64(self.arrival);
+        e.put_f64(self.target_fraction);
+        e.put_u64(self.max_iterations);
+        e.put_opt_f64(self.target_hint);
+    }
+
+    /// Inverse of [`JobSpec::encode`].
+    pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        Ok(Self {
+            id: d.u64()?,
+            name: d.str()?,
+            kind: CurveKind::from_byte(d.u8()?)?,
+            cost: CostModel {
+                serial_secs: d.f64()?,
+                work_core_secs: d.f64()?,
+                overhead_per_core: d.f64()?,
+            },
+            max_cores: d.u32()?,
+            arrival: d.f64()?,
+            target_fraction: d.f64()?,
+            max_iterations: d.u64()?,
+            target_hint: d.opt_f64()?,
+        })
+    }
+}
+
 /// Lifecycle state.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
@@ -41,6 +79,9 @@ pub enum JobState {
     Running,
     /// Converged or hit its iteration cap.
     Completed,
+    /// Withdrawn by the submitter before completing (event front-end
+    /// `Cancel`); never runs again and holds no cores.
+    Cancelled,
 }
 
 /// A live job inside the coordinator.
@@ -223,6 +264,88 @@ impl Job {
             return 0.0;
         }
         self.spec.cost.fractional_iterations(window, cores, self.credit)
+    }
+
+    /// Serialize the complete job — spec, lifecycle state, predictor,
+    /// loss-source descriptor, progress counters, full loss trace — for
+    /// the durable-coordinator snapshot. Fails with `InvalidData` when the
+    /// loss source is not serializable (no
+    /// [`super::source::SourceDescriptor`]); durable coordinators reject
+    /// such sources at submission already.
+    pub fn encode_state(&self, e: &mut crate::util::codec::Enc) -> std::io::Result<()> {
+        let descriptor = self.source.descriptor().ok_or_else(|| {
+            crate::util::codec::corrupt(format!(
+                "job {} has a non-serializable loss source",
+                self.spec.id
+            ))
+        })?;
+        self.spec.encode(e);
+        e.put_u8(match self.state {
+            JobState::Pending => 0,
+            JobState::Running => 1,
+            JobState::Completed => 2,
+            JobState::Cancelled => 3,
+        });
+        self.predictor.encode_state(e);
+        descriptor.encode(e);
+        e.put_u64(self.iteration);
+        e.put_f64(self.credit);
+        e.put_u32(self.cores);
+        e.put_u32(self.max_rack_span);
+        e.put_f64(self.initial_loss);
+        e.put_opt_f64(self.completion_time);
+        e.put_usize(self.loss_trace.len());
+        for &(t, it, loss) in &self.loss_trace {
+            e.put_f64(t);
+            e.put_u64(it);
+            e.put_f64(loss);
+        }
+        e.put_u32(self.small_delta_streak);
+        Ok(())
+    }
+
+    /// Inverse of [`Job::encode_state`]; the decoded job continues the
+    /// original run bit for bit (predictor, source RNG and stall counter
+    /// included).
+    pub fn decode_state(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        use super::source::SourceDescriptor;
+        use crate::util::codec::corrupt;
+        let spec = JobSpec::decode(d)?;
+        let state = match d.u8()? {
+            0 => JobState::Pending,
+            1 => JobState::Running,
+            2 => JobState::Completed,
+            3 => JobState::Cancelled,
+            t => return Err(corrupt(format!("unknown job state {t}"))),
+        };
+        let predictor = OnlinePredictor::decode_state(d)?;
+        let source = SourceDescriptor::decode(d)?.instantiate();
+        let iteration = d.u64()?;
+        let credit = d.f64()?;
+        let cores = d.u32()?;
+        let max_rack_span = d.u32()?;
+        let initial_loss = d.f64()?;
+        let completion_time = d.opt_f64()?;
+        let n = d.usize_()?;
+        let mut loss_trace = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            loss_trace.push((d.f64()?, d.u64()?, d.f64()?));
+        }
+        let small_delta_streak = d.u32()?;
+        Ok(Self {
+            spec,
+            state,
+            predictor,
+            source,
+            iteration,
+            credit,
+            cores,
+            max_rack_span,
+            initial_loss,
+            completion_time,
+            loss_trace,
+            small_delta_streak,
+        })
     }
 }
 

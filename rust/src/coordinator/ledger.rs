@@ -18,8 +18,9 @@
 //!   initial loss); [`JobLedger::retire`] removes it, so a job completed
 //!   mid-epoch is never refit again.
 
-use super::job::{Job, JobSpec};
+use super::job::{Job, JobSpec, JobState};
 use super::source::LossSource;
+use crate::util::codec::{corrupt, Dec, Enc};
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 
@@ -106,6 +107,12 @@ pub struct JobLedger {
     dirty: BTreeSet<u64>,
     /// Completed-job count (jobs retired from the running set).
     completed: usize,
+    /// Cancelled jobs whose heap entry has not been popped yet (lazy
+    /// tombstones: [`JobLedger::cancel`] leaves the pending heap untouched
+    /// and [`JobLedger::activate_due`] skips them on pop).
+    cancelled_pending: usize,
+    /// Total cancelled-job count.
+    cancelled: usize,
 }
 
 impl JobLedger {
@@ -137,6 +144,11 @@ impl JobLedger {
             }
             self.pending.pop();
             let entry = self.jobs.get_mut(&id).expect("pending job in ledger");
+            if entry.job.state == JobState::Cancelled {
+                // Lazy tombstone left by `cancel`: drop it on pop.
+                self.cancelled_pending -= 1;
+                continue;
+            }
             entry.job.activate(now);
             entry.activated_at = now;
             self.running.insert(id);
@@ -230,9 +242,51 @@ impl JobLedger {
         self.dirty.remove(&id);
     }
 
+    /// Cancel a job: a pending job becomes a lazy heap tombstone (skipped
+    /// when its arrival comes due), a running job leaves the running and
+    /// dirty sets immediately. Returns the state the job was in before
+    /// cancellation, or `None` for unknown, completed, or
+    /// already-cancelled ids (a no-op, so cancels racing completion are
+    /// harmless). The caller owns releasing any cluster cores the job held.
+    pub fn cancel(&mut self, id: u64) -> Option<JobState> {
+        let entry = self.jobs.get_mut(&id)?;
+        let was = entry.job.state;
+        match was {
+            JobState::Pending => {
+                entry.job.state = JobState::Cancelled;
+                entry.job.cores = 0;
+                self.cancelled_pending += 1;
+                self.cancelled += 1;
+                Some(was)
+            }
+            JobState::Running => {
+                if !self.running.remove(&id) {
+                    // Already retired (completed mid-epoch): nothing to cancel.
+                    return None;
+                }
+                entry.job.state = JobState::Cancelled;
+                entry.job.cores = 0;
+                self.dirty.remove(&id);
+                self.cancelled += 1;
+                Some(was)
+            }
+            JobState::Completed | JobState::Cancelled => None,
+        }
+    }
+
+    /// Total cancelled-job count.
+    pub fn cancelled_len(&self) -> usize {
+        self.cancelled
+    }
+
     /// `(pending, running, completed)` job counts — O(1), no scan.
+    /// Pending excludes cancelled jobs still tombstoned in the heap.
     pub fn counts(&self) -> (usize, usize, usize) {
-        (self.pending.len(), self.running.len(), self.completed)
+        (
+            self.pending.len() - self.cancelled_pending,
+            self.running.len(),
+            self.completed,
+        )
     }
 
     /// Total jobs ever submitted.
@@ -243,6 +297,74 @@ impl JobLedger {
     /// True when nothing was ever submitted.
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
+    }
+
+    /// Serialize the full ledger for the durable-coordinator snapshot:
+    /// every job (with activation time) in id order, the explicit running
+    /// and dirty id sets, and the completed/cancelled counters. The
+    /// pending heap is not encoded — [`JobLedger::decode_state`] rebuilds
+    /// it from the jobs still in [`JobState::Pending`], which also drops
+    /// any cancel tombstones (behaviorally equivalent: tombstones only
+    /// exist to be skipped).
+    pub fn encode_state(&self, e: &mut Enc) -> std::io::Result<()> {
+        e.put_usize(self.jobs.len());
+        for entry in self.jobs.values() {
+            e.put_f64(entry.activated_at);
+            entry.job.encode_state(e)?;
+        }
+        e.put_usize(self.running.len());
+        for &id in &self.running {
+            e.put_u64(id);
+        }
+        e.put_usize(self.dirty.len());
+        for &id in &self.dirty {
+            e.put_u64(id);
+        }
+        e.put_usize(self.completed);
+        e.put_usize(self.cancelled);
+        Ok(())
+    }
+
+    /// Inverse of [`JobLedger::encode_state`]. Validates internal
+    /// consistency (unique ids, running ids exist and are `Running`, dirty
+    /// ⊆ running) and fails with `InvalidData` on any violation.
+    pub fn decode_state(d: &mut Dec) -> std::io::Result<Self> {
+        let n_jobs = d.usize_()?;
+        let mut jobs = BTreeMap::new();
+        let mut pending = BinaryHeap::new();
+        for _ in 0..n_jobs {
+            let activated_at = d.f64()?;
+            let job = Job::decode_state(d)?;
+            let (id, arrival) = (job.spec.id, job.spec.arrival);
+            if job.state == JobState::Pending {
+                pending.push(Reverse((Arrival(arrival), id)));
+            }
+            if jobs.insert(id, LedgerEntry { job, activated_at }).is_some() {
+                return Err(corrupt(format!("duplicate job id {id} in snapshot")));
+            }
+        }
+        let n_running = d.usize_()?;
+        let mut running = BTreeSet::new();
+        for _ in 0..n_running {
+            let id = d.u64()?;
+            match jobs.get(&id) {
+                Some(e) if e.job.state == JobState::Running => {}
+                _ => return Err(corrupt(format!("running id {id} is not a running job"))),
+            }
+            running.insert(id);
+        }
+        let n_dirty = d.usize_()?;
+        let mut dirty = BTreeSet::new();
+        for _ in 0..n_dirty {
+            let id = d.u64()?;
+            if !running.contains(&id) {
+                return Err(corrupt(format!("dirty id {id} is not running")));
+            }
+            dirty.insert(id);
+        }
+        let completed = d.usize_()?;
+        let cancelled = d.usize_()?;
+        Ok(Self { jobs, pending, running, dirty, completed, cancelled_pending: 0, cancelled })
     }
 
     /// Iterate all entries in id order.
@@ -406,6 +528,39 @@ mod tests {
         assert_eq!(ledger.dirty_len(), 0, "drain must empty the set");
         ledger.take_dirty_into(&mut dirty_buf);
         assert!(dirty_buf.is_empty(), "second drain clears the buffer");
+    }
+
+    #[test]
+    fn cancel_pending_job_never_activates() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(1, 0.0), source(1));
+        ledger.submit(spec(2, 5.0), source(2));
+        assert_eq!(ledger.cancel(2), Some(JobState::Pending));
+        assert_eq!(ledger.counts(), (1, 0, 0), "tombstone leaves the pending count");
+        // Double-cancel and unknown ids are no-ops.
+        assert_eq!(ledger.cancel(2), None);
+        assert_eq!(ledger.cancel(99), None);
+        assert_eq!(ledger.activate_due(10.0), 1, "only the live job activates");
+        assert_eq!(ledger.running_ids(), vec![1]);
+        assert_eq!(ledger.job(2).unwrap().state, JobState::Cancelled);
+        assert_eq!(ledger.counts(), (0, 1, 0));
+        assert_eq!(ledger.cancelled_len(), 1);
+    }
+
+    #[test]
+    fn cancel_running_job_leaves_hot_sets() {
+        let mut ledger = JobLedger::new();
+        ledger.submit(spec(1, 0.0), source(1));
+        ledger.submit(spec(2, 0.0), source(2));
+        ledger.activate_due(0.0);
+        assert_eq!(ledger.cancel(1), Some(JobState::Running));
+        assert_eq!(ledger.running_ids(), vec![2]);
+        assert_eq!(ledger.dirty_ids(), vec![2], "cancelled job left the dirty set");
+        assert_eq!(ledger.counts(), (0, 1, 0));
+        assert_eq!(ledger.job(1).unwrap().cores, 0);
+        // Completed jobs cannot be cancelled.
+        ledger.retire(2);
+        assert_eq!(ledger.cancel(2), None);
     }
 
     #[test]

@@ -31,17 +31,35 @@
 //!    completed-iteration losses back into their predictors,
 //! 6. records everything — grants, losses, rack spans, cross-rack moves —
 //!    into a [`Trace`].
+//!
+//! ## Service lifecycle and durability
+//!
+//! Around that loop sit two optional layers. The [`CoordinatorService`]
+//! turns the coordinator into an always-on, channel-driven service:
+//! producers send [`JobEvent`]s (submit/cancel/shutdown, plain data only)
+//! from any thread, the service drains them at epoch boundaries, and
+//! subscribers receive an [`EpochNotice`] per epoch. Independently,
+//! [`Coordinator::with_persistence`] makes the state durable — an
+//! append-only WAL of every submission, cancellation and epoch plus
+//! periodic full snapshots — and [`Coordinator::recover_state`] rebuilds
+//! a crashed coordinator bit-identically at its last durable epoch
+//! boundary (kill-and-recover determinism is property-tested in
+//! [`crate::testkit::crash`], at every boundary and at the mid-epoch
+//! [`CrashPoint`]s).
 
 mod epoch;
 mod job;
 mod ledger;
 mod pool;
+mod service;
 mod source;
 mod trace;
+pub(crate) mod wal;
 
-pub use epoch::{Coordinator, CoordinatorConfig};
+pub use epoch::{Coordinator, CoordinatorConfig, CrashPoint};
 pub use pool::WorkerPool;
 pub use job::{Job, JobSpec, JobState};
 pub use ledger::{JobLedger, LedgerEntry};
-pub use source::{LossSource, NonConvexSource, ReplaySource, SyntheticSource};
-pub use trace::{EpochRecord, JobTrace, Trace};
+pub use service::{CoordinatorService, EpochNotice, JobEvent};
+pub use source::{LossSource, NonConvexSource, ReplaySource, SourceDescriptor, SyntheticSource};
+pub use trace::{EpochEntry, EpochRecord, JobTrace, Trace};

@@ -1,0 +1,369 @@
+//! The always-on coordinator service: a channel-driven front-end around
+//! [`Coordinator`].
+//!
+//! The coordinator itself is deliberately single-threaded and not `Send`
+//! (jobs own boxed [`crate::coordinator::LossSource`]s). The service
+//! keeps it that way: producers on any thread send plain-data
+//! [`JobEvent`]s (submissions carry a [`SourceDescriptor`], not a live
+//! source) into an mpsc channel, and the service drains the queue *at
+//! epoch boundaries only* — every event takes effect between epochs,
+//! never mid-decision. Activation order is therefore independent of
+//! channel interleaving: the ledger's arrival heap orders jobs by
+//! `(arrival, id)` no matter when their events were delivered, as long
+//! as each arrives before its activation boundary (property-tested
+//! below).
+//!
+//! Subscribers receive an [`EpochNotice`] after every epoch; a
+//! [`JobEvent::Shutdown`] (or every sender hanging up) stops the loop at
+//! the next boundary, after the in-flight epoch — and, on a durable
+//! coordinator, its WAL record — has fully landed.
+
+use super::epoch::Coordinator;
+use super::job::JobSpec;
+use super::source::SourceDescriptor;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+/// A front-end event. Plain data only (`Send`), so producers can live on
+/// any thread while job state stays on the coordinator thread.
+pub enum JobEvent {
+    /// Submit a job: its spec plus the serializable capture of its loss
+    /// source ([`SourceDescriptor`]), instantiated on the coordinator
+    /// thread at the boundary the event is drained.
+    Submit {
+        /// The job's static spec.
+        spec: JobSpec,
+        /// Loss-source capture, exact to the RNG cursor.
+        source: SourceDescriptor,
+    },
+    /// Cancel a job by id (no-op for unknown/finished ids).
+    Cancel {
+        /// The job id to cancel.
+        id: u64,
+    },
+    /// Stop the service at the next epoch boundary. The epoch in flight
+    /// completes — and becomes durable — first; queued events ahead of
+    /// the shutdown are still applied.
+    Shutdown,
+}
+
+/// Broadcast to subscribers after every epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochNotice {
+    /// Epochs completed so far (this epoch included).
+    pub epoch: usize,
+    /// Virtual time after the epoch.
+    pub time: f64,
+    /// Jobs still running after the epoch.
+    pub active: usize,
+    /// Jobs completed so far, in total.
+    pub completed: usize,
+}
+
+/// The event-driven service loop around a [`Coordinator`].
+pub struct CoordinatorService {
+    coord: Coordinator,
+    events: Receiver<JobEvent>,
+    subscribers: Vec<Sender<EpochNotice>>,
+    shutdown: bool,
+}
+
+impl CoordinatorService {
+    /// Wrap a coordinator (durable or not); returns the service and the
+    /// submission handle. Clone the handle freely across threads.
+    pub fn new(coord: Coordinator) -> (Self, Sender<JobEvent>) {
+        let (tx, rx) = channel();
+        (Self { coord, events: rx, subscribers: Vec::new(), shutdown: false }, tx)
+    }
+
+    /// Register an epoch-notice subscriber. Disconnected subscribers are
+    /// pruned on the next broadcast; they never stall the loop.
+    pub fn subscribe(&mut self) -> Receiver<EpochNotice> {
+        let (tx, rx) = channel();
+        self.subscribers.push(tx);
+        rx
+    }
+
+    /// The wrapped coordinator (read-only).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// True once a [`JobEvent::Shutdown`] has been drained (or every
+    /// sender disconnected while the queue was empty).
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown
+    }
+
+    fn apply(&mut self, ev: JobEvent) {
+        match ev {
+            JobEvent::Submit { spec, source } => self.coord.submit(spec, source.instantiate()),
+            JobEvent::Cancel { id } => {
+                self.coord.cancel(id);
+            }
+            JobEvent::Shutdown => self.shutdown = true,
+        }
+    }
+
+    /// Drain every queued event without blocking; returns how many were
+    /// applied. Events land in the ledger immediately but only influence
+    /// scheduling from the next epoch boundary on.
+    pub fn drain_events(&mut self) -> usize {
+        let mut n = 0;
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => {
+                    self.apply(ev);
+                    n += 1;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        n
+    }
+
+    fn broadcast(&mut self) {
+        let (_, running, completed) = self.coord.job_counts();
+        let notice = EpochNotice {
+            epoch: self.coord.epoch_count(),
+            time: self.coord.time(),
+            active: running,
+            completed,
+        };
+        self.subscribers.retain(|s| s.send(notice).is_ok());
+    }
+
+    /// One boundary-to-boundary turn: drain queued events, run one epoch,
+    /// broadcast the notice.
+    pub fn step_epoch(&mut self) {
+        self.drain_events();
+        self.coord.step_epoch();
+        self.broadcast();
+    }
+
+    /// Run the service loop: step epochs (at most `max_epochs`, a safety
+    /// cap) until shutdown. While the ledger is completely idle — no
+    /// pending and no running jobs — the loop parks on a blocking
+    /// `recv()` instead of burning empty epochs, waking on the next
+    /// event; it exits when a shutdown is drained or every sender has
+    /// hung up with nothing left to do.
+    pub fn run(&mut self, max_epochs: usize) {
+        let mut stepped = 0usize;
+        while stepped < max_epochs && !self.shutdown {
+            self.drain_events();
+            if self.shutdown {
+                break;
+            }
+            let (pending, running, _) = self.coord.job_counts();
+            if pending == 0 && running == 0 {
+                match self.events.recv() {
+                    Ok(ev) => {
+                        self.apply(ev);
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+            self.coord.step_epoch();
+            self.broadcast();
+            stepped += 1;
+        }
+    }
+
+    /// Dissolve the service and hand back the coordinator (for trace
+    /// extraction or a final snapshot). Any events still queued are
+    /// dropped with the channel.
+    pub fn into_coordinator(self) -> Coordinator {
+        self.coord
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::epoch::CoordinatorConfig;
+    use super::super::wal::{read_wal, WalRecord, WAL_FILE};
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::sched::policy_by_name;
+    use crate::testkit::crash::assert_trace_eq;
+    use crate::testkit::{forall, sim, TempDir};
+    use crate::util::rng::Rng;
+
+    fn small_cfg(threads: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+            epoch_secs: 2.0,
+            threads,
+            ..Default::default()
+        }
+    }
+
+    /// Build `(spec, descriptor)` events for the templates, forking the
+    /// sources from one seed exactly like [`sim::submit_templates`] so a
+    /// channel-fed coordinator sees bitwise-identical workloads.
+    fn submit_events(
+        templates: &[crate::workload::JobTemplate],
+        seed: u64,
+    ) -> Vec<(JobSpec, SourceDescriptor)> {
+        let mut rng = Rng::new(seed);
+        templates
+            .iter()
+            .map(|t| {
+                let source = t.make_source(&mut rng);
+                let desc = source.descriptor().expect("synthetic sources are serializable");
+                (t.spec.clone(), desc)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn channel_interleaving_does_not_change_the_trace() {
+        // Satellite property: submissions activate at their arrival
+        // boundary in arrival order, no matter how their events
+        // interleave on the channel — including trickling in mid-run,
+        // any time before each job's activation boundary.
+        forall("service arrival order", 10, |g| {
+            let horizon = 30.0;
+            let epochs = 20usize;
+            let templates = sim::random_churn_templates(g, 8, horizon);
+            let source_seed = g.u64();
+
+            // Baseline: everything submitted up front, no service.
+            let mut base = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+            sim::submit_templates(&mut base, &templates, source_seed);
+            for _ in 0..epochs {
+                base.step_epoch();
+            }
+
+            // Service run: shuffle the events, then deliver each at a
+            // random boundary no later than its activation boundary
+            // (`ceil(arrival / epoch_secs)`).
+            let mut events = submit_events(&templates, source_seed);
+            for i in (1..events.len()).rev() {
+                events.swap(i, g.usize_in(0, i + 1));
+            }
+            let epoch_secs = 2.0;
+            let mut by_boundary: Vec<Vec<(JobSpec, SourceDescriptor)>> =
+                (0..epochs).map(|_| Vec::new()).collect();
+            for (spec, desc) in events {
+                let activation = (spec.arrival / epoch_secs).ceil() as usize;
+                let deliver = g.usize_in(0, activation.min(epochs - 1) + 1);
+                by_boundary[deliver].push((spec, desc));
+            }
+            let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+            let (mut svc, tx) = CoordinatorService::new(coord);
+            for batch in by_boundary {
+                for (spec, source) in batch {
+                    tx.send(JobEvent::Submit { spec, source }).unwrap();
+                }
+                svc.step_epoch();
+            }
+            assert_trace_eq(
+                &base.into_trace(),
+                &svc.into_coordinator().into_trace(),
+                "channel-fed service vs upfront submission",
+            );
+        });
+    }
+
+    #[test]
+    fn notices_report_epoch_progress_and_prune_dead_subscribers() {
+        let mut g = crate::testkit::Gen::from_seed(7);
+        let templates = sim::random_churn_templates(&mut g, 5, 10.0);
+        let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+        let (mut svc, tx) = CoordinatorService::new(coord);
+        let alive = svc.subscribe();
+        let dead = svc.subscribe();
+        drop(dead);
+        for (spec, source) in submit_events(&templates, 11) {
+            tx.send(JobEvent::Submit { spec, source }).unwrap();
+        }
+        for _ in 0..6 {
+            svc.step_epoch();
+        }
+        let notices: Vec<EpochNotice> = alive.try_iter().collect();
+        assert_eq!(notices.len(), 6);
+        for (i, n) in notices.iter().enumerate() {
+            assert_eq!(n.epoch, i + 1);
+            assert_eq!(n.time, (i + 1) as f64 * 2.0);
+        }
+        assert_eq!(svc.subscribers.len(), 1, "dead subscriber pruned on broadcast");
+    }
+
+    #[test]
+    fn run_exits_on_shutdown_and_when_all_senders_hang_up() {
+        // Shutdown path.
+        let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+        let (mut svc, tx) = CoordinatorService::new(coord);
+        tx.send(JobEvent::Shutdown).unwrap();
+        svc.run(100);
+        assert!(svc.shutdown_requested());
+        assert_eq!(svc.coordinator().epoch_count(), 0, "shutdown before any work");
+
+        // Hang-up path: an idle service parks on recv() and exits when
+        // the last sender drops.
+        let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+        let (mut svc, tx) = CoordinatorService::new(coord);
+        drop(tx);
+        svc.run(100);
+        assert_eq!(svc.coordinator().epoch_count(), 0);
+    }
+
+    #[test]
+    fn shutdown_drains_the_worker_pool_without_dropping_epoch_records() {
+        // Satellite: a threads-4 durable service run, shut down mid-way —
+        // the worker pool must join cleanly and every executed epoch must
+        // already be durable (WAL records are written *inside* the epoch,
+        // so an orderly shutdown has nothing to lose).
+        let tmp = TempDir::new("svc-shutdown");
+        let mut g = crate::testkit::Gen::from_seed(23);
+        let templates = sim::random_churn_templates(&mut g, 8, 20.0);
+        let coord = Coordinator::with_persistence(
+            small_cfg(4),
+            policy_by_name("slaq-det").unwrap(),
+            tmp.path(),
+            4,
+        )
+        .unwrap();
+        let live = coord.worker_live_counter().expect("threads=4 has a pool");
+        let (mut svc, tx) = CoordinatorService::new(coord);
+        let n_jobs = templates.len();
+        for (spec, source) in submit_events(&templates, 5) {
+            tx.send(JobEvent::Submit { spec, source }).unwrap();
+        }
+        for _ in 0..9 {
+            svc.step_epoch();
+        }
+        tx.send(JobEvent::Shutdown).unwrap();
+        svc.run(1000);
+        assert!(svc.shutdown_requested());
+        let coord = svc.into_coordinator();
+        let epochs_run = coord.epoch_count();
+        assert_eq!(epochs_run, 9, "run() must not step past a queued shutdown");
+
+        // Every epoch is already on disk: genesis + submits + one record
+        // per epoch, nothing dropped by the shutdown.
+        let readout = read_wal(&tmp.path().join(WAL_FILE)).unwrap();
+        assert!(!readout.torn);
+        assert_eq!(readout.records.len(), 1 + n_jobs + epochs_run);
+        let epoch_records = readout
+            .records
+            .iter()
+            .filter(|r| matches!(r, WalRecord::Epoch(_)))
+            .count();
+        assert_eq!(epoch_records, epochs_run);
+
+        // The pool joins on drop (an abandoned in-flight epoch would
+        // deadlock or leak threads instead).
+        let trace = coord.into_trace();
+        assert_eq!(
+            live.load(std::sync::atomic::Ordering::SeqCst),
+            0,
+            "worker pool drained on shutdown"
+        );
+
+        // And the durable state replays to the same trace.
+        let recovered = Coordinator::recover_state(tmp.path()).unwrap();
+        assert_eq!(recovered.epoch_count(), epochs_run);
+        assert_trace_eq(&trace, &recovered.into_trace(), "post-shutdown recovery");
+    }
+}

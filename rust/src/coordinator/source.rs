@@ -25,6 +25,144 @@ pub trait LossSource {
     /// The loss this source is known to converge to, when knowable a
     /// priori (synthetic/replay). Used for retrospective normalization.
     fn known_floor(&self) -> Option<f64>;
+
+    /// A serializable capture of the source's *current* state, when the
+    /// source supports durability ([`SourceDescriptor::instantiate`]
+    /// rebuilds a bitwise-identical source). Sources wrapping live
+    /// execution handles (e.g. `mltrain::ExecSource`) return `None` and
+    /// cannot be submitted to a durable coordinator.
+    fn descriptor(&self) -> Option<SourceDescriptor> {
+        None
+    }
+}
+
+/// Plain-data description of a loss source, exact to the RNG cursor —
+/// what the durable coordinator writes to its WAL on submission and
+/// rebuilds sources from during recovery. Also the `Send` form carried by
+/// [`crate::coordinator::JobEvent::Submit`] (the trait object itself is
+/// deliberately not `Send`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SourceDescriptor {
+    /// [`SyntheticSource`]: curve + noise + the generator's full state.
+    Synthetic {
+        /// Ground-truth convergence curve.
+        curve: CurveModel,
+        /// Relative noise standard deviation.
+        noise: f64,
+        /// Xoshiro state words of the noise RNG.
+        rng_state: [u64; 4],
+        /// Cached Box–Muller spare deviate, if any.
+        rng_spare: Option<f64>,
+    },
+    /// [`NonConvexSource`]: stateless counter-hashed parameters.
+    NonConvex {
+        /// Envelope magnitude.
+        m: f64,
+        /// Envelope decay (0 < mu < 1).
+        mu: f64,
+        /// Convergence floor.
+        floor: f64,
+        /// Oscillation amplitude.
+        wobble: f64,
+        /// Spike-hash seed.
+        seed: u64,
+    },
+    /// [`ReplaySource`]: the recorded trajectory itself.
+    Replay {
+        /// `losses[k]` = loss after `k` iterations.
+        losses: Vec<f64>,
+    },
+}
+
+impl SourceDescriptor {
+    /// Rebuild the concrete source. The result observes the exact loss
+    /// stream the captured source would have produced from this point on.
+    pub fn instantiate(self) -> Box<dyn LossSource> {
+        match self {
+            SourceDescriptor::Synthetic { curve, noise, rng_state, rng_spare } => Box::new(
+                SyntheticSource { curve, noise, rng: Rng::from_state(rng_state, rng_spare) },
+            ),
+            SourceDescriptor::NonConvex { m, mu, floor, wobble, seed } => {
+                Box::new(NonConvexSource::new(m, mu, floor, wobble, seed))
+            }
+            SourceDescriptor::Replay { losses } => Box::new(ReplaySource::new(losses)),
+        }
+    }
+
+    /// Append to a durable-state buffer (see [`crate::util::codec`]).
+    pub fn encode(&self, e: &mut crate::util::codec::Enc) {
+        match self {
+            SourceDescriptor::Synthetic { curve, noise, rng_state, rng_spare } => {
+                e.put_u8(0);
+                curve.encode(e);
+                e.put_f64(*noise);
+                for &w in rng_state {
+                    e.put_u64(w);
+                }
+                e.put_opt_f64(*rng_spare);
+            }
+            SourceDescriptor::NonConvex { m, mu, floor, wobble, seed } => {
+                e.put_u8(1);
+                e.put_f64(*m);
+                e.put_f64(*mu);
+                e.put_f64(*floor);
+                e.put_f64(*wobble);
+                e.put_u64(*seed);
+            }
+            SourceDescriptor::Replay { losses } => {
+                e.put_u8(2);
+                e.put_usize(losses.len());
+                for &l in losses {
+                    e.put_f64(l);
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`SourceDescriptor::encode`].
+    pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        use crate::util::codec::corrupt;
+        match d.u8()? {
+            0 => {
+                let curve = CurveModel::decode(d)?;
+                let noise = d.f64()?;
+                let mut rng_state = [0u64; 4];
+                for w in &mut rng_state {
+                    *w = d.u64()?;
+                }
+                if rng_state == [0; 4] {
+                    return Err(corrupt("all-zero xoshiro state"));
+                }
+                let rng_spare = d.opt_f64()?;
+                Ok(SourceDescriptor::Synthetic { curve, noise, rng_state, rng_spare })
+            }
+            1 => {
+                let (m, mu) = (d.f64()?, d.f64()?);
+                if !(mu > 0.0 && mu < 1.0) {
+                    return Err(corrupt("non-convex mu out of range"));
+                }
+                Ok(SourceDescriptor::NonConvex {
+                    m,
+                    mu,
+                    floor: d.f64()?,
+                    wobble: d.f64()?,
+                    seed: d.u64()?,
+                })
+            }
+            2 => {
+                let n = d.usize_()?;
+                if n == 0 {
+                    return Err(corrupt("empty replay trace"));
+                }
+                let mut losses = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    losses.push(d.f64()?);
+                }
+                Ok(SourceDescriptor::Replay { losses })
+            }
+            t => Err(corrupt(format!("unknown source descriptor tag {t}"))),
+        }
+    }
 }
 
 /// Analytical curve + multiplicative Gaussian noise.
@@ -55,6 +193,16 @@ impl LossSource for SyntheticSource {
 
     fn known_floor(&self) -> Option<f64> {
         Some(self.curve.asymptote())
+    }
+
+    fn descriptor(&self) -> Option<SourceDescriptor> {
+        let (rng_state, rng_spare) = self.rng.state();
+        Some(SourceDescriptor::Synthetic {
+            curve: self.curve.clone(),
+            noise: self.noise,
+            rng_state,
+            rng_spare,
+        })
     }
 }
 
@@ -102,6 +250,16 @@ impl LossSource for NonConvexSource {
     fn known_floor(&self) -> Option<f64> {
         Some(self.floor)
     }
+
+    fn descriptor(&self) -> Option<SourceDescriptor> {
+        Some(SourceDescriptor::NonConvex {
+            m: self.m,
+            mu: self.mu,
+            floor: self.floor,
+            wobble: self.wobble,
+            seed: self.seed,
+        })
+    }
 }
 
 /// Replays a recorded loss trajectory; holds the last value once exhausted.
@@ -138,6 +296,10 @@ impl LossSource for ReplaySource {
             .iter()
             .cloned()
             .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    fn descriptor(&self) -> Option<SourceDescriptor> {
+        Some(SourceDescriptor::Replay { losses: self.losses.clone() })
     }
 }
 

@@ -48,6 +48,60 @@ pub struct EpochRecord {
 }
 
 impl EpochRecord {
+    /// Append the full record — wall-clock nanos included, so a recovered
+    /// trace is the original trace — to a durable-state buffer (the WAL's
+    /// per-epoch record body).
+    pub fn encode(&self, e: &mut crate::util::codec::Enc) {
+        e.put_f64(self.time);
+        e.put_u64(self.sched_nanos);
+        e.put_u64(self.refit_nanos);
+        e.put_u64(self.gain_nanos);
+        e.put_usize(self.refits);
+        e.put_usize(self.dirty_jobs);
+        e.put_usize(self.active_jobs);
+        e.put_u32(self.cross_rack_moves);
+        e.put_usize(self.entries.len());
+        for en in &self.entries {
+            e.put_u64(en.job);
+            e.put_u32(en.cores);
+            e.put_f64(en.loss);
+            e.put_u32(en.rack_span);
+        }
+    }
+
+    /// Inverse of [`EpochRecord::encode`].
+    pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        let time = d.f64()?;
+        let sched_nanos = d.u64()?;
+        let refit_nanos = d.u64()?;
+        let gain_nanos = d.u64()?;
+        let refits = d.usize_()?;
+        let dirty_jobs = d.usize_()?;
+        let active_jobs = d.usize_()?;
+        let cross_rack_moves = d.u32()?;
+        let n = d.usize_()?;
+        let mut entries = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            entries.push(EpochEntry {
+                job: d.u64()?,
+                cores: d.u32()?,
+                loss: d.f64()?,
+                rack_span: d.u32()?,
+            });
+        }
+        Ok(Self {
+            time,
+            sched_nanos,
+            refit_nanos,
+            gain_nanos,
+            refits,
+            dirty_jobs,
+            active_jobs,
+            cross_rack_moves,
+            entries,
+        })
+    }
+
     /// Mean rack span across the jobs that hold cores this epoch (the
     /// locality metric the `exp::locality` scenario tracks); 0.0 when no
     /// job holds cores.

@@ -1,0 +1,763 @@
+//! Durable coordinator state: an append-only write-ahead log plus
+//! periodic snapshots.
+//!
+//! The durability contract (see `ARCHITECTURE.md`, "Service lifecycle &
+//! crash recovery"):
+//!
+//! * **WAL** (`wal.bin`) — one framed record per externally-visible state
+//!   change: a genesis header (config + policy, written first), every
+//!   submission (spec + [`SourceDescriptor`], exact to the RNG cursor),
+//!   every effective cancellation, and one record per completed epoch
+//!   (the full [`EpochRecord`] with its grants, the ids that completed,
+//!   the post-broker shard budgets, and the policy's decision-cost sample
+//!   counters). Frames are `[u32 len][u64 fnv1a64][payload]`, appended
+//!   and flushed before the epoch is considered durable.
+//! * **Snapshot** (`snapshot.bin`) — the complete mutable state at an
+//!   epoch boundary, written atomically (tmp + rename) every
+//!   `snapshot_every` epochs. A snapshot is self-contained: recovery from
+//!   a snapshot plus an *empty* WAL reproduces the run up to the
+//!   snapshot, and WAL records past the snapshot's high-water mark are
+//!   replayed on top. Snapshots bound replay cost to the epochs since
+//!   the last snapshot.
+//!
+//! Failure handling is asymmetric by design: a **torn final frame**
+//! (partial append at the kill point) is silently dropped and the file is
+//! truncated back to the last complete frame, while a complete frame
+//! whose **checksum mismatches** — silent corruption, not a torn write —
+//! fails recovery loudly with `InvalidData`.
+
+use super::epoch::CoordinatorConfig;
+use super::job::JobSpec;
+use super::ledger::JobLedger;
+use super::source::SourceDescriptor;
+use super::trace::EpochRecord;
+use crate::cluster::{ClusterSpec, LocalityModel, TopologySpec};
+use crate::util::codec::{corrupt, fnv1a64, Dec, Enc};
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// WAL file name inside a durable coordinator's state directory.
+pub(crate) const WAL_FILE: &str = "wal.bin";
+/// Snapshot file name inside a durable coordinator's state directory.
+pub(crate) const SNAP_FILE: &str = "snapshot.bin";
+
+/// Snapshot header magic ("SLAQ").
+const SNAP_MAGIC: u32 = 0x534C_4151;
+/// Snapshot format version.
+const SNAP_VERSION: u32 = 1;
+
+/// Frame header size: `u32` length + `u64` checksum.
+const FRAME_HEADER: usize = 12;
+
+/// One durable log record.
+pub(crate) enum WalRecord {
+    /// First record of every WAL: the full coordinator config, the policy
+    /// name (resolved back through [`crate::sched::policy_by_name`] on
+    /// recovery) and the snapshot cadence.
+    Genesis {
+        /// Coordinator configuration of the run.
+        cfg: CoordinatorConfig,
+        /// Policy registry name.
+        policy: String,
+        /// Snapshot cadence in epochs.
+        snapshot_every: u64,
+    },
+    /// A job submission: spec plus the serializable source state.
+    Submit {
+        /// The job's static spec.
+        spec: JobSpec,
+        /// Loss-source capture, exact to the RNG cursor.
+        source: SourceDescriptor,
+    },
+    /// An effective cancellation (no-op cancels are not logged).
+    Cancel {
+        /// The cancelled job id.
+        id: u64,
+    },
+    /// One completed epoch.
+    Epoch(Box<WalEpoch>),
+}
+
+/// Body of a [`WalRecord::Epoch`].
+pub(crate) struct WalEpoch {
+    /// The epoch's trace record, wall-clock nanos included — replay
+    /// reuses it verbatim so a recovered trace is the original trace.
+    pub record: EpochRecord,
+    /// Ids that completed during this epoch's advance, in advance order
+    /// (ascending id). Replay cross-checks its own completions against
+    /// this list, which also pins at-most-once completion effects.
+    pub completed: Vec<u64>,
+    /// Post-broker shard budgets (empty when unsharded).
+    pub budgets: Vec<u32>,
+    /// Warm-path samples in the policy's decision-cost model after this
+    /// epoch (advisory; deterministic policies never consult the model).
+    pub warm_samples: u64,
+    /// Scratch-path samples in the decision-cost model after this epoch.
+    pub scratch_samples: u64,
+}
+
+/// Append the full coordinator config (every field is plain data).
+pub(crate) fn encode_config(cfg: &CoordinatorConfig, e: &mut Enc) {
+    e.put_u32(cfg.cluster.nodes);
+    e.put_u32(cfg.cluster.cores_per_node);
+    match cfg.topology {
+        TopologySpec::Flat => e.put_u8(0),
+        TopologySpec::Uniform { zones, racks_per_zone } => {
+            e.put_u8(1);
+            e.put_u32(zones);
+            e.put_u32(racks_per_zone);
+        }
+    }
+    e.put_f64(cfg.locality.slowdown_per_extra_rack);
+    e.put_f64(cfg.locality.max_slowdown);
+    e.put_bool(cfg.locality_aware);
+    e.put_f64(cfg.epoch_secs);
+    e.put_bool(cfg.cold_start_optimism);
+    e.put_bool(cfg.selective_refits);
+    e.put_bool(cfg.refit_amortization);
+    e.put_usize(cfg.threads);
+    e.put_bool(cfg.sharded);
+    e.put_usize(cfg.broker_epochs);
+}
+
+/// Inverse of [`encode_config`].
+pub(crate) fn decode_config(d: &mut Dec) -> io::Result<CoordinatorConfig> {
+    let cluster = ClusterSpec { nodes: d.u32()?, cores_per_node: d.u32()? };
+    let topology = match d.u8()? {
+        0 => TopologySpec::Flat,
+        1 => TopologySpec::Uniform { zones: d.u32()?, racks_per_zone: d.u32()? },
+        t => return Err(corrupt(format!("unknown topology tag {t}"))),
+    };
+    let locality = LocalityModel {
+        slowdown_per_extra_rack: d.f64()?,
+        max_slowdown: d.f64()?,
+    };
+    Ok(CoordinatorConfig {
+        cluster,
+        topology,
+        locality,
+        locality_aware: d.bool()?,
+        epoch_secs: d.f64()?,
+        cold_start_optimism: d.bool()?,
+        selective_refits: d.bool()?,
+        refit_amortization: d.bool()?,
+        threads: d.usize_()?,
+        sharded: d.bool()?,
+        broker_epochs: d.usize_()?,
+    })
+}
+
+/// Two configs are durably equal iff their encodings agree byte for byte
+/// (the cross-check between a snapshot and the WAL's genesis record).
+pub(crate) fn config_bytes(cfg: &CoordinatorConfig) -> Vec<u8> {
+    let mut e = Enc::new();
+    encode_config(cfg, &mut e);
+    e.into_bytes()
+}
+
+impl WalRecord {
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            WalRecord::Genesis { cfg, policy, snapshot_every } => {
+                e.put_u8(0);
+                encode_config(cfg, e);
+                e.put_str(policy);
+                e.put_u64(*snapshot_every);
+            }
+            WalRecord::Submit { spec, source } => {
+                e.put_u8(1);
+                spec.encode(e);
+                source.encode(e);
+            }
+            WalRecord::Cancel { id } => {
+                e.put_u8(2);
+                e.put_u64(*id);
+            }
+            WalRecord::Epoch(ep) => {
+                e.put_u8(3);
+                ep.record.encode(e);
+                e.put_usize(ep.completed.len());
+                for &id in &ep.completed {
+                    e.put_u64(id);
+                }
+                e.put_usize(ep.budgets.len());
+                for &b in &ep.budgets {
+                    e.put_u32(b);
+                }
+                e.put_u64(ep.warm_samples);
+                e.put_u64(ep.scratch_samples);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec) -> io::Result<Self> {
+        match d.u8()? {
+            0 => Ok(WalRecord::Genesis {
+                cfg: decode_config(d)?,
+                policy: d.str()?,
+                snapshot_every: d.u64()?,
+            }),
+            1 => Ok(WalRecord::Submit {
+                spec: JobSpec::decode(d)?,
+                source: SourceDescriptor::decode(d)?,
+            }),
+            2 => Ok(WalRecord::Cancel { id: d.u64()? }),
+            3 => {
+                let record = EpochRecord::decode(d)?;
+                let n = d.usize_()?;
+                let mut completed = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    completed.push(d.u64()?);
+                }
+                let n = d.usize_()?;
+                let mut budgets = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    budgets.push(d.u32()?);
+                }
+                Ok(WalRecord::Epoch(Box::new(WalEpoch {
+                    record,
+                    completed,
+                    budgets,
+                    warm_samples: d.u64()?,
+                    scratch_samples: d.u64()?,
+                })))
+            }
+            t => Err(corrupt(format!("unknown wal record tag {t}"))),
+        }
+    }
+}
+
+/// Append-only WAL writer. Each [`WalWriter::append`] writes one complete
+/// frame and flushes it; the record counter tracks how many frames the
+/// file currently holds (the snapshot's replay high-water mark).
+pub(crate) struct WalWriter {
+    file: File,
+    records: u64,
+}
+
+impl WalWriter {
+    /// Create (truncating any previous log) — the fresh-run entry point.
+    pub(crate) fn create(path: &Path) -> io::Result<Self> {
+        Ok(Self { file: File::create(path)?, records: 0 })
+    }
+
+    /// Reopen for appending after recovery; `records` is the number of
+    /// complete frames currently in the file.
+    pub(crate) fn open_append(path: &Path, records: u64) -> io::Result<Self> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Self { file, records })
+    }
+
+    /// Frames in the file after all appends so far.
+    pub(crate) fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Append and flush one record.
+    pub(crate) fn append(&mut self, rec: &WalRecord) -> io::Result<()> {
+        let mut payload = Enc::new();
+        rec.encode(&mut payload);
+        let payload = payload.into_bytes();
+        let mut frame = Enc::new();
+        frame.put_u32(u32::try_from(payload.len()).map_err(|_| corrupt("oversized record"))?);
+        frame.put_u64(fnv1a64(&payload));
+        self.file.write_all(frame.bytes())?;
+        self.file.write_all(&payload)?;
+        self.file.flush()?;
+        self.records += 1;
+        Ok(())
+    }
+}
+
+/// Everything [`read_wal`] learned about a log file.
+#[derive(Default)]
+pub(crate) struct WalReadout {
+    /// The complete, checksum-verified records, in append order.
+    pub records: Vec<WalRecord>,
+    /// Bytes covered by those records — the truncation point when torn.
+    pub valid_len: u64,
+    /// True when the file ended in a partial frame (a crash mid-append);
+    /// the tail past `valid_len` is garbage and must be truncated before
+    /// further appends.
+    pub torn: bool,
+}
+
+/// Read a WAL file front to back. A torn final frame is dropped (reported
+/// via [`WalReadout::torn`], never an error); a complete frame whose
+/// checksum mismatches — corruption, not a torn write — is a loud
+/// `InvalidData` error, as is any record that fails to decode exactly.
+pub(crate) fn read_wal(path: &Path) -> io::Result<WalReadout> {
+    let buf = std::fs::read(path)?;
+    let mut out = WalReadout::default();
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        if buf.len() - pos < FRAME_HEADER {
+            out.torn = true;
+            break;
+        }
+        let mut head = Dec::new(&buf[pos..pos + FRAME_HEADER]);
+        let len = head.u32()? as usize;
+        let sum = head.u64()?;
+        if buf.len() - pos - FRAME_HEADER < len {
+            out.torn = true;
+            break;
+        }
+        let payload = &buf[pos + FRAME_HEADER..pos + FRAME_HEADER + len];
+        if fnv1a64(payload) != sum {
+            return Err(corrupt(format!(
+                "wal checksum mismatch in record {} (byte {pos})",
+                out.records.len()
+            )));
+        }
+        let mut d = Dec::new(payload);
+        out.records.push(WalRecord::decode(&mut d)?);
+        d.finish()?;
+        pos += FRAME_HEADER + len;
+        out.valid_len = pos as u64;
+    }
+    Ok(out)
+}
+
+/// Truncate a torn WAL back to its last complete frame so future appends
+/// start on a clean boundary.
+pub(crate) fn truncate_wal(path: &Path, valid_len: u64) -> io::Result<()> {
+    OpenOptions::new().write(true).open(path)?.set_len(valid_len)
+}
+
+/// Borrowing view of the coordinator state a snapshot captures, used by
+/// the write side (the owned [`Snapshot`] is the read side).
+pub(crate) struct SnapshotView<'a> {
+    /// Coordinator config (cross-checked against genesis on recovery).
+    pub cfg: &'a CoordinatorConfig,
+    /// Policy registry name.
+    pub policy: &'a str,
+    /// Snapshot cadence in epochs.
+    pub snapshot_every: u64,
+    /// Virtual time at the boundary.
+    pub time: f64,
+    /// WAL frames in the file when this snapshot was taken — recovery
+    /// skips that many records and replays only the tail.
+    pub wal_records: u64,
+    /// The full epoch history (trace fidelity + broker cadence).
+    pub epochs: &'a [EpochRecord],
+    /// The complete job ledger.
+    pub ledger: &'a JobLedger,
+    /// Node-pool placements ([`crate::cluster::NodePool::placements_snapshot`]).
+    pub placements: Vec<(u64, Vec<(u32, u32)>)>,
+    /// Flat scheduling context: epochs recorded + previous grants.
+    pub ctx_epoch: u64,
+    /// Previous grants of the flat context, ascending by id.
+    pub ctx_grants: Vec<(u64, u32)>,
+    /// Per-shard `(budget, ctx epoch, ctx grants)` (empty when unsharded).
+    pub shards: Vec<(u32, u64, Vec<(u64, u32)>)>,
+}
+
+fn encode_grants(grants: &[(u64, u32)], e: &mut Enc) {
+    e.put_usize(grants.len());
+    for &(id, cores) in grants {
+        e.put_u64(id);
+        e.put_u32(cores);
+    }
+}
+
+fn decode_grants(d: &mut Dec) -> io::Result<Vec<(u64, u32)>> {
+    let n = d.usize_()?;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push((d.u64()?, d.u32()?));
+    }
+    Ok(out)
+}
+
+impl SnapshotView<'_> {
+    fn encode(&self, e: &mut Enc) -> io::Result<()> {
+        encode_config(self.cfg, e);
+        e.put_str(self.policy);
+        e.put_u64(self.snapshot_every);
+        e.put_f64(self.time);
+        e.put_u64(self.wal_records);
+        e.put_usize(self.epochs.len());
+        for rec in self.epochs {
+            rec.encode(e);
+        }
+        self.ledger.encode_state(e)?;
+        e.put_usize(self.placements.len());
+        for (job, nodes) in &self.placements {
+            e.put_u64(*job);
+            e.put_usize(nodes.len());
+            for &(node, cores) in nodes {
+                e.put_u32(node);
+                e.put_u32(cores);
+            }
+        }
+        e.put_u64(self.ctx_epoch);
+        encode_grants(&self.ctx_grants, e);
+        e.put_usize(self.shards.len());
+        for (budget, ctx_epoch, grants) in &self.shards {
+            e.put_u32(*budget);
+            e.put_u64(*ctx_epoch);
+            encode_grants(grants, e);
+        }
+        Ok(())
+    }
+
+    /// Write the snapshot atomically: encode, checksum, write to a tmp
+    /// file in the same directory, rename over the previous snapshot. A
+    /// crash mid-write leaves the old snapshot intact.
+    pub(crate) fn write(&self, dir: &Path) -> io::Result<()> {
+        let mut payload = Enc::new();
+        self.encode(&mut payload)?;
+        let payload = payload.into_bytes();
+        let mut head = Enc::new();
+        head.put_u32(SNAP_MAGIC);
+        head.put_u32(SNAP_VERSION);
+        head.put_u64(fnv1a64(&payload));
+        let tmp = dir.join("snapshot.tmp");
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(head.bytes())?;
+            f.write_all(&payload)?;
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, dir.join(SNAP_FILE))
+    }
+}
+
+/// Owned, decoded snapshot (the read side of [`SnapshotView`]).
+pub(crate) struct Snapshot {
+    /// Coordinator config at snapshot time.
+    pub cfg: CoordinatorConfig,
+    /// Policy registry name.
+    pub policy: String,
+    /// Snapshot cadence in epochs.
+    pub snapshot_every: u64,
+    /// Virtual time at the boundary.
+    pub time: f64,
+    /// WAL frames already covered by this snapshot.
+    pub wal_records: u64,
+    /// Full epoch history up to the boundary.
+    pub epochs: Vec<EpochRecord>,
+    /// The complete job ledger.
+    pub ledger: JobLedger,
+    /// Node-pool placements.
+    pub placements: Vec<(u64, Vec<(u32, u32)>)>,
+    /// Flat context epoch counter.
+    pub ctx_epoch: u64,
+    /// Flat context previous grants.
+    pub ctx_grants: Vec<(u64, u32)>,
+    /// Per-shard `(budget, ctx epoch, ctx grants)`.
+    pub shards: Vec<(u32, u64, Vec<(u64, u32)>)>,
+}
+
+/// Read `dir`'s snapshot if one exists (`Ok(None)` when the file is
+/// absent — a fresh or not-yet-snapshotted run). Header or checksum
+/// mismatches fail loudly.
+pub(crate) fn read_snapshot(dir: &Path) -> io::Result<Option<Snapshot>> {
+    let path = dir.join(SNAP_FILE);
+    let buf = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    if buf.len() < 16 {
+        return Err(corrupt("snapshot header truncated"));
+    }
+    let mut head = Dec::new(&buf[..16]);
+    if head.u32()? != SNAP_MAGIC {
+        return Err(corrupt("bad snapshot magic"));
+    }
+    let version = head.u32()?;
+    if version != SNAP_VERSION {
+        return Err(corrupt(format!("unsupported snapshot version {version}")));
+    }
+    let sum = head.u64()?;
+    let payload = &buf[16..];
+    if fnv1a64(payload) != sum {
+        return Err(corrupt("snapshot checksum mismatch"));
+    }
+    let mut d = Dec::new(payload);
+    let cfg = decode_config(&mut d)?;
+    let policy = d.str()?;
+    let snapshot_every = d.u64()?;
+    let time = d.f64()?;
+    let wal_records = d.u64()?;
+    let n = d.usize_()?;
+    let mut epochs = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        epochs.push(EpochRecord::decode(&mut d)?);
+    }
+    let ledger = JobLedger::decode_state(&mut d)?;
+    let n = d.usize_()?;
+    let mut placements = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let job = d.u64()?;
+        let m = d.usize_()?;
+        let mut nodes = Vec::with_capacity(m.min(1 << 20));
+        for _ in 0..m {
+            nodes.push((d.u32()?, d.u32()?));
+        }
+        placements.push((job, nodes));
+    }
+    let ctx_epoch = d.u64()?;
+    let ctx_grants = decode_grants(&mut d)?;
+    let n = d.usize_()?;
+    let mut shards = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let budget = d.u32()?;
+        let ctx_epoch = d.u64()?;
+        shards.push((budget, ctx_epoch, decode_grants(&mut d)?));
+    }
+    d.finish()?;
+    Ok(Some(Snapshot {
+        cfg,
+        policy,
+        snapshot_every,
+        time,
+        wal_records,
+        epochs,
+        ledger,
+        placements,
+        ctx_epoch,
+        ctx_grants,
+        shards,
+    }))
+}
+
+/// Append a deliberately torn frame (a header promising more bytes than
+/// follow) to a WAL file — simulates a crash mid-append for recovery
+/// tests.
+#[cfg(test)]
+pub(crate) fn append_garbage_frame(path: &Path) {
+    let mut e = Enc::new();
+    e.put_u32(4096);
+    e.put_u64(0xbad0_bad0_bad0_bad0);
+    e.put_u8(3);
+    let mut f = OpenOptions::new().append(true).open(path).expect("open wal for garbage");
+    f.write_all(e.bytes()).expect("append garbage frame");
+}
+
+/// The durable half of a persistent coordinator: state directory, open
+/// WAL writer and the snapshot cadence.
+pub(crate) struct DurableState {
+    /// State directory holding `wal.bin` / `snapshot.bin`.
+    pub dir: PathBuf,
+    /// Open append handle.
+    pub wal: WalWriter,
+    /// Snapshot every this many epochs (≥ 1).
+    pub snapshot_every: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, sim, TempDir};
+
+    fn roundtrip_records() -> Vec<WalRecord> {
+        let cfg = CoordinatorConfig {
+            topology: TopologySpec::Uniform { zones: 2, racks_per_zone: 2 },
+            sharded: true,
+            threads: 4,
+            ..Default::default()
+        };
+        vec![
+            WalRecord::Genesis { cfg, policy: "slaq-det".into(), snapshot_every: 8 },
+            WalRecord::Cancel { id: 17 },
+            WalRecord::Epoch(Box::new(WalEpoch {
+                record: EpochRecord {
+                    time: 6.0,
+                    sched_nanos: 123,
+                    refit_nanos: 456,
+                    gain_nanos: 789,
+                    refits: 2,
+                    dirty_jobs: 3,
+                    active_jobs: 4,
+                    cross_rack_moves: 1,
+                    entries: vec![super::super::trace::EpochEntry {
+                        job: 9,
+                        cores: 5,
+                        loss: 1.25,
+                        rack_span: 2,
+                    }],
+                },
+                completed: vec![9],
+                budgets: vec![320, 320],
+                warm_samples: 11,
+                scratch_samples: 3,
+            })),
+        ]
+    }
+
+    fn write_records(path: &Path, records: &[WalRecord]) -> WalWriter {
+        let mut w = WalWriter::create(path).unwrap();
+        for r in records {
+            w.append(r).unwrap();
+        }
+        w
+    }
+
+    #[test]
+    fn wal_records_roundtrip_bitwise() {
+        let tmp = TempDir::new("wal-roundtrip");
+        let path = tmp.path().join(WAL_FILE);
+        let records = roundtrip_records();
+        write_records(&path, &records);
+        let readout = read_wal(&path).unwrap();
+        assert!(!readout.torn);
+        assert_eq!(readout.records.len(), records.len());
+        assert_eq!(readout.valid_len, std::fs::metadata(&path).unwrap().len());
+        // Re-encoding what we read must reproduce the file byte for byte.
+        let path2 = tmp.path().join("rewrite.bin");
+        write_records(&path2, &readout.records);
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+        match (&readout.records[0], &records[0]) {
+            (
+                WalRecord::Genesis { cfg: a, policy: pa, snapshot_every: sa },
+                WalRecord::Genesis { cfg: b, policy: pb, snapshot_every: sb },
+            ) => {
+                assert_eq!(config_bytes(a), config_bytes(b));
+                assert_eq!((pa, sa), (pb, sb));
+            }
+            _ => panic!("genesis did not round-trip"),
+        }
+    }
+
+    #[test]
+    fn torn_final_record_is_dropped_and_truncated() {
+        let tmp = TempDir::new("wal-torn");
+        let path = tmp.path().join(WAL_FILE);
+        write_records(&path, &roundtrip_records());
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        // Simulate a crash mid-append: a frame header promising more
+        // bytes than the file holds.
+        let mut torn = Enc::new();
+        torn.put_u32(1000);
+        torn.put_u64(0xdead_beef);
+        torn.put_u8(3);
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(torn.bytes()).unwrap();
+        }
+        let readout = read_wal(&path).unwrap();
+        assert!(readout.torn, "partial frame must be reported as torn");
+        assert_eq!(readout.records.len(), 3, "complete records survive");
+        assert_eq!(readout.valid_len, clean_len);
+        truncate_wal(&path, readout.valid_len).unwrap();
+        let again = read_wal(&path).unwrap();
+        assert!(!again.torn, "truncation restores a clean log");
+        assert_eq!(again.records.len(), 3);
+        // A tail shorter than even the frame header is torn too.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[1, 2, 3]).unwrap();
+        }
+        assert!(read_wal(&path).unwrap().torn);
+    }
+
+    #[test]
+    fn corrupt_checksum_fails_loudly() {
+        let tmp = TempDir::new("wal-corrupt");
+        let path = tmp.path().join(WAL_FILE);
+        write_records(&path, &roundtrip_records());
+        // Flip one payload byte of the *first* record: a complete frame
+        // with a wrong checksum is corruption, not a torn write.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[FRAME_HEADER + 2] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_wal(&path).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn empty_wal_reads_clean() {
+        let tmp = TempDir::new("wal-empty");
+        let path = tmp.path().join(WAL_FILE);
+        std::fs::write(&path, b"").unwrap();
+        let readout = read_wal(&path).unwrap();
+        assert!(!readout.torn);
+        assert!(readout.records.is_empty());
+        assert_eq!(readout.valid_len, 0);
+    }
+
+    #[test]
+    fn snapshot_missing_file_is_none() {
+        let tmp = TempDir::new("snap-none");
+        assert!(read_snapshot(tmp.path()).unwrap().is_none());
+    }
+
+    #[test]
+    fn snapshot_corruption_fails_loudly() {
+        let tmp = TempDir::new("snap-corrupt");
+        let dir = tmp.path();
+        // Too-short header.
+        std::fs::write(dir.join(SNAP_FILE), b"short").unwrap();
+        assert!(read_snapshot(dir).is_err());
+        // Valid-looking header with a checksum that cannot match.
+        let mut e = Enc::new();
+        e.put_u32(SNAP_MAGIC);
+        e.put_u32(SNAP_VERSION);
+        e.put_u64(12345);
+        e.put_u8(7);
+        std::fs::write(dir.join(SNAP_FILE), e.bytes()).unwrap();
+        let err = read_snapshot(dir).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // Wrong magic.
+        let mut e = Enc::new();
+        e.put_u32(0);
+        e.put_u32(SNAP_VERSION);
+        e.put_u64(0);
+        std::fs::write(dir.join(SNAP_FILE), e.bytes()).unwrap();
+        assert!(read_snapshot(dir).is_err());
+    }
+
+    #[test]
+    fn ledger_snapshot_roundtrips_on_random_churn_states() {
+        // Satellite property: `ledger == decode(encode(ledger))` — via
+        // byte-identical re-encoding plus structural spot checks — on
+        // ledgers mid-flight through random churn workloads.
+        use crate::coordinator::{Coordinator, CoordinatorConfig};
+        use crate::sched::policy_by_name;
+        forall("ledger snapshot roundtrip", 8, |g| {
+            let templates = sim::random_churn_templates(g, 10, 30.0);
+            let cfg = CoordinatorConfig {
+                cluster: ClusterSpec { nodes: 3, cores_per_node: 8 },
+                epoch_secs: 2.0,
+                threads: 1,
+                ..Default::default()
+            };
+            let mut c = Coordinator::new(cfg, policy_by_name("slaq-det").unwrap());
+            sim::submit_templates(&mut c, &templates, g.u64());
+            for _ in 0..g.usize_in(0, 12) {
+                c.step_epoch();
+            }
+            let ledger = c.ledger();
+            let mut e = Enc::new();
+            ledger.encode_state(&mut e).unwrap();
+            let bytes = e.into_bytes();
+            let mut d = Dec::new(&bytes);
+            let decoded = JobLedger::decode_state(&mut d).unwrap();
+            d.finish().unwrap();
+            // Structural equality…
+            assert_eq!(decoded.counts(), ledger.counts());
+            assert_eq!(decoded.running_ids(), ledger.running_ids());
+            assert_eq!(decoded.dirty_ids(), ledger.dirty_ids());
+            assert_eq!(decoded.len(), ledger.len());
+            for (&id, entry) in ledger.entries() {
+                let job = decoded.job(id).expect("job survives the roundtrip");
+                assert_eq!(job.state, entry.job.state);
+                assert_eq!(job.iteration, entry.job.iteration);
+                assert_eq!(job.credit.to_bits(), entry.job.credit.to_bits());
+                assert_eq!(job.loss_trace, entry.job.loss_trace);
+                assert_eq!(
+                    decoded.activated_at(id).to_bits(),
+                    ledger.activated_at(id).to_bits()
+                );
+            }
+            // …and bitwise fixpoint: encode(decode(bytes)) == bytes.
+            let mut e2 = Enc::new();
+            decoded.encode_state(&mut e2).unwrap();
+            assert_eq!(e2.bytes(), &bytes[..], "re-encoding drifted");
+        });
+    }
+}

@@ -13,6 +13,7 @@
 //! | [`locality_placement`] | locality — rack-aware vs rack-blind placement |
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
 //! | [`quality_fidelity`] | Figs 3–5 invariants as a seeded regression suite |
+//! | [`recovery_replay`] | durability — WAL replay cost vs epochs since snapshot |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
@@ -30,6 +31,7 @@
 mod ablations;
 mod locality;
 mod real_runs;
+mod recovery;
 mod report;
 mod scalability;
 mod sim_runs;
@@ -40,6 +42,7 @@ pub use locality::{
     LocalityReport,
 };
 pub use real_runs::{fig1_work_cdf, fig2_norm_delta, pred_accuracy, run_zoo_real, ZooRun};
+pub use recovery::recovery_replay;
 pub use report::{render_table, ExpOutput};
 pub use scalability::{
     churn_decision_cost, churn_epoch_loop, churn_scalability, epoch_loop_cost, fig6_sched_time,

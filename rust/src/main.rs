@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|pred|all> [flags]
+//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|pred|all> [flags]
 //!     regenerate paper figures (CSV under --out, summary to stdout)
 //! slaq train --algo <name> [--iters N] [--variant small|base]
 //!     run one real training job through the PJRT runtime
@@ -56,7 +56,7 @@ fn print_usage() {
     println!(
         "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
          usage:\n  \
-         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|pred|all> [--out DIR] [...]\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|pred|all> [--out DIR] [...]\n  \
          slaq train --algo <name> [--iters N] [--variant small|base]\n  \
          slaq run [--policy P] [--jobs N] [--duration S]\n  \
          slaq check\n\n\
@@ -92,6 +92,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("locality-racks", "8", "racks per zone in the locality scenario")
         .flag("locality-churn", "32", "arrivals per epoch in the locality scenario")
         .flag("locality-epochs", "12", "measured epochs for the locality scenario")
+        .flag("recovery-trials", "5", "kill-and-recover trials per WAL-tail length")
         .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
         .flag("seed", "20818", "workload seed")
         .flag("log", "info", "log level");
@@ -191,6 +192,16 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             churn_epochs,
             parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
             shards,
+        ));
+    }
+
+    if wants("recovery") {
+        log::info!("recovery: kill-and-recover smoke + WAL replay cost…");
+        outputs.push(exp::recovery_replay(
+            parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
+            parsed.switch("sharded"),
+            parsed.get_as::<usize>("recovery-trials").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
         ));
     }
 

@@ -18,6 +18,25 @@ pub enum CurveKind {
     Exponential,
 }
 
+impl CurveKind {
+    /// Wire tag for the durable-state codec.
+    pub fn to_byte(self) -> u8 {
+        match self {
+            CurveKind::Sublinear => 0,
+            CurveKind::Exponential => 1,
+        }
+    }
+
+    /// Inverse of [`CurveKind::to_byte`].
+    pub fn from_byte(b: u8) -> std::io::Result<Self> {
+        match b {
+            0 => Ok(CurveKind::Sublinear),
+            1 => Ok(CurveKind::Exponential),
+            t => Err(crate::util::codec::corrupt(format!("unknown curve kind {t}"))),
+        }
+    }
+}
+
 /// A concrete fitted curve: evaluate and differentiate w.r.t. parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CurveModel {
@@ -99,6 +118,42 @@ impl CurveModel {
         match kind {
             CurveKind::Sublinear => 4,
             CurveKind::Exponential => 3,
+        }
+    }
+
+    /// Append the model to a durable-state buffer: family tag byte, then
+    /// the raw parameter bits (no [`CurveModel::from_params`] projection,
+    /// so decode is bitwise-exact even for parameters on the boundary of
+    /// the valid region).
+    pub fn encode(&self, e: &mut crate::util::codec::Enc) {
+        match *self {
+            CurveModel::Sublinear { a, b, c, d } => {
+                e.put_u8(0);
+                e.put_f64(a);
+                e.put_f64(b);
+                e.put_f64(c);
+                e.put_f64(d);
+            }
+            CurveModel::Exponential { m, mu, c } => {
+                e.put_u8(1);
+                e.put_f64(m);
+                e.put_f64(mu);
+                e.put_f64(c);
+            }
+        }
+    }
+
+    /// Inverse of [`CurveModel::encode`].
+    pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        match d.u8()? {
+            0 => Ok(CurveModel::Sublinear {
+                a: d.f64()?,
+                b: d.f64()?,
+                c: d.f64()?,
+                d: d.f64()?,
+            }),
+            1 => Ok(CurveModel::Exponential { m: d.f64()?, mu: d.f64()?, c: d.f64()? }),
+            t => Err(crate::util::codec::corrupt(format!("unknown curve tag {t}"))),
         }
     }
 

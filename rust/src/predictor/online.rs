@@ -521,6 +521,149 @@ impl OnlinePredictor {
     pub fn normalizer(&self) -> &DeltaNormalizer {
         &self.normalizer
     }
+
+    /// Serialize the complete predictor state for the durable-coordinator
+    /// snapshot ([`crate::coordinator`]'s WAL layer). Every field is
+    /// captured — history window, fit, normalizer, hint EWMA, pending
+    /// predictions, counters — so a [`OnlinePredictor::decode_state`]'d
+    /// predictor continues the original observation/refit sequence bit
+    /// for bit (the kill-and-recover determinism invariant).
+    pub fn encode_state(&self, e: &mut crate::util::codec::Enc) {
+        e.put_u8(self.kind.to_byte());
+        e.put_f64(self.cfg.gamma);
+        e.put_usize(self.cfg.min_samples);
+        e.put_usize(self.cfg.lm.max_iters);
+        e.put_f64(self.cfg.lm.lambda_init);
+        e.put_f64(self.cfg.lm.lambda_up);
+        e.put_f64(self.cfg.lm.lambda_down);
+        e.put_f64(self.cfg.lm.tol);
+        e.put_usize(self.window);
+        let samples = self.history.samples();
+        e.put_usize(samples.len());
+        for s in samples {
+            e.put_u64(s.iteration);
+            e.put_f64(s.loss);
+            e.put_f64(s.time);
+        }
+        e.put_opt_f64(self.normalizer.last_loss());
+        e.put_f64(self.normalizer.max_abs_delta());
+        e.put_f64(self.normalizer.cumulative_progress());
+        match self.fit.as_ref() {
+            Some(fit) => {
+                e.put_bool(true);
+                fit.model.encode(e);
+                e.put_f64(fit.residual);
+                e.put_f64(fit.relative_residual);
+                e.put_usize(fit.n_samples);
+            }
+            None => e.put_bool(false),
+        }
+        e.put_bool(self.dirty);
+        e.put_opt_f64(self.target_hint);
+        e.put_f64(self.hint_rate.alpha());
+        e.put_opt_f64(self.hint_rate.value());
+        e.put_u64(self.rejected_samples);
+        e.put_usize(self.pending.len());
+        for &(target, predicted) in &self.pending {
+            e.put_u64(target);
+            e.put_f64(predicted);
+        }
+        e.put_usize(self.errors.len());
+        for err in &self.errors {
+            e.put_u64(err.at_iteration);
+            e.put_u64(err.target_iteration);
+            e.put_f64(err.predicted);
+            e.put_f64(err.actual);
+        }
+        e.put_opt_u64(self.fitted_through);
+        e.put_u64(self.fit_count);
+        e.put_u64(self.deferred_refits);
+    }
+
+    /// Inverse of [`OnlinePredictor::encode_state`].
+    pub fn decode_state(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        use super::lm::LmConfig;
+        let kind = CurveKind::from_byte(d.u8()?)?;
+        let cfg = FitConfig {
+            gamma: d.f64()?,
+            min_samples: d.usize_()?,
+            lm: LmConfig {
+                max_iters: d.usize_()?,
+                lambda_init: d.f64()?,
+                lambda_up: d.f64()?,
+                lambda_down: d.f64()?,
+                tol: d.f64()?,
+            },
+        };
+        let window = d.usize_()?;
+        let mut history = LossHistory::new();
+        let n = d.usize_()?;
+        let mut prev_iteration: Option<u64> = None;
+        for _ in 0..n {
+            let iteration = d.u64()?;
+            if prev_iteration.map_or(false, |p| iteration <= p) {
+                return Err(crate::util::codec::corrupt("history iterations out of order"));
+            }
+            prev_iteration = Some(iteration);
+            let loss = d.f64()?;
+            let time = d.f64()?;
+            history.push(iteration, loss, time);
+        }
+        let normalizer = DeltaNormalizer::from_state(d.opt_f64()?, d.f64()?, d.f64()?);
+        let fit = if d.bool()? {
+            Some(FittedCurve {
+                model: super::models::CurveModel::decode(d)?,
+                residual: d.f64()?,
+                relative_residual: d.f64()?,
+                n_samples: d.usize_()?,
+            })
+        } else {
+            None
+        };
+        let dirty = d.bool()?;
+        let target_hint = d.opt_f64()?;
+        let hint_alpha = d.f64()?;
+        if !(hint_alpha > 0.0 && hint_alpha <= 1.0) {
+            return Err(crate::util::codec::corrupt("hint EWMA alpha out of range"));
+        }
+        let hint_rate = crate::util::stats::Ewma::from_state(hint_alpha, d.opt_f64()?);
+        let rejected_samples = d.u64()?;
+        let n_pending = d.usize_()?;
+        let mut pending = Vec::with_capacity(n_pending.min(1 << 20));
+        for _ in 0..n_pending {
+            pending.push((d.u64()?, d.f64()?));
+        }
+        let n_errors = d.usize_()?;
+        let mut errors = Vec::with_capacity(n_errors.min(1 << 20));
+        for _ in 0..n_errors {
+            errors.push(PredictionError {
+                at_iteration: d.u64()?,
+                target_iteration: d.u64()?,
+                predicted: d.f64()?,
+                actual: d.f64()?,
+            });
+        }
+        let fitted_through = d.opt_u64()?;
+        let fit_count = d.u64()?;
+        let deferred_refits = d.u64()?;
+        Ok(Self {
+            kind,
+            cfg,
+            history,
+            normalizer,
+            fit,
+            dirty,
+            target_hint,
+            hint_rate,
+            rejected_samples,
+            pending,
+            errors,
+            window,
+            fitted_through,
+            fit_count,
+            deferred_refits,
+        })
+    }
 }
 
 /// Geometric-decay factor of the model-free fallback (see

@@ -63,6 +63,13 @@ impl DeltaNormalizer {
     pub fn last_loss(&self) -> Option<f64> {
         self.last_loss
     }
+
+    /// Rebuild a normalizer mid-stream from its three state words
+    /// (durable-state restore); subsequent observations continue the
+    /// original sequence bit for bit.
+    pub fn from_state(last_loss: Option<f64>, max_abs_delta: f64, cumulative: f64) -> Self {
+        Self { last_loss, max_abs_delta, cumulative }
+    }
 }
 
 /// Position of one loss value on the `[floor, initial]` span, clamped to

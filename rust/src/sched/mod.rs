@@ -591,6 +591,22 @@ impl SchedContext {
         self.epoch
     }
 
+    /// Rebuild a context mid-run (durable-coordinator recovery): the
+    /// grant set of the last recorded epoch plus the epoch counter.
+    /// Stats and the gain table start empty — the next epoch rebuilds
+    /// both, exactly as after a live [`SchedContext::record`].
+    pub fn restore_grants(
+        &mut self,
+        grants: impl IntoIterator<Item = (u64, u32)>,
+        epoch: u64,
+    ) {
+        self.prev.clear();
+        self.prev.extend(grants);
+        self.epoch = epoch;
+        self.stats = None;
+        self.table.invalidate();
+    }
+
     /// True when no prior grant is available.
     pub fn is_empty(&self) -> bool {
         self.prev.is_empty()
@@ -604,6 +620,15 @@ impl SchedContext {
     /// The previous epoch's grant for `id`, if the job was scheduled then.
     pub fn prev_grant(&self, id: u64) -> Option<u32> {
         self.prev.get(&id).copied()
+    }
+
+    /// The previous epoch's full grant set as `(job id, cores)` pairs,
+    /// ascending by id — the deterministic form the durable snapshot
+    /// stores and [`SchedContext::restore_grants`] accepts back.
+    pub fn grants(&self) -> Vec<(u64, u32)> {
+        let mut v: Vec<(u64, u32)> = self.prev.iter().map(|(&id, &c)| (id, c)).collect();
+        v.sort_unstable();
+        v
     }
 
     /// Absorb this epoch's outcome: the grant of every request, keyed by

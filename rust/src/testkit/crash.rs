@@ -1,0 +1,394 @@
+//! Kill-and-recover determinism harness for the durable coordinator.
+//!
+//! The contract under test: for a deterministic policy, crash a durable
+//! coordinator *anywhere* — at any epoch boundary, or mid-epoch at either
+//! [`CrashPoint`] — recover it from its state directory, resume, and the
+//! resulting trace is **bitwise identical** (wall-clock nanos aside) to
+//! the same workload run uninterrupted. [`CrashSuite::run`] proves that
+//! exhaustively for one configuration: every crash epoch × every crash
+//! mode, plus the baseline property that durable bookkeeping itself is
+//! inert (an uninterrupted durable run equals the plain in-memory run).
+//!
+//! Traces are compared by [`assert_trace_eq`]: every decision-relevant
+//! field exactly (`f64` via `to_bits`), excluding only the wall-clock
+//! timing fields (`sched_nanos` / `refit_nanos` / `gain_nanos`), which
+//! measure the host, not the schedule.
+
+use super::{sim, Gen, TempDir};
+use crate::coordinator::{Coordinator, CoordinatorConfig, CrashPoint, Trace};
+use crate::sched::policy_by_name;
+
+/// Assert two traces are bitwise-identical up to wall-clock timing.
+///
+/// Epochs compare `time`, `refits`, `dirty_jobs`, `active_jobs`,
+/// `cross_rack_moves` and every entry (`job`, `cores`, `loss` bits,
+/// `rack_span`); jobs (sorted by id — ledger iteration order is not
+/// deterministic) compare spec fields, activation/completion times, the
+/// rack-span high-water mark and the full loss-sample history.
+pub fn assert_trace_eq(a: &Trace, b: &Trace, what: &str) {
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{what}: epoch count");
+    for (i, (ea, eb)) in a.epochs.iter().zip(&b.epochs).enumerate() {
+        assert_eq!(ea.time.to_bits(), eb.time.to_bits(), "{what}: epoch {i} time");
+        assert_eq!(ea.refits, eb.refits, "{what}: epoch {i} refits");
+        assert_eq!(ea.dirty_jobs, eb.dirty_jobs, "{what}: epoch {i} dirty set");
+        assert_eq!(ea.active_jobs, eb.active_jobs, "{what}: epoch {i} active set");
+        assert_eq!(
+            ea.cross_rack_moves, eb.cross_rack_moves,
+            "{what}: epoch {i} cross-rack moves"
+        );
+        assert_eq!(ea.entries.len(), eb.entries.len(), "{what}: epoch {i} entries");
+        for (xa, xb) in ea.entries.iter().zip(&eb.entries) {
+            assert_eq!(xa.job, xb.job, "{what}: epoch {i} entry order");
+            assert_eq!(xa.cores, xb.cores, "{what}: epoch {i} job {} cores", xa.job);
+            assert_eq!(
+                xa.loss.to_bits(),
+                xb.loss.to_bits(),
+                "{what}: epoch {i} job {} loss",
+                xa.job
+            );
+            assert_eq!(
+                xa.rack_span, xb.rack_span,
+                "{what}: epoch {i} job {} rack span",
+                xa.job
+            );
+        }
+    }
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{what}: job count");
+    let sorted = |t: &Trace| {
+        let mut idx: Vec<usize> = (0..t.jobs.len()).collect();
+        idx.sort_unstable_by_key(|&i| t.jobs[i].id);
+        idx
+    };
+    for (&ia, &ib) in sorted(a).iter().zip(&sorted(b)) {
+        let (ja, jb) = (&a.jobs[ia], &b.jobs[ib]);
+        assert_eq!(ja.id, jb.id, "{what}: job ids");
+        let id = ja.id;
+        assert_eq!(ja.name, jb.name, "{what}: job {id} name");
+        assert_eq!(ja.arrival.to_bits(), jb.arrival.to_bits(), "{what}: job {id} arrival");
+        assert_eq!(ja.max_cores, jb.max_cores, "{what}: job {id} max cores");
+        assert_eq!(ja.max_rack_span, jb.max_rack_span, "{what}: job {id} max span");
+        assert_eq!(
+            ja.activated.to_bits(),
+            jb.activated.to_bits(),
+            "{what}: job {id} activation"
+        );
+        assert_eq!(
+            ja.completion.map(f64::to_bits),
+            jb.completion.map(f64::to_bits),
+            "{what}: job {id} completion"
+        );
+        assert_eq!(
+            ja.floor.map(f64::to_bits),
+            jb.floor.map(f64::to_bits),
+            "{what}: job {id} floor"
+        );
+        assert_eq!(
+            ja.initial_loss.to_bits(),
+            jb.initial_loss.to_bits(),
+            "{what}: job {id} initial loss"
+        );
+        assert_eq!(ja.samples.len(), jb.samples.len(), "{what}: job {id} samples");
+        for ((ta, ka, la), (tb, kb, lb)) in ja.samples.iter().zip(&jb.samples) {
+            assert_eq!(
+                (ta.to_bits(), ka, la.to_bits()),
+                (tb.to_bits(), kb, lb.to_bits()),
+                "{what}: job {id} sample"
+            );
+        }
+    }
+}
+
+/// How a run is killed.
+#[derive(Debug, Clone, Copy)]
+enum Kill {
+    /// Between epochs — the state directory is at a clean boundary.
+    AtBoundary,
+    /// Mid-epoch, at the given injected crash point.
+    MidEpoch(CrashPoint),
+}
+
+/// One exhaustive kill-and-recover configuration. Build with struct
+/// update syntax over [`CrashSuite::default`] and call [`CrashSuite::run`].
+pub struct CrashSuite {
+    /// Coordinator configuration under test (flat or sharded, any thread
+    /// count). The policy must be deterministic for bitwise claims.
+    pub cfg: CoordinatorConfig,
+    /// Registry name of the (deterministic) policy.
+    pub policy: &'static str,
+    /// Snapshot cadence in epochs — pick something that puts crash
+    /// points before the first snapshot, right on one, and past one.
+    pub snapshot_every: usize,
+    /// Jobs in the generated churn workload.
+    pub jobs: usize,
+    /// Arrival horizon (virtual seconds).
+    pub horizon: f64,
+    /// Total epochs of the reference run.
+    pub epochs: usize,
+    /// `(boundary, job id)` cancels: issued after `boundary` epochs have
+    /// run, before the next one. Exercises Cancel records through WAL
+    /// replay; cancels of already-finished jobs are deterministic no-ops.
+    pub cancels: Vec<(usize, u64)>,
+    /// Workload seed.
+    pub seed: u64,
+    /// Label for temp dirs and assertion messages.
+    pub label: &'static str,
+}
+
+impl Default for CrashSuite {
+    fn default() -> Self {
+        Self {
+            cfg: CoordinatorConfig::default(),
+            policy: "slaq-det",
+            snapshot_every: 4,
+            jobs: 8,
+            horizon: 16.0,
+            epochs: 10,
+            cancels: vec![(3, 2), (6, 5)],
+            seed: 0xC0FF_EE00,
+            label: "crash",
+        }
+    }
+}
+
+impl CrashSuite {
+    fn policy(&self) -> Box<dyn crate::sched::Policy> {
+        policy_by_name(self.policy).expect("crash suite needs a registry policy")
+    }
+
+    fn cancels_at(&self, boundary: usize, c: &mut Coordinator) {
+        for &(b, id) in &self.cancels {
+            if b == boundary {
+                c.cancel(id);
+            }
+        }
+    }
+
+    /// Run the full grid: baseline inertness, then kill-and-recover at
+    /// every epoch `k in 0..epochs` × {boundary, after-refit,
+    /// before-wal-append}, each resumed to `epochs` and compared bitwise
+    /// against the uninterrupted reference.
+    pub fn run(&self) {
+        let mut g = Gen::from_seed(self.seed);
+        let templates = sim::random_churn_templates(&mut g, self.jobs, self.horizon);
+        let source_seed = g.u64();
+
+        // Reference: plain in-memory run, no durability.
+        let mut mem = Coordinator::new(self.cfg.clone(), self.policy());
+        sim::submit_templates(&mut mem, &templates, source_seed);
+        for e in 0..self.epochs {
+            self.cancels_at(e, &mut mem);
+            mem.step_epoch();
+        }
+        let reference = mem.into_trace();
+
+        // Durable bookkeeping is inert: an uninterrupted durable run is
+        // bitwise identical to the in-memory run.
+        let tmp = TempDir::new(self.label);
+        let mut durable = Coordinator::with_persistence(
+            self.cfg.clone(),
+            self.policy(),
+            tmp.path(),
+            self.snapshot_every,
+        )
+        .expect("durable coordinator");
+        sim::submit_templates(&mut durable, &templates, source_seed);
+        for e in 0..self.epochs {
+            self.cancels_at(e, &mut durable);
+            durable.step_epoch();
+        }
+        assert_trace_eq(
+            &reference,
+            &durable.into_trace(),
+            &format!("{}: uninterrupted durable vs in-memory", self.label),
+        );
+
+        // The kill grid.
+        for k in 0..self.epochs {
+            for kill in [
+                Kill::AtBoundary,
+                Kill::MidEpoch(CrashPoint::AfterRefit),
+                Kill::MidEpoch(CrashPoint::BeforeWalAppend),
+            ] {
+                let what = format!("{}: crash {kill:?} at epoch {k}", self.label);
+                let tmp = TempDir::new(self.label);
+                let mut victim = Coordinator::with_persistence(
+                    self.cfg.clone(),
+                    self.policy(),
+                    tmp.path(),
+                    self.snapshot_every,
+                )
+                .expect("durable coordinator");
+                sim::submit_templates(&mut victim, &templates, source_seed);
+                for e in 0..k {
+                    self.cancels_at(e, &mut victim);
+                    victim.step_epoch();
+                }
+                if let Kill::MidEpoch(point) = kill {
+                    // The epoch after boundary k starts and dies midway;
+                    // its cancels were already issued (and WAL-logged).
+                    self.cancels_at(k, &mut victim);
+                    victim.set_crash_point(point);
+                    victim.step_epoch();
+                }
+                // The "kill": the process image (all in-memory state)
+                // is discarded; only the state directory survives.
+                drop(victim);
+
+                let mut revived =
+                    Coordinator::recover_state(tmp.path()).unwrap_or_else(|e| {
+                        panic!("{what}: recovery failed: {e}");
+                    });
+                assert_eq!(
+                    revived.epoch_count(),
+                    k,
+                    "{what}: must recover to the last durable boundary"
+                );
+                for e in k..self.epochs {
+                    // Cancels at the crash boundary may already be in the
+                    // WAL (mid-epoch kills); re-issuing is a no-op.
+                    self.cancels_at(e, &mut revived);
+                    revived.step_epoch();
+                }
+                assert_trace_eq(&reference, &revived.into_trace(), &what);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, TopologySpec};
+    use crate::coordinator::wal;
+
+    fn flat_cfg(threads: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 4, cores_per_node: 8 },
+            epoch_secs: 2.0,
+            threads,
+            ..Default::default()
+        }
+    }
+
+    fn sharded_cfg(threads: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            cluster: ClusterSpec { nodes: 16, cores_per_node: 4 },
+            topology: TopologySpec::Uniform { zones: 8, racks_per_zone: 1 },
+            epoch_secs: 2.0,
+            threads,
+            sharded: true,
+            broker_epochs: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn kill_and_recover_flat_serial() {
+        CrashSuite { cfg: flat_cfg(1), label: "flat-t1", ..Default::default() }.run();
+    }
+
+    #[test]
+    fn kill_and_recover_flat_pooled() {
+        CrashSuite { cfg: flat_cfg(4), label: "flat-t4", ..Default::default() }.run();
+    }
+
+    #[test]
+    fn kill_and_recover_sharded_8zone_serial() {
+        CrashSuite {
+            cfg: sharded_cfg(1),
+            jobs: 12,
+            label: "shard8-t1",
+            ..Default::default()
+        }
+        .run();
+    }
+
+    #[test]
+    fn kill_and_recover_sharded_8zone_pooled() {
+        CrashSuite {
+            cfg: sharded_cfg(4),
+            jobs: 12,
+            label: "shard8-t4",
+            ..Default::default()
+        }
+        .run();
+    }
+
+    #[test]
+    fn recovery_survives_a_torn_wal_tail() {
+        // End-to-end version of the wal-level torn-frame test: garbage
+        // appended to the log (a crash mid-append) is dropped, the file
+        // is truncated, and the resumed run still matches bitwise.
+        let suite = CrashSuite { cfg: flat_cfg(1), label: "torn", ..Default::default() };
+        let mut g = Gen::from_seed(suite.seed);
+        let templates = sim::random_churn_templates(&mut g, suite.jobs, suite.horizon);
+        let source_seed = g.u64();
+
+        let mut mem = Coordinator::new(suite.cfg.clone(), suite.policy());
+        sim::submit_templates(&mut mem, &templates, source_seed);
+        for _ in 0..suite.epochs {
+            mem.step_epoch();
+        }
+        let reference = mem.into_trace();
+
+        let tmp = TempDir::new("torn-tail");
+        let mut victim = Coordinator::with_persistence(
+            suite.cfg.clone(),
+            suite.policy(),
+            tmp.path(),
+            suite.snapshot_every,
+        )
+        .unwrap();
+        sim::submit_templates(&mut victim, &templates, source_seed);
+        for _ in 0..6 {
+            victim.step_epoch();
+        }
+        drop(victim);
+        wal::append_garbage_frame(&tmp.path().join(wal::WAL_FILE));
+
+        let mut revived = Coordinator::recover_state(tmp.path()).unwrap();
+        assert_eq!(revived.epoch_count(), 6);
+        for _ in 6..suite.epochs {
+            revived.step_epoch();
+        }
+        assert_trace_eq(&reference, &revived.into_trace(), "torn-tail recovery");
+    }
+
+    #[test]
+    fn recovery_from_snapshot_alone_with_an_emptied_wal() {
+        // Satellite: the snapshot is self-contained. Empty the WAL after
+        // a snapshot boundary and recovery must still reproduce the run
+        // up to that snapshot, bit for bit.
+        let suite = CrashSuite { cfg: flat_cfg(1), label: "snap-only", ..Default::default() };
+        let mut g = Gen::from_seed(suite.seed);
+        let templates = sim::random_churn_templates(&mut g, suite.jobs, suite.horizon);
+        let source_seed = g.u64();
+        let boundary = suite.snapshot_every * 2; // exactly on a snapshot
+
+        let mut mem = Coordinator::new(suite.cfg.clone(), suite.policy());
+        sim::submit_templates(&mut mem, &templates, source_seed);
+        for _ in 0..boundary {
+            mem.step_epoch();
+        }
+        let reference = mem.into_trace();
+
+        let tmp = TempDir::new("snap-only");
+        let mut victim = Coordinator::with_persistence(
+            suite.cfg.clone(),
+            suite.policy(),
+            tmp.path(),
+            suite.snapshot_every,
+        )
+        .unwrap();
+        sim::submit_templates(&mut victim, &templates, source_seed);
+        for _ in 0..boundary {
+            victim.step_epoch();
+        }
+        drop(victim);
+        std::fs::write(tmp.path().join(wal::WAL_FILE), b"").unwrap();
+
+        let revived = Coordinator::recover_state(tmp.path()).unwrap();
+        assert_eq!(revived.epoch_count(), boundary);
+        assert_trace_eq(&reference, &revived.into_trace(), "snapshot-only recovery");
+    }
+}

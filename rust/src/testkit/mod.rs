@@ -17,7 +17,42 @@
 
 use crate::util::rng::Rng;
 
+pub mod crash;
 pub mod sim;
+
+/// Self-cleaning scratch directory for tests that exercise on-disk state
+/// (the offline build has no `tempfile` crate). Directories are created
+/// under the system temp dir, made unique by pid plus a process-wide
+/// counter, and removed recursively on drop.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh empty directory whose name starts with `label`.
+    pub fn new(label: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "slaq-{label}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        Self { path }
+    }
+
+    /// The directory's path.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
 
 /// Case-local generator handed to property bodies.
 pub struct Gen {

@@ -1,0 +1,296 @@
+//! Minimal hand-rolled byte codec for durable coordinator state
+//! (the ledger snapshot and the epoch WAL in [`crate::coordinator`]).
+//!
+//! Little-endian fixed-width integers, `f64` as raw IEEE-754 bits (so
+//! values — including NaN payloads — round-trip *bitwise*, which the
+//! kill-and-recover determinism suite depends on), and length-prefixed
+//! strings/sequences. The build is offline and vendors no serde/bincode;
+//! this module is the crate's own wire format, in the spirit of the other
+//! self-contained substrates in [`crate::util`].
+
+use std::io;
+
+/// Byte-buffer encoder. All integers are little-endian.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encoded bytes so far.
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Consume the encoder, returning the buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Current encoded length.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been encoded.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a little-endian `u32`.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a little-endian `u64`.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as `u64` (lengths, counts).
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Append an `f64` as its raw bit pattern (bitwise round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a bool as one byte (0/1).
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// Append raw bytes verbatim (caller handles framing).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Append an `Option<f64>` as presence byte + bits.
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_f64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+
+    /// Append an `Option<u64>` as presence byte + value.
+    pub fn put_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_u64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+}
+
+/// Build an `InvalidData` error — the loud-failure mode for corrupt or
+/// truncated durable state.
+pub fn corrupt(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Cursor-style decoder over a byte slice. Every accessor fails with
+/// [`corrupt`] on truncation instead of panicking, so recovery code can
+/// surface exactly which structure was damaged.
+#[derive(Debug)]
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(corrupt(format!(
+                "truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a length/count encoded by [`Enc::put_usize`].
+    pub fn usize_(&mut self) -> io::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| corrupt(format!("length {v} overflows usize")))
+    }
+
+    /// Read an `f64` from its raw bit pattern.
+    pub fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a bool; any byte other than 0/1 is corruption.
+    pub fn bool(&mut self) -> io::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(corrupt(format!("invalid bool byte {b}"))),
+        }
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> io::Result<String> {
+        let n = self.usize_()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| corrupt("invalid utf-8 string"))
+    }
+
+    /// Read an `Option<f64>`.
+    pub fn opt_f64(&mut self) -> io::Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    /// Read an `Option<u64>`.
+    pub fn opt_u64(&mut self) -> io::Result<Option<u64>> {
+        Ok(if self.bool()? { Some(self.u64()?) } else { None })
+    }
+
+    /// Assert every byte was consumed (trailing garbage is corruption).
+    pub fn finish(self) -> io::Result<()> {
+        if self.remaining() != 0 {
+            return Err(corrupt(format!("{} trailing bytes", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a 64-bit hash — the WAL/snapshot record checksum. Not
+/// cryptographic; catches torn writes and bit rot, which is the failure
+/// model a local WAL defends against.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut e = Enc::new();
+        e.put_u8(7);
+        e.put_u32(0xDEAD_BEEF);
+        e.put_u64(u64::MAX - 3);
+        e.put_usize(42);
+        e.put_f64(std::f64::consts::PI);
+        e.put_f64(f64::NAN);
+        e.put_bool(true);
+        e.put_str("épochs");
+        e.put_opt_f64(Some(-0.0));
+        e.put_opt_f64(None);
+        e.put_opt_u64(Some(9));
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.usize_().unwrap(), 42);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        // NaN round-trips bitwise, not by ==.
+        assert_eq!(d.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert!(d.bool().unwrap());
+        assert_eq!(d.str().unwrap(), "épochs");
+        // -0.0 keeps its sign bit.
+        assert_eq!(d.opt_f64().unwrap().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.opt_f64().unwrap(), None);
+        assert_eq!(d.opt_u64().unwrap(), Some(9));
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_not_panics() {
+        let mut e = Enc::new();
+        e.put_u64(5);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..5]);
+        assert!(d.u64().is_err());
+        // A string whose declared length exceeds the buffer is corrupt.
+        let mut e = Enc::new();
+        e.put_usize(1000);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut e = Enc::new();
+        e.put_u32(1);
+        e.put_u8(0xFF);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        d.u32().unwrap();
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn invalid_bool_is_corruption() {
+        let bytes = [2u8];
+        let mut d = Dec::new(&bytes);
+        assert!(d.bool().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"abd"));
+    }
+}

@@ -5,6 +5,7 @@
 //! utilities rather than pulling `rand`/`serde`/`clap`/etc.
 
 pub mod cli;
+pub mod codec;
 pub mod csv;
 pub mod json;
 pub mod logger;

@@ -58,6 +58,21 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Full generator state: the xoshiro words plus the cached Box–Muller
+    /// spare deviate. Together with [`Rng::from_state`] this makes the
+    /// stream exactly resumable (the durable-coordinator snapshot persists
+    /// loss-source RNGs this way).
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator mid-stream from [`Rng::state`]. The restored
+    /// generator continues the original sequence bit for bit.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Self {
+        assert!(s != [0; 4], "all-zero xoshiro state is invalid");
+        Self { s, spare_normal }
+    }
+
     /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -85,6 +85,18 @@ impl Ewma {
     pub fn value(&self) -> Option<f64> {
         self.value
     }
+
+    /// The configured newest-sample weight.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Rebuild an average mid-stream (durable-state restore); the restored
+    /// accumulator continues the original sequence bit for bit.
+    pub fn from_state(alpha: f64, value: Option<f64>) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        Self { alpha, value }
+    }
 }
 
 /// Percentile of a sample using linear interpolation (like numpy's default).

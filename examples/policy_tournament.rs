@@ -1,0 +1,17 @@
+//! Policy tournament: all six schedulers (slaq, slaq-det, fair, oasis,
+//! shockwave, learned) across three workload cells — churny arrivals,
+//! contention-heavy demand, and heterogeneous quality targets — scored on
+//! mean normalized loss, time-to-90/95% loss reduction and quality
+//! fairness (Jain index), with per-epoch allocator invariants asserted.
+//!
+//! Run with:  cargo run --release --example policy_tournament
+
+use slaq::exp::{run_tournament, TournamentConfig};
+
+fn main() {
+    // The same grid `slaq exp tournament` runs; panics if any run
+    // violates a capacity / per-job cap / work-conservation invariant.
+    let report = run_tournament(&TournamentConfig::default());
+    report.assert_ok();
+    println!("{}", report.output().summary);
+}

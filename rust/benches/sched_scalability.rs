@@ -28,15 +28,20 @@
 //! to the 100 000-job cell. The `placement_*_per_epoch_*` entries are
 //! the locality scenario's placement-quality counts: mean rack span and
 //! cross-rack cores moved per epoch, rack-aware vs rack-blind on a
-//! 16-rack topology.
+//! 16-rack topology. The `tournament_{cell}_{policy}_per_epoch` entries
+//! are the policy tournament's quality scores (counts, not latencies:
+//! mean = mean normalized loss, p50 = Jain quality-fairness index,
+//! p95 = mean seconds to 90% loss reduction or -1 when no job reached
+//! it, iters = jobs that reached 90%) for all six schedulers across the
+//! churny / contention / hetero-targets workload cells.
 
 #[path = "common.rs"]
 mod common;
 
 use common::{bench_stats, write_bench_json, BenchStats};
 use slaq::exp::{
-    churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost, ChurnConfig,
-    EpochLoopConfig, LocalityConfig,
+    churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost, run_tournament,
+    ChurnConfig, EpochLoopConfig, LocalityConfig, TournamentConfig,
 };
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
@@ -288,6 +293,31 @@ fn main() {
             p95: amortized.refit_percentile_millis(95.0) / 1e3,
             iters: amortized.epoch_millis.len(),
         });
+    }
+
+    println!("== policy tournament: quality scores across the cell grid ==");
+    // Quality (not latency) cells — six policies × three workload cells,
+    // with the per-epoch allocator invariants asserted before anything is
+    // published. `_per_epoch` marks the entries as unit-less scores (see
+    // benches/common.rs); time-to-90 is a simulated-seconds mean, mapped
+    // to -1 when no job in the run reached 90% reduction (JSON has no
+    // NaN).
+    {
+        let report = run_tournament(&TournamentConfig::default());
+        report.assert_ok();
+        for s in &report.scores {
+            println!(
+                "tournament_{}_{}: norm loss {:.4}, t90 {:.1}s ({} jobs), jain {:.3}",
+                s.cell, s.policy, s.mean_norm_loss, s.time_to_90, s.reached_90, s.quality_fairness,
+            );
+            all.push(BenchStats {
+                name: format!("tournament_{}_{}_per_epoch", s.cell, s.policy),
+                mean: s.mean_norm_loss,
+                p50: s.quality_fairness,
+                p95: if s.time_to_90.is_finite() { s.time_to_90 } else { -1.0 },
+                iters: s.reached_90,
+            });
+        }
     }
 
     match write_bench_json("BENCH_sched.json", "cargo bench --bench sched_scalability", &all) {

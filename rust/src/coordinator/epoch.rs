@@ -59,8 +59,8 @@ use super::pool::WorkerPool;
 use super::source::LossSource;
 use super::trace::{EpochEntry, EpochRecord, JobTrace, Trace};
 use super::wal::{
-    config_bytes, read_snapshot, read_wal, truncate_wal, DurableState, SnapshotView, WalEpoch,
-    WalRecord, WalWriter, SNAP_FILE, WAL_FILE,
+    compact_wal, config_bytes, read_snapshot, read_wal, truncate_wal, DurableState,
+    SnapshotView, WalEpoch, WalRecord, WalWriter, SNAP_FILE, WAL_FILE,
 };
 use crate::cluster::{ClusterSpec, CostModel, LocalityModel, NodePool, TopologySpec};
 use crate::predictor::OnlinePredictor;
@@ -1299,6 +1299,16 @@ impl Coordinator {
         let d = self.durable.as_mut().expect("durable state");
         d.wal.append(&WalRecord::Epoch(Box::new(ep)))?;
         if self.epochs.len() % self.durable.as_ref().unwrap().snapshot_every == 0 {
+            self.snapshot_now()?;
+            // The snapshot just written is self-contained, so every WAL
+            // frame it covers is dead weight: compact the log down to
+            // its genesis record (atomic tmp + rename) and snapshot once
+            // more so the recorded replay high-water mark matches the
+            // compacted file. A crash between the rename and the second
+            // snapshot leaves a mark above the file's frame count —
+            // exactly the stale-snapshot case recovery rewrites.
+            let d = self.durable.as_mut().expect("durable state");
+            d.wal = compact_wal(&d.dir.join(WAL_FILE))?;
             self.snapshot_now()?;
         }
         Ok(())

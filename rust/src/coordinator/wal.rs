@@ -18,7 +18,11 @@
 //!   a snapshot plus an *empty* WAL reproduces the run up to the
 //!   snapshot, and WAL records past the snapshot's high-water mark are
 //!   replayed on top. Snapshots bound replay cost to the epochs since
-//!   the last snapshot.
+//!   the last snapshot — and, because every frame a snapshot covers is
+//!   thereby dead weight, each snapshot is followed by a WAL
+//!   *compaction* ([`compact_wal`]): the log is atomically rewritten
+//!   down to its genesis record, so the file's size tracks the snapshot
+//!   cadence instead of growing without bound over a long-lived service.
 //!
 //! Failure handling is asymmetric by design: a **torn final frame**
 //! (partial append at the kill point) is silently dropped and the file is
@@ -323,6 +327,29 @@ pub(crate) fn read_wal(path: &Path) -> io::Result<WalReadout> {
 /// start on a clean boundary.
 pub(crate) fn truncate_wal(path: &Path, valid_len: u64) -> io::Result<()> {
     OpenOptions::new().write(true).open(path)?.set_len(valid_len)
+}
+
+/// Compact a WAL down to just its genesis record, atomically (rewrite to
+/// a tmp file in the same directory, rename over the log). Called right
+/// after a snapshot is written: the snapshot is self-contained, so every
+/// frame it covers is dead weight and only the genesis header (which
+/// keeps the log self-describing for the genesis/snapshot cross-check)
+/// is retained. The caller must snapshot *again* after compacting so the
+/// snapshot's replay high-water mark matches the compacted file — a
+/// crash in between leaves a mark above the file's frame count, which
+/// recovery already detects and repairs (the stale-snapshot rewrite).
+///
+/// Returns the fresh append handle for the compacted file; the old
+/// [`WalWriter`] points at the replaced inode and must be dropped.
+pub(crate) fn compact_wal(path: &Path) -> io::Result<WalWriter> {
+    let genesis = read_wal(path)?.records.into_iter().next();
+    let tmp = path.with_extension("tmp");
+    let mut w = WalWriter::create(&tmp)?;
+    if let Some(rec @ WalRecord::Genesis { .. }) = &genesis {
+        w.append(rec)?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(w)
 }
 
 /// Borrowing view of the coordinator state a snapshot captures, used by

@@ -14,6 +14,7 @@
 //! | [`pred_accuracy`]   | §2 claim — <5% error predicting +10 iterations  |
 //! | [`quality_fidelity`] | Figs 3–5 invariants as a seeded regression suite |
 //! | [`recovery_replay`] | durability — WAL replay cost vs epochs since snapshot |
+//! | [`run_tournament`]  | policy tournament — all six schedulers × 3 workload cells |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
@@ -35,6 +36,7 @@ mod recovery;
 mod report;
 mod scalability;
 mod sim_runs;
+mod tournament;
 
 pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
 pub use locality::{
@@ -51,4 +53,9 @@ pub use scalability::{
 pub use sim_runs::{
     fig3_allocation, fig4_avg_loss, fig5_time_to, quality_fidelity, run_sim_trace,
     FidelityConfig, FidelityReport, SimConfig,
+};
+pub use tournament::{
+    check_epoch_invariants, run_tournament, tournament_cells, TournamentCell,
+    TournamentConfig, TournamentReport, TournamentScore, DETERMINISTIC_POLICIES,
+    TOURNAMENT_POLICIES,
 };

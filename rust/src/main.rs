@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|pred|all> [flags]
+//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|pred|all> [flags]
 //!     regenerate paper figures (CSV under --out, summary to stdout)
 //! slaq train --algo <name> [--iters N] [--variant small|base]
 //!     run one real training job through the PJRT runtime
@@ -56,7 +56,7 @@ fn print_usage() {
     println!(
         "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
          usage:\n  \
-         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|pred|all> [--out DIR] [...]\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|pred|all> [--out DIR] [...]\n  \
          slaq train --algo <name> [--iters N] [--variant small|base]\n  \
          slaq run [--policy P] [--jobs N] [--duration S]\n  \
          slaq check\n\n\
@@ -93,6 +93,8 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("locality-churn", "32", "arrivals per epoch in the locality scenario")
         .flag("locality-epochs", "12", "measured epochs for the locality scenario")
         .flag("recovery-trials", "5", "kill-and-recover trials per WAL-tail length")
+        .flag("tournament-jobs", "24", "jobs per workload cell in the policy tournament")
+        .flag("tournament-duration", "420", "simulated seconds per tournament run")
         .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
         .flag("seed", "20818", "workload seed")
         .flag("log", "info", "log level");
@@ -205,6 +207,26 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         ));
     }
 
+    if wants("tournament") {
+        log::info!("policy tournament: six schedulers across three workload cells…");
+        let report = exp::run_tournament(&exp::TournamentConfig {
+            jobs: parsed.get_as::<usize>("tournament-jobs").map_err(|e| anyhow!(e))?,
+            seed: parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+            threads: parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
+            duration: parsed.get_as::<f64>("tournament-duration").map_err(|e| anyhow!(e))?,
+        });
+        if !report.is_ok() {
+            for v in &report.violations {
+                eprintln!("violation: {v}");
+            }
+            return Err(anyhow!(
+                "tournament: {} allocator-invariant violations",
+                report.violations.len()
+            ));
+        }
+        outputs.push(report.output());
+    }
+
     if wants("locality") {
         log::info!("locality scenario: rack-aware vs rack-blind placement…");
         outputs.push(exp::locality_placement(
@@ -291,7 +313,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
 
 fn cmd_run(args: &[String]) -> Result<()> {
     let cli = Cli::new("slaq run — scheduling simulation")
-        .flag("policy", "slaq", "slaq|fair|fifo|static")
+        .flag("policy", "slaq", "slaq|slaq-det|fair|fifo|static|oasis|shockwave|learned")
         .flag("jobs", "60", "number of jobs")
         .flag("duration", "1200", "virtual seconds")
         .flag("seed", "20818", "workload seed")

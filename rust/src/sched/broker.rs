@@ -210,6 +210,53 @@ mod tests {
     }
 
     #[test]
+    fn zero_demand_shards_still_sum_to_capacity() {
+        // Shards that report no demand at all (empty digests, zero
+        // eligible jobs) must not break work conservation: the cores
+        // they cannot justify still land somewhere deterministic.
+        let shards = vec![
+            demand(0, &[], &[]),
+            demand(2, &[0.9, 0.4], &[0.1]),
+            demand(0, &[], &[]),
+        ];
+        let budgets = rebalance_budgets(10, &shards);
+        assert_eq!(budgets.iter().sum::<u32>(), 10);
+        // The demanding shard gets its floors + the one listed upgrade
+        // before the round-robin spread of the unclaimed cores.
+        assert!(budgets[1] >= 3, "demand curve ignored: {budgets:?}");
+    }
+
+    #[test]
+    fn all_empty_demand_digests_split_round_robin() {
+        // Every shard idle: the whole capacity is "unclaimed" and must
+        // be spread round-robin in shard id order, summing exactly.
+        let shards = vec![demand(0, &[], &[]); 3];
+        assert_eq!(rebalance_budgets(7, &shards), vec![3, 2, 2]);
+        assert_eq!(rebalance_budgets(3, &shards), vec![1, 1, 1]);
+        assert_eq!(rebalance_budgets(0, &shards), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn capacity_below_shard_count_still_sums_exactly() {
+        // Fewer cores than shards: some shards must end at zero, but
+        // Σ budgets == capacity holds and the cores go to the shards
+        // with the strongest first-core demand (scarce regime).
+        let shards = vec![
+            demand(4, &[0.2, 0.1, 0.05, 0.01], &[]),
+            demand(4, &[0.9, 0.8, 0.7, 0.6], &[]),
+            demand(4, &[0.5, 0.4, 0.3, 0.2], &[]),
+        ];
+        let budgets = rebalance_budgets(2, &shards);
+        assert_eq!(budgets.iter().sum::<u32>(), 2);
+        assert_eq!(budgets, vec![0, 2, 0], "top-2 first-core gains are both in shard 1");
+
+        // Same shape with no demand curves at all: round-robin still
+        // honors the exact-sum invariant below the shard count.
+        let idle = vec![demand(0, &[], &[]); 5];
+        assert_eq!(rebalance_budgets(2, &idle), vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
     fn finish_sorts_descending_and_drops_nans() {
         let mut d = ShardDemand {
             eligible_jobs: 4,

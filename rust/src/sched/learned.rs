@@ -1,0 +1,494 @@
+//! DL2-flavored learned allocator (after arXiv 1909.06040: "DL2: a
+//! deep-learning-driven scheduler for deep learning clusters").
+//!
+//! DL2's thesis is that an allocator can be *trained* from observed
+//! job behavior instead of trusting an analytic model. This
+//! reproduction keeps the learning loop but shrinks the learner to
+//! something that needs no new dependencies: one tiny online
+//! least-squares regressor per job over the job's cores→loss-delta
+//! history.
+//!
+//! * **Features.** For a grant of `c` cores, `x(c) = [ln(1 + c),
+//!   1 − 1/(1 + c)]` — two saturating, concave basis functions that
+//!   span the shapes SLAQ's predictor families (exponential /
+//!   sublinear convergence) produce.
+//! * **Training.** Each epoch the policy samples every job's gain view
+//!   at up to three distinct sizes (the previous grant, one core, and
+//!   the cap — the points the ledger/trace history actually exercises)
+//!   and folds `(x(c), gain(c))` into the job's exponentially-decayed
+//!   normal equations — the same closed-form machinery as
+//!   [`super::DecisionStats`], a ridge-regularized 2×2 solve.
+//! * **Allocation.** The greedy marginal search (floor + lazy
+//!   max-heap, as in [`super::SlaqPolicy`]'s from-scratch path) runs
+//!   on the *fitted* curves `ĝ(c) = max(0, w·x(c))`, not on the
+//!   oracle. Coefficients are clamped non-negative, so every fitted
+//!   curve is monotone concave and the lazy heap's correctness
+//!   argument carries over. Jobs whose model is still cold fall back
+//!   to the oracle for that epoch (cold-start honesty rather than
+//!   allocating on an unfitted regressor).
+//!
+//! Models of departed jobs are pruned each call, so the policy's
+//! memory tracks the active set. The decision is a pure function of
+//! the request stream and the policy's own regressor state — no
+//! wall-clock input — so runs are bit-reproducible and thread-count
+//! invariant. In the tournament this is the "trust the learner" pole:
+//! where the regressor fits well it matches SLAQ, where it
+//! extrapolates badly the quality cost is visible in the scores.
+
+use super::MarginalEntry as Entry;
+use super::{Allocation, GainModel as _, JobRequest, Policy, SchedContext};
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Per-observation decay of the normal equations: history shrinks by
+/// this factor per new sample, so drifting gain curves are tracked.
+const DECAY: f64 = 0.9;
+
+/// Feature map: two saturating concave basis functions of the grant.
+#[inline]
+fn features(cores: u32) -> (f64, f64) {
+    let c = cores as f64;
+    (c.ln_1p(), 1.0 - 1.0 / (1.0 + c))
+}
+
+/// One job's decayed least-squares regressor `gain ≈ w1·x1 + w2·x2`
+/// over the five running sums of the 2×2 normal equations.
+#[derive(Debug, Clone, Copy, Default)]
+struct JobModel {
+    x11: f64,
+    x12: f64,
+    x22: f64,
+    x1y: f64,
+    x2y: f64,
+    samples: u32,
+    /// Allocation call this job was last requested in (prune stamp).
+    last_seen: u64,
+}
+
+impl JobModel {
+    fn observe(&mut self, cores: u32, y: f64) {
+        if !y.is_finite() {
+            return;
+        }
+        let (x1, x2) = features(cores);
+        self.x11 = DECAY * self.x11 + x1 * x1;
+        self.x12 = DECAY * self.x12 + x1 * x2;
+        self.x22 = DECAY * self.x22 + x2 * x2;
+        self.x1y = DECAY * self.x1y + x1 * y;
+        self.x2y = DECAY * self.x2y + x2 * y;
+        self.samples += 1;
+    }
+
+    /// Fitted `(w1, w2)`, clamped non-negative so the predicted curve
+    /// stays monotone concave. `None` until at least two samples exist
+    /// (one point cannot pin two coefficients even with the ridge).
+    fn coefficients(&self) -> Option<(f64, f64)> {
+        if self.samples < 2 {
+            return None;
+        }
+        let ridge = 1e-6 * (self.x11 + self.x22) + 1e-12;
+        let (a, b, c) = (self.x11 + ridge, self.x12, self.x22 + ridge);
+        let det = a * c - b * b;
+        if det.is_nan() || det <= 0.0 {
+            return None;
+        }
+        let w1 = (self.x1y * c - self.x2y * b) / det;
+        let w2 = (self.x2y * a - self.x1y * b) / det;
+        Some((w1.max(0.0), w2.max(0.0)))
+    }
+}
+
+/// The learned-regressor policy.
+#[derive(Debug, Default)]
+pub struct LearnedPolicy {
+    /// Per-job regressors, keyed by stable job id.
+    models: HashMap<u64, JobModel>,
+    /// Allocation calls so far (the prune stamp epoch counter).
+    calls: u64,
+    /// Per-request fitted coefficients for the current call; `NaN`
+    /// marks a cold model (fall back to the oracle for that job).
+    w: Vec<(f64, f64)>,
+    /// Reusable search scratch, as in the SLAQ allocator.
+    gain_at: Vec<f64>,
+    up: BinaryHeap<Entry>,
+}
+
+impl LearnedPolicy {
+    /// New policy with no trained models.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jobs currently carrying a trained (or training) regressor.
+    pub fn tracked_jobs(&self) -> usize {
+        self.models.len()
+    }
+
+    /// The fitted predicted gain for job `id` at `cores`, if its
+    /// regressor has engaged (two or more samples and a solvable fit).
+    pub fn predicted_gain(&self, id: u64, cores: u32) -> Option<f64> {
+        let (w1, w2) = self.models.get(&id)?.coefficients()?;
+        let (x1, x2) = features(cores);
+        Some((w1 * x1 + w2 * x2).max(0.0))
+    }
+
+    /// Train on this epoch's visible history, fit every request's
+    /// coefficients into `self.w`, then run the greedy search over the
+    /// fitted curves. `prev(i)` supplies the previous grant (the
+    /// context's, when the caller has one).
+    fn allocate_with<G: Fn(usize, u32) -> f64, P: Fn(usize) -> Option<u32>>(
+        &mut self,
+        requests: &[JobRequest<'_>],
+        gain: G,
+        prev: P,
+        capacity: u32,
+        cores: &mut Vec<u32>,
+    ) {
+        let n = requests.len();
+        cores.clear();
+        cores.resize(n, 0);
+
+        // Training pass: sample each job's observable cores→loss-delta
+        // points (previous grant, single core, cap — deduplicated), fold
+        // them into the job's regressor, stamp, and prune departures.
+        self.calls += 1;
+        let calls = self.calls;
+        for (i, r) in requests.iter().enumerate() {
+            let model = self.models.entry(r.id).or_default();
+            model.last_seen = calls;
+            if r.max_cores == 0 {
+                continue;
+            }
+            let p = prev(i).unwrap_or(1).clamp(1, r.max_cores);
+            model.observe(p, gain(i, p));
+            if p != 1 {
+                model.observe(1, gain(i, 1));
+            }
+            if r.max_cores != p && r.max_cores != 1 {
+                model.observe(r.max_cores, gain(i, r.max_cores));
+            }
+        }
+        self.models.retain(|_, m| m.last_seen == calls);
+
+        if n == 0 || capacity == 0 {
+            return;
+        }
+
+        // Fit pass: one 2×2 solve per request into reusable scratch.
+        self.w.clear();
+        self.w.resize(n, (f64::NAN, f64::NAN));
+        for (i, r) in requests.iter().enumerate() {
+            if let Some(w) = self.models[&r.id].coefficients() {
+                self.w[i] = w;
+            }
+        }
+        let w = &self.w;
+        let pred = |i: usize, c: u32| -> f64 {
+            if c == 0 {
+                return 0.0;
+            }
+            let (w1, w2) = w[i];
+            if w1.is_nan() {
+                gain(i, c) // cold model: the oracle decides
+            } else {
+                let (x1, x2) = features(c);
+                (w1 * x1 + w2 * x2).max(0.0)
+            }
+        };
+
+        // Greedy search over the fitted curves: floor + lazy max-heap,
+        // the same structure as the SLAQ from-scratch path.
+        let mut remaining = capacity;
+        let floor_candidates: Vec<usize> =
+            (0..n).filter(|&i| requests[i].max_cores > 0).collect();
+        if (floor_candidates.len() as u32) <= remaining {
+            for &i in &floor_candidates {
+                cores[i] = 1;
+                remaining -= 1;
+            }
+        } else {
+            let mut by_gain: Vec<(f64, usize)> =
+                floor_candidates.iter().map(|&i| (pred(i, 1), i)).collect();
+            by_gain.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+            });
+            for &(_, i) in by_gain.iter().take(remaining as usize) {
+                cores[i] = 1;
+            }
+            return;
+        }
+
+        self.up.clear();
+        self.gain_at.clear();
+        self.gain_at.resize(n, 0.0);
+        for i in 0..n {
+            if cores[i] == 0 || cores[i] >= requests[i].max_cores {
+                continue;
+            }
+            let g1 = pred(i, cores[i]);
+            let g2 = pred(i, cores[i] + 1);
+            self.gain_at[i] = g1;
+            self.up.push(Entry { marginal: g2 - g1, idx: i, at_alloc: cores[i] });
+        }
+        while remaining > 0 {
+            let Some(top) = self.up.pop() else {
+                break; // every job capped
+            };
+            let i = top.idx;
+            if top.at_alloc != cores[i] {
+                if cores[i] < requests[i].max_cores {
+                    let m = pred(i, cores[i] + 1) - self.gain_at[i];
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                }
+                continue;
+            }
+            cores[i] += 1;
+            remaining -= 1;
+            self.gain_at[i] += top.marginal;
+            if cores[i] < requests[i].max_cores {
+                let m = pred(i, cores[i] + 1) - self.gain_at[i];
+                self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+            }
+        }
+    }
+}
+
+impl Policy for LearnedPolicy {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_with(
+            requests,
+            |i, c| requests[i].gain.gain(c),
+            |_| None,
+            capacity,
+            &mut out.cores,
+        );
+        out
+    }
+
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_ctx_into(ctx, requests, capacity, &mut out);
+        out
+    }
+
+    fn allocate_ctx_into(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        out: &mut Allocation,
+    ) {
+        // The context contributes the previous grants (training points)
+        // and the epoch's materialized gain table, when one was built.
+        if let Some(table) = ctx.gain_table().filter(|t| t.matches(requests)) {
+            self.allocate_with(
+                requests,
+                |i, c| table.gain(i, c),
+                |i| ctx.prev_grant(requests[i].id),
+                capacity,
+                &mut out.cores,
+            )
+        } else {
+            self.allocate_with(
+                requests,
+                |i, c| requests[i].gain.gain(c),
+                |i| ctx.prev_grant(requests[i].id),
+                capacity,
+                &mut out.cores,
+            )
+        }
+    }
+
+    fn wants_gain_table(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+    use crate::testkit::forall;
+
+    fn reqs<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+        gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_zero_capacity() {
+        let mut p = LearnedPolicy::new();
+        assert_eq!(p.allocate(&[], 10).cores.len(), 0);
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        assert_eq!(p.allocate(&r, 0).total(), 0);
+        // Even a zero-capacity epoch trains on the visible history.
+        assert_eq!(p.tracked_jobs(), 1);
+    }
+
+    #[test]
+    fn invariants_and_work_conservation_hold() {
+        forall("learned invariants + work conservation", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.0, 5.0), rate: g.f64_in(0.05, 1.0) })
+                .collect();
+            let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 12) as u32).collect();
+            let rs = reqs(&gains, &caps);
+            let mut p = LearnedPolicy::new();
+            for _ in 0..4 {
+                let capacity = g.usize_in(0, 80) as u32;
+                let a = p.allocate(&rs, capacity);
+                check_invariants(&rs, capacity, &a);
+                if capacity >= n as u32 {
+                    check_work_conserving(&rs, capacity, &a);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn regressor_recovers_a_curve_in_its_span() {
+        // rate = 1.0 makes the oracle exactly scale · x2(c): after one
+        // training call the ridge least squares must reproduce it to
+        // numerical precision across the whole range.
+        let g = ConcaveGain { scale: 3.0, rate: 1.0 };
+        let rs = vec![JobRequest { id: 7, max_cores: 16, gain: &g }];
+        let mut p = LearnedPolicy::new();
+        let _ = p.allocate(&rs, 16);
+        for c in [1u32, 2, 5, 16] {
+            let fitted = p.predicted_gain(7, c).expect("model engaged after two samples");
+            let oracle = g.gain(c);
+            assert!(
+                (fitted - oracle).abs() <= 1e-3 * oracle.max(1e-9),
+                "fit diverged at {c} cores: fitted {fitted} vs oracle {oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn trained_policy_prefers_high_gain_jobs() {
+        let lo = ConcaveGain { scale: 0.5, rate: 1.0 };
+        let hi = ConcaveGain { scale: 10.0, rate: 1.0 };
+        let rs = vec![
+            JobRequest { id: 0, max_cores: 32, gain: &lo },
+            JobRequest { id: 1, max_cores: 32, gain: &hi },
+        ];
+        let mut p = LearnedPolicy::new();
+        let mut last = Allocation::default();
+        for _ in 0..3 {
+            last = p.allocate(&rs, 24);
+            check_invariants(&rs, 24, &last);
+        }
+        assert!(last.cores[1] > 2 * last.cores[0], "{:?}", last.cores);
+        let ph = p.predicted_gain(1, 32).unwrap();
+        let pl = p.predicted_gain(0, 32).unwrap();
+        assert!(ph > pl, "fitted ranking inverted: hi {ph} vs lo {pl}");
+    }
+
+    #[test]
+    fn departed_jobs_are_pruned() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let ab = vec![
+            JobRequest { id: 1, max_cores: 4, gain: &g },
+            JobRequest { id: 2, max_cores: 4, gain: &g },
+        ];
+        let mut p = LearnedPolicy::new();
+        let _ = p.allocate(&ab, 8);
+        assert_eq!(p.tracked_jobs(), 2);
+        let bc = vec![
+            JobRequest { id: 2, max_cores: 4, gain: &g },
+            JobRequest { id: 3, max_cores: 4, gain: &g },
+        ];
+        let _ = p.allocate(&bc, 8);
+        assert_eq!(p.tracked_jobs(), 2);
+        assert!(p.predicted_gain(1, 2).is_none(), "departed job's model must be pruned");
+    }
+
+    #[test]
+    fn runs_are_bit_reproducible() {
+        let gains: Vec<ConcaveGain> = (0..12)
+            .map(|i| ConcaveGain { scale: 0.4 + (i % 5) as f64, rate: 0.1 + 0.05 * (i % 3) as f64 })
+            .collect();
+        let caps: Vec<u32> = (0..12).map(|i| 4 + (i % 7) as u32).collect();
+        let rs = reqs(&gains, &caps);
+        let mut p = LearnedPolicy::new();
+        let mut q = LearnedPolicy::new();
+        let mut ctx_p = SchedContext::new();
+        let mut ctx_q = SchedContext::new();
+        for capacity in [40u32, 12, 80, 7, 40] {
+            let a = p.allocate_ctx(&ctx_p, &rs, capacity);
+            let b = q.allocate_ctx(&ctx_q, &rs, capacity);
+            assert_eq!(a.cores, b.cores, "identical streams must give identical grants");
+            for r in &rs {
+                assert_eq!(
+                    p.predicted_gain(r.id, r.max_cores).map(f64::to_bits),
+                    q.predicted_gain(r.id, r.max_cores).map(f64::to_bits),
+                    "regressor state diverged for job {}",
+                    r.id
+                );
+            }
+            ctx_p.record(&rs, &a);
+            ctx_q.record(&rs, &b);
+        }
+    }
+
+    #[test]
+    fn gain_table_view_matches_direct_oracle_calls() {
+        let gains: Vec<ConcaveGain> =
+            (0..10).map(|i| ConcaveGain { scale: 0.5 + (i % 4) as f64, rate: 0.2 }).collect();
+        let caps: Vec<u32> = (0..10).map(|i| 3 + (i % 5) as u32).collect();
+        let rs = reqs(&gains, &caps);
+
+        let mut table_ctx = SchedContext::new();
+        table_ctx.gain_table_mut().build(&rs);
+        let oracle_ctx = SchedContext::new();
+
+        let mut via_table = LearnedPolicy::new();
+        let mut via_oracle = LearnedPolicy::new();
+        for capacity in [30u32, 9, 60] {
+            let a = via_table.allocate_ctx(&table_ctx, &rs, capacity);
+            let b = via_oracle.allocate_ctx(&oracle_ctx, &rs, capacity);
+            assert_eq!(a.cores, b.cores, "table view diverged from oracle view");
+        }
+    }
+
+    #[test]
+    fn allocate_ctx_into_reuses_the_buffer_bit_identically() {
+        forall("learned allocate_ctx_into ≡ allocate_ctx", 40, |g| {
+            let n = g.usize_in(1, 24);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.1, 8.0), rate: g.f64_in(0.05, 0.9) })
+                .collect();
+            let mut fresh = LearnedPolicy::new();
+            let mut reused = LearnedPolicy::new();
+            let mut ctx_a = SchedContext::new();
+            let mut ctx_b = SchedContext::new();
+            let mut out = Allocation { cores: vec![99; n + 7] };
+            for _ in 0..4 {
+                let live = g.usize_in(1, n);
+                let caps: Vec<u32> = (0..live).map(|_| g.usize_in(0, 9) as u32).collect();
+                let rs = reqs(&gains[..live], &caps);
+                let capacity = g.usize_in(0, 4 * live) as u32;
+                let a = fresh.allocate_ctx(&ctx_a, &rs, capacity);
+                reused.allocate_ctx_into(&ctx_b, &rs, capacity, &mut out);
+                assert_eq!(a, out, "out-param grant diverged from the allocating path");
+                ctx_a.record(&rs, &a);
+                ctx_b.record(&rs, &out);
+            }
+        });
+    }
+}

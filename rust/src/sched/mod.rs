@@ -44,20 +44,74 @@
 //!   paper compares against; the default in YARN/Mesos-style schedulers).
 //! * [`FifoPolicy`] — arrival-order allocation up to each job's cap.
 //! * [`StaticPolicy`] — rigid equal split (not work conserving).
+//! * [`OasisPolicy`] — OASiS-style online primal-dual admission and
+//!   right-sizing against a utilization-driven core price
+//!   (arXiv 1801.00936), with a work-conserving clearing pass.
+//! * [`ShockwavePolicy`] — dynamic fairness over *long-run quality
+//!   progress*: the next core goes to the job furthest behind in
+//!   cumulative predicted loss reduction, not instantaneous cores.
+//! * [`LearnedPolicy`] — DL2-flavored allocator (arXiv 1909.06040): a
+//!   per-job online least-squares regressor over cores→loss-delta
+//!   history drives the greedy search instead of the oracle itself.
 
 mod broker;
 mod fair;
 mod fifo;
+mod learned;
+mod oasis;
+mod shockwave;
 mod slaq;
 mod static_split;
 
 pub use broker::{rebalance_budgets, ShardDemand};
 pub use fair::FairPolicy;
 pub use fifo::FifoPolicy;
+pub use learned::LearnedPolicy;
+pub use oasis::OasisPolicy;
+pub use shockwave::ShockwavePolicy;
 pub use slaq::SlaqPolicy;
 pub use static_split::StaticPolicy;
 
+use std::cmp::Ordering;
 use std::collections::HashMap;
+
+/// Shared heap entry for the gain-driven policies' lazy marginal
+/// searches: the marginal gain of one single-core move for request
+/// `idx`, stamped with the allocation it was computed at so stale
+/// entries can be detected and re-evaluated on pop instead of
+/// rebuilding the heap after every grant.
+///
+/// Max-heap on `marginal`, NaN-safe (NaN sorts last), with a
+/// deterministic index tie-break so equal marginals pop in a fixed
+/// order regardless of insertion history — a requirement for the
+/// bit-reproducibility guarantees of the deterministic policies.
+#[derive(Debug)]
+pub(crate) struct MarginalEntry {
+    pub(crate) marginal: f64,
+    pub(crate) idx: usize,
+    /// The allocation `marginal` was computed at (staleness stamp).
+    pub(crate) at_alloc: u32,
+}
+
+impl PartialEq for MarginalEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.marginal == other.marginal
+    }
+}
+impl Eq for MarginalEntry {}
+impl PartialOrd for MarginalEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for MarginalEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.marginal
+            .partial_cmp(&other.marginal)
+            .unwrap_or(Ordering::Less)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
 
 /// Predicted quality gain as a function of allocated cores.
 ///
@@ -792,6 +846,9 @@ pub fn policy_by_name(name: &str) -> Option<Box<dyn Policy>> {
         "fair" => Some(Box::new(FairPolicy::new())),
         "fifo" => Some(Box::new(FifoPolicy::new())),
         "static" => Some(Box::new(StaticPolicy::new())),
+        "oasis" => Some(Box::new(OasisPolicy::new())),
+        "shockwave" => Some(Box::new(ShockwavePolicy::new())),
+        "learned" => Some(Box::new(LearnedPolicy::new())),
         _ => None,
     }
 }
@@ -850,7 +907,9 @@ mod tests {
 
     #[test]
     fn policy_by_name_resolves() {
-        for n in ["slaq", "slaq-det", "fair", "fifo", "static"] {
+        for n in
+            ["slaq", "slaq-det", "fair", "fifo", "static", "oasis", "shockwave", "learned"]
+        {
             assert_eq!(policy_by_name(n).unwrap().name(), n);
         }
         assert!(policy_by_name("nope").is_none());

@@ -1,0 +1,486 @@
+//! OASiS-style online primal-dual allocator (after arXiv 1801.00936:
+//! "Online Job Scheduling in Distributed Machine Learning Clusters").
+//!
+//! OASiS prices cluster resources with dual variables and admits each
+//! arriving job at the size whose marginal utility still beats the
+//! price. This reproduction keeps the primal-dual skeleton but runs it
+//! epoch-synchronously against SLAQ's predicted-quality gain curves
+//! (the same oracles / materialized [`super::GainTable`] the SLAQ
+//! allocator reads):
+//!
+//! 1. **Pricing (dual state).** One marginal core price, following
+//!    OASiS's exponential price function `p(u) = lo · (hi / lo)^u`
+//!    where `u` is the previous epoch's utilization and `[lo, hi]`
+//!    track the smallest/largest positive marginal gains recently
+//!    observed (exponentially smoothed, so the bounds follow the
+//!    workload). An idle cluster prices cores near the weakest
+//!    observed marginal — almost any job clears; a saturated one near
+//!    the strongest — only the best jobs do. With no history yet the
+//!    price is zero (cold-start optimism: admit everything, let the
+//!    clearing pass arbitrate).
+//! 2. **Admission / right-sizing (primal step).** Each job is granted
+//!    the largest size whose *next* core still clears the price — a
+//!    binary search on the job's non-increasing marginal curve. A job
+//!    whose very first core is under water is not admitted at all
+//!    (no starvation floor: admission control is the point).
+//! 3. **Clearing.** The priced demand rarely lands exactly on
+//!    capacity. If it oversubscribes, the cheapest held cores are shed
+//!    (lazy min-heap over last-core marginals) — the price was too
+//!    low this epoch. If capacity is left over, it is spent greedily
+//!    on the best remaining marginals (lazy max-heap) so the policy
+//!    stays work-conserving instead of idling cores behind an
+//!    overestimated price.
+//!
+//! The decision is a pure function of the request stream and the
+//! policy's own price state — never of wall-clock measurements — so
+//! runs are bit-reproducible and thread-count invariant.
+//!
+//! Invariant (asserted in tests): [`OasisPolicy::price`] is always
+//! finite and `>= 0` — both bounds only ever absorb positive
+//! marginals, and the price interpolates between them.
+
+use super::MarginalEntry as Entry;
+use super::{Allocation, GainModel as _, JobRequest, Policy, SchedContext};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Smoothing factor for the observed marginal-utility bounds: per
+/// epoch, `bound ← (1 − ALPHA) · bound + ALPHA · observed`.
+const ALPHA: f64 = 0.5;
+
+/// The OASiS-flavored online primal-dual policy.
+#[derive(Debug)]
+pub struct OasisPolicy {
+    /// Current marginal core price (dual variable). Always `>= 0`.
+    price: f64,
+    /// Smoothed lower bound on positive observed marginal gains.
+    lo: f64,
+    /// Smoothed upper bound on positive observed marginal gains.
+    hi: f64,
+    /// True once `lo`/`hi` hold at least one epoch's observations.
+    bounds_set: bool,
+    /// Previous epoch's utilization (granted / capacity), in `[0, 1]`.
+    util: f64,
+    /// Reusable top-up heap (next-core marginals).
+    up: BinaryHeap<Entry>,
+    /// Reusable shed heap (last-held-core marginals).
+    down: BinaryHeap<Reverse<Entry>>,
+}
+
+impl Default for OasisPolicy {
+    fn default() -> Self {
+        Self {
+            price: 0.0,
+            lo: 0.0,
+            hi: 0.0,
+            bounds_set: false,
+            util: 0.0,
+            up: BinaryHeap::new(),
+            down: BinaryHeap::new(),
+        }
+    }
+}
+
+impl OasisPolicy {
+    /// New allocator with a cold (zero) price.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current marginal core price (the dual variable the next
+    /// epoch's admission decisions will clear against). Always finite
+    /// and non-negative.
+    pub fn price(&self) -> f64 {
+        self.price
+    }
+
+    /// The allocation pipeline over an arbitrary gain view (oracle
+    /// calls or O(1) table lookups): price-thresholded right-sizing,
+    /// then shed/top-up clearing, then the dual price update.
+    fn allocate_with<G: Fn(usize, u32) -> f64>(
+        &mut self,
+        requests: &[JobRequest<'_>],
+        gain: G,
+        capacity: u32,
+        cores: &mut Vec<u32>,
+    ) {
+        let n = requests.len();
+        cores.clear();
+        cores.resize(n, 0);
+        if n == 0 || capacity == 0 {
+            // A capacity-less epoch says nothing about demand; leave the
+            // price state untouched.
+            return;
+        }
+
+        let price = self.price;
+        let mut obs_lo = f64::INFINITY;
+        let mut obs_hi = 0.0f64;
+        let mut observe = |m: f64| {
+            if m > 0.0 && m.is_finite() {
+                obs_lo = obs_lo.min(m);
+                obs_hi = obs_hi.max(m);
+            }
+        };
+
+        // Phase 1 — admission / right-sizing: the largest size whose
+        // next core still clears the price. Marginals are non-increasing
+        // for the (concave) predicted-gain curves, so binary search.
+        let mut total: u64 = 0;
+        for (i, r) in requests.iter().enumerate() {
+            if r.max_cores == 0 {
+                continue;
+            }
+            let (mut lo_c, mut hi_c) = (0u32, r.max_cores);
+            while lo_c < hi_c {
+                let mid = lo_c + (hi_c - lo_c + 1) / 2;
+                let m = gain(i, mid) - gain(i, mid - 1);
+                observe(m);
+                if m >= price {
+                    lo_c = mid;
+                } else {
+                    hi_c = mid - 1;
+                }
+            }
+            cores[i] = lo_c;
+            total += u64::from(lo_c);
+        }
+
+        let cap = u64::from(capacity);
+
+        // Phase 2a — shed: the price was too low and demand oversubscribed
+        // capacity; release the cheapest held cores first.
+        if total > cap {
+            self.down.clear();
+            for (i, &c) in cores.iter().enumerate() {
+                if c > 0 {
+                    let m = gain(i, c) - gain(i, c - 1);
+                    self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: c }));
+                }
+            }
+            while total > cap {
+                let Some(Reverse(e)) = self.down.pop() else {
+                    // Unreachable for well-formed requests (every held core
+                    // keeps a live entry), but never loop forever on a
+                    // pathological oracle.
+                    break;
+                };
+                let i = e.idx;
+                if cores[i] == 0 {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    let m = gain(i, cores[i]) - gain(i, cores[i] - 1);
+                    self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                    continue;
+                }
+                cores[i] -= 1;
+                total -= 1;
+                if cores[i] > 0 {
+                    let m = gain(i, cores[i]) - gain(i, cores[i] - 1);
+                    observe(m);
+                    self.down.push(Reverse(Entry { marginal: m, idx: i, at_alloc: cores[i] }));
+                }
+            }
+        }
+
+        // Phase 2b — top-up: the price left capacity idle; spend it on
+        // the best remaining marginals (work conservation).
+        if total < cap {
+            self.up.clear();
+            for (i, r) in requests.iter().enumerate() {
+                if cores[i] < r.max_cores {
+                    let m = gain(i, cores[i] + 1) - gain(i, cores[i]);
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                }
+            }
+            while total < cap {
+                let Some(e) = self.up.pop() else {
+                    break; // every job capped
+                };
+                let i = e.idx;
+                if cores[i] >= requests[i].max_cores {
+                    continue;
+                }
+                if e.at_alloc != cores[i] {
+                    let m = gain(i, cores[i] + 1) - gain(i, cores[i]);
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                    continue;
+                }
+                cores[i] += 1;
+                total += 1;
+                if cores[i] < requests[i].max_cores {
+                    let m = gain(i, cores[i] + 1) - gain(i, cores[i]);
+                    observe(m);
+                    self.up.push(Entry { marginal: m, idx: i, at_alloc: cores[i] });
+                }
+            }
+        }
+
+        // Phase 3 — dual update: fold this epoch's observed marginal
+        // bounds into the smoothed [lo, hi] band and re-price against
+        // the utilization the clearing pass actually reached.
+        if obs_hi > 0.0 && obs_lo.is_finite() {
+            if self.bounds_set {
+                self.lo = (1.0 - ALPHA) * self.lo + ALPHA * obs_lo;
+                self.hi = (1.0 - ALPHA) * self.hi + ALPHA * obs_hi;
+            } else {
+                self.lo = obs_lo;
+                self.hi = obs_hi;
+                self.bounds_set = true;
+            }
+        }
+        self.util = total as f64 / cap as f64;
+        self.price = if !self.bounds_set {
+            0.0
+        } else if self.lo > 0.0 && self.hi >= self.lo {
+            (self.lo * (self.hi / self.lo).powf(self.util)).max(0.0)
+        } else {
+            // Degenerate band (lo underflowed to 0): linear fallback.
+            (self.hi * self.util).max(0.0)
+        };
+        debug_assert!(
+            self.price.is_finite() && self.price >= 0.0,
+            "price invariant violated: {}",
+            self.price
+        );
+    }
+}
+
+impl Policy for OasisPolicy {
+    fn name(&self) -> &'static str {
+        "oasis"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity, &mut out.cores);
+        out
+    }
+
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_ctx_into(ctx, requests, capacity, &mut out);
+        out
+    }
+
+    fn allocate_ctx_into(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        out: &mut Allocation,
+    ) {
+        // The epoch-to-epoch continuity lives in the policy's own price
+        // state, not in the previous grant — the context only supplies
+        // the epoch's materialized gain table when one was built.
+        if let Some(table) = ctx.gain_table().filter(|t| t.matches(requests)) {
+            self.allocate_with(requests, |i, c| table.gain(i, c), capacity, &mut out.cores)
+        } else {
+            self.allocate_with(
+                requests,
+                |i, c| requests[i].gain.gain(c),
+                capacity,
+                &mut out.cores,
+            )
+        }
+    }
+
+    fn wants_gain_table(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+    use crate::testkit::forall;
+
+    fn reqs<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+        gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_zero_capacity() {
+        let mut p = OasisPolicy::new();
+        assert_eq!(p.allocate(&[], 10).cores.len(), 0);
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        assert_eq!(p.allocate(&r, 0).total(), 0);
+        assert_eq!(p.price(), 0.0, "no demand observed yet");
+    }
+
+    #[test]
+    fn invariants_and_work_conservation_hold() {
+        forall("oasis invariants + work conservation", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.0, 5.0), rate: g.f64_in(0.05, 1.0) })
+                .collect();
+            let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 12) as u32).collect();
+            let rs = reqs(&gains, &caps);
+            let mut p = OasisPolicy::new();
+            // Run several epochs so the price actually engages; the
+            // clearing pass must keep every epoch work-conserving.
+            for _ in 0..4 {
+                let capacity = g.usize_in(0, 80) as u32;
+                let a = p.allocate(&rs, capacity);
+                check_invariants(&rs, capacity, &a);
+                if capacity > 0 {
+                    check_work_conserving(&rs, capacity, &a);
+                }
+                assert!(
+                    p.price().is_finite() && p.price() >= 0.0,
+                    "price invariant violated: {}",
+                    p.price()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn scarce_capacity_flows_to_high_marginal_jobs() {
+        let lo = ConcaveGain { scale: 0.1, rate: 0.5 };
+        let hi = ConcaveGain { scale: 10.0, rate: 0.5 };
+        let rs = vec![
+            JobRequest { id: 0, max_cores: 16, gain: &lo },
+            JobRequest { id: 1, max_cores: 16, gain: &hi },
+        ];
+        let mut p = OasisPolicy::new();
+        let a = p.allocate(&rs, 8);
+        check_invariants(&rs, 8, &a);
+        assert_eq!(a.total(), 8);
+        assert!(a.cores[1] > a.cores[0], "{:?}", a.cores);
+    }
+
+    #[test]
+    fn price_rises_under_contention_and_falls_when_slack_returns() {
+        let gains: Vec<ConcaveGain> =
+            (0..8).map(|i| ConcaveGain { scale: 1.0 + i as f64, rate: 0.3 }).collect();
+        let rs = reqs(&gains, &[32; 8]);
+
+        // Contended: demand (8 × 32) dwarfs 16 cores — utilization pins
+        // at 1, so the price converges toward the top of the band.
+        let mut p = OasisPolicy::new();
+        for _ in 0..8 {
+            let a = p.allocate(&rs, 16);
+            assert_eq!(a.total(), 16);
+        }
+        let contended = p.price();
+        assert!(contended > 0.0, "contention must produce a positive price");
+
+        // Slack epochs on the same policy: utilization collapses and the
+        // price must come back down.
+        for _ in 0..8 {
+            let a = p.allocate(&rs, 4096);
+            check_work_conserving(&rs, 4096, &a);
+        }
+        let relaxed = p.price();
+        assert!(
+            relaxed < contended,
+            "price must relax with utilization: contended {contended} vs relaxed {relaxed}"
+        );
+        assert!(relaxed >= 0.0);
+    }
+
+    #[test]
+    fn admission_prices_out_weak_jobs_under_sustained_contention() {
+        // One strong job, many near-converged ones. Once the price has
+        // risen, the weak jobs' first cores no longer clear it — they are
+        // only served by the work-conserving top-up *after* the strong
+        // job is saturated, so the strong job holds its cap.
+        let strong = ConcaveGain { scale: 50.0, rate: 0.5 };
+        let weak = ConcaveGain { scale: 0.01, rate: 0.5 };
+        let mut gains: Vec<&ConcaveGain> = vec![&strong];
+        gains.extend(std::iter::repeat(&weak).take(7));
+        let rs: Vec<JobRequest<'_>> = gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: 8, gain: *g })
+            .collect();
+        let mut p = OasisPolicy::new();
+        let mut last = Allocation::default();
+        for _ in 0..8 {
+            last = p.allocate(&rs, 12);
+            check_invariants(&rs, 12, &last);
+            assert_eq!(last.total(), 12);
+        }
+        assert_eq!(last.cores[0], 8, "strong job must saturate: {:?}", last.cores);
+    }
+
+    #[test]
+    fn runs_are_bit_reproducible() {
+        let gains: Vec<ConcaveGain> = (0..12)
+            .map(|i| ConcaveGain { scale: 0.4 + (i % 5) as f64, rate: 0.1 + 0.05 * (i % 3) as f64 })
+            .collect();
+        let caps: Vec<u32> = (0..12).map(|i| 4 + (i % 7) as u32).collect();
+        let rs = reqs(&gains, &caps);
+        let mut p = OasisPolicy::new();
+        let mut q = OasisPolicy::new();
+        for capacity in [40u32, 12, 80, 7, 40] {
+            let a = p.allocate(&rs, capacity);
+            let b = q.allocate(&rs, capacity);
+            assert_eq!(a.cores, b.cores, "identical streams must give identical grants");
+            assert_eq!(p.price().to_bits(), q.price().to_bits(), "price state diverged");
+        }
+    }
+
+    #[test]
+    fn gain_table_view_matches_direct_oracle_calls() {
+        let gains: Vec<ConcaveGain> = (0..10)
+            .map(|i| ConcaveGain { scale: 0.5 + (i % 4) as f64, rate: 0.2 })
+            .collect();
+        let caps: Vec<u32> = (0..10).map(|i| 3 + (i % 5) as u32).collect();
+        let rs = reqs(&gains, &caps);
+
+        let mut table_ctx = SchedContext::new();
+        table_ctx.gain_table_mut().build(&rs);
+        let oracle_ctx = SchedContext::new();
+
+        let mut via_table = OasisPolicy::new();
+        let mut via_oracle = OasisPolicy::new();
+        for capacity in [30u32, 9, 60] {
+            let a = via_table.allocate_ctx(&table_ctx, &rs, capacity);
+            let b = via_oracle.allocate_ctx(&oracle_ctx, &rs, capacity);
+            assert_eq!(a.cores, b.cores, "table view diverged from oracle view");
+            assert_eq!(via_table.price().to_bits(), via_oracle.price().to_bits());
+        }
+    }
+
+    #[test]
+    fn allocate_ctx_into_reuses_the_buffer_bit_identically() {
+        forall("oasis allocate_ctx_into ≡ allocate_ctx", 40, |g| {
+            let n = g.usize_in(1, 24);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.1, 8.0), rate: g.f64_in(0.05, 0.9) })
+                .collect();
+            let mut fresh = OasisPolicy::new();
+            let mut reused = OasisPolicy::new();
+            let mut ctx_a = SchedContext::new();
+            let mut ctx_b = SchedContext::new();
+            let mut out = Allocation { cores: vec![99; n + 7] };
+            for _ in 0..4 {
+                let live = g.usize_in(1, n);
+                let caps: Vec<u32> = (0..live).map(|_| g.usize_in(0, 9) as u32).collect();
+                let rs = reqs(&gains[..live], &caps);
+                let capacity = g.usize_in(0, 4 * live) as u32;
+                let a = fresh.allocate_ctx(&ctx_a, &rs, capacity);
+                reused.allocate_ctx_into(&ctx_b, &rs, capacity, &mut out);
+                assert_eq!(a, out, "out-param grant diverged from the allocating path");
+                assert_eq!(fresh.price().to_bits(), reused.price().to_bits());
+                ctx_a.record(&rs, &a);
+                ctx_b.record(&rs, &out);
+            }
+        });
+    }
+}

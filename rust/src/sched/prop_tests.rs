@@ -41,7 +41,12 @@ fn all_policies_uphold_invariants() {
         let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 14) as u32).collect();
         let reqs = build(&gains, &caps);
         let capacity = g.usize_in(0, 140) as u32;
-        for name in ["slaq", "fair", "fifo", "static"] {
+        // The full registry: the safety invariants are unconditional,
+        // whatever the policy's objective (work conservation is the
+        // conditional claim and keeps its own per-policy properties).
+        for name in
+            ["slaq", "slaq-det", "fair", "fifo", "static", "oasis", "shockwave", "learned"]
+        {
             let mut p = policy_by_name(name).unwrap();
             let a = p.allocate(&reqs, capacity);
             check_invariants(&reqs, capacity, &a);

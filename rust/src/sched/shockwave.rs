@@ -1,0 +1,458 @@
+//! Shockwave-flavored dynamic fairness over *quality progress* (after
+//! arXiv 2210.00093: efficiency-fairness co-optimization for elastic ML
+//! jobs).
+//!
+//! Classic fair share equalizes *instantaneous cores*; Shockwave's
+//! observation is that what tenants actually experience is long-run
+//! *progress*. This policy transplants that idea onto SLAQ's quality
+//! currency: it tracks, per job, the cumulative predicted normalized
+//! loss reduction delivered so far, and each epoch water-fills cores
+//! toward the jobs furthest behind on that account:
+//!
+//! 1. every eligible job gets the one-core starvation floor (when
+//!    capacity cannot cover the floors, the scarce cores go to the
+//!    furthest-behind jobs, ids breaking ties);
+//! 2. each remaining core goes to the job whose cumulative progress —
+//!    account balance plus what this epoch's grant would already
+//!    deliver — is lowest (a min-heap water-fill; deterministic id
+//!    tie-break);
+//! 3. after the grant, each job's account absorbs the predicted gain
+//!    of its granted cores, and accounts of departed jobs are pruned.
+//!
+//! The result is work-conserving (capacity exhausted or every job
+//! capped) and a pure function of the request stream and the policy's
+//! own progress ledger — no wall-clock input — so runs are
+//! bit-reproducible and thread-count invariant. Against SLAQ in the
+//! tournament it is the fairness-first pole: it sacrifices aggregate
+//! quality to keep per-job quality progress even.
+
+use super::{Allocation, GainModel as _, JobRequest, Policy, SchedContext};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Water-fill heap entry: job `idx`'s cumulative quality progress if
+/// its current grant sticks. Min-heap via [`Reverse`]; ascending by
+/// `key` with a deterministic job-id tie-break (NaN sorts last).
+#[derive(Debug)]
+struct ProgEntry {
+    key: f64,
+    idx: usize,
+    id: u64,
+}
+
+impl PartialEq for ProgEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.id == other.id
+    }
+}
+impl Eq for ProgEntry {}
+impl PartialOrd for ProgEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ProgEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key
+            .partial_cmp(&other.key)
+            .unwrap_or(Ordering::Greater)
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+/// One job's progress account.
+#[derive(Debug, Clone, Copy, Default)]
+struct ProgressCell {
+    /// Cumulative predicted normalized loss reduction delivered.
+    delivered: f64,
+    /// Allocation call this job was last requested in (prune stamp).
+    last_seen: u64,
+}
+
+/// The quality-progress-equalizing policy.
+#[derive(Debug, Default)]
+pub struct ShockwavePolicy {
+    /// Per-job progress ledger, keyed by stable job id.
+    progress: HashMap<u64, ProgressCell>,
+    /// Allocation calls so far (the prune stamp epoch counter).
+    calls: u64,
+    /// Reusable water-fill heap.
+    heap: BinaryHeap<Reverse<ProgEntry>>,
+    /// Reusable scarce-floor ordering scratch: `(progress, id, idx)`.
+    order: Vec<(f64, u64, usize)>,
+}
+
+impl ShockwavePolicy {
+    /// New policy with an empty progress ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jobs currently carried in the progress ledger (active jobs only —
+    /// departed jobs are pruned on the next allocation).
+    pub fn tracked_jobs(&self) -> usize {
+        self.progress.len()
+    }
+
+    /// Cumulative predicted quality progress delivered to job `id`, if
+    /// it is still tracked.
+    pub fn quality_progress(&self, id: u64) -> Option<f64> {
+        self.progress.get(&id).map(|c| c.delivered)
+    }
+
+    /// The water-fill over an arbitrary gain view (oracle calls or O(1)
+    /// table lookups), plus the ledger update.
+    fn allocate_with<G: Fn(usize, u32) -> f64>(
+        &mut self,
+        requests: &[JobRequest<'_>],
+        gain: G,
+        capacity: u32,
+        cores: &mut Vec<u32>,
+    ) {
+        let n = requests.len();
+        cores.clear();
+        cores.resize(n, 0);
+
+        // Stamp every requested job's account (creating fresh zero
+        // accounts for arrivals), then prune departed jobs so the ledger
+        // tracks the active set, not history.
+        self.calls += 1;
+        let calls = self.calls;
+        for r in requests {
+            self.progress.entry(r.id).or_default().last_seen = calls;
+        }
+        self.progress.retain(|_, c| c.last_seen == calls);
+
+        if n == 0 || capacity == 0 {
+            return;
+        }
+
+        let eligible = requests.iter().filter(|r| r.max_cores > 0).count() as u32;
+
+        if capacity < eligible {
+            // Scarce-floor regime: one core each to the `capacity`
+            // furthest-behind jobs (progress ascending, id tie-break).
+            self.order.clear();
+            for (i, r) in requests.iter().enumerate() {
+                if r.max_cores == 0 {
+                    continue;
+                }
+                let p = self.progress[&r.id].delivered;
+                self.order.push((p, r.id, i));
+            }
+            self.order.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap_or(Ordering::Equal).then_with(|| a.1.cmp(&b.1))
+            });
+            for &(_, _, i) in self.order.iter().take(capacity as usize) {
+                cores[i] = 1;
+            }
+        } else {
+            // Floor everyone, then water-fill the rest toward the lowest
+            // cumulative progress. Each job keeps exactly one live heap
+            // entry (re-pushed only after its own pop), so no staleness
+            // stamp is needed.
+            let mut remaining = capacity - eligible;
+            self.heap.clear();
+            for (i, r) in requests.iter().enumerate() {
+                if r.max_cores == 0 {
+                    continue;
+                }
+                cores[i] = 1;
+                let key = self.progress[&r.id].delivered + gain(i, 1);
+                self.heap.push(Reverse(ProgEntry { key, idx: i, id: r.id }));
+            }
+            while remaining > 0 {
+                let Some(Reverse(e)) = self.heap.pop() else {
+                    break; // every job capped
+                };
+                let i = e.idx;
+                if cores[i] >= requests[i].max_cores {
+                    continue;
+                }
+                cores[i] += 1;
+                remaining -= 1;
+                if cores[i] < requests[i].max_cores {
+                    let key = self.progress[&requests[i].id].delivered + gain(i, cores[i]);
+                    self.heap.push(Reverse(ProgEntry { key, idx: i, id: e.id }));
+                }
+            }
+        }
+
+        // Settle the ledger: each job's account absorbs the predicted
+        // gain of the cores it was just granted.
+        for (i, r) in requests.iter().enumerate() {
+            if cores[i] == 0 {
+                continue;
+            }
+            let g = gain(i, cores[i]);
+            if g.is_finite() && g > 0.0 {
+                self.progress.get_mut(&r.id).expect("stamped above").delivered += g;
+            }
+        }
+    }
+}
+
+impl Policy for ShockwavePolicy {
+    fn name(&self) -> &'static str {
+        "shockwave"
+    }
+
+    fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity, &mut out.cores);
+        out
+    }
+
+    fn allocate_ctx(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+    ) -> Allocation {
+        let mut out = Allocation::default();
+        self.allocate_ctx_into(ctx, requests, capacity, &mut out);
+        out
+    }
+
+    fn allocate_ctx_into(
+        &mut self,
+        ctx: &SchedContext,
+        requests: &[JobRequest<'_>],
+        capacity: u32,
+        out: &mut Allocation,
+    ) {
+        // Epoch-to-epoch continuity lives in the progress ledger; the
+        // context only supplies the materialized gain table.
+        if let Some(table) = ctx.gain_table().filter(|t| t.matches(requests)) {
+            self.allocate_with(requests, |i, c| table.gain(i, c), capacity, &mut out.cores)
+        } else {
+            self.allocate_with(
+                requests,
+                |i, c| requests[i].gain.gain(c),
+                capacity,
+                &mut out.cores,
+            )
+        }
+    }
+
+    fn wants_gain_table(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+    use crate::testkit::forall;
+
+    fn reqs<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
+        gains
+            .iter()
+            .enumerate()
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_zero_capacity() {
+        let mut p = ShockwavePolicy::new();
+        assert_eq!(p.allocate(&[], 10).cores.len(), 0);
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        assert_eq!(p.allocate(&r, 0).total(), 0);
+        // Zero-capacity epochs still track the active set.
+        assert_eq!(p.tracked_jobs(), 1);
+    }
+
+    #[test]
+    fn invariants_and_work_conservation_hold() {
+        forall("shockwave invariants + work conservation", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.0, 5.0), rate: g.f64_in(0.05, 1.0) })
+                .collect();
+            let caps: Vec<u32> = (0..n).map(|_| g.usize_in(0, 12) as u32).collect();
+            let rs = reqs(&gains, &caps);
+            let mut p = ShockwavePolicy::new();
+            for _ in 0..4 {
+                let capacity = g.usize_in(0, 80) as u32;
+                let a = p.allocate(&rs, capacity);
+                check_invariants(&rs, capacity, &a);
+                if capacity > 0 {
+                    check_work_conserving(&rs, capacity, &a);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn lagging_arrival_gets_the_bulk_of_the_cores() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        // Epoch 1: only job 0 runs and banks progress.
+        let solo = vec![JobRequest { id: 0, max_cores: 8, gain: &g }];
+        let mut p = ShockwavePolicy::new();
+        let a = p.allocate(&solo, 8);
+        assert_eq!(a.cores, vec![8]);
+
+        // Epoch 2: job 1 arrives with an empty account — the water-fill
+        // must pour the spare cores into the laggard.
+        let both = vec![
+            JobRequest { id: 0, max_cores: 8, gain: &g },
+            JobRequest { id: 1, max_cores: 8, gain: &g },
+        ];
+        let b = p.allocate(&both, 8);
+        check_work_conserving(&both, 8, &b);
+        assert!(b.cores[1] > b.cores[0], "laggard must catch up: {:?}", b.cores);
+    }
+
+    #[test]
+    fn equal_jobs_split_evenly() {
+        let g0 = ConcaveGain { scale: 2.0, rate: 0.4 };
+        let g1 = ConcaveGain { scale: 2.0, rate: 0.4 };
+        let rs = vec![
+            JobRequest { id: 0, max_cores: 16, gain: &g0 },
+            JobRequest { id: 1, max_cores: 16, gain: &g1 },
+        ];
+        let mut p = ShockwavePolicy::new();
+        let a = p.allocate(&rs, 8);
+        assert_eq!(a.total(), 8);
+        assert!(a.cores[0].abs_diff(a.cores[1]) <= 1, "{:?}", a.cores);
+    }
+
+    #[test]
+    fn scarce_floor_goes_to_the_furthest_behind() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let rs: Vec<JobRequest<'_>> =
+            (0..4).map(|i| JobRequest { id: i as u64, max_cores: 4, gain: &g }).collect();
+        let mut p = ShockwavePolicy::new();
+        // Several full epochs bank progress for everyone...
+        for _ in 0..2 {
+            let a = p.allocate(&rs, 16);
+            assert_eq!(a.total(), 16);
+        }
+        // ...then job 9 arrives with an empty account into a scarce
+        // epoch (2 cores, 5 jobs): it must be among the floored.
+        let mut with_new: Vec<JobRequest<'_>> = rs;
+        let g9 = ConcaveGain { scale: 1.0, rate: 0.5 };
+        with_new.push(JobRequest { id: 9, max_cores: 4, gain: &g9 });
+        let a = p.allocate(&with_new, 2);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.cores[4], 1, "fresh laggard must be floored: {:?}", a.cores);
+    }
+
+    #[test]
+    fn long_run_quality_progress_equalizes() {
+        // A fast and a slow job: equal shares would let the fast job's
+        // quality progress run away; the water-fill must keep the two
+        // accounts within one epoch's worth of each other.
+        let fast = ConcaveGain { scale: 4.0, rate: 0.5 };
+        let slow = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let rs = vec![
+            JobRequest { id: 0, max_cores: 24, gain: &fast },
+            JobRequest { id: 1, max_cores: 24, gain: &slow },
+        ];
+        let mut p = ShockwavePolicy::new();
+        for _ in 0..12 {
+            let a = p.allocate(&rs, 24);
+            check_invariants(&rs, 24, &a);
+        }
+        let pa = p.quality_progress(0).unwrap();
+        let pb = p.quality_progress(1).unwrap();
+        let bound = 4.0; // one epoch of the fast job's maximal gain
+        assert!(
+            (pa - pb).abs() <= bound,
+            "progress diverged: fast {pa} vs slow {pb} (bound {bound})"
+        );
+    }
+
+    #[test]
+    fn departed_jobs_are_pruned_from_the_ledger() {
+        let g = ConcaveGain { scale: 1.0, rate: 0.5 };
+        let ab = vec![
+            JobRequest { id: 1, max_cores: 4, gain: &g },
+            JobRequest { id: 2, max_cores: 4, gain: &g },
+        ];
+        let mut p = ShockwavePolicy::new();
+        let _ = p.allocate(&ab, 8);
+        assert_eq!(p.tracked_jobs(), 2);
+        let bc = vec![
+            JobRequest { id: 2, max_cores: 4, gain: &g },
+            JobRequest { id: 3, max_cores: 4, gain: &g },
+        ];
+        let _ = p.allocate(&bc, 8);
+        assert_eq!(p.tracked_jobs(), 2);
+        assert!(p.quality_progress(1).is_none(), "departed job must be pruned");
+        assert!(p.quality_progress(2).unwrap() > 0.0, "surviving account keeps its balance");
+    }
+
+    #[test]
+    fn runs_are_bit_reproducible() {
+        let gains: Vec<ConcaveGain> = (0..12)
+            .map(|i| ConcaveGain { scale: 0.4 + (i % 5) as f64, rate: 0.1 + 0.05 * (i % 3) as f64 })
+            .collect();
+        let caps: Vec<u32> = (0..12).map(|i| 4 + (i % 7) as u32).collect();
+        let rs = reqs(&gains, &caps);
+        let mut p = ShockwavePolicy::new();
+        let mut q = ShockwavePolicy::new();
+        for capacity in [40u32, 12, 80, 7, 40] {
+            let a = p.allocate(&rs, capacity);
+            let b = q.allocate(&rs, capacity);
+            assert_eq!(a.cores, b.cores, "identical streams must give identical grants");
+            for r in &rs {
+                assert_eq!(
+                    p.quality_progress(r.id).map(f64::to_bits),
+                    q.quality_progress(r.id).map(f64::to_bits),
+                    "ledger diverged for job {}",
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gain_table_view_matches_direct_oracle_calls() {
+        let gains: Vec<ConcaveGain> =
+            (0..10).map(|i| ConcaveGain { scale: 0.5 + (i % 4) as f64, rate: 0.2 }).collect();
+        let caps: Vec<u32> = (0..10).map(|i| 3 + (i % 5) as u32).collect();
+        let rs = reqs(&gains, &caps);
+
+        let mut table_ctx = SchedContext::new();
+        table_ctx.gain_table_mut().build(&rs);
+        let oracle_ctx = SchedContext::new();
+
+        let mut via_table = ShockwavePolicy::new();
+        let mut via_oracle = ShockwavePolicy::new();
+        for capacity in [30u32, 9, 60] {
+            let a = via_table.allocate_ctx(&table_ctx, &rs, capacity);
+            let b = via_oracle.allocate_ctx(&oracle_ctx, &rs, capacity);
+            assert_eq!(a.cores, b.cores, "table view diverged from oracle view");
+        }
+    }
+
+    #[test]
+    fn allocate_ctx_into_reuses_the_buffer_bit_identically() {
+        forall("shockwave allocate_ctx_into ≡ allocate_ctx", 40, |g| {
+            let n = g.usize_in(1, 24);
+            let gains: Vec<ConcaveGain> = (0..n)
+                .map(|_| ConcaveGain { scale: g.f64_in(0.1, 8.0), rate: g.f64_in(0.05, 0.9) })
+                .collect();
+            let mut fresh = ShockwavePolicy::new();
+            let mut reused = ShockwavePolicy::new();
+            let mut ctx_a = SchedContext::new();
+            let mut ctx_b = SchedContext::new();
+            let mut out = Allocation { cores: vec![99; n + 7] };
+            for _ in 0..4 {
+                let live = g.usize_in(1, n);
+                let caps: Vec<u32> = (0..live).map(|_| g.usize_in(0, 9) as u32).collect();
+                let rs = reqs(&gains[..live], &caps);
+                let capacity = g.usize_in(0, 4 * live) as u32;
+                let a = fresh.allocate_ctx(&ctx_a, &rs, capacity);
+                reused.allocate_ctx_into(&ctx_b, &rs, capacity, &mut out);
+                assert_eq!(a, out, "out-param grant diverged from the allocating path");
+                ctx_a.record(&rs, &a);
+                ctx_b.record(&rs, &out);
+            }
+        });
+    }
+}

@@ -84,40 +84,16 @@
 //! bit-reproducible end to end use [`SlaqPolicy::deterministic`]
 //! (`"slaq-det"`), which pins the choice to the static prior.
 
-use super::{Allocation, DecisionStats, JobRequest, Policy, SchedContext};
+use super::{Allocation, DecisionStats, GainModel, JobRequest, Policy, SchedContext};
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
-/// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th
-/// core (up-heap), or of its `at_alloc`-th held core (down-heap).
-#[derive(Debug)]
-struct Entry {
-    marginal: f64,
-    idx: usize,
-    at_alloc: u32,
-}
-
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.marginal == other.marginal
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Max-heap on marginal; NaN-safe (NaN sorts last).
-        self.marginal
-            .partial_cmp(&other.marginal)
-            .unwrap_or(Ordering::Less)
-            .then_with(|| other.idx.cmp(&self.idx))
-    }
-}
+// Heap entry: marginal gain of granting job `idx` its `(at_alloc+1)`-th
+// core (up-heap), or of its `at_alloc`-th held core (down-heap). The
+// NaN-safe, index-tie-broken ordering lives in `super::MarginalEntry`,
+// shared with the other gain-driven policies.
+use super::MarginalEntry as Entry;
 
 /// The paper's quality-driven allocator.
 #[derive(Debug)]

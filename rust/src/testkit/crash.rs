@@ -355,6 +355,88 @@ mod tests {
     }
 
     #[test]
+    fn wal_stays_bounded_under_periodic_snapshots() {
+        // Satellite: snapshot-time compaction keeps `wal.bin` bounded by
+        // the snapshot cadence instead of growing linearly in run
+        // length — and recovery from the compacted state is still
+        // bitwise identical to the uninterrupted run.
+        let suite = CrashSuite { cfg: flat_cfg(1), label: "compact", ..Default::default() };
+        let mut g = Gen::from_seed(suite.seed);
+        let templates = sim::random_churn_templates(&mut g, suite.jobs, suite.horizon);
+        let source_seed = g.u64();
+        let epochs = 40usize; // 10 snapshot boundaries at cadence 4
+
+        let mut mem = Coordinator::new(suite.cfg.clone(), suite.policy());
+        sim::submit_templates(&mut mem, &templates, source_seed);
+        for _ in 0..epochs {
+            mem.step_epoch();
+        }
+        let reference = mem.into_trace();
+
+        let tmp = TempDir::new("wal-bounded");
+        let mut durable = Coordinator::with_persistence(
+            suite.cfg.clone(),
+            suite.policy(),
+            tmp.path(),
+            suite.snapshot_every,
+        )
+        .unwrap();
+        sim::submit_templates(&mut durable, &templates, source_seed);
+        let wal_path = tmp.path().join(wal::WAL_FILE);
+        let mut high_water = 0u64;
+        let mut at_boundary = 0u64;
+        for e in 1..=epochs {
+            durable.step_epoch();
+            let len = std::fs::metadata(&wal_path).unwrap().len();
+            high_water = high_water.max(len);
+            if e % suite.snapshot_every == 0 {
+                // Right after a boundary the log holds only genesis.
+                if at_boundary == 0 {
+                    at_boundary = len;
+                }
+                assert_eq!(
+                    len, at_boundary,
+                    "compacted size must not grow across boundaries (epoch {e})"
+                );
+            }
+        }
+        // Epoch 40 is a boundary: the log was just compacted down to its
+        // genesis record.
+        let readout = wal::read_wal(&wal_path).unwrap();
+        assert_eq!(readout.records.len(), 1, "post-boundary log is genesis-only");
+        drop(durable);
+
+        // Bounded: an identical run whose snapshot cadence never fires
+        // within the horizon (and therefore never compacts) ends with a
+        // strictly larger log than the compacted run ever reached.
+        let tmp2 = TempDir::new("wal-unbounded");
+        let mut control = Coordinator::with_persistence(
+            suite.cfg.clone(),
+            suite.policy(),
+            tmp2.path(),
+            epochs + 1,
+        )
+        .unwrap();
+        sim::submit_templates(&mut control, &templates, source_seed);
+        for _ in 0..epochs {
+            control.step_epoch();
+        }
+        drop(control);
+        let uncompacted =
+            std::fs::metadata(tmp2.path().join(wal::WAL_FILE)).unwrap().len();
+        assert!(
+            high_water < uncompacted,
+            "compacted high-water {high_water} must undercut the \
+             uncompacted log's {uncompacted} bytes"
+        );
+
+        // The compacted state still recovers to the exact same run.
+        let revived = Coordinator::recover_state(tmp.path()).unwrap();
+        assert_eq!(revived.epoch_count(), epochs);
+        assert_trace_eq(&reference, &revived.into_trace(), "compacted recovery");
+    }
+
+    #[test]
     fn recovery_from_snapshot_alone_with_an_emptied_wal() {
         // Satellite: the snapshot is self-contained. Empty the WAL after
         // a snapshot boundary and recovery must still reproduce the run

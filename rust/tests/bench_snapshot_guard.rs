@@ -7,7 +7,10 @@
 //! guard: the *committed* snapshot must either carry real entries or be
 //! explicitly labeled as an unmeasured placeholder (`host` starting with
 //! `UNMEASURED`), so a silent regression to a blank-but-plausible file
-//! fails CI.
+//! fails CI. The same rule covers the bench families a measured
+//! snapshot must include: a run on the pinned machine emits the
+//! `tournament_*` quality entries alongside the latency sweeps, so a
+//! measured snapshot without them is stale.
 
 use std::path::Path;
 
@@ -71,4 +74,25 @@ fn snapshot_entries_are_never_silently_empty() {
              or restore the labeled placeholder"
         );
     }
+}
+
+#[test]
+fn measured_snapshots_carry_the_tournament_family() {
+    let (doc, name) = snapshot();
+    let host = string_field(&doc, "host").unwrap_or_default();
+    if host.starts_with("UNMEASURED") {
+        // Labeled placeholder: no entries of any family expected; the
+        // empty-list rule above already polices it.
+        return;
+    }
+    // A measured run of `cargo bench --bench sched_scalability` emits the
+    // tournament quality entries unconditionally, so a measured snapshot
+    // that lacks them predates the policy tournament and must be
+    // regenerated.
+    assert!(
+        doc.contains("\"name\":\"tournament_"),
+        "{name} was measured (host = {host:?}) but carries no tournament_* \
+         entries; regenerate it with `cargo bench --bench sched_scalability` \
+         on the pinned machine"
+    );
 }

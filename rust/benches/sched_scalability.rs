@@ -33,15 +33,21 @@
 //! mean = mean normalized loss, p50 = Jain quality-fairness index,
 //! p95 = mean seconds to 90% loss reduction or -1 when no job reached
 //! it, iters = jobs that reached 90%) for all six schedulers across the
-//! churny / contention / hetero-targets workload cells.
+//! churny / contention / hetero-targets workload cells. The
+//! `chaos_p{N}_per_epoch` entries are the fault-injection sweep's counts
+//! (mean = cores lost to node failures, p50 = successful re-placements,
+//! p95 = epochs with a failed re-placement, iters = jobs completed on
+//! the surviving capacity) at N% per-node, per-epoch failure
+//! probability; every chaos cell is audited (pool invariants per epoch,
+//! bitwise run-to-run determinism) before it is published.
 
 #[path = "common.rs"]
 mod common;
 
 use common::{bench_stats, write_bench_json, BenchStats};
 use slaq::exp::{
-    churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost, run_tournament,
-    ChurnConfig, EpochLoopConfig, LocalityConfig, TournamentConfig,
+    chaos_cell, churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost,
+    run_tournament, ChurnConfig, EpochLoopConfig, LocalityConfig, TournamentConfig, FAIL_PROBS,
 };
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
@@ -318,6 +324,33 @@ fn main() {
                 iters: s.reached_90,
             });
         }
+    }
+
+    println!("== chaos: fault-injection counts across failure rates ==");
+    // Robustness (not latency) cells — every cell runs the audited
+    // chaos sweep (pool invariants after each epoch, bitwise run-to-run
+    // determinism, zero-rate inertness) before its counts are published.
+    // `_per_epoch` marks the entries as counts (see benches/common.rs).
+    for &p in &FAIL_PROBS {
+        let cell = chaos_cell(0, false, p, 2, 7);
+        println!(
+            "chaos_p{:.0}: {} lost cores, {} replacements, {} failed epochs, \
+             {} degraded transitions, {}/{} completed",
+            p * 100.0,
+            cell.lost_cores,
+            cell.replacements,
+            cell.failed_epochs,
+            cell.degraded_transitions,
+            cell.completed,
+            cell.jobs,
+        );
+        all.push(BenchStats {
+            name: format!("chaos_p{:.0}_per_epoch", p * 100.0),
+            mean: cell.lost_cores as f64,
+            p50: cell.replacements as f64,
+            p95: cell.failed_epochs as f64,
+            iters: cell.completed,
+        });
     }
 
     match write_bench_json("BENCH_sched.json", "cargo bench --bench sched_scalability", &all) {

@@ -1,0 +1,344 @@
+//! Deterministic fault processes for the cluster substrate.
+//!
+//! A [`FaultSpec`] is a *pure function of the epoch index*: a sorted
+//! schedule of node kill/revive events fixed before the run starts
+//! (either scripted through the builder methods or sampled once from a
+//! seed). That purity is what keeps the chaos stack deterministic end to
+//! end — the coordinator applies `events_at(epoch)` at each epoch
+//! boundary, WAL replay re-applies the identical events at the identical
+//! epochs, and two runs of the same config produce bitwise-identical
+//! traces even while nodes are dying underneath them.
+//!
+//! Three fault shapes cover the scenarios the chaos suite exercises:
+//!
+//! * **crash-stop** ([`FaultSpec::with_crash`]) — a node dies and never
+//!   returns;
+//! * **transient blackout** ([`FaultSpec::with_blackout`]) — a node dies
+//!   and revives after an MTTR measured in epochs;
+//! * **correlated rack outage** ([`FaultSpec::with_rack_outage`]) — every
+//!   node of one rack blacks out together (the failure domain real
+//!   clusters lose to a switch or PDU fault).
+//!
+//! An empty spec (the default) yields no events at any epoch, which the
+//! coordinator treats as "the fault layer does not exist": zero-fault
+//! runs are bitwise-identical to pre-fault-layer traces.
+
+use super::topology::Topology;
+use crate::util::codec::{corrupt, Dec, Enc};
+use crate::util::rng::Rng;
+
+/// What happens to a node at a fault event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultAction {
+    /// The node revives with all cores free (applied before kills at the
+    /// same epoch, so a zero-MTTR blackout still takes the node down).
+    Recover,
+    /// The node dies; every core it hosts is lost.
+    Fail,
+}
+
+impl FaultAction {
+    fn to_byte(self) -> u8 {
+        match self {
+            FaultAction::Recover => 0,
+            FaultAction::Fail => 1,
+        }
+    }
+
+    fn from_byte(b: u8) -> std::io::Result<Self> {
+        match b {
+            0 => Ok(FaultAction::Recover),
+            1 => Ok(FaultAction::Fail),
+            t => Err(corrupt(format!("unknown fault action {t}"))),
+        }
+    }
+}
+
+/// One scheduled node event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Epoch index (0-based) at whose *boundary* the event applies, before
+    /// activation and allocation.
+    pub epoch: u64,
+    /// Kill or revive.
+    pub action: FaultAction,
+    /// Target node.
+    pub node: u32,
+}
+
+/// A deterministic schedule of node failures and recoveries.
+///
+/// Events are kept sorted by `(epoch, action, node)` — recoveries before
+/// kills within an epoch — so [`FaultSpec::events_at`] is a binary-search
+/// slice and application order is canonical.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSpec {
+    /// The empty schedule: no faults, ever. The coordinator's fault hooks
+    /// are provably inert under this spec.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when the schedule holds no events at all.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All scheduled events, sorted.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    fn push(&mut self, ev: FaultEvent) {
+        self.events.push(ev);
+        self.events
+            .sort_by_key(|e| (e.epoch, e.action, e.node));
+    }
+
+    /// Crash-stop: `node` dies at `epoch` and never recovers.
+    pub fn with_crash(mut self, epoch: u64, node: u32) -> Self {
+        self.push(FaultEvent { epoch, action: FaultAction::Fail, node });
+        self
+    }
+
+    /// Transient blackout: `node` dies at `epoch` and revives
+    /// `mttr_epochs` epochs later (an MTTR of 0 revives it at the same
+    /// boundary it died — the kill still lands because recoveries are
+    /// applied first).
+    pub fn with_blackout(mut self, epoch: u64, node: u32, mttr_epochs: u64) -> Self {
+        self.push(FaultEvent { epoch, action: FaultAction::Fail, node });
+        self.push(FaultEvent {
+            epoch: epoch + mttr_epochs,
+            action: FaultAction::Recover,
+            node,
+        });
+        self
+    }
+
+    /// Correlated rack outage: every node of `rack` dies at `epoch` and
+    /// the whole rack revives `mttr_epochs` later.
+    pub fn with_rack_outage(
+        mut self,
+        epoch: u64,
+        topo: &Topology,
+        rack: u32,
+        mttr_epochs: u64,
+    ) -> Self {
+        for node in 0..topo.nodes() {
+            if topo.rack_of(node) == rack {
+                self = self.with_blackout(epoch, node, mttr_epochs);
+            }
+        }
+        self
+    }
+
+    /// Sample a schedule from a seed: over `horizon_epochs` epochs, each
+    /// currently-alive node fails independently with probability
+    /// `fail_prob` per epoch and stays down for `1 + Geometric` epochs
+    /// with mean repair time `mttr_epochs`. The schedule is a pure
+    /// function of the arguments — same seed, same faults.
+    pub fn sampled(
+        seed: u64,
+        horizon_epochs: u64,
+        nodes: u32,
+        fail_prob: f64,
+        mttr_epochs: f64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&fail_prob), "fail_prob out of [0,1]");
+        assert!(mttr_epochs >= 1.0, "mean repair time below one epoch");
+        let mut rng = Rng::new(seed);
+        let mut spec = Self::none();
+        // Epoch index each node revives at (alive when <= current epoch).
+        let mut up_at = vec![0u64; nodes as usize];
+        for epoch in 0..horizon_epochs {
+            for node in 0..nodes {
+                if up_at[node as usize] > epoch {
+                    continue; // still down
+                }
+                if rng.bool(fail_prob) {
+                    // Geometric downtime with mean `mttr_epochs`:
+                    // P(extra) = (1-p)^extra * p with p = 1/mttr.
+                    let p = 1.0 / mttr_epochs;
+                    let mut down = 1u64;
+                    while !rng.bool(p) && down < horizon_epochs {
+                        down += 1;
+                    }
+                    spec = spec.with_blackout(epoch, node, down);
+                    up_at[node as usize] = epoch + down;
+                }
+            }
+        }
+        spec
+    }
+
+    /// The contiguous run of events scheduled for `epoch`, in canonical
+    /// application order (recoveries first). Empty for fault-free epochs.
+    pub fn events_at(&self, epoch: u64) -> &[FaultEvent] {
+        let lo = self.events.partition_point(|e| e.epoch < epoch);
+        let hi = self.events.partition_point(|e| e.epoch <= epoch);
+        &self.events[lo..hi]
+    }
+
+    /// Append the schedule to a durable-state buffer (the coordinator
+    /// config codec embeds it, so WAL genesis records and snapshots carry
+    /// the full fault schedule and replay reproduces it exactly).
+    pub fn encode(&self, e: &mut Enc) {
+        e.put_usize(self.events.len());
+        for ev in &self.events {
+            e.put_u64(ev.epoch);
+            e.put_u8(ev.action.to_byte());
+            e.put_u32(ev.node);
+        }
+    }
+
+    /// Inverse of [`FaultSpec::encode`].
+    pub fn decode(d: &mut Dec) -> std::io::Result<Self> {
+        let n = d.usize_()?;
+        let mut events = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            events.push(FaultEvent {
+                epoch: d.u64()?,
+                action: FaultAction::from_byte(d.u8()?)?,
+                node: d.u32()?,
+            });
+        }
+        let spec = Self { events };
+        if spec
+            .events
+            .windows(2)
+            .any(|w| (w[0].epoch, w[0].action, w[0].node) > (w[1].epoch, w[1].action, w[1].node))
+        {
+            return Err(corrupt("fault schedule out of canonical order"));
+        }
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::TopologySpec;
+
+    #[test]
+    fn empty_spec_has_no_events() {
+        let spec = FaultSpec::none();
+        assert!(spec.is_empty());
+        for epoch in 0..64 {
+            assert!(spec.events_at(epoch).is_empty());
+        }
+    }
+
+    #[test]
+    fn blackout_schedules_kill_then_revival() {
+        let spec = FaultSpec::none().with_blackout(3, 1, 2).with_crash(4, 0);
+        assert_eq!(
+            spec.events_at(3),
+            &[FaultEvent { epoch: 3, action: FaultAction::Fail, node: 1 }]
+        );
+        assert_eq!(
+            spec.events_at(4),
+            &[FaultEvent { epoch: 4, action: FaultAction::Fail, node: 0 }]
+        );
+        assert_eq!(
+            spec.events_at(5),
+            &[FaultEvent { epoch: 5, action: FaultAction::Recover, node: 1 }]
+        );
+        assert!(spec.events_at(6).is_empty());
+    }
+
+    #[test]
+    fn zero_mttr_blackout_applies_revival_before_kill() {
+        // Recover sorts before Fail at the same epoch, so the kill wins.
+        let spec = FaultSpec::none().with_blackout(2, 5, 0);
+        let evs = spec.events_at(2);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].action, FaultAction::Recover);
+        assert_eq!(evs[1].action, FaultAction::Fail);
+    }
+
+    #[test]
+    fn rack_outage_covers_exactly_the_rack() {
+        let topo = TopologySpec::Uniform { zones: 2, racks_per_zone: 2 }.build(8);
+        let spec = FaultSpec::none().with_rack_outage(1, &topo, 2, 3);
+        let killed: Vec<u32> = spec
+            .events_at(1)
+            .iter()
+            .filter(|e| e.action == FaultAction::Fail)
+            .map(|e| e.node)
+            .collect();
+        let expected: Vec<u32> = (0..topo.nodes()).filter(|&n| topo.rack_of(n) == 2).collect();
+        assert!(!expected.is_empty());
+        assert_eq!(killed, expected);
+        let revived: Vec<u32> = spec
+            .events_at(4)
+            .iter()
+            .filter(|e| e.action == FaultAction::Recover)
+            .map(|e| e.node)
+            .collect();
+        assert_eq!(revived, expected);
+    }
+
+    #[test]
+    fn sampled_schedule_is_deterministic_and_consistent() {
+        let a = FaultSpec::sampled(0xFA11, 40, 8, 0.1, 3.0);
+        let b = FaultSpec::sampled(0xFA11, 40, 8, 0.1, 3.0);
+        assert_eq!(a, b, "same seed must sample the same schedule");
+        assert_ne!(a, FaultSpec::sampled(0xFA12, 40, 8, 0.1, 3.0));
+        assert!(!a.is_empty(), "10% per-node per-epoch over 40 epochs should fire");
+        // Consistency: a node never fails while already down, and every
+        // failure has exactly one matching later recovery.
+        let mut down: std::collections::BTreeSet<u32> = Default::default();
+        for epoch in 0..80 {
+            for ev in a.events_at(epoch) {
+                match ev.action {
+                    FaultAction::Recover => {
+                        assert!(down.remove(&ev.node), "revive of an up node");
+                    }
+                    FaultAction::Fail => {
+                        assert!(down.insert(ev.node), "kill of a down node");
+                    }
+                }
+            }
+        }
+        assert!(down.is_empty(), "every sampled blackout must end");
+    }
+
+    #[test]
+    fn zero_probability_samples_nothing() {
+        assert!(FaultSpec::sampled(1, 100, 16, 0.0, 4.0).is_empty());
+    }
+
+    #[test]
+    fn codec_roundtrips_bitwise() {
+        let spec = FaultSpec::sampled(7, 30, 6, 0.15, 2.0).with_crash(31, 0);
+        let mut e = Enc::new();
+        spec.encode(&mut e);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let decoded = FaultSpec::decode(&mut d).unwrap();
+        d.finish().unwrap();
+        assert_eq!(decoded, spec);
+        let mut e2 = Enc::new();
+        decoded.encode(&mut e2);
+        assert_eq!(e2.bytes(), &bytes[..], "re-encoding drifted");
+    }
+
+    #[test]
+    fn out_of_order_schedule_fails_decode() {
+        let mut e = Enc::new();
+        e.put_usize(2);
+        e.put_u64(5);
+        e.put_u8(1);
+        e.put_u32(0);
+        e.put_u64(3);
+        e.put_u8(1);
+        e.put_u32(1);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(FaultSpec::decode(&mut d).is_err());
+    }
+}

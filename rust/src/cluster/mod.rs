@@ -19,9 +19,11 @@
 //! are provably inert, preserving the paper's behavior bit for bit.
 
 mod cost;
+mod faults;
 mod nodes;
 mod topology;
 
 pub use cost::{CostModel, LocalityModel};
+pub use faults::{FaultAction, FaultEvent, FaultSpec};
 pub use nodes::{ClusterSpec, NodePool, Placement, PlacementDelta};
 pub use topology::{Topology, TopologySpec};

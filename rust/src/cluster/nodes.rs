@@ -120,6 +120,11 @@ pub struct NodePool {
     /// used regardless of topology (the locality-blind baseline the
     /// `exp::locality` scenario compares against).
     locality_aware: bool,
+    /// Nodes currently dead ([`NodePool::fail_node`]). A dead node holds
+    /// zero free and zero used cores and appears in neither free-space
+    /// index, so grows can never land on it; it rejoins the pool through
+    /// [`NodePool::recover_node`]. Empty on a fault-free pool.
+    dead: BTreeSet<u32>,
 }
 
 impl NodePool {
@@ -158,6 +163,7 @@ impl NodePool {
             by_free_rack,
             placements: BTreeMap::new(),
             locality_aware: true,
+            dead: BTreeSet::new(),
         }
     }
 
@@ -296,6 +302,63 @@ impl NodePool {
                 self.set_free(node, freed);
             }
         }
+    }
+
+    /// Kill `node`: every placement holding cores there is evicted (the
+    /// per-job losses are appended to `lost` as `(job, cores)`, ascending
+    /// by job id), the node's free cores drop to zero — which removes it
+    /// from both free-space indexes, so no future grow can land on it —
+    /// and the node joins the dead set. Panics on an already-dead node
+    /// (the fault layer guards with [`NodePool::is_dead`]).
+    pub fn fail_node(&mut self, node: u32, lost: &mut Vec<(u64, u32)>) {
+        assert!(node < self.spec.nodes, "fail_node({node}) outside the cluster");
+        assert!(!self.dead.contains(&node), "fail_node on dead node {node}");
+        let mut emptied: Vec<u64> = Vec::new();
+        for (&job, placement) in self.placements.iter_mut() {
+            if let Some(cores) = placement.remove(&node) {
+                lost.push((job, cores));
+                if placement.is_empty() {
+                    emptied.push(job);
+                }
+            }
+        }
+        for job in emptied {
+            self.placements.remove(&job);
+        }
+        // The evicted (used) cores vanish with the node; only the free
+        // side needs index maintenance.
+        self.set_free(node, 0);
+        self.dead.insert(node);
+    }
+
+    /// Revive a dead node with all cores free. Panics when the node is
+    /// not dead — recovery of a live node is a fault-schedule bug.
+    pub fn recover_node(&mut self, node: u32) {
+        assert!(self.dead.remove(&node), "recover_node on live node {node}");
+        debug_assert_eq!(self.free[node as usize], 0, "dead node held free cores");
+        self.set_free(node, self.spec.cores_per_node);
+    }
+
+    /// Whether `node` is currently dead.
+    pub fn is_dead(&self, node: u32) -> bool {
+        self.dead.contains(&node)
+    }
+
+    /// The currently-dead nodes, ascending.
+    pub fn dead_nodes(&self) -> impl Iterator<Item = u32> + '_ {
+        self.dead.iter().copied()
+    }
+
+    /// Number of currently-dead nodes.
+    pub fn dead_len(&self) -> usize {
+        self.dead.len()
+    }
+
+    /// Schedulable cores on the surviving (alive) nodes — the capacity
+    /// the allocator may hand out while faults are active. Equals
+    /// [`ClusterSpec::capacity`] when no node is dead.
+    pub fn surviving_capacity(&self) -> u32 {
+        self.spec.capacity() - self.dead.len() as u32 * self.spec.cores_per_node
     }
 
     /// Move `node` to its new free-core count, updating the free vector,
@@ -478,12 +541,13 @@ impl NodePool {
     /// durable state — the caller surfaces this as `InvalidData`).
     pub fn restore_placements(&mut self, placements: &[(u64, Vec<(u32, u32)>)]) {
         assert!(
-            self.placements.is_empty() && self.free_total == self.spec.capacity(),
-            "restore_placements needs a fresh pool"
+            self.placements.is_empty() && self.free_total == self.surviving_capacity(),
+            "restore_placements needs a placement-free pool"
         );
         for (job, nodes) in placements {
             for &(node, cores) in nodes {
                 assert!(node < self.spec.nodes, "snapshot node {node} outside the cluster");
+                assert!(!self.dead.contains(&node), "snapshot places job on dead node {node}");
                 assert!(
                     cores <= self.free[node as usize],
                     "snapshot oversubscribes node {node}"
@@ -531,6 +595,13 @@ impl NodePool {
         let mut expect_indexed = 0usize;
         for n in 0..self.spec.nodes {
             let i = n as usize;
+            if self.dead.contains(&n) {
+                // A dead node hosts nothing: no grants survive a kill and
+                // no grow may land while it is down.
+                assert_eq!(used[i], 0, "dead node {n} still hosts {} cores", used[i]);
+                assert_eq!(self.free[i], 0, "dead node {n} advertises free cores");
+                continue;
+            }
             assert!(
                 used[i] + self.free[i] == self.spec.cores_per_node,
                 "node {n}: used {} + free {} != {}",
@@ -1155,6 +1226,155 @@ mod tests {
         assert_eq!(da, db);
         assert_eq!(q.placement(1), p.placement(1));
         assert_eq!(q.placement(2), p.placement(2));
+    }
+
+    /// The global free-space index rebuilt from scratch off the free
+    /// vector — the "≡ rebuilt" half of the fault edge-case assertions
+    /// (check_invariants covers the per-rack index the same way).
+    fn rebuilt_index(pool: &NodePool) -> BTreeMap<u32, BTreeSet<u32>> {
+        let mut rebuilt: BTreeMap<u32, BTreeSet<u32>> = BTreeMap::new();
+        for n in 0..pool.spec().nodes {
+            let f = pool.free_on(n);
+            if f > 0 {
+                rebuilt.entry(f).or_default().insert(n);
+            }
+        }
+        rebuilt
+    }
+
+    #[test]
+    fn failing_the_home_rack_node_evicts_and_regrows_elsewhere() {
+        // Two racks of two 4-core nodes. Job 1's home rack is rack 0;
+        // killing the node that anchors it must evict exactly those
+        // cores, keep every index consistent, and route the re-grow to
+        // surviving nodes only.
+        let spec = ClusterSpec { nodes: 4, cores_per_node: 4 };
+        let mut p = NodePool::with_topology(spec, Topology::uniform(1, 2, 4));
+        p.apply_diff(&[(1, 6), (2, 4)]); // job 1: node 0 (home) + node 1
+        assert_eq!(p.held(1), 6);
+        let mut lost = Vec::new();
+        p.fail_node(0, &mut lost);
+        assert_eq!(lost, vec![(1, 4)], "job 1 loses its 4 home-rack cores");
+        assert_eq!(p.held(1), 2);
+        assert!(p.is_dead(0));
+        assert_eq!(p.surviving_capacity(), 12);
+        p.check_invariants();
+        assert_eq!(p.by_free, rebuilt_index(&p), "index out of sync after eviction");
+        // Re-growing the job must land only on surviving nodes.
+        p.apply_diff(&[(1, 6)]);
+        assert_eq!(p.held(1), 6);
+        assert!(
+            p.placement_ref(1).map_or(true, |pl| !pl.contains_key(&0)),
+            "grow landed on a dead node"
+        );
+        p.check_invariants();
+    }
+
+    #[test]
+    fn failing_every_node_in_a_rack_leaves_a_consistent_pool() {
+        // One node per rack in racks 0..4; kill the whole of rack 0 and 1
+        // (a correlated outage) under a placement that spans them.
+        let spec = ClusterSpec { nodes: 4, cores_per_node: 4 };
+        let mut p = NodePool::with_topology(spec, Topology::uniform(2, 1, 4));
+        p.apply_diff(&[(1, 8)]); // spans nodes 0 and 1 (racks 0 and 1)
+        let mut lost = Vec::new();
+        p.fail_node(0, &mut lost);
+        p.fail_node(1, &mut lost);
+        assert_eq!(lost, vec![(1, 4), (1, 4)]);
+        assert_eq!(p.held(1), 0, "the whole placement was evicted");
+        assert!(p.placement_ref(1).is_none(), "empty placements are dropped");
+        assert_eq!(p.surviving_capacity(), 8);
+        p.check_invariants();
+        assert_eq!(p.by_free, rebuilt_index(&p));
+        // The pool can still place up to surviving capacity, nothing more.
+        assert!(p.resize(1, 8));
+        assert!(!p.resize(2, 1), "oversubscription past surviving capacity");
+        p.check_invariants();
+    }
+
+    #[test]
+    fn recovery_while_cores_are_still_lost_restores_the_node_cleanly() {
+        // Kill a node out from under a job, then revive it before the job
+        // was ever re-placed: the node must come back fully free, rejoin
+        // both indexes, and be placeable again.
+        let spec = ClusterSpec { nodes: 2, cores_per_node: 8 };
+        let mut p = NodePool::new(spec);
+        p.apply_diff(&[(1, 12)]);
+        let mut lost = Vec::new();
+        p.fail_node(1, &mut lost);
+        assert_eq!(lost, vec![(1, 4)]);
+        assert_eq!(p.held(1), 8, "cores on the surviving node are kept");
+        p.check_invariants();
+        p.recover_node(1);
+        assert!(!p.is_dead(1));
+        assert_eq!(p.free_on(1), 8);
+        assert_eq!(p.surviving_capacity(), 16);
+        p.check_invariants();
+        assert_eq!(p.by_free, rebuilt_index(&p));
+        // The revived node is placeable again.
+        p.apply_diff(&[(1, 12)]);
+        assert_eq!(p.held(1), 12);
+        p.check_invariants();
+    }
+
+    #[test]
+    fn random_fault_churn_keeps_invariants() {
+        // Interleave kills/revivals with ordinary placement churn: the
+        // indexes must track, targets must stay satisfiable up to
+        // surviving capacity, and nothing ever lands on a dead node.
+        forall("fault churn invariants", 40, |g| {
+            let spec = ClusterSpec {
+                nodes: g.usize_in(2, 8) as u32,
+                cores_per_node: g.usize_in(1, 8) as u32,
+            };
+            let zones = g.usize_in(1, 2) as u32;
+            let racks_per_zone = g.usize_in(1, 2) as u32;
+            let topo = Topology::uniform(zones, racks_per_zone, spec.nodes);
+            let mut pool = NodePool::with_topology(spec, topo);
+            let jobs = g.usize_in(1, 5) as u64;
+            for _ in 0..25 {
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let node = g.usize_in(0, spec.nodes as usize) as u32;
+                        if !pool.is_dead(node) {
+                            let mut lost = Vec::new();
+                            pool.fail_node(node, &mut lost);
+                            assert!(lost.iter().all(|&(_, c)| c > 0));
+                        }
+                    }
+                    1 => {
+                        let dead: Vec<u32> = pool.dead_nodes().collect();
+                        if !dead.is_empty() {
+                            pool.recover_node(*g.rng().choose(&dead));
+                        }
+                    }
+                    _ => {
+                        let mut room = pool.surviving_capacity();
+                        let targets: Vec<(u64, u32)> = (0..jobs)
+                            .map(|job| {
+                                let t = g.usize_in(0, (room + 1) as usize) as u32;
+                                room -= t;
+                                (job, t)
+                            })
+                            .collect();
+                        pool.apply_diff(&targets);
+                        for &(job, t) in &targets {
+                            assert_eq!(pool.held(job), t);
+                        }
+                    }
+                }
+                for job in 0..jobs {
+                    if let Some(pl) = pool.placement_ref(job) {
+                        assert!(
+                            pl.keys().all(|&n| !pool.is_dead(n)),
+                            "job {job} holds cores on a dead node"
+                        );
+                    }
+                }
+                pool.check_invariants();
+                assert_eq!(pool.by_free, rebuilt_index(&pool));
+            }
+        });
     }
 
     #[test]

@@ -62,13 +62,16 @@ use super::wal::{
     compact_wal, config_bytes, read_snapshot, read_wal, truncate_wal, DurableState,
     SnapshotView, WalEpoch, WalRecord, WalWriter, SNAP_FILE, WAL_FILE,
 };
-use crate::cluster::{ClusterSpec, CostModel, LocalityModel, NodePool, TopologySpec};
+use crate::cluster::{
+    ClusterSpec, CostModel, FaultAction, FaultSpec, LocalityModel, NodePool, TopologySpec,
+};
 use crate::predictor::OnlinePredictor;
 use crate::sched::{
     policy_by_name, rebalance_budgets, Allocation, GainModel, GainTable, JobRequest, Policy,
     SchedContext, ShardDemand,
 };
 use crate::util::codec::corrupt;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io;
 use std::path::Path;
 use std::time::Instant;
@@ -153,6 +156,19 @@ pub struct CoordinatorConfig {
     /// rebalances the budgets stay fixed, so common-case epochs do no
     /// cross-shard work.
     pub broker_epochs: usize,
+    /// Checkpoint cadence for restart pricing under faults: at the start
+    /// of every `checkpoint_epochs`-th epoch each running job pins its
+    /// current iteration as the restart point. A job evicted by a node
+    /// failure re-does the iterations since that pin (as wall-clock debt
+    /// consuming epoch time without advancing quality) once it regains
+    /// cores. Irrelevant — and provably inert — when `faults` is empty.
+    pub checkpoint_epochs: usize,
+    /// Deterministic node-failure schedule applied at epoch boundaries
+    /// (crash-stop, transient blackout, correlated rack outage; see
+    /// [`FaultSpec`]). Empty by default: every fault hook in the epoch
+    /// loop is a provable no-op on an empty spec, keeping fault-free
+    /// traces bitwise identical to pre-fault builds.
+    pub faults: FaultSpec,
 }
 
 impl Default for CoordinatorConfig {
@@ -169,6 +185,8 @@ impl Default for CoordinatorConfig {
             threads: 0,
             sharded: false,
             broker_epochs: 8,
+            checkpoint_epochs: 4,
+            faults: FaultSpec::none(),
         }
     }
 }
@@ -199,7 +217,23 @@ struct JobGain<'a> {
     /// (rack span → iteration-time factor; 1.0 on flat topologies), so
     /// the predicted quality-per-epoch genuinely feels fragmentation.
     slowdown: f64,
+    /// Degraded-mode fallback: the job's predictor is quarantined (a run
+    /// of rejected loss reports) or its confidence has collapsed, so its
+    /// fitted curve cannot be trusted. The view replaces the curve with a
+    /// conservative fair-share floor (see `gain`), and `cap` is clamped
+    /// to `fair_share` so the job can never outbid its way past an even
+    /// split of surviving capacity.
+    degraded: bool,
+    /// Cores the degraded curve saturates at (surviving capacity divided
+    /// by the active-job count; ≥ 1). Unused while `degraded` is false.
+    fair_share: u32,
 }
+
+/// Scale of the degraded-mode gain curve: small enough that a degraded
+/// job never outbids any healthy job with genuinely positive predicted
+/// reduction, but strictly positive so work-conserving policies still
+/// hand it spare cores ahead of nothing at all.
+const DEGRADED_EPS: f64 = 1e-9;
 
 impl<'a> JobGain<'a> {
     fn new(job: &'a Job, window: f64, cold_start_optimism: bool, slowdown: f64) -> Self {
@@ -211,6 +245,8 @@ impl<'a> JobGain<'a> {
             window,
             cold_start_optimism,
             slowdown,
+            degraded: false,
+            fair_share: 0,
         }
     }
 
@@ -224,6 +260,14 @@ impl GainModel for JobGain<'_> {
     fn gain(&self, cores: u32) -> f64 {
         if cores == 0 {
             return 0.0;
+        }
+        if self.degraded {
+            // Fair-share floor: strictly increasing with geometrically
+            // shrinking (hence CELF-friendly, submodular) marginals up
+            // to the fair share, flat beyond it. Epsilon-scaled so any
+            // healthy job with real predicted reduction wins first.
+            let c = cores.min(self.fair_share.max(1));
+            return DEGRADED_EPS * (1.0 - 0.5f64.powi(c as i32));
         }
         // Shared definition with `Job::iterations_achievable_f` (and the
         // same scaled clock `Job::advance_with_locality` runs on), so
@@ -320,6 +364,25 @@ pub struct Coordinator {
     durable: Option<DurableState>,
     /// Injected kill point for the crash-recovery harness.
     crash_point: Option<CrashPoint>,
+    /// Fault-displaced jobs waiting out a placement backoff:
+    /// id → (epoch the job may request cores again, current backoff in
+    /// epochs). A parked job stays in the ledger's running set (its state
+    /// must survive replay) but requests zero cores until its park
+    /// expires; a failed retry re-parks it with doubled backoff (capped).
+    parked: BTreeMap<u64, (u64, u32)>,
+    /// Jobs currently served by the degraded-mode gain floor (quarantined
+    /// predictor or collapsed confidence). Kept only to detect
+    /// healthy→degraded transitions; the flag itself is recomputed every
+    /// epoch from predictor state, so this set is derivable — and is
+    /// re-derived, not persisted, on recovery.
+    degraded_now: BTreeSet<u64>,
+    /// Cumulative count of healthy→degraded transitions — the loud signal
+    /// that the scheduler stopped trusting some job's quality reports.
+    degraded_transitions: u64,
+    /// Cumulative count of epochs in which at least one fault-displaced
+    /// (or park-expired) job could not be re-placed. Recorded per epoch
+    /// in [`EpochRecord::failed_epochs`].
+    failed_epochs: u32,
 }
 
 impl Coordinator {
@@ -374,6 +437,10 @@ impl Coordinator {
             scratch: EpochScratch::default(),
             durable: None,
             crash_point: None,
+            parked: BTreeMap::new(),
+            degraded_now: BTreeSet::new(),
+            degraded_transitions: 0,
+            failed_epochs: 0,
         }
     }
 
@@ -472,7 +539,29 @@ impl Coordinator {
             c.time = s.time;
             c.epochs = s.epochs;
             c.ledger = s.ledger;
+            // Re-derive the pool's dead set as of the snapshot boundary:
+            // fault events are a pure function of the epoch index, and
+            // the pool holds no placements yet, so the evictions are
+            // vacuous (asserted) — only the dead set and the free-space
+            // index change. `restore_placements` then checks itself
+            // against the surviving capacity.
+            if !c.cfg.faults.is_empty() {
+                let mut lost: Vec<(u64, u32)> = Vec::new();
+                for e in 0..c.epochs.len() as u64 {
+                    for ev in c.cfg.faults.events_at(e) {
+                        match ev.action {
+                            FaultAction::Recover => c.pool.recover_node(ev.node),
+                            FaultAction::Fail => c.pool.fail_node(ev.node, &mut lost),
+                        }
+                    }
+                }
+                assert!(lost.is_empty(), "evictions on an empty pool");
+            }
             c.pool.restore_placements(&s.placements);
+            c.parked = s.parked.into_iter().map(|(id, until, b)| (id, (until, b))).collect();
+            c.degraded_now = s.degraded.into_iter().collect();
+            c.degraded_transitions = s.degraded_transitions;
+            c.failed_epochs = c.epochs.last().map(|r| r.failed_epochs).unwrap_or(0);
             c.sched_ctx.restore_grants(s.ctx_grants, s.ctx_epoch);
             if s.shards.len() != c.shards.len() {
                 return Err(corrupt(format!(
@@ -568,6 +657,44 @@ impl Coordinator {
             }
         }
 
+        // Fault boundary — identical to the live epoch's stage 2b
+        // (checkpoint cadence, recoveries then failures, placement
+        // eviction and restart debt), then cross-checked against the
+        // logged core loss.
+        let epoch_no = self.epochs.len() as u64;
+        let mut lost_cores = 0u32;
+        let mut displaced: BTreeSet<u64> = BTreeSet::new();
+        if !self.cfg.faults.is_empty() {
+            let cadence = self.cfg.checkpoint_epochs.max(1) as u64;
+            if epoch_no > 0 && epoch_no % cadence == 0 {
+                for &id in active.iter() {
+                    let job = self.ledger.job_mut(id).expect("running job");
+                    job.ckpt_iteration = job.iteration;
+                }
+            }
+            let mut lost: Vec<(u64, u32)> = Vec::new();
+            for ev in self.cfg.faults.events_at(epoch_no) {
+                match ev.action {
+                    FaultAction::Recover => self.pool.recover_node(ev.node),
+                    FaultAction::Fail => self.pool.fail_node(ev.node, &mut lost),
+                }
+            }
+            for &(id, cores) in &lost {
+                lost_cores += cores;
+                displaced.insert(id);
+            }
+            for &id in &displaced {
+                let job = self.ledger.job_mut(id).expect("displaced job is running");
+                job.pending_restart_iters = job.iteration - job.ckpt_iteration;
+            }
+        }
+        if lost_cores != rec.lost_cores {
+            return Err(corrupt(format!(
+                "replay fault skew at t={t0}: log {} lost cores, state {lost_cores}",
+                rec.lost_cores
+            )));
+        }
+
         let mut dirty: Vec<u64> = Vec::new();
         self.ledger.take_dirty_into(&mut dirty);
         if dirty.len() != rec.dirty_jobs {
@@ -591,6 +718,21 @@ impl Coordinator {
                 "replay refit skew at t={t0}: log {}, state {refits}",
                 rec.refits
             )));
+        }
+
+        // Degraded-mode tracking mirrors the live gain-view loop. The
+        // flag is a pure function of the replayed predictor state, so the
+        // transition counter re-derives exactly.
+        for &id in active.iter() {
+            let p = &self.ledger.job(id).expect("running job").predictor;
+            let degraded = p.is_quarantined() || p.confidence() < 0.5;
+            if degraded {
+                if self.degraded_now.insert(id) {
+                    self.degraded_transitions += 1;
+                }
+            } else {
+                self.degraded_now.remove(&id);
+            }
         }
 
         for (e, &id) in rec.entries.iter().zip(&active) {
@@ -624,6 +766,38 @@ impl Coordinator {
             }
         }
 
+        // Fault-repair accounting — the live epoch's park/unpark rule
+        // driven by the logged grants — then cross-checked against the
+        // logged counters.
+        let mut replacements = 0u32;
+        if !self.cfg.faults.is_empty() {
+            let mut placement_failed = false;
+            for e in &rec.entries {
+                let prior = self.parked.get(&e.job).copied();
+                let expired = prior.map_or(false, |(until, _)| epoch_no >= until);
+                if !(displaced.contains(&e.job) || expired) {
+                    continue;
+                }
+                if e.cores > 0 {
+                    self.parked.remove(&e.job);
+                    replacements += 1;
+                } else {
+                    placement_failed = true;
+                    let backoff = prior.map_or(1, |(_, b)| (b * 2).min(8));
+                    self.parked.insert(e.job, (epoch_no + backoff as u64, backoff));
+                }
+            }
+            if placement_failed {
+                self.failed_epochs += 1;
+            }
+        }
+        if replacements != rec.replacements || self.failed_epochs != rec.failed_epochs {
+            return Err(corrupt(format!(
+                "replay repair skew at t={t0}: log ({}, {}), state ({replacements}, {})",
+                rec.replacements, rec.failed_epochs, self.failed_epochs
+            )));
+        }
+
         // The logged record joins the trace verbatim (wall-clock nanos
         // included), so a recovered trace is the original trace.
         self.epochs.push(rec.clone());
@@ -644,6 +818,8 @@ impl Coordinator {
                 self.pool.release_all(id);
                 self.ledger.retire(id);
                 self.sched_ctx.forget(id);
+                self.parked.remove(&id);
+                self.degraded_now.remove(&id);
                 if !self.shards.is_empty() {
                     let ns = self.shards.len() as u64;
                     self.shards[(id % ns) as usize].ctx.forget(id);
@@ -709,6 +885,25 @@ impl Coordinator {
         self.shards.iter().map(|s| s.budget).collect()
     }
 
+    /// Cumulative healthy→degraded gain-oracle transitions — the loud
+    /// counter flagging that the scheduler stopped trusting some job's
+    /// quality reports and fell back to the fair-share floor.
+    pub fn degraded_transitions(&self) -> u64 {
+        self.degraded_transitions
+    }
+
+    /// Jobs currently parked after a failed fault re-placement,
+    /// ascending by id (empty on a fault-free run).
+    pub fn parked_jobs(&self) -> Vec<u64> {
+        self.parked.keys().copied().collect()
+    }
+
+    /// Cumulative count of epochs in which at least one fault-displaced
+    /// job could not be re-placed (also recorded per epoch in the trace).
+    pub fn failed_epochs(&self) -> u32 {
+        self.failed_epochs
+    }
+
     /// Live-thread counter of the worker pool, for lifecycle tests.
     #[cfg(test)]
     pub(super) fn worker_live_counter(
@@ -767,6 +962,8 @@ impl Coordinator {
                 debug_assert_eq!(was_running, JobState::Running);
                 self.pool.release_all(id);
                 self.sched_ctx.forget(id);
+                self.parked.remove(&id);
+                self.degraded_now.remove(&id);
                 if !self.shards.is_empty() {
                     let ns = self.shards.len() as u64;
                     self.shards[(id % ns) as usize].ctx.forget(id);
@@ -816,6 +1013,9 @@ impl Coordinator {
                 .iter()
                 .map(|s| (s.budget, s.ctx.epoch(), s.ctx.grants()))
                 .collect(),
+            parked: self.parked.iter().map(|(&id, &(until, b))| (id, until, b)).collect(),
+            degraded: self.degraded_now.iter().copied().collect(),
+            degraded_transitions: self.degraded_transitions,
         };
         view.write(&d.dir)
     }
@@ -865,6 +1065,44 @@ impl Coordinator {
         // into a buffer reused across epochs.
         let mut active = std::mem::take(&mut self.scratch.active);
         self.ledger.running_ids_into(&mut active);
+
+        // 2b. Fault boundary. On an empty `FaultSpec` this whole stage is
+        // a no-op (no checkpoints, no pool mutation, all counters zero),
+        // which is what keeps fault-free traces bitwise identical to
+        // pre-fault builds. Otherwise: pin checkpoints on the cadence,
+        // apply this epoch's scheduled recoveries then failures
+        // (recover-before-fail is the `FaultSpec` event order), evict
+        // placements on dead nodes, and charge each displaced job the
+        // iterations it must re-do from its last checkpoint.
+        let epoch_no = self.epochs.len() as u64;
+        let mut lost_cores = 0u32;
+        let mut displaced: BTreeSet<u64> = BTreeSet::new();
+        let fault_epoch = !self.cfg.faults.is_empty()
+            && !self.cfg.faults.events_at(epoch_no).is_empty();
+        if !self.cfg.faults.is_empty() {
+            let cadence = self.cfg.checkpoint_epochs.max(1) as u64;
+            if epoch_no > 0 && epoch_no % cadence == 0 {
+                for &id in active.iter() {
+                    let job = self.ledger.job_mut(id).expect("running job");
+                    job.ckpt_iteration = job.iteration;
+                }
+            }
+            let mut lost: Vec<(u64, u32)> = Vec::new();
+            for ev in self.cfg.faults.events_at(epoch_no) {
+                match ev.action {
+                    FaultAction::Recover => self.pool.recover_node(ev.node),
+                    FaultAction::Fail => self.pool.fail_node(ev.node, &mut lost),
+                }
+            }
+            for &(id, cores) in &lost {
+                lost_cores += cores;
+                displaced.insert(id);
+            }
+            for &id in &displaced {
+                let job = self.ledger.job_mut(id).expect("displaced job is running");
+                job.pending_restart_iters = job.iteration - job.ckpt_iteration;
+            }
+        }
 
         // 3. Predictor sync: refit only the jobs that received samples
         // since the last sync — O(jobs-that-changed), not O(active). The
@@ -944,7 +1182,11 @@ impl Coordinator {
             return;
         }
 
-        let capacity = self.cfg.cluster.capacity();
+        // Allocate over what actually survives: with dead nodes the
+        // schedulable capacity shrinks to the pool's live cores (equal to
+        // the static cluster capacity on a fault-free run, so this line
+        // is inert there).
+        let capacity = self.pool.surviving_capacity();
         let gain_nanos;
         let sched_nanos;
         let mut grant = std::mem::take(&mut self.scratch.grant);
@@ -960,10 +1202,39 @@ impl Coordinator {
             // enters the epoch with (its current rack span), so predicted
             // gains price fragmentation the same way execution pays it.
             let mut gains: Vec<JobGain<'_>> = Vec::with_capacity(active.len());
+            let fair_share =
+                (capacity / (active.len().max(1) as u32)).max(1);
             for &id in active.iter() {
                 let slowdown = self.cfg.locality.slowdown(self.pool.rack_span(id));
                 let job = self.ledger.job(id).expect("running job");
-                gains.push(JobGain::new(job, window, self.cfg.cold_start_optimism, slowdown));
+                // Degraded-mode gate: a quarantined predictor (run of
+                // rejected loss reports) or collapsed sample confidence
+                // means the fitted curve is untrustworthy. Track
+                // healthy→degraded transitions loudly; the flag itself is
+                // pure predictor state, so replay recomputes it exactly.
+                let degraded =
+                    job.predictor.is_quarantined() || job.predictor.confidence() < 0.5;
+                if degraded {
+                    if self.degraded_now.insert(id) {
+                        self.degraded_transitions += 1;
+                    }
+                } else {
+                    self.degraded_now.remove(&id);
+                }
+                let mut g =
+                    JobGain::new(job, window, self.cfg.cold_start_optimism, slowdown);
+                let parked_now =
+                    self.parked.get(&id).map_or(false, |&(until, _)| epoch_no < until);
+                if parked_now {
+                    // Parked after a failed re-placement: request nothing
+                    // until the backoff expires.
+                    g.cap = 0;
+                } else if degraded {
+                    g.degraded = true;
+                    g.fair_share = fair_share;
+                    g.cap = g.cap.min(fair_share);
+                }
+                gains.push(g);
                 losses.push(job.current_loss());
             }
 
@@ -1101,7 +1372,13 @@ impl Coordinator {
                 // same bits either way). Rides the gain split, not the
                 // decision split — it digests gain curves, and the sched
                 // percentiles must keep measuring the allocator itself.
-                if self.epochs.len() % self.cfg.broker_epochs.max(1) == 0 {
+                // A fault epoch forces a rebalance regardless of cadence:
+                // budgets fixed against the old capacity would let the
+                // shards collectively oversubscribe the surviving cores
+                // (or strand the recovered ones). `fault_epoch` is always
+                // false on an empty spec, so the cadence is untouched on
+                // fault-free runs.
+                if fault_epoch || self.epochs.len() % self.cfg.broker_epochs.max(1) == 0 {
                     let mut demand: Vec<ShardDemand> = Vec::with_capacity(self.shards.len());
                     for shard in &self.shards {
                         let mut d = ShardDemand::default();
@@ -1196,6 +1473,34 @@ impl Coordinator {
                 .collect();
         }
 
+        // 5b. Fault-repair accounting (inert when no faults are
+        // configured): a job displaced this epoch, or whose park just
+        // expired, either regained cores — a replacement — or parks with
+        // doubled backoff. An epoch where at least one such job came away
+        // empty bumps the cumulative failed-epochs counter.
+        let mut replacements = 0u32;
+        if !self.cfg.faults.is_empty() {
+            let mut placement_failed = false;
+            for (&id, &granted) in active.iter().zip(&grant.cores) {
+                let prior = self.parked.get(&id).copied();
+                let expired = prior.map_or(false, |(until, _)| epoch_no >= until);
+                if !(displaced.contains(&id) || expired) {
+                    continue;
+                }
+                if granted > 0 {
+                    self.parked.remove(&id);
+                    replacements += 1;
+                } else {
+                    placement_failed = true;
+                    let backoff = prior.map_or(1, |(_, b)| (b * 2).min(8));
+                    self.parked.insert(id, (epoch_no + backoff as u64, backoff));
+                }
+            }
+            if placement_failed {
+                self.failed_epochs += 1;
+            }
+        }
+
         // 6. Apply only the placement deltas (shrink first, then grow) —
         // the locality-aware grow prefers racks each job already
         // occupies, and the delta accounts the cores that had to cross
@@ -1220,6 +1525,9 @@ impl Coordinator {
             dirty_jobs,
             active_jobs: active.len(),
             cross_rack_moves: placement_delta.cross_rack_moves,
+            lost_cores,
+            replacements,
+            failed_epochs: self.failed_epochs,
             entries,
         });
 
@@ -1247,6 +1555,8 @@ impl Coordinator {
                 self.pool.release_all(id);
                 self.ledger.retire(id);
                 self.sched_ctx.forget(id);
+                self.parked.remove(&id);
+                self.degraded_now.remove(&id);
                 if !self.shards.is_empty() {
                     let ns = self.shards.len() as u64;
                     self.shards[(id % ns) as usize].ctx.forget(id);
@@ -2096,5 +2406,131 @@ mod tests {
             slaq < fair,
             "slaq avg normalized loss {slaq} should beat fair {fair}"
         );
+    }
+
+    #[test]
+    fn fault_knobs_are_inert_without_faults() {
+        // With an empty fault schedule every fault hook must be a
+        // provable no-op: varying the checkpoint cadence cannot perturb a
+        // single bit of the trace, and the fault counters stay zero.
+        let run = |checkpoint_epochs: usize| {
+            let cfg = CoordinatorConfig { checkpoint_epochs, ..small_cluster() };
+            let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+            c.submit(mk_spec(0, 0.0, CurveKind::Exponential), exp_source(1, 0.9));
+            c.submit(mk_spec(1, 4.0, CurveKind::Exponential), exp_source(2, 0.92));
+            c.run_until(40.0);
+            assert_eq!(c.parked_jobs(), Vec::<u64>::new());
+            assert_eq!(c.failed_epochs(), 0);
+            c.into_trace()
+        };
+        let base = run(4);
+        let other = run(1);
+        assert_eq!(base.epochs.len(), other.epochs.len());
+        for (a, b) in base.epochs.iter().zip(&other.epochs) {
+            assert_eq!((a.lost_cores, a.replacements, a.failed_epochs), (0, 0, 0));
+            assert_eq!(a.entries.len(), b.entries.len());
+            for (x, y) in a.entries.iter().zip(&b.entries) {
+                assert_eq!((x.job, x.cores), (y.job, y.cores));
+                assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn node_failure_displaces_and_replaces_on_survivors() {
+        // 2 × 16 cores, one 32-core job. Node 1 crash-stops at epoch 2:
+        // the job loses 16 cores, is re-placed onto the survivor the same
+        // epoch (a replacement, not a failed epoch), and nothing ever
+        // lands on the dead node again.
+        let cfg = CoordinatorConfig {
+            faults: FaultSpec::none().with_crash(2, 1),
+            ..small_cluster()
+        };
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+        let mut spec = mk_spec(0, 0.0, CurveKind::Exponential);
+        spec.target_fraction = 0.99999;
+        c.submit(spec, exp_source(1, 0.995));
+        c.run_until(30.0);
+        assert!(c.pool().is_dead(1));
+        assert_eq!(c.failed_epochs(), 0, "the survivor had room");
+        assert_eq!(c.parked_jobs(), Vec::<u64>::new());
+        for (_, nodes) in c.pool().placements_snapshot() {
+            assert!(nodes.iter().all(|&(node, _)| node != 1), "grant on a dead node");
+        }
+        let trace = c.into_trace();
+        assert_eq!(trace.epochs[2].lost_cores, 16);
+        assert_eq!(trace.epochs[2].replacements, 1);
+        assert!(trace.epochs.iter().all(|e| e.failed_epochs == 0));
+        // From the failure on, grants fit the surviving capacity.
+        for e in trace.epochs.iter().skip(2) {
+            let total: u32 = e.entries.iter().map(|en| en.cores).sum();
+            assert!(total <= 16, "overcommitted {total} cores at t={}", e.time);
+        }
+    }
+
+    #[test]
+    fn cluster_blackout_parks_with_exponential_backoff() {
+        // Both nodes black out at epoch 1 and recover at epoch 3. The
+        // displaced job fails placement at epoch 1 (parks, backoff 1),
+        // fails the retry at epoch 2 (re-parks, backoff 2 — so it does
+        // not even request at epoch 3) and re-places at epoch 4.
+        let cfg = CoordinatorConfig {
+            faults: FaultSpec::none().with_blackout(1, 0, 2).with_blackout(1, 1, 2),
+            ..small_cluster()
+        };
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+        let mut spec = mk_spec(0, 0.0, CurveKind::Exponential);
+        spec.target_fraction = 0.99999;
+        c.submit(spec, exp_source(1, 0.995));
+        c.run_until(12.0); // 6 epochs
+        assert_eq!(c.parked_jobs(), Vec::<u64>::new());
+        assert_eq!(c.failed_epochs(), 2);
+        let trace = c.into_trace();
+        let cores_at = |i: usize| trace.epochs[i].entries[0].cores;
+        assert_eq!(trace.epochs[1].lost_cores, 32);
+        assert_eq!(trace.epochs[1].failed_epochs, 1);
+        assert_eq!(trace.epochs[2].failed_epochs, 2);
+        assert_eq!(cores_at(1), 0);
+        assert_eq!(cores_at(2), 0);
+        assert_eq!(cores_at(3), 0, "still parked when capacity returns");
+        assert!(cores_at(4) > 0, "park expired onto recovered capacity");
+        assert_eq!(trace.epochs[4].replacements, 1);
+    }
+
+    #[test]
+    fn misbehaving_reports_fall_back_to_the_fair_share_floor() {
+        // Job 0 reports garbage (10^9× spikes) from its second sample on:
+        // the predictor quarantines it, the gain oracle falls back to the
+        // degraded fair-share floor, and the job is clamped to its fair
+        // share while the healthy job keeps its full allocation. The
+        // spare half of the cluster still flows to the degraded job — it
+        // is contained, not starved.
+        use crate::coordinator::source::ReplaySource;
+        let cfg = small_cluster(); // 2 × 16 cores
+        let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+        let mut bad = mk_spec(0, 0.0, CurveKind::Exponential);
+        bad.target_fraction = 0.99999;
+        let mut spikes = vec![1.0];
+        spikes.resize(4096, 1.0e9);
+        c.submit(bad, Box::new(ReplaySource::new(spikes)));
+        let mut good = mk_spec(1, 0.0, CurveKind::Exponential);
+        good.max_cores = 16;
+        good.target_fraction = 0.99999;
+        c.submit(good, exp_source(2, 0.995));
+        c.run_until(30.0);
+        assert!(c.degraded_transitions() >= 1, "degraded fallback never tripped");
+        let trace = c.into_trace();
+        // After the quarantine budget (3 rejected samples) has certainly
+        // tripped, the degraded job is capped at fair share (32/2 = 16)
+        // but keeps receiving the cores the healthy job cannot use.
+        for e in trace.epochs.iter().filter(|e| e.time >= 10.0) {
+            let bad_cores = e.entries.iter().find(|en| en.job == 0).map(|en| en.cores);
+            let good_cores = e.entries.iter().find(|en| en.job == 1).map(|en| en.cores);
+            if let (Some(b), Some(g)) = (bad_cores, good_cores) {
+                assert!(b <= 16, "degraded job exceeded fair share: {b} at t={}", e.time);
+                assert!(b > 0, "degraded job starved at t={}", e.time);
+                assert!(g > 0, "healthy job starved at t={}", e.time);
+            }
+        }
     }
 }

@@ -112,6 +112,14 @@ pub struct Job {
     pub loss_trace: Vec<(f64, u64, f64)>,
     /// Consecutive tiny-relative-delta count (floorless convergence check).
     small_delta_streak: u32,
+    /// Iteration count at the job's most recent checkpoint epoch — the
+    /// restart point after a node failure (maintained by the coordinator
+    /// on its `checkpoint_epochs` cadence).
+    pub ckpt_iteration: u64,
+    /// Iterations the job must re-execute before making new progress
+    /// again; set to `iteration - ckpt_iteration` when a failure evicts
+    /// its cores, consumed by [`Job::advance_with_locality`].
+    pub pending_restart_iters: u64,
 }
 
 /// Relative per-iteration improvement below which a job with an unknown
@@ -141,6 +149,8 @@ impl Job {
             completion_time: None,
             loss_trace: Vec::new(),
             small_delta_streak: 0,
+            ckpt_iteration: 0,
+            pending_restart_iters: 0,
         }
     }
 
@@ -186,10 +196,18 @@ impl Job {
                 .iterations_in_window_scaled(window, cores, self.credit, slowdown);
         let credit0 = self.credit;
         self.credit = new_credit;
+        // Iterations spent re-doing work lost to a node failure advance
+        // the clock but not the loss stream: the job replays already-seen
+        // iterations from its last checkpoint. With no pending restart
+        // debt `redo` is 0 and the loop below is bit-identical to the
+        // fault-free path.
+        let redo = n.min(self.pending_restart_iters);
+        self.pending_restart_iters -= redo;
+        let n = n - redo;
         let mut done = 0;
         for i in 1..=n {
             self.iteration += 1;
-            let t = t0 + iter_time * i as f64 - credit0;
+            let t = t0 + iter_time * (redo + i) as f64 - credit0;
             let loss = self.source.loss_at(self.iteration);
             self.record(t, loss);
             done += 1;
@@ -301,6 +319,8 @@ impl Job {
             e.put_f64(loss);
         }
         e.put_u32(self.small_delta_streak);
+        e.put_u64(self.ckpt_iteration);
+        e.put_u64(self.pending_restart_iters);
         Ok(())
     }
 
@@ -332,6 +352,8 @@ impl Job {
             loss_trace.push((d.f64()?, d.u64()?, d.f64()?));
         }
         let small_delta_streak = d.u32()?;
+        let ckpt_iteration = d.u64()?;
+        let pending_restart_iters = d.u64()?;
         Ok(Self {
             spec,
             state,
@@ -345,6 +367,8 @@ impl Job {
             completion_time,
             loss_trace,
             small_delta_streak,
+            ckpt_iteration,
+            pending_restart_iters,
         })
     }
 }
@@ -488,6 +512,43 @@ mod tests {
             b.advance_with_locality(0.0, 3.1, 4, 1.0)
         );
         assert_eq!(a.credit, b.credit);
+        assert_eq!(a.loss_trace, b.loss_trace);
+    }
+
+    #[test]
+    fn restart_debt_consumes_window_time_without_advancing_loss() {
+        // iter_time(4) = 0.6s; a 3.1s window fits 5 iteration slots. With
+        // 2 iterations of restart debt, only 3 produce new samples and
+        // the first new sample lands where slot 3 would have.
+        let mut j = exp_job(11);
+        j.activate(0.0);
+        j.pending_restart_iters = 2;
+        let n = j.advance(0.0, 3.1, 4);
+        assert_eq!(n, 3);
+        assert_eq!(j.iteration, 3);
+        assert_eq!(j.pending_restart_iters, 0);
+        assert_eq!(j.loss_trace.len(), 1 + 3);
+        assert!((j.loss_trace[1].0 - 1.8).abs() < 1e-12, "first real iteration at slot 3");
+    }
+
+    #[test]
+    fn restart_debt_larger_than_the_window_carries_over() {
+        let mut j = exp_job(12);
+        j.activate(0.0);
+        j.pending_restart_iters = 7;
+        let n = j.advance(0.0, 3.1, 4); // 5 slots, all redo
+        assert_eq!(n, 0);
+        assert_eq!(j.iteration, 0);
+        assert_eq!(j.pending_restart_iters, 2);
+        assert_eq!(j.loss_trace.len(), 1, "no new samples while replaying");
+        // Zero debt is bit-identical to the plain path.
+        let mut a = exp_job(13);
+        let mut b = exp_job(13);
+        a.activate(0.0);
+        b.activate(0.0);
+        b.pending_restart_iters = 0;
+        assert_eq!(a.advance(0.0, 3.1, 4), b.advance(0.0, 3.1, 4));
+        assert_eq!(a.credit.to_bits(), b.credit.to_bits());
         assert_eq!(a.loss_trace, b.loss_trace);
     }
 

@@ -77,8 +77,18 @@ impl CoordinatorService {
 
     /// Register an epoch-notice subscriber. Disconnected subscribers are
     /// pruned on the next broadcast; they never stall the loop.
+    ///
+    /// A subscriber joining a coordinator that has already executed
+    /// epochs — most importantly one rebuilt by
+    /// [`Coordinator::recover_state`], whose notices all predate the
+    /// crash — immediately receives one synthetic catch-up notice for
+    /// the last completed epoch, so it can align its view without
+    /// waiting a full epoch (or forever, on an idle service).
     pub fn subscribe(&mut self) -> Receiver<EpochNotice> {
         let (tx, rx) = channel();
+        if self.coord.epoch_count() > 0 {
+            let _ = tx.send(self.notice_now());
+        }
         self.subscribers.push(tx);
         rx
     }
@@ -121,14 +131,19 @@ impl CoordinatorService {
         n
     }
 
-    fn broadcast(&mut self) {
+    /// The notice describing the coordinator's current boundary state.
+    fn notice_now(&self) -> EpochNotice {
         let (_, running, completed) = self.coord.job_counts();
-        let notice = EpochNotice {
+        EpochNotice {
             epoch: self.coord.epoch_count(),
             time: self.coord.time(),
             active: running,
             completed,
-        };
+        }
+    }
+
+    fn broadcast(&mut self) {
+        let notice = self.notice_now();
         self.subscribers.retain(|s| s.send(notice).is_ok());
     }
 
@@ -367,5 +382,50 @@ mod tests {
         let recovered = Coordinator::recover_state(tmp.path()).unwrap();
         assert_eq!(recovered.epoch_count(), epochs_run);
         assert_trace_eq(&trace, &recovered.into_trace(), "post-shutdown recovery");
+    }
+
+    #[test]
+    fn fresh_subscribers_get_a_catch_up_notice_after_recovery() {
+        // Satellite: a subscriber joining a recovered service missed
+        // every pre-crash broadcast; it must receive one synthetic
+        // notice for the last recovered epoch immediately, then live
+        // notices from the next boundary on.
+        let tmp = TempDir::new("svc-catchup");
+        let mut g = crate::testkit::Gen::from_seed(41);
+        let templates = sim::random_churn_templates(&mut g, 6, 12.0);
+        let mut coord = Coordinator::with_persistence(
+            small_cfg(1),
+            policy_by_name("slaq-det").unwrap(),
+            tmp.path(),
+            4,
+        )
+        .unwrap();
+        sim::submit_templates(&mut coord, &templates, 17);
+        for _ in 0..5 {
+            coord.step_epoch();
+        }
+        drop(coord); // the crash
+
+        let revived = Coordinator::recover_state(tmp.path()).unwrap();
+        let (_pending, running, completed) = revived.job_counts();
+        let (mut svc, _tx) = CoordinatorService::new(revived);
+        let rx = svc.subscribe();
+        let catch_up = rx.try_recv().expect("catch-up notice queued at subscribe time");
+        assert_eq!(catch_up.epoch, 5, "reports the last recovered epoch");
+        assert_eq!(catch_up.time, 10.0);
+        assert_eq!(catch_up.active, running);
+        assert_eq!(catch_up.completed, completed);
+
+        svc.step_epoch();
+        let live = rx.try_recv().expect("live notice after the next epoch");
+        assert_eq!(live.epoch, 6);
+        assert!(rx.try_recv().is_err(), "exactly one catch-up, no duplicates");
+
+        // A pre-epoch subscriber on a fresh coordinator still gets
+        // nothing until the first boundary.
+        let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+        let (mut svc, _tx) = CoordinatorService::new(coord);
+        let rx = svc.subscribe();
+        assert!(rx.try_recv().is_err(), "no catch-up before any epoch");
     }
 }

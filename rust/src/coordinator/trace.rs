@@ -43,6 +43,15 @@ pub struct EpochRecord {
     /// [`crate::cluster::PlacementDelta::cross_rack_moves`]); always 0 on
     /// a flat topology.
     pub cross_rack_moves: u32,
+    /// Cores evicted by node failures at the start of this epoch (0 on a
+    /// fault-free run).
+    pub lost_cores: u32,
+    /// Fault-displaced (or park-expired) jobs that regained cores this
+    /// epoch.
+    pub replacements: u32,
+    /// Cumulative count of epochs in which at least one displaced job
+    /// could not be re-placed (monotone across the trace; 0 fault-free).
+    pub failed_epochs: u32,
     /// Per-job grants.
     pub entries: Vec<EpochEntry>,
 }
@@ -60,6 +69,9 @@ impl EpochRecord {
         e.put_usize(self.dirty_jobs);
         e.put_usize(self.active_jobs);
         e.put_u32(self.cross_rack_moves);
+        e.put_u32(self.lost_cores);
+        e.put_u32(self.replacements);
+        e.put_u32(self.failed_epochs);
         e.put_usize(self.entries.len());
         for en in &self.entries {
             e.put_u64(en.job);
@@ -79,6 +91,9 @@ impl EpochRecord {
         let dirty_jobs = d.usize_()?;
         let active_jobs = d.usize_()?;
         let cross_rack_moves = d.u32()?;
+        let lost_cores = d.u32()?;
+        let replacements = d.u32()?;
+        let failed_epochs = d.u32()?;
         let n = d.usize_()?;
         let mut entries = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
@@ -98,6 +113,9 @@ impl EpochRecord {
             dirty_jobs,
             active_jobs,
             cross_rack_moves,
+            lost_cores,
+            replacements,
+            failed_epochs,
             entries,
         })
     }
@@ -221,6 +239,9 @@ impl Trace {
                     ("dirty_jobs", Value::Num(e.dirty_jobs as f64)),
                     ("active_jobs", Value::Num(e.active_jobs as f64)),
                     ("cross_rack_moves", Value::Num(e.cross_rack_moves as f64)),
+                    ("lost_cores", Value::Num(e.lost_cores as f64)),
+                    ("replacements", Value::Num(e.replacements as f64)),
+                    ("failed_epochs", Value::Num(e.failed_epochs as f64)),
                     (
                         "entries",
                         Value::Arr(
@@ -344,6 +365,9 @@ mod tests {
                 dirty_jobs: 1,
                 active_jobs: 1,
                 cross_rack_moves: 3,
+                lost_cores: 4,
+                replacements: 1,
+                failed_epochs: 0,
                 entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5, rack_span: 2 }],
             }],
             jobs: vec![jt()],
@@ -359,6 +383,9 @@ mod tests {
         let epochs = parsed.get("epochs").unwrap().as_arr().unwrap();
         assert_eq!(epochs[0].get("time").unwrap().as_f64(), Some(3.0));
         assert_eq!(epochs[0].get("cross_rack_moves").unwrap().as_f64(), Some(3.0));
+        assert_eq!(epochs[0].get("lost_cores").unwrap().as_f64(), Some(4.0));
+        assert_eq!(epochs[0].get("replacements").unwrap().as_f64(), Some(1.0));
+        assert_eq!(epochs[0].get("failed_epochs").unwrap().as_f64(), Some(0.0));
         let entry = &epochs[0].get("entries").unwrap().as_arr().unwrap()[0];
         assert_eq!(entry.get("rack_span").unwrap().as_f64(), Some(2.0));
     }
@@ -374,6 +401,9 @@ mod tests {
             dirty_jobs: 0,
             active_jobs: 3,
             cross_rack_moves: 0,
+            lost_cores: 0,
+            replacements: 0,
+            failed_epochs: 0,
             entries: vec![
                 EpochEntry { job: 1, cores: 4, loss: 1.0, rack_span: 1 },
                 EpochEntry { job: 2, cores: 8, loss: 1.0, rack_span: 3 },
@@ -391,6 +421,9 @@ mod tests {
             dirty_jobs: 0,
             active_jobs: 0,
             cross_rack_moves: 0,
+            lost_cores: 0,
+            replacements: 0,
+            failed_epochs: 0,
             entries: vec![],
         };
         assert_eq!(empty.mean_rack_span(), 0.0);
@@ -410,6 +443,9 @@ mod tests {
             dirty_jobs: 0,
             active_jobs: 1,
             cross_rack_moves: 0,
+            lost_cores: 0,
+            replacements: 0,
+            failed_epochs: 0,
             entries: vec![],
         });
         t.epochs.push(EpochRecord {
@@ -421,6 +457,9 @@ mod tests {
             dirty_jobs: 0,
             active_jobs: 1,
             cross_rack_moves: 0,
+            lost_cores: 0,
+            replacements: 0,
+            failed_epochs: 0,
             entries: vec![],
         });
         assert!((t.mean_sched_millis() - 3.0).abs() < 1e-12);

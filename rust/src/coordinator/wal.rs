@@ -35,7 +35,7 @@ use super::job::JobSpec;
 use super::ledger::JobLedger;
 use super::source::SourceDescriptor;
 use super::trace::EpochRecord;
-use crate::cluster::{ClusterSpec, LocalityModel, TopologySpec};
+use crate::cluster::{ClusterSpec, FaultSpec, LocalityModel, TopologySpec};
 use crate::util::codec::{corrupt, fnv1a64, Dec, Enc};
 use std::fs::{File, OpenOptions};
 use std::io::{self, Write};
@@ -48,8 +48,11 @@ pub(crate) const SNAP_FILE: &str = "snapshot.bin";
 
 /// Snapshot header magic ("SLAQ").
 const SNAP_MAGIC: u32 = 0x534C_4151;
-/// Snapshot format version.
-const SNAP_VERSION: u32 = 1;
+/// Snapshot format version. v2: fault schedule + checkpoint cadence in
+/// the config, restart debt in the job codec, quarantine counters in the
+/// predictor codec, fault counters in the epoch record, parked set and
+/// degraded-transition counter in the snapshot body.
+const SNAP_VERSION: u32 = 2;
 
 /// Frame header size: `u32` length + `u64` checksum.
 const FRAME_HEADER: usize = 12;
@@ -123,6 +126,8 @@ pub(crate) fn encode_config(cfg: &CoordinatorConfig, e: &mut Enc) {
     e.put_usize(cfg.threads);
     e.put_bool(cfg.sharded);
     e.put_usize(cfg.broker_epochs);
+    e.put_usize(cfg.checkpoint_epochs);
+    cfg.faults.encode(e);
 }
 
 /// Inverse of [`encode_config`].
@@ -149,6 +154,8 @@ pub(crate) fn decode_config(d: &mut Dec) -> io::Result<CoordinatorConfig> {
         threads: d.usize_()?,
         sharded: d.bool()?,
         broker_epochs: d.usize_()?,
+        checkpoint_epochs: d.usize_()?,
+        faults: FaultSpec::decode(d)?,
     })
 }
 
@@ -378,6 +385,17 @@ pub(crate) struct SnapshotView<'a> {
     pub ctx_grants: Vec<(u64, u32)>,
     /// Per-shard `(budget, ctx epoch, ctx grants)` (empty when unsharded).
     pub shards: Vec<(u32, u64, Vec<(u64, u32)>)>,
+    /// Fault-parked jobs `(id, parked-until epoch, backoff)`, ascending
+    /// by id (empty on a fault-free run).
+    pub parked: Vec<(u64, u64, u32)>,
+    /// Jobs currently in degraded mode, ascending by id. Persisted (not
+    /// re-derived) because the flag was last evaluated at the previous
+    /// gain build, while boundary predictor state has since absorbed the
+    /// epoch's observations — recomputing could skew the transition
+    /// counter on the next epoch.
+    pub degraded: Vec<u64>,
+    /// Healthy→degraded gain-oracle transitions so far.
+    pub degraded_transitions: u64,
 }
 
 fn encode_grants(grants: &[(u64, u32)], e: &mut Enc) {
@@ -426,6 +444,17 @@ impl SnapshotView<'_> {
             e.put_u64(*ctx_epoch);
             encode_grants(grants, e);
         }
+        e.put_usize(self.parked.len());
+        for &(id, until, backoff) in &self.parked {
+            e.put_u64(id);
+            e.put_u64(until);
+            e.put_u32(backoff);
+        }
+        e.put_usize(self.degraded.len());
+        for &id in &self.degraded {
+            e.put_u64(id);
+        }
+        e.put_u64(self.degraded_transitions);
         Ok(())
     }
 
@@ -475,6 +504,12 @@ pub(crate) struct Snapshot {
     pub ctx_grants: Vec<(u64, u32)>,
     /// Per-shard `(budget, ctx epoch, ctx grants)`.
     pub shards: Vec<(u32, u64, Vec<(u64, u32)>)>,
+    /// Fault-parked jobs `(id, parked-until epoch, backoff)`.
+    pub parked: Vec<(u64, u64, u32)>,
+    /// Jobs currently in degraded mode, ascending by id.
+    pub degraded: Vec<u64>,
+    /// Healthy→degraded gain-oracle transitions so far.
+    pub degraded_transitions: u64,
 }
 
 /// Read `dir`'s snapshot if one exists (`Ok(None)` when the file is
@@ -535,6 +570,17 @@ pub(crate) fn read_snapshot(dir: &Path) -> io::Result<Option<Snapshot>> {
         let ctx_epoch = d.u64()?;
         shards.push((budget, ctx_epoch, decode_grants(&mut d)?));
     }
+    let n = d.usize_()?;
+    let mut parked = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        parked.push((d.u64()?, d.u64()?, d.u32()?));
+    }
+    let n = d.usize_()?;
+    let mut degraded = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        degraded.push(d.u64()?);
+    }
+    let degraded_transitions = d.u64()?;
     d.finish()?;
     Ok(Some(Snapshot {
         cfg,
@@ -548,6 +594,9 @@ pub(crate) fn read_snapshot(dir: &Path) -> io::Result<Option<Snapshot>> {
         ctx_epoch,
         ctx_grants,
         shards,
+        parked,
+        degraded,
+        degraded_transitions,
     }))
 }
 
@@ -600,6 +649,9 @@ mod tests {
                     dirty_jobs: 3,
                     active_jobs: 4,
                     cross_rack_moves: 1,
+                    lost_cores: 8,
+                    replacements: 1,
+                    failed_epochs: 2,
                     entries: vec![super::super::trace::EpochEntry {
                         job: 9,
                         cores: 5,

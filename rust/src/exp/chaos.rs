@@ -1,0 +1,210 @@
+//! Chaos experiment: scheduler resilience vs node-failure rate.
+//!
+//! Each sweep row runs seeded churn workloads under a sampled
+//! [`FaultSpec`] at one per-node, per-epoch failure probability and
+//! reports what the faults cost: cores evicted, jobs re-placed, epochs
+//! with at least one failed re-placement, degraded-mode transitions and
+//! the completion count on the surviving capacity. Every trial is also
+//! a correctness check: each faulty run executes twice and must be
+//! bitwise identical ([`assert_trace_eq`]), the node pool's invariants
+//! are asserted after every epoch (a dead node never holds a grant),
+//! and the zero-rate row must match a run built without any fault
+//! machinery at all — the "chaos knobs are inert" contract.
+//!
+//! The bench harness republishes the cells as `chaos_*_per_epoch`
+//! count entries in `BENCH_sched.json`.
+
+use super::report::{render_table, ExpOutput};
+use crate::cluster::{ClusterSpec, FaultSpec, TopologySpec};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Trace};
+use crate::sched::policy_by_name;
+use crate::testkit::crash::assert_trace_eq;
+use crate::testkit::{sim, Gen};
+use crate::util::csv::Csv;
+use crate::workload::JobTemplate;
+
+/// Per-node, per-epoch failure probabilities swept by the driver.
+pub const FAIL_PROBS: [f64; 4] = [0.0, 0.05, 0.10, 0.20];
+/// Mean repair time, in epochs, for sampled blackouts.
+const MTTR_EPOCHS: f64 = 2.0;
+/// Epochs per run (also the fault-sampling horizon).
+const EPOCHS: usize = 14;
+/// Jobs in each seeded churn workload.
+const JOBS: usize = 12;
+
+fn chaos_cfg(threads: usize, sharded: bool, faults: FaultSpec) -> CoordinatorConfig {
+    CoordinatorConfig {
+        cluster: ClusterSpec { nodes: 8, cores_per_node: 8 },
+        topology: if sharded {
+            TopologySpec::Uniform { zones: 4, racks_per_zone: 1 }
+        } else {
+            TopologySpec::Flat
+        },
+        epoch_secs: 2.0,
+        threads,
+        sharded,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// Aggregated counts for one failure-rate cell (summed over trials).
+pub struct ChaosCell {
+    /// Per-node, per-epoch failure probability of this row.
+    pub fail_prob: f64,
+    /// Trials aggregated into the counts below.
+    pub trials: usize,
+    /// Epochs per trial.
+    pub epochs: usize,
+    /// Cores evicted by node failures, all trials.
+    pub lost_cores: u64,
+    /// Displaced or parked jobs successfully re-placed, all trials.
+    pub replacements: u64,
+    /// Epochs where at least one re-placement found no cores, all trials.
+    pub failed_epochs: u64,
+    /// Healthy→degraded gain-oracle transitions, all trials.
+    pub degraded_transitions: u64,
+    /// Jobs that reached their quality target, all trials.
+    pub completed: usize,
+    /// Jobs submitted, all trials.
+    pub jobs: usize,
+}
+
+/// One audited run: the trace plus the two coordinator-side counters
+/// (degraded-mode transitions, cumulative failed epochs) that don't
+/// live on the trace.
+fn run_audited(
+    cfg: &CoordinatorConfig,
+    templates: &[JobTemplate],
+    source_seed: u64,
+) -> (Trace, u64, u32) {
+    let policy = policy_by_name("slaq-det").expect("slaq-det registered");
+    let mut c = Coordinator::new(cfg.clone(), policy);
+    sim::submit_templates(&mut c, templates, source_seed);
+    for _ in 0..EPOCHS {
+        c.step_epoch();
+        c.pool().check_invariants();
+    }
+    let degraded = c.degraded_transitions();
+    let failed = c.failed_epochs();
+    (c.into_trace(), degraded, failed)
+}
+
+/// Run one failure-rate cell: `trials` seeded workloads, each under its
+/// own sampled fault schedule, each executed twice with a bitwise
+/// determinism check and per-epoch pool-invariant audits.
+pub fn chaos_cell(
+    threads: usize,
+    sharded: bool,
+    fail_prob: f64,
+    trials: usize,
+    seed: u64,
+) -> ChaosCell {
+    let mut cell = ChaosCell {
+        fail_prob,
+        trials,
+        epochs: EPOCHS,
+        lost_cores: 0,
+        replacements: 0,
+        failed_epochs: 0,
+        degraded_transitions: 0,
+        completed: 0,
+        jobs: 0,
+    };
+    for trial in 0..trials {
+        let mut g =
+            Gen::from_seed(seed ^ (((fail_prob * 1e4) as u64) << 24) ^ trial as u64);
+        let templates = sim::random_churn_templates(&mut g, JOBS, 24.0);
+        let source_seed = g.u64();
+        let faults = if fail_prob > 0.0 {
+            FaultSpec::sampled(g.u64(), EPOCHS as u64, 8, fail_prob, MTTR_EPOCHS)
+        } else {
+            FaultSpec::none()
+        };
+        let cfg = chaos_cfg(threads, sharded, faults);
+        let (a, degraded, failed) = run_audited(&cfg, &templates, source_seed);
+        let (b, _, _) = run_audited(&cfg, &templates, source_seed);
+        assert_trace_eq(&a, &b, &format!("chaos p={fail_prob} trial={trial}"));
+        if fail_prob == 0.0 {
+            // Inertness: the zero-rate row must be unaffected by the
+            // fault-only knobs — same trace with a different checkpoint
+            // cadence.
+            let mut variant = cfg.clone();
+            variant.checkpoint_epochs = 1;
+            let (v, _, _) = run_audited(&variant, &templates, source_seed);
+            assert_trace_eq(&a, &v, &format!("chaos inertness trial={trial}"));
+        }
+        cell.lost_cores += a.epochs.iter().map(|e| u64::from(e.lost_cores)).sum::<u64>();
+        cell.replacements += a.epochs.iter().map(|e| u64::from(e.replacements)).sum::<u64>();
+        cell.failed_epochs += u64::from(failed);
+        cell.degraded_transitions += degraded;
+        cell.completed += a.jobs.iter().filter(|j| j.completion.is_some()).count();
+        cell.jobs += a.jobs.len();
+    }
+    cell
+}
+
+/// Run the failure-rate sweep. `threads` follows the usual convention
+/// (0 = auto, 1 = serial reference); `sharded` switches to the 4-zone
+/// sharded coordinator; each `(rate, trial)` cell derives its workload
+/// and fault schedule from `seed`.
+pub fn chaos_resilience(threads: usize, sharded: bool, trials: usize, seed: u64) -> ExpOutput {
+    let mut csv = Csv::new(&[
+        "fail_prob",
+        "trials",
+        "lost_cores",
+        "replacements",
+        "failed_epochs",
+        "degraded_transitions",
+        "completed",
+        "jobs",
+    ]);
+    let mut rows = Vec::new();
+    for &p in &FAIL_PROBS {
+        let cell = chaos_cell(threads, sharded, p, trials, seed);
+        csv.row_f64(&[
+            p,
+            trials as f64,
+            cell.lost_cores as f64,
+            cell.replacements as f64,
+            cell.failed_epochs as f64,
+            cell.degraded_transitions as f64,
+            cell.completed as f64,
+            cell.jobs as f64,
+        ]);
+        rows.push(vec![
+            format!("{p:.2}"),
+            cell.lost_cores.to_string(),
+            cell.replacements.to_string(),
+            cell.failed_epochs.to_string(),
+            cell.degraded_transitions.to_string(),
+            format!("{}/{}", cell.completed, cell.jobs),
+        ]);
+    }
+    let summary = format!(
+        "Chaos — resilience vs per-node failure rate (threads={threads}, \
+         sharded={sharded}, {trials} trials/row, mttr={MTTR_EPOCHS} epochs; \
+         every run audited per epoch and bitwise-deterministic)\n{}",
+        render_table(
+            &["fail prob", "lost cores", "replacements", "failed epochs", "degraded", "completed"],
+            &rows
+        )
+    );
+    ExpOutput { id: "chaos".into(), csv, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_sweep_smoke() {
+        // One trial per rate, serial flat config — the assertions inside
+        // the driver (determinism, inertness, pool invariants) are the
+        // test.
+        let out = chaos_resilience(1, false, 1, 20818);
+        assert_eq!(out.id, "chaos");
+        assert_eq!(out.csv.len(), FAIL_PROBS.len());
+        assert!(out.summary.contains("fail prob"));
+    }
+}

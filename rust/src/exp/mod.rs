@@ -15,6 +15,7 @@
 //! | [`quality_fidelity`] | Figs 3–5 invariants as a seeded regression suite |
 //! | [`recovery_replay`] | durability — WAL replay cost vs epochs since snapshot |
 //! | [`run_tournament`]  | policy tournament — all six schedulers × 3 workload cells |
+//! | [`chaos_resilience`] | robustness — scheduler behaviour vs node-failure rate |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
@@ -30,6 +31,7 @@
 //! optimisations are checked against the paper's headline results.
 
 mod ablations;
+mod chaos;
 mod locality;
 mod real_runs;
 mod recovery;
@@ -39,6 +41,7 @@ mod sim_runs;
 mod tournament;
 
 pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
+pub use chaos::{chaos_cell, chaos_resilience, ChaosCell, FAIL_PROBS};
 pub use locality::{
     locality_cost, locality_fidelity, locality_placement, LocalityConfig, LocalityCost,
     LocalityReport,

@@ -566,6 +566,9 @@ mod tests {
             dirty_jobs: 0,
             active_jobs: grants.len(),
             cross_rack_moves: 0,
+            lost_cores: 0,
+            replacements: 0,
+            failed_epochs: 0,
             entries: grants
                 .iter()
                 .map(|&(id, cores)| EpochEntry { job: id, cores, loss: 1.0, rack_span: 1 })

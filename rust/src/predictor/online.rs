@@ -56,8 +56,16 @@ pub struct OnlinePredictor {
     /// EWMA of the fraction of remaining-loss-to-target closed per
     /// iteration (drives hint-based prediction).
     hint_rate: crate::util::stats::Ewma,
-    /// Non-finite losses observed and discarded (robustness counter).
+    /// Losses observed and discarded as garbage — non-finite, negative,
+    /// or wildly out of band (robustness counter, cumulative).
     rejected_samples: u64,
+    /// Losses accepted into the history (cumulative; the denominator of
+    /// [`OnlinePredictor::confidence`]).
+    accepted_samples: u64,
+    /// Rejections since the last accepted refit — the quarantine counter.
+    /// Monotone while the source keeps misbehaving; reset only when a
+    /// refit actually runs (fresh trustworthy samples arrived).
+    quarantined: u64,
     /// Outstanding predictions awaiting their target iteration.
     pending: Vec<(u64, f64)>,
     /// Resolved prediction errors.
@@ -80,6 +88,16 @@ pub struct OnlinePredictor {
 /// from the fitted curve while their mean squared prediction error stays
 /// within this factor of the fit's own weighted residual (≈ 2σ).
 const DEFER_SLACK: f64 = 4.0;
+
+/// A reported loss more than this factor above the last accepted loss is
+/// out of band: no healthy optimizer's objective explodes a thousandfold
+/// in one iteration, but a corrupted or adversarial reporter's does.
+const OUT_OF_BAND_FACTOR: f64 = 1e3;
+
+/// Consecutive-ish rejection budget: once this many samples have been
+/// discarded since the last accepted refit, the job is quarantined and
+/// the scheduler stops trusting its gain curve.
+const QUARANTINE_THRESHOLD: u64 = 3;
 
 // The epoch pipeline's refit shards move `&mut OnlinePredictor` across
 // scoped worker threads and its gain-table build shares `&OnlinePredictor`
@@ -113,6 +131,8 @@ impl OnlinePredictor {
             target_hint: None,
             hint_rate: crate::util::stats::Ewma::new(0.2),
             rejected_samples: 0,
+            accepted_samples: 0,
+            quarantined: 0,
             pending: Vec::new(),
             errors: Vec::new(),
             window,
@@ -130,9 +150,39 @@ impl OnlinePredictor {
         self.target_hint = Some(target_loss);
     }
 
-    /// Number of non-finite loss observations that were rejected.
+    /// Number of loss observations rejected as garbage (non-finite,
+    /// negative, or out of band) over the predictor's lifetime.
     pub fn rejected_samples(&self) -> u64 {
         self.rejected_samples
+    }
+
+    /// Number of loss observations accepted into the history.
+    pub fn accepted_samples(&self) -> u64 {
+        self.accepted_samples
+    }
+
+    /// Rejections since the last accepted refit (monotone while the
+    /// source keeps misbehaving; see [`OnlinePredictor::is_quarantined`]).
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined
+    }
+
+    /// True once the rejection budget since the last accepted refit is
+    /// exhausted: the scheduler should stop trusting this job's gain
+    /// curve and fall back to its degraded-mode floor.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined >= QUARANTINE_THRESHOLD
+    }
+
+    /// Fraction of lifetime observations that were accepted — 1.0 for a
+    /// source that has never misbehaved (including before any sample).
+    pub fn confidence(&self) -> f64 {
+        let total = self.accepted_samples + self.rejected_samples;
+        if total == 0 {
+            1.0
+        } else {
+            self.accepted_samples as f64 / total as f64
+        }
     }
 
     /// Declared convergence family.
@@ -143,14 +193,27 @@ impl OnlinePredictor {
     /// Observe a completed iteration. Resolves any pending predictions whose
     /// target has been reached and marks the fit stale.
     ///
-    /// Non-finite losses (NaN/inf from a diverged job) are counted and
-    /// discarded: one bad sample must not poison the normalizer's maximum
-    /// or the least-squares fit.
+    /// Garbage losses are counted and discarded: one bad sample must not
+    /// poison the normalizer's maximum or the least-squares fit. Three
+    /// gates, in order — non-finite (NaN/inf from a diverged job),
+    /// negative (no loss objective here is signed), and out of band (more
+    /// than [`OUT_OF_BAND_FACTOR`]× above the last accepted loss). Each
+    /// rejection also advances the quarantine counter (see
+    /// [`OnlinePredictor::is_quarantined`]).
     pub fn observe(&mut self, iteration: u64, loss: f64, time: f64) {
-        if !loss.is_finite() {
+        if !loss.is_finite() || loss < 0.0 {
             self.rejected_samples += 1;
+            self.quarantined += 1;
             return;
         }
+        if let Some(last) = self.history.last() {
+            if loss > OUT_OF_BAND_FACTOR * last.loss.abs().max(1e-9) {
+                self.rejected_samples += 1;
+                self.quarantined += 1;
+                return;
+            }
+        }
+        self.accepted_samples += 1;
         // Track progress toward the target hint, if any.
         if let (Some(target), Some(prev)) = (self.target_hint, self.current_loss()) {
             let remaining = prev - target;
@@ -286,6 +349,9 @@ impl OnlinePredictor {
         }
         self.dirty = false;
         self.fit_count += 1;
+        // An accepted refit means fresh trustworthy samples arrived: the
+        // quarantine ends (the lifetime rejection counter does not reset).
+        self.quarantined = 0;
         self.fitted_through = self.history.last().map(|s| s.iteration);
         self.fit = fit_history(&self.history, self.kind, &self.cfg);
         // Fallback: if the declared family fits poorly, try the other one
@@ -578,6 +644,8 @@ impl OnlinePredictor {
         e.put_opt_u64(self.fitted_through);
         e.put_u64(self.fit_count);
         e.put_u64(self.deferred_refits);
+        e.put_u64(self.accepted_samples);
+        e.put_u64(self.quarantined);
     }
 
     /// Inverse of [`OnlinePredictor::encode_state`].
@@ -646,6 +714,8 @@ impl OnlinePredictor {
         let fitted_through = d.opt_u64()?;
         let fit_count = d.u64()?;
         let deferred_refits = d.u64()?;
+        let accepted_samples = d.u64()?;
+        let quarantined = d.u64()?;
         Ok(Self {
             kind,
             cfg,
@@ -656,6 +726,8 @@ impl OnlinePredictor {
             target_hint,
             hint_rate,
             rejected_samples,
+            accepted_samples,
+            quarantined,
             pending,
             errors,
             window,
@@ -839,6 +911,59 @@ mod tests {
         assert_eq!(p.current_loss(), Some(4.0));
         // Normalizer base must stay finite.
         assert!(p.normalizer().max_abs_delta().is_finite());
+    }
+
+    #[test]
+    fn negative_and_out_of_band_losses_are_rejected() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        p.observe(0, 5.0, 0.0);
+        p.observe(1, -1.0, 1.0); // signed garbage
+        p.observe(2, 5.0e4, 2.0); // 1e4× jump: out of band
+        p.observe(3, 4.0, 3.0);
+        assert_eq!(p.rejected_samples(), 2);
+        assert_eq!(p.accepted_samples(), 2);
+        assert_eq!(p.history().len(), 2);
+        assert_eq!(p.current_loss(), Some(4.0));
+        // A large *drop* is fine — only upward explosions are out of band.
+        p.observe(4, 1e-6, 4.0);
+        assert_eq!(p.rejected_samples(), 2);
+    }
+
+    #[test]
+    fn quarantine_trips_after_the_budget_and_clears_on_refit() {
+        let mut p = OnlinePredictor::new(CurveKind::Exponential);
+        for k in 0..10u64 {
+            p.observe(k, 5.0 * 0.9f64.powf(k as f64) + 1.0, k as f64);
+        }
+        p.refresh_fit();
+        assert!(!p.is_quarantined());
+        assert_eq!(p.confidence(), 1.0);
+        // A misbehaving reporter: three garbage samples trip quarantine.
+        p.observe(10, f64::NAN, 10.0);
+        p.observe(11, -3.0, 11.0);
+        assert!(!p.is_quarantined());
+        p.observe(12, f64::INFINITY, 12.0);
+        assert!(p.is_quarantined());
+        assert_eq!(p.quarantined(), 3);
+        assert!(p.confidence() < 1.0);
+        // Quarantine is monotone while only garbage arrives: refresh_fit
+        // on a clean (not dirty) predictor must not clear it.
+        p.refresh_fit();
+        assert!(p.is_quarantined());
+        // Fresh trustworthy samples + an accepted refit end the quarantine;
+        // the lifetime rejection counter keeps its history.
+        p.observe(13, 2.9, 13.0);
+        p.refresh_fit();
+        assert!(!p.is_quarantined());
+        assert_eq!(p.quarantined(), 0);
+        assert_eq!(p.rejected_samples(), 3);
+    }
+
+    #[test]
+    fn confidence_defaults_to_full_trust() {
+        let p = OnlinePredictor::new(CurveKind::Sublinear);
+        assert_eq!(p.confidence(), 1.0);
+        assert!(!p.is_quarantined());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use crate::util::rng::Rng;
 
+pub mod chaos;
 pub mod crash;
 pub mod sim;
 

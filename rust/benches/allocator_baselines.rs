@@ -24,7 +24,7 @@ fn main() {
     let requests: Vec<JobRequest<'_>> = gains
         .iter()
         .enumerate()
-        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
         .collect();
 
     for name in ["slaq", "fair", "fifo", "static"] {

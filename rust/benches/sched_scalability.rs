@@ -39,15 +39,21 @@
 //! p95 = epochs with a failed re-placement, iters = jobs completed on
 //! the surviving capacity) at N% per-node, per-epoch failure
 //! probability; every chaos cell is audited (pool invariants per epoch,
-//! bitwise run-to-run determinism) before it is published.
+//! bitwise run-to-run determinism) before it is published. The
+//! `elastic_{aggressive,priced}_per_epoch` entries compare planning
+//! blind against pricing the restart debt on the same elastic workload
+//! under the same non-free transition model (mean = mean normalized
+//! loss, p50 = voluntary restarts charged, p95 = mean seconds to 90%
+//! reduction or -1, iters = jobs completed).
 
 #[path = "common.rs"]
 mod common;
 
 use common::{bench_stats, write_bench_json, BenchStats};
 use slaq::exp::{
-    chaos_cell, churn_decision_cost, epoch_loop_cost, fig6_sched_time, locality_cost,
-    run_tournament, ChurnConfig, EpochLoopConfig, LocalityConfig, TournamentConfig, FAIL_PROBS,
+    chaos_cell, churn_decision_cost, elastic_cell, epoch_loop_cost, fig6_sched_time,
+    locality_cost, run_tournament, ChurnConfig, EpochLoopConfig, LocalityConfig,
+    TournamentConfig, FAIL_PROBS,
 };
 use slaq::sched::{JobRequest, Policy, SlaqPolicy};
 use slaq::util::rng::Rng;
@@ -73,7 +79,7 @@ fn main() {
         let requests: Vec<JobRequest<'_>> = gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect();
         let mut policy = SlaqPolicy::new();
         all.push(bench_stats(&format!("slaq_allocate_{jobs}x{cores}"), 2, 20, || {
@@ -351,6 +357,35 @@ fn main() {
             p95: cell.failed_epochs as f64,
             iters: cell.completed,
         });
+    }
+
+    println!("== elastic: aggressive vs hysteretic reallocation under priced transitions ==");
+    // Quality (not latency) cells — both arms run the same seeded
+    // elastic workload under the same non-free transition model; each
+    // run is bitwise-deterministic and trial 0 re-proves zero-cost
+    // inertness. mean = mean normalized loss, p50 = voluntary restarts
+    // charged, p95 = mean seconds to 90% reduction (-1 when no job
+    // reached it), iters = jobs completed.
+    {
+        let cell = elastic_cell(0, false, 0, 7);
+        for (arm, stats) in [("aggressive", &cell.aggressive), ("priced", &cell.priced)] {
+            println!(
+                "elastic_{arm}: {} restarts, {:.4} mean norm loss, {:.2} t90, \
+                 {}/{} completed",
+                stats.voluntary_restarts,
+                stats.mean_loss(),
+                stats.mean_t90(),
+                stats.completed,
+                stats.jobs,
+            );
+            all.push(BenchStats {
+                name: format!("elastic_{arm}_per_epoch"),
+                mean: stats.mean_loss(),
+                p50: stats.voluntary_restarts as f64,
+                p95: if stats.reached > 0 { stats.mean_t90() } else { -1.0 },
+                iters: stats.completed,
+            });
+        }
     }
 
     match write_bench_json("BENCH_sched.json", "cargo bench --bench sched_scalability", &all) {

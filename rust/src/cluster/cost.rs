@@ -162,6 +162,83 @@ impl LocalityModel {
     }
 }
 
+/// Cost of *changing* a grant: checkpoint-aware reallocation pricing.
+///
+/// SLAQ's baseline treats every grant change as free; in reality a shrink
+/// or a cross-rack migration forces the job back to its last checkpoint
+/// (losing the iterations since) and burns extra iterations restoring and
+/// re-warming state (input pipelines, optimizer moments, cache locality).
+/// The model has three knobs, all in iteration units so they compose with
+/// the simulator's restart-debt clock:
+///
+/// * `checkpoint_write_iters` — iterations' worth of time a checkpoint
+///   write steals from training (paid once per priced transition, folded
+///   into the planner's penalty, not the simulator clock — writes overlap
+///   training in real systems).
+/// * `restore_iters` — flat iterations burned restoring any checkpoint.
+/// * `warmup_iters_per_state_sec` — extra warmup iterations per second of
+///   the job's *serial* iteration cost, the model-state-size proxy: jobs
+///   with heavy driver-side state (big models) re-warm slower.
+///
+/// The zero-valued [`TransitionModel::default`] is provably inert: the
+/// coordinator gates every voluntary-restart and planner-penalty code
+/// path on [`TransitionModel::is_free`], so default-configured runs are
+/// bitwise identical to pre-transition-model traces (chaos-suite style
+/// inertness tests pin this).
+///
+/// ```
+/// use slaq::cluster::TransitionModel;
+///
+/// let free = TransitionModel::default();
+/// assert!(free.is_free());
+/// assert_eq!(free.warmup_iters(3.0), 0);
+///
+/// let m = TransitionModel { checkpoint_write_iters: 0.5, restore_iters: 2,
+///                           warmup_iters_per_state_sec: 4.0 };
+/// assert!(!m.is_free());
+/// assert_eq!(m.warmup_iters(0.0), 2); // flat restore floor
+/// assert_eq!(m.warmup_iters(1.5), 8); // + state-scaled warmup
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransitionModel {
+    /// Iterations' worth of training time one checkpoint write costs
+    /// (planner-side pricing only).
+    pub checkpoint_write_iters: f64,
+    /// Flat iterations burned restoring from a checkpoint.
+    pub restore_iters: u32,
+    /// Extra warmup iterations per second of serial iteration cost
+    /// (state-size proxy).
+    pub warmup_iters_per_state_sec: f64,
+}
+
+impl Default for TransitionModel {
+    /// Zero cost everywhere: transitions are free, exactly the
+    /// pre-transition-model scheduler.
+    fn default() -> Self {
+        Self { checkpoint_write_iters: 0.0, restore_iters: 0, warmup_iters_per_state_sec: 0.0 }
+    }
+}
+
+impl TransitionModel {
+    /// True when every knob is zero — the coordinator uses this to skip
+    /// the voluntary-restart machinery entirely, keeping the default
+    /// bitwise inert.
+    pub fn is_free(&self) -> bool {
+        self.checkpoint_write_iters == 0.0
+            && self.restore_iters == 0
+            && self.warmup_iters_per_state_sec == 0.0
+    }
+
+    /// Iterations burned restoring + re-warming a job whose serial
+    /// iteration cost is `state_secs` (the state-size proxy; pass the
+    /// job's `CostModel::serial_secs`). Deterministic truncation, so the
+    /// simulator's restart debt stays integral and replay-exact.
+    pub fn warmup_iters(&self, state_secs: f64) -> u32 {
+        self.restore_iters
+            + (self.warmup_iters_per_state_sec * state_secs.max(0.0)) as u32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +341,42 @@ mod tests {
         for span in 0..10 {
             assert_eq!(off.slowdown(span), 1.0);
         }
+    }
+
+    #[test]
+    fn transition_model_default_is_free_and_warmup_scales_with_state() {
+        assert!(TransitionModel::default().is_free());
+        assert_eq!(TransitionModel::default().warmup_iters(100.0), 0);
+        let m = TransitionModel {
+            checkpoint_write_iters: 1.0,
+            restore_iters: 3,
+            warmup_iters_per_state_sec: 2.0,
+        };
+        assert!(!m.is_free());
+        assert_eq!(m.warmup_iters(0.0), 3);
+        assert_eq!(m.warmup_iters(2.5), 8);
+        // Any single nonzero knob flips is_free.
+        let only_write = TransitionModel { checkpoint_write_iters: 0.1, ..Default::default() };
+        let only_restore = TransitionModel { restore_iters: 1, ..Default::default() };
+        let only_warm =
+            TransitionModel { warmup_iters_per_state_sec: 0.5, ..Default::default() };
+        assert!(!only_write.is_free() && !only_restore.is_free() && !only_warm.is_free());
+    }
+
+    #[test]
+    fn transition_warmup_is_monotone_and_clamps_negative_state() {
+        forall("warmup monotone in state size", 100, |g| {
+            let m = TransitionModel {
+                checkpoint_write_iters: 0.0,
+                restore_iters: g.usize_in(0, 5) as u32,
+                warmup_iters_per_state_sec: g.f64_in(0.0, 10.0),
+            };
+            let a = g.f64_in(0.0, 10.0);
+            let b = a + g.f64_in(0.0, 10.0);
+            assert!(m.warmup_iters(b) >= m.warmup_iters(a));
+            assert!(m.warmup_iters(a) >= m.restore_iters);
+            assert_eq!(m.warmup_iters(-1.0), m.restore_iters, "negative state clamps to 0");
+        });
     }
 
     #[test]

@@ -23,7 +23,7 @@ mod faults;
 mod nodes;
 mod topology;
 
-pub use cost::{CostModel, LocalityModel};
+pub use cost::{CostModel, LocalityModel, TransitionModel};
 pub use faults::{FaultAction, FaultEvent, FaultSpec};
 pub use nodes::{ClusterSpec, NodePool, Placement, PlacementDelta};
 pub use topology::{Topology, TopologySpec};

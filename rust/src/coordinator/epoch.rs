@@ -64,6 +64,7 @@ use super::wal::{
 };
 use crate::cluster::{
     ClusterSpec, CostModel, FaultAction, FaultSpec, LocalityModel, NodePool, TopologySpec,
+    TransitionModel,
 };
 use crate::predictor::OnlinePredictor;
 use crate::sched::{
@@ -169,6 +170,22 @@ pub struct CoordinatorConfig {
     /// loop is a provable no-op on an empty spec, keeping fault-free
     /// traces bitwise identical to pre-fault builds.
     pub faults: FaultSpec,
+    /// Cost of *voluntarily* changing a grant: any shrink (or cross-rack
+    /// move) rewinds the job to its last checkpoint and burns
+    /// restore/warmup iterations as restart debt on the simulator clock
+    /// (see [`TransitionModel`]). The zero-cost default is provably
+    /// inert — the voluntary-restart stage and the planner penalty are
+    /// both gated on [`TransitionModel::is_free`], keeping default
+    /// traces bitwise identical to pre-transition-model builds.
+    pub transition: TransitionModel,
+    /// When true (the default) and `transition` is non-free, the gain
+    /// views expose a per-job transition penalty through
+    /// [`crate::sched::GainModel::net_gain`], so the planner only shrinks
+    /// a job when the quality gained elsewhere clears the restart cost.
+    /// `false` keeps charging restarts in the simulator while the
+    /// planner ignores them — the "aggressive" arm the `exp::elastic`
+    /// scenario compares against.
+    pub price_transitions: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -187,6 +204,8 @@ impl Default for CoordinatorConfig {
             broker_epochs: 8,
             checkpoint_epochs: 4,
             faults: FaultSpec::none(),
+            transition: TransitionModel::default(),
+            price_transitions: true,
         }
     }
 }
@@ -227,6 +246,16 @@ struct JobGain<'a> {
     /// Cores the degraded curve saturates at (surviving capacity divided
     /// by the active-job count; ≥ 1). Unused while `degraded` is false.
     fair_share: u32,
+    /// Cores the job holds entering this epoch (its `prev_cores` request
+    /// field): the reference point for the transition penalty below.
+    prev: u32,
+    /// Transition penalty in normalized-reduction units: what shrinking
+    /// this job below `prev` would cost it (checkpoint rewind + restore
+    /// and warmup iterations + the checkpoint write, pushed through the
+    /// job's own predicted-reduction curve). Materialized once per job
+    /// per epoch by the coordinator; 0.0 whenever pricing is off, so
+    /// `net_gain` degenerates to `gain` bit for bit.
+    penalty: f64,
 }
 
 /// Scale of the degraded-mode gain curve: small enough that a degraded
@@ -241,12 +270,14 @@ impl<'a> JobGain<'a> {
             predictor: &job.predictor,
             cost: job.spec.cost,
             credit: job.credit,
-            cap: job.spec.max_cores,
+            cap: job.effective_max_cores(),
             window,
             cold_start_optimism,
             slowdown,
             degraded: false,
             fair_share: 0,
+            prev: job.cores,
+            penalty: 0.0,
         }
     }
 
@@ -284,6 +315,22 @@ impl GainModel for JobGain<'_> {
             return dk;
         }
         self.predictor.predicted_normalized_reduction(dk)
+    }
+
+    /// Transition-priced gain: candidate grants below the grant held
+    /// entering the epoch (a shrink, which forces a checkpoint restart)
+    /// are charged the materialized `penalty`. The guard is a branch, not
+    /// arithmetic, so with a zero penalty (pricing off, free transition
+    /// model, or a fresh arrival) every value is bit-for-bit the plain
+    /// gain. `cores == 0` stays at gain 0 by convention — policies treat
+    /// an empty grant as the zero baseline, and the simulator charges the
+    /// actual restart debt regardless of what the planner priced.
+    fn net_gain(&self, prev_cores: u32, cores: u32) -> f64 {
+        let g = self.gain(cores);
+        if self.penalty == 0.0 || prev_cores == 0 || cores == 0 || cores >= prev_cores {
+            return g;
+        }
+        g - self.penalty
     }
 }
 
@@ -383,6 +430,26 @@ pub struct Coordinator {
     /// (or park-expired) job could not be re-placed. Recorded per epoch
     /// in [`EpochRecord::failed_epochs`].
     failed_epochs: u32,
+    /// One [`EpochNotice`] per completed epoch, in order — the full
+    /// subscriber-visible history. Persisted in the snapshot and
+    /// re-derived identically by WAL replay, so a subscriber attaching
+    /// to a recovered service misses no epochs.
+    notices: Vec<EpochNotice>,
+}
+
+/// Boundary-state summary of one completed epoch, broadcast to
+/// [`crate::coordinator::CoordinatorService`] subscribers and retained
+/// (per epoch, in order) as the coordinator's notice history.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochNotice {
+    /// Epochs completed so far (this epoch included).
+    pub epoch: usize,
+    /// Virtual time after the epoch.
+    pub time: f64,
+    /// Jobs still running after the epoch.
+    pub active: usize,
+    /// Jobs completed so far, in total.
+    pub completed: usize,
 }
 
 impl Coordinator {
@@ -441,6 +508,7 @@ impl Coordinator {
             degraded_now: BTreeSet::new(),
             degraded_transitions: 0,
             failed_epochs: 0,
+            notices: Vec::new(),
         }
     }
 
@@ -562,6 +630,7 @@ impl Coordinator {
             c.degraded_now = s.degraded.into_iter().collect();
             c.degraded_transitions = s.degraded_transitions;
             c.failed_epochs = c.epochs.last().map(|r| r.failed_epochs).unwrap_or(0);
+            c.notices = s.notices;
             c.sched_ctx.restore_grants(s.ctx_grants, s.ctx_epoch);
             if s.shards.len() != c.shards.len() {
                 return Err(corrupt(format!(
@@ -660,11 +729,13 @@ impl Coordinator {
         // Fault boundary — identical to the live epoch's stage 2b
         // (checkpoint cadence, recoveries then failures, placement
         // eviction and restart debt), then cross-checked against the
-        // logged core loss.
+        // logged core loss. The checkpoint pin mirrors the live gate:
+        // any restart source — faults or a non-free transition model —
+        // keeps the cadence.
         let epoch_no = self.epochs.len() as u64;
         let mut lost_cores = 0u32;
         let mut displaced: BTreeSet<u64> = BTreeSet::new();
-        if !self.cfg.faults.is_empty() {
+        if !self.cfg.faults.is_empty() || !self.cfg.transition.is_free() {
             let cadence = self.cfg.checkpoint_epochs.max(1) as u64;
             if epoch_no > 0 && epoch_no % cadence == 0 {
                 for &id in active.iter() {
@@ -672,6 +743,8 @@ impl Coordinator {
                     job.ckpt_iteration = job.iteration;
                 }
             }
+        }
+        if !self.cfg.faults.is_empty() {
             let mut lost: Vec<(u64, u32)> = Vec::new();
             for ev in self.cfg.faults.events_at(epoch_no) {
                 match ev.action {
@@ -693,6 +766,24 @@ impl Coordinator {
                 "replay fault skew at t={t0}: log {} lost cores, state {lost_cores}",
                 rec.lost_cores
             )));
+        }
+
+        // Elastic adaptation — the live epoch's stage 2c, re-derived
+        // from the replayed iteration counters.
+        for &id in active.iter() {
+            let job = self.ledger.job_mut(id).expect("running job");
+            if job.spec.elastic.is_empty() {
+                continue;
+            }
+            let due = job
+                .spec
+                .elastic
+                .iter()
+                .take_while(|e| e.at_iteration <= job.iteration)
+                .count() as u32;
+            if due > job.elastic_applied {
+                job.elastic_applied = due;
+            }
         }
 
         let mut dirty: Vec<u64> = Vec::new();
@@ -746,7 +837,16 @@ impl Coordinator {
         }
 
         // Apply the *logged* grants — the decision phase is what replay
-        // elides — through the same placement-diff path as a live epoch.
+        // elides — through the same placement-diff path as a live epoch,
+        // capturing the pre-diff spans first when transitions are
+        // charged (the reference placement for the voluntary-restart
+        // mirror below).
+        let charge_transitions = !self.cfg.transition.is_free();
+        let prev_spans: Vec<u32> = if charge_transitions {
+            active.iter().map(|&id| self.pool.rack_span(id) as u32).collect()
+        } else {
+            Vec::new()
+        };
         let targets: Vec<(u64, u32)> =
             rec.entries.iter().map(|e| (e.job, e.cores)).collect();
         let delta = self.pool.apply_diff(&targets);
@@ -798,6 +898,40 @@ impl Coordinator {
             )));
         }
 
+        // Voluntary-restart mirror of the live epoch's stage 6b, driven
+        // by the logged grants and spans, then cross-checked against the
+        // logged restart count.
+        let mut voluntary_restarts = 0u32;
+        if charge_transitions {
+            for (i, e) in rec.entries.iter().enumerate() {
+                let job = self.ledger.job_mut(e.job).expect("running job");
+                let prev = job.cores;
+                if prev == 0 {
+                    continue;
+                }
+                let shrunk = e.cores < prev;
+                let migrated = e.cores > 0 && e.rack_span > prev_spans[i];
+                if !(shrunk || migrated) {
+                    continue;
+                }
+                let debt = (job.iteration - job.ckpt_iteration)
+                    + u64::from(
+                        self.cfg.transition.warmup_iters(job.spec.cost.serial_secs),
+                    );
+                if debt > 0 {
+                    job.pending_restart_iters = job.pending_restart_iters.max(debt);
+                    voluntary_restarts += 1;
+                }
+            }
+        }
+        if voluntary_restarts != rec.voluntary_restarts {
+            return Err(corrupt(format!(
+                "replay transition skew at t={t0}: log {} voluntary restarts, \
+                 state {voluntary_restarts}",
+                rec.voluntary_restarts
+            )));
+        }
+
         // The logged record joins the trace verbatim (wall-clock nanos
         // included), so a recovered trace is the original trace.
         self.epochs.push(rec.clone());
@@ -805,8 +939,8 @@ impl Coordinator {
         let mut completed_ids: Vec<u64> = Vec::new();
         for e in &rec.entries {
             let (id, span) = (e.job, e.rack_span);
-            let slowdown = self.cfg.locality.slowdown(span as usize);
             let job = self.ledger.job_mut(id).expect("running job");
+            let slowdown = job.work_scaled(self.cfg.locality.slowdown(span as usize));
             job.max_rack_span = job.max_rack_span.max(span);
             let iterations = job.advance_with_locality(t0, window, e.cores, slowdown);
             let completed = job.state == JobState::Completed;
@@ -870,7 +1004,27 @@ impl Coordinator {
         }
 
         self.time = t0 + window;
+        self.push_notice();
         Ok(())
+    }
+
+    /// Append this boundary's [`EpochNotice`] to the retained history —
+    /// called identically at the end of the live epoch and its replay,
+    /// so the history is part of the bit-identical recovered state.
+    fn push_notice(&mut self) {
+        let (_, running, completed) = self.ledger.counts();
+        self.notices.push(EpochNotice {
+            epoch: self.epochs.len(),
+            time: self.time,
+            active: running,
+            completed,
+        });
+    }
+
+    /// The retained per-epoch notice history, oldest first — one entry
+    /// per completed epoch, surviving crash recovery.
+    pub fn epoch_notices(&self) -> &[EpochNotice] {
+        &self.notices
     }
 
     /// Number of per-zone shards (0 when the coordinator is unsharded).
@@ -1016,6 +1170,7 @@ impl Coordinator {
             parked: self.parked.iter().map(|(&id, &(until, b))| (id, until, b)).collect(),
             degraded: self.degraded_now.iter().copied().collect(),
             degraded_transitions: self.degraded_transitions,
+            notices: &self.notices,
         };
         view.write(&d.dir)
     }
@@ -1079,7 +1234,11 @@ impl Coordinator {
         let mut displaced: BTreeSet<u64> = BTreeSet::new();
         let fault_epoch = !self.cfg.faults.is_empty()
             && !self.cfg.faults.events_at(epoch_no).is_empty();
-        if !self.cfg.faults.is_empty() {
+        // Checkpoints are pinned whenever *any* restart source is live —
+        // faults or a non-free transition model — so voluntary restarts
+        // rewind to the same cadence faults do. With neither, the pin
+        // loop never runs (the inertness contract).
+        if !self.cfg.faults.is_empty() || !self.cfg.transition.is_free() {
             let cadence = self.cfg.checkpoint_epochs.max(1) as u64;
             if epoch_no > 0 && epoch_no % cadence == 0 {
                 for &id in active.iter() {
@@ -1087,6 +1246,8 @@ impl Coordinator {
                     job.ckpt_iteration = job.iteration;
                 }
             }
+        }
+        if !self.cfg.faults.is_empty() {
             let mut lost: Vec<(u64, u32)> = Vec::new();
             for ev in self.cfg.faults.events_at(epoch_no) {
                 match ev.action {
@@ -1101,6 +1262,29 @@ impl Coordinator {
             for &id in &displaced {
                 let job = self.ledger.job_mut(id).expect("displaced job is running");
                 job.pending_restart_iters = job.iteration - job.ckpt_iteration;
+            }
+        }
+
+        // 2c. Elastic adaptation events: a job whose spec schedules
+        // mid-training resizes (see `JobSpec::elastic`) acknowledges, at
+        // the epoch boundary, every event whose trigger iteration has
+        // been reached. The applied-prefix counter — not the raw
+        // iteration — drives the derived cap/work-scale, so resizes take
+        // effect at deterministic boundaries and replay bit-identically.
+        // Jobs without elastic events skip the loop body entirely.
+        for &id in active.iter() {
+            let job = self.ledger.job_mut(id).expect("running job");
+            if job.spec.elastic.is_empty() {
+                continue;
+            }
+            let due = job
+                .spec
+                .elastic
+                .iter()
+                .take_while(|e| e.at_iteration <= job.iteration)
+                .count() as u32;
+            if due > job.elastic_applied {
+                job.elastic_applied = due;
             }
         }
 
@@ -1204,9 +1388,14 @@ impl Coordinator {
             let mut gains: Vec<JobGain<'_>> = Vec::with_capacity(active.len());
             let fair_share =
                 (capacity / (active.len().max(1) as u32)).max(1);
+            // Planner-side transition pricing is live only when both the
+            // config asks for it and the model is non-free; otherwise
+            // every penalty stays 0.0 and net_gain ≡ gain bit for bit.
+            let price = self.cfg.price_transitions && !self.cfg.transition.is_free();
             for &id in active.iter() {
-                let slowdown = self.cfg.locality.slowdown(self.pool.rack_span(id));
                 let job = self.ledger.job(id).expect("running job");
+                let slowdown = job
+                    .work_scaled(self.cfg.locality.slowdown(self.pool.rack_span(id)));
                 // Degraded-mode gate: a quarantined predictor (run of
                 // rejected loss reports) or collapsed sample confidence
                 // means the fitted curve is untrustworthy. Track
@@ -1233,6 +1422,31 @@ impl Coordinator {
                     g.degraded = true;
                     g.fair_share = fair_share;
                     g.cap = g.cap.min(fair_share);
+                } else if price && job.cores > 0 {
+                    // Materialize this job's transition penalty once per
+                    // epoch: the quality it would forfeit if shrunk —
+                    // the iterations since its last checkpoint (rewound)
+                    // plus restore/warmup plus the checkpoint write,
+                    // pushed through the same predicted-reduction curve
+                    // `gain` uses (iterations at face value during cold
+                    // start, exactly like the `dk` fallback). Degraded
+                    // jobs keep penalty 0 — their epsilon-scale floor
+                    // would be swamped, and they are already clamped to
+                    // the fair share.
+                    let iters = (job.iteration - job.ckpt_iteration) as f64
+                        + f64::from(
+                            self.cfg.transition.warmup_iters(job.spec.cost.serial_secs),
+                        )
+                        + self.cfg.transition.checkpoint_write_iters;
+                    if iters > 0.0 {
+                        g.penalty = if self.cfg.cold_start_optimism
+                            && job.predictor.history().len() < 3
+                        {
+                            iters
+                        } else {
+                            job.predictor.predicted_normalized_reduction(iters)
+                        };
+                    }
                 }
                 gains.push(g);
                 losses.push(job.current_loss());
@@ -1256,7 +1470,9 @@ impl Coordinator {
                     let table = self.sched_ctx.gain_table_mut();
                     if threads > 1 && self.policy.wants_gain_table() {
                         let gain_start = Instant::now();
-                        table.reset(active.iter().zip(&gains).map(|(&id, g)| (id, g.cap())));
+                        table.reset(
+                            active.iter().zip(&gains).map(|(&id, g)| (id, g.cap(), g.prev)),
+                        );
                         let gains_ref: &[JobGain<'_>] = &gains;
                         let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = table
                             .shards_mut(threads)
@@ -1267,7 +1483,7 @@ impl Coordinator {
                                         rows,
                                         slice,
                                         |r| gains_ref[r].cap() as usize,
-                                        |r, c| gains_ref[r].gain(c),
+                                        |r, c| gains_ref[r].net_gain(gains_ref[r].prev, c),
                                     )
                                 }) as Box<dyn FnOnce() + Send + '_>
                             })
@@ -1287,7 +1503,12 @@ impl Coordinator {
                 let requests: Vec<JobRequest<'_>> = active
                     .iter()
                     .zip(&gains)
-                    .map(|(&id, g)| JobRequest { id, max_cores: g.cap(), gain: g })
+                    .map(|(&id, g)| JobRequest {
+                        id,
+                        max_cores: g.cap(),
+                        prev_cores: g.prev,
+                        gain: g,
+                    })
                     .collect();
 
                 // 5. Allocate (this is the decision Fig 6 times), writing
@@ -1339,15 +1560,18 @@ impl Coordinator {
                             Box::new(move || {
                                 let Shard { ctx, idx, .. } = shard;
                                 let table = ctx.gain_table_mut();
-                                table.reset(
-                                    idx.iter().map(|&i| (active_ref[i], gains_ref[i].cap())),
-                                );
+                                table.reset(idx.iter().map(|&i| {
+                                    (active_ref[i], gains_ref[i].cap(), gains_ref[i].prev)
+                                }));
                                 for (rows, slice) in table.shards_mut(1) {
                                     GainTable::fill_shard(
                                         rows,
                                         slice,
                                         |r| gains_ref[idx[r]].cap() as usize,
-                                        |r, c| gains_ref[idx[r]].gain(c),
+                                        |r, c| {
+                                            let g = &gains_ref[idx[r]];
+                                            g.net_gain(g.prev, c)
+                                        },
                                     );
                                 }
                                 table.mark_ready();
@@ -1391,7 +1615,7 @@ impl Coordinator {
                             d.eligible_jobs += 1;
                             let g = |c: u32| match table {
                                 Some(t) => t.gain(row, c),
-                                None => gains_ref[i].gain(c),
+                                None => gains_ref[i].net_gain(gains_ref[i].prev, c),
                             };
                             let mut prev = g(1);
                             d.first_core.push(prev);
@@ -1428,6 +1652,7 @@ impl Coordinator {
                                 .map(|&i| JobRequest {
                                     id: active_ref[i],
                                     max_cores: gains_ref[i].cap(),
+                                    prev_cores: gains_ref[i].prev,
                                     gain: &gains_ref[i],
                                 })
                                 .collect();
@@ -1506,13 +1731,58 @@ impl Coordinator {
         // occupies, and the delta accounts the cores that had to cross
         // racks anyway. The post-placement spans are computed once into
         // reusable scratch and shared by the trace entries and the
-        // advance loop below.
+        // advance loop below. When the transition model is non-free the
+        // pre-diff spans are captured first: they are the reference
+        // placement for the voluntary-restart stage (6b).
+        let charge_transitions = !self.cfg.transition.is_free();
+        let prev_spans: Vec<u32> = if charge_transitions {
+            active.iter().map(|&id| self.pool.rack_span(id) as u32).collect()
+        } else {
+            Vec::new()
+        };
         let placement_delta = self.pool.apply_diff(&targets);
         let mut spans = std::mem::take(&mut self.scratch.spans);
         spans.clear();
         spans.extend(active.iter().map(|&id| self.pool.rack_span(id) as u32));
         for (e, &span) in entries.iter_mut().zip(&spans) {
             e.rack_span = span;
+        }
+
+        // 6b. Voluntary-restart accounting: with a non-free transition
+        // model the simulator *charges* every disruptive reallocation,
+        // whether or not the planner priced it (`price_transitions`
+        // only steers the gain view — the physics are unconditional, so
+        // the aggressive arm of `exp::elastic` pays for what it
+        // ignores). A job shrunk below the cores it held entering the
+        // epoch (a pause counts), or granted cores across a wider rack
+        // span than before, rewinds to its last checkpoint and burns
+        // restore-plus-warmup iterations on the simulated clock via the
+        // same `pending_restart_iters` debt the fault path uses. Debts
+        // max-merge so a voluntary restart never erases a larger
+        // fault-induced one. With the default free model the stage is
+        // skipped entirely — bitwise inert.
+        let mut voluntary_restarts = 0u32;
+        if charge_transitions {
+            for (i, (&id, &granted)) in active.iter().zip(&grant.cores).enumerate() {
+                let job = self.ledger.job_mut(id).expect("running job");
+                let prev = job.cores;
+                if prev == 0 {
+                    continue;
+                }
+                let shrunk = granted < prev;
+                let migrated = granted > 0 && spans[i] > prev_spans[i];
+                if !(shrunk || migrated) {
+                    continue;
+                }
+                let debt = (job.iteration - job.ckpt_iteration)
+                    + u64::from(
+                        self.cfg.transition.warmup_iters(job.spec.cost.serial_secs),
+                    );
+                if debt > 0 {
+                    job.pending_restart_iters = job.pending_restart_iters.max(debt);
+                    voluntary_restarts += 1;
+                }
+            }
         }
 
         // 7. Record the epoch before advancing.
@@ -1528,6 +1798,7 @@ impl Coordinator {
             lost_cores,
             replacements,
             failed_epochs: self.failed_epochs,
+            voluntary_restarts,
             entries,
         });
 
@@ -1540,8 +1811,8 @@ impl Coordinator {
         let log_epoch = self.durable.is_some();
         let mut completed_ids: Vec<u64> = Vec::new();
         for ((&id, &cores), &span) in active.iter().zip(&grant.cores).zip(&spans) {
-            let slowdown = self.cfg.locality.slowdown(span as usize);
             let job = self.ledger.job_mut(id).expect("running job");
+            let slowdown = job.work_scaled(self.cfg.locality.slowdown(span as usize));
             job.max_rack_span = job.max_rack_span.max(span);
             let iterations = job.advance_with_locality(t0, window, cores, slowdown);
             let completed = job.state == JobState::Completed;
@@ -1573,6 +1844,7 @@ impl Coordinator {
         self.scratch.grant = grant;
 
         self.time = t0 + window;
+        self.push_notice();
 
         // Simulated kill after full in-memory execution but before the
         // epoch record reached the WAL — the other half of the durability
@@ -1709,6 +1981,7 @@ mod tests {
             target_fraction: 0.95,
             max_iterations: 5_000,
             target_hint: None,
+            elastic: Vec::new(),
         }
     }
 
@@ -2532,5 +2805,137 @@ mod tests {
                 assert!(g > 0, "healthy job starved at t={}", e.time);
             }
         }
+    }
+
+    #[test]
+    fn transition_knobs_are_inert_when_free() {
+        // The zero-cost contract at the coordinator level: with the
+        // default (free) TransitionModel the entire voluntary-restart
+        // path is gated off, so neither the planner flag nor the
+        // checkpoint cadence can move a bit of the trace — flat and
+        // 8-zone sharded, serial and pooled alike.
+        use crate::testkit::crash::assert_trace_eq;
+        use crate::testkit::{sim, Gen};
+        for (threads, sharded) in [(1, false), (4, false), (1, true), (4, true)] {
+            let cfg = if sharded {
+                CoordinatorConfig {
+                    cluster: ClusterSpec { nodes: 16, cores_per_node: 4 },
+                    topology: TopologySpec::Uniform { zones: 8, racks_per_zone: 1 },
+                    epoch_secs: 2.0,
+                    threads,
+                    sharded: true,
+                    broker_epochs: 3,
+                    ..Default::default()
+                }
+            } else {
+                CoordinatorConfig { threads, ..small_cluster() }
+            };
+            let mut g = Gen::from_seed(0x7a57 + threads as u64);
+            let templates = sim::random_churn_templates(&mut g, 10, 16.0);
+            let source_seed = g.u64();
+            let run = |cfg: CoordinatorConfig| {
+                let mut c = Coordinator::new(cfg, policy_by_name("slaq-det").unwrap());
+                sim::submit_templates(&mut c, &templates, source_seed);
+                for _ in 0..12 {
+                    c.step_epoch();
+                }
+                c.into_trace()
+            };
+            let base = run(cfg.clone());
+            let variant = run(CoordinatorConfig {
+                price_transitions: false,
+                checkpoint_epochs: 1,
+                ..cfg
+            });
+            let what = format!("free-transition inertness t{threads} sharded={sharded}");
+            assert_trace_eq(&base, &variant, &what);
+            assert!(
+                base.epochs.iter().all(|e| e.voluntary_restarts == 0),
+                "{what}: free transitions charged a restart"
+            );
+        }
+    }
+
+    #[test]
+    fn voluntary_shrink_charges_restart_debt() {
+        // Job 0 holds the whole 2×16-core cluster; job 1 arrives at t=6
+        // and forces a shrink. With the free model the shrink costs
+        // nothing; with a non-free one the simulator charges the rewind
+        // + warmup on job 0's iteration clock (whatever the planner
+        // thought of the move — both runs here plan blind so the charge
+        // is the only difference), which costs iterations by the horizon.
+        let run = |transition: TransitionModel| {
+            let cfg =
+                CoordinatorConfig { transition, price_transitions: false, ..small_cluster() };
+            let mut c = Coordinator::new(cfg, Box::new(SlaqPolicy::deterministic()));
+            let mut a = mk_spec(0, 0.0, CurveKind::Exponential);
+            a.target_fraction = 0.99999;
+            c.submit(a, exp_source(1, 0.995));
+            let mut b = mk_spec(1, 6.0, CurveKind::Exponential);
+            b.target_fraction = 0.99999;
+            c.submit(b, exp_source(2, 0.995));
+            c.run_until(24.0);
+            c.into_trace()
+        };
+        let free = run(TransitionModel::default());
+        let priced = run(TransitionModel {
+            checkpoint_write_iters: 0.0,
+            restore_iters: 4,
+            warmup_iters_per_state_sec: 0.0,
+        });
+        assert!(free.epochs.iter().all(|e| e.voluntary_restarts == 0));
+        let charged: u32 = priced.epochs.iter().map(|e| e.voluntary_restarts).sum();
+        assert!(charged >= 1, "the forced shrink at job 1's arrival was never charged");
+        let iters = |t: &Trace| t.jobs.iter().find(|j| j.id == 0).unwrap().samples.len();
+        assert!(
+            iters(&priced) < iters(&free),
+            "restart debt must cost job 0 iterations: {} vs {}",
+            iters(&priced),
+            iters(&free),
+        );
+    }
+
+    #[test]
+    fn elastic_events_retarget_cap_and_slow_the_clock() {
+        // One job alone on 2×16 cores with a scheduled mid-training
+        // shrink: at iteration 12 its cap drops from 32 to 4 and every
+        // iteration starts doing `work_scale`× the work. The adapted cap
+        // must bind every later grant, and the heavier variant must
+        // complete fewer iterations over the same horizon. The
+        // transition model stays free here — adaptation is a workload
+        // property, not a pricing knob.
+        use crate::coordinator::ElasticSpec;
+        let run = |work_scale: f64| {
+            let mut spec = mk_spec(0, 0.0, CurveKind::Exponential);
+            spec.target_fraction = 0.99999;
+            spec.elastic = vec![ElasticSpec { at_iteration: 12, max_cores: 4, work_scale }];
+            let mut c = Coordinator::new(small_cluster(), Box::new(SlaqPolicy::deterministic()));
+            c.submit(spec, exp_source(1, 0.995));
+            c.run_until(20.0);
+            c.into_trace()
+        };
+        let light = run(1.0);
+        let heavy = run(2.0);
+        for t in [&light, &heavy] {
+            let cores: Vec<u32> = t
+                .epochs
+                .iter()
+                .filter_map(|e| e.entries.iter().find(|en| en.job == 0).map(|en| en.cores))
+                .collect();
+            assert!(cores[0] > 4, "the pre-event cap should allow a wide grant");
+            let first_capped =
+                cores.iter().position(|&c| c <= 4).expect("the shrink event must apply");
+            assert!(
+                cores[first_capped..].iter().all(|&c| c <= 4),
+                "a grant exceeded the adapted cap after the event applied: {cores:?}"
+            );
+        }
+        let iters = |t: &Trace| t.jobs[0].samples.len();
+        assert!(
+            iters(&heavy) < iters(&light),
+            "doubled per-iteration work must slow the iteration clock: {} vs {}",
+            iters(&heavy),
+            iters(&light),
+        );
     }
 }

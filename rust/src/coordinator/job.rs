@@ -4,6 +4,44 @@ use super::source::LossSource;
 use crate::cluster::CostModel;
 use crate::predictor::{CurveKind, OnlinePredictor};
 
+/// One scheduled elasticity event: once the job reaches `at_iteration`,
+/// its core cap and per-iteration work change. Models mid-training
+/// adaptation from the workload zoo — batch-size ramps (more work per
+/// iteration, wider parallelism) or late-phase shrink (the job gives
+/// cores back once past its steep descent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticSpec {
+    /// Iteration at which the event takes effect. Events are applied at
+    /// epoch boundaries: the first epoch whose planning pass observes
+    /// `job.iteration >= at_iteration` plans with the new shape.
+    pub at_iteration: u64,
+    /// New core cap (replaces [`JobSpec::max_cores`] in the planner's
+    /// gain view and the allocator's request cap).
+    pub max_cores: u32,
+    /// Multiplier on the job's locality slowdown — the elastic proxy for
+    /// "each iteration now does `work_scale`× the work". `1.0` is inert
+    /// bit for bit.
+    pub work_scale: f64,
+}
+
+impl ElasticSpec {
+    /// Append to a durable-state buffer (see [`crate::util::codec`]).
+    pub fn encode(&self, e: &mut crate::util::codec::Enc) {
+        e.put_u64(self.at_iteration);
+        e.put_u32(self.max_cores);
+        e.put_f64(self.work_scale);
+    }
+
+    /// Inverse of [`ElasticSpec::encode`].
+    pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        Ok(Self {
+            at_iteration: d.u64()?,
+            max_cores: d.u32()?,
+            work_scale: d.f64()?,
+        })
+    }
+}
+
 /// Static description of a training job.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -30,6 +68,12 @@ pub struct JobSpec {
     /// predictor as a hint for non-convex jobs whose loss curves do not
     /// fit the analytical families.
     pub target_hint: Option<f64>,
+    /// Scheduled elasticity events, sorted by `at_iteration` ascending.
+    /// Empty for the (overwhelmingly common) rigid job — the empty case
+    /// is bit-identical to the pre-elastic coordinator. The spec is never
+    /// mutated; the applied-prefix counter lives on [`Job`] so replay
+    /// re-derives it deterministically.
+    pub elastic: Vec<ElasticSpec>,
 }
 
 impl JobSpec {
@@ -48,24 +92,43 @@ impl JobSpec {
         e.put_f64(self.target_fraction);
         e.put_u64(self.max_iterations);
         e.put_opt_f64(self.target_hint);
+        e.put_usize(self.elastic.len());
+        for ev in &self.elastic {
+            ev.encode(e);
+        }
     }
 
     /// Inverse of [`JobSpec::encode`].
     pub fn decode(d: &mut crate::util::codec::Dec) -> std::io::Result<Self> {
+        let id = d.u64()?;
+        let name = d.str()?;
+        let kind = CurveKind::from_byte(d.u8()?)?;
+        let cost = CostModel {
+            serial_secs: d.f64()?,
+            work_core_secs: d.f64()?,
+            overhead_per_core: d.f64()?,
+        };
+        let max_cores = d.u32()?;
+        let arrival = d.f64()?;
+        let target_fraction = d.f64()?;
+        let max_iterations = d.u64()?;
+        let target_hint = d.opt_f64()?;
+        let n = d.usize_()?;
+        let mut elastic = Vec::with_capacity(n.min(1 << 12));
+        for _ in 0..n {
+            elastic.push(ElasticSpec::decode(d)?);
+        }
         Ok(Self {
-            id: d.u64()?,
-            name: d.str()?,
-            kind: CurveKind::from_byte(d.u8()?)?,
-            cost: CostModel {
-                serial_secs: d.f64()?,
-                work_core_secs: d.f64()?,
-                overhead_per_core: d.f64()?,
-            },
-            max_cores: d.u32()?,
-            arrival: d.f64()?,
-            target_fraction: d.f64()?,
-            max_iterations: d.u64()?,
-            target_hint: d.opt_f64()?,
+            id,
+            name,
+            kind,
+            cost,
+            max_cores,
+            arrival,
+            target_fraction,
+            max_iterations,
+            target_hint,
+            elastic,
         })
     }
 }
@@ -118,8 +181,15 @@ pub struct Job {
     pub ckpt_iteration: u64,
     /// Iterations the job must re-execute before making new progress
     /// again; set to `iteration - ckpt_iteration` when a failure evicts
-    /// its cores, consumed by [`Job::advance_with_locality`].
+    /// its cores — or to the rewind-plus-warmup debt of a voluntary
+    /// shrink/migration when the coordinator prices transitions —
+    /// consumed by [`Job::advance_with_locality`].
     pub pending_restart_iters: u64,
+    /// How many leading entries of `spec.elastic` have taken effect —
+    /// bumped by the coordinator's epoch loop once `iteration` passes an
+    /// event's `at_iteration`. Monotone, replay-derived, and 0 for rigid
+    /// jobs, so the pre-elastic coordinator is reproduced bit for bit.
+    pub elastic_applied: u32,
 }
 
 /// Relative per-iteration improvement below which a job with an unknown
@@ -151,6 +221,37 @@ impl Job {
             small_delta_streak: 0,
             ckpt_iteration: 0,
             pending_restart_iters: 0,
+            elastic_applied: 0,
+        }
+    }
+
+    /// Core cap after the applied elastic events: the last applied
+    /// event's `max_cores`, or the spec cap while none have fired.
+    pub fn effective_max_cores(&self) -> u32 {
+        match self.elastic_applied {
+            0 => self.spec.max_cores,
+            n => self.spec.elastic[n as usize - 1].max_cores,
+        }
+    }
+
+    /// Per-iteration work multiplier after the applied elastic events
+    /// (`1.0` while none have fired).
+    pub fn work_scale(&self) -> f64 {
+        match self.elastic_applied {
+            0 => 1.0,
+            n => self.spec.elastic[n as usize - 1].work_scale,
+        }
+    }
+
+    /// Fold the job's elastic work multiplier into a locality slowdown.
+    /// The `== 1.0` guard is a branch, not arithmetic, so rigid jobs
+    /// (and unit-scale events) keep the unscaled slowdown bit for bit.
+    pub fn work_scaled(&self, slowdown: f64) -> f64 {
+        let scale = self.work_scale();
+        if scale == 1.0 {
+            slowdown
+        } else {
+            slowdown * scale
         }
     }
 
@@ -321,6 +422,7 @@ impl Job {
         e.put_u32(self.small_delta_streak);
         e.put_u64(self.ckpt_iteration);
         e.put_u64(self.pending_restart_iters);
+        e.put_u32(self.elastic_applied);
         Ok(())
     }
 
@@ -354,6 +456,7 @@ impl Job {
         let small_delta_streak = d.u32()?;
         let ckpt_iteration = d.u64()?;
         let pending_restart_iters = d.u64()?;
+        let elastic_applied = d.u32()?;
         Ok(Self {
             spec,
             state,
@@ -369,6 +472,7 @@ impl Job {
             small_delta_streak,
             ckpt_iteration,
             pending_restart_iters,
+            elastic_applied,
         })
     }
 }
@@ -391,6 +495,7 @@ mod tests {
             target_fraction: 0.95,
             max_iterations: 10_000,
             target_hint: None,
+            elastic: Vec::new(),
         }
     }
 
@@ -550,6 +655,48 @@ mod tests {
         assert_eq!(a.advance(0.0, 3.1, 4), b.advance(0.0, 3.1, 4));
         assert_eq!(a.credit.to_bits(), b.credit.to_bits());
         assert_eq!(a.loss_trace, b.loss_trace);
+    }
+
+    #[test]
+    fn elastic_events_change_cap_and_work_scale_as_applied() {
+        let mut j = exp_job(20);
+        j.spec.elastic = vec![
+            ElasticSpec { at_iteration: 5, max_cores: 32, work_scale: 2.0 },
+            ElasticSpec { at_iteration: 9, max_cores: 4, work_scale: 0.5 },
+        ];
+        // Nothing applied: spec shape, unit scale, slowdown passes through
+        // bitwise.
+        assert_eq!(j.effective_max_cores(), 16);
+        assert_eq!(j.work_scale(), 1.0);
+        assert_eq!(j.work_scaled(1.7).to_bits(), 1.7f64.to_bits());
+        // First event applied: wider cap, doubled work.
+        j.elastic_applied = 1;
+        assert_eq!(j.effective_max_cores(), 32);
+        assert_eq!(j.work_scaled(1.5), 3.0);
+        // Second event applied: late-phase shrink.
+        j.elastic_applied = 2;
+        assert_eq!(j.effective_max_cores(), 4);
+        assert_eq!(j.work_scaled(2.0), 1.0);
+    }
+
+    #[test]
+    fn elastic_spec_and_applied_counter_survive_the_state_codec() {
+        let mut j = exp_job(21);
+        j.spec.elastic =
+            vec![ElasticSpec { at_iteration: 3, max_cores: 8, work_scale: 1.25 }];
+        j.activate(0.0);
+        j.advance(0.0, 3.1, 4);
+        j.elastic_applied = 1;
+        let mut e = crate::util::codec::Enc::new();
+        j.encode_state(&mut e).unwrap();
+        let mut d = crate::util::codec::Dec::new(e.bytes());
+        let back = Job::decode_state(&mut d).unwrap();
+        assert_eq!(back.spec.elastic, j.spec.elastic);
+        assert_eq!(back.elastic_applied, 1);
+        assert_eq!(back.effective_max_cores(), 8);
+        assert_eq!(back.work_scale(), 1.25);
+        assert_eq!(back.iteration, j.iteration);
+        assert_eq!(back.loss_trace, j.loss_trace);
     }
 
     #[test]

@@ -72,6 +72,7 @@ pub struct LedgerEntry {
 ///         target_fraction: 0.95,
 ///         max_iterations: 1_000,
 ///         target_hint: None,
+///         elastic: Vec::new(),
 ///     };
 ///     let curve = CurveModel::Exponential { m: 4.0, mu: 0.8, c: 1.0 };
 ///     ledger.submit(spec, Box::new(SyntheticSource::new(curve, 0.0, Rng::new(id))));
@@ -398,6 +399,7 @@ mod tests {
             target_fraction: 0.95,
             max_iterations: 10_000,
             target_hint: None,
+            elastic: Vec::new(),
         }
     }
 

@@ -32,6 +32,26 @@
 //! 6. records everything — grants, losses, rack spans, cross-rack moves —
 //!    into a [`Trace`].
 //!
+//! ## Transition pricing and elastic jobs
+//!
+//! Under a non-free [`crate::cluster::TransitionModel`] reallocation
+//! itself costs quality: any shrink or span-widening migration rewinds
+//! the job to its last pinned checkpoint and burns restore/warmup
+//! iterations on the simulator clock (recorded per epoch as
+//! `voluntary_restarts`, WAL-encoded and cross-checked on replay). The
+//! planner side is separate: with `price_transitions` set, each job's
+//! gain view becomes `net_gain(prev_cores, cores)` — the predicted
+//! reduction net of the restart debt the move would incur — so every
+//! policy weighs churn against its price; with it clear, the planner is
+//! blind but the physics still charge (the "aggressive" arm of
+//! `exp::elastic`). Jobs can also adapt mid-training: a
+//! [`JobSpec::elastic`] schedule of [`ElasticSpec`] events retargets
+//! `max_cores` and scales per-iteration work (batch-size changes) once
+//! the job passes each event's iteration, forcing exactly the
+//! reallocation churn the transition model prices. With the default
+//! zero-cost model every one of these hooks is provably inert — traces
+//! are bitwise identical to a coordinator without the machinery.
+//!
 //! ## Service lifecycle and durability
 //!
 //! Around that loop sit two optional layers. The [`CoordinatorService`]
@@ -56,10 +76,10 @@ mod source;
 mod trace;
 pub(crate) mod wal;
 
-pub use epoch::{Coordinator, CoordinatorConfig, CrashPoint};
+pub use epoch::{Coordinator, CoordinatorConfig, CrashPoint, EpochNotice};
 pub use pool::WorkerPool;
-pub use job::{Job, JobSpec, JobState};
+pub use job::{ElasticSpec, Job, JobSpec, JobState};
 pub use ledger::{JobLedger, LedgerEntry};
-pub use service::{CoordinatorService, EpochNotice, JobEvent};
+pub use service::{CoordinatorService, JobEvent};
 pub use source::{LossSource, NonConvexSource, ReplaySource, SourceDescriptor, SyntheticSource};
 pub use trace::{EpochEntry, EpochRecord, JobTrace, Trace};

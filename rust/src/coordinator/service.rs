@@ -18,7 +18,7 @@
 //! the next boundary, after the in-flight epoch — and, on a durable
 //! coordinator, its WAL record — has fully landed.
 
-use super::epoch::Coordinator;
+use super::epoch::{Coordinator, EpochNotice};
 use super::job::JobSpec;
 use super::source::SourceDescriptor;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -46,19 +46,6 @@ pub enum JobEvent {
     Shutdown,
 }
 
-/// Broadcast to subscribers after every epoch.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct EpochNotice {
-    /// Epochs completed so far (this epoch included).
-    pub epoch: usize,
-    /// Virtual time after the epoch.
-    pub time: f64,
-    /// Jobs still running after the epoch.
-    pub active: usize,
-    /// Jobs completed so far, in total.
-    pub completed: usize,
-}
-
 /// The event-driven service loop around a [`Coordinator`].
 pub struct CoordinatorService {
     coord: Coordinator,
@@ -81,13 +68,15 @@ impl CoordinatorService {
     /// A subscriber joining a coordinator that has already executed
     /// epochs — most importantly one rebuilt by
     /// [`Coordinator::recover_state`], whose notices all predate the
-    /// crash — immediately receives one synthetic catch-up notice for
-    /// the last completed epoch, so it can align its view without
-    /// waiting a full epoch (or forever, on an idle service).
+    /// crash — immediately receives the *complete* per-epoch notice
+    /// history ([`Coordinator::epoch_notices`], persisted across
+    /// recovery), so a re-attaching subscriber misses no epochs and can
+    /// align its view without waiting a full epoch (or forever, on an
+    /// idle service).
     pub fn subscribe(&mut self) -> Receiver<EpochNotice> {
         let (tx, rx) = channel();
-        if self.coord.epoch_count() > 0 {
-            let _ = tx.send(self.notice_now());
+        for &n in self.coord.epoch_notices() {
+            let _ = tx.send(n);
         }
         self.subscribers.push(tx);
         rx
@@ -131,19 +120,13 @@ impl CoordinatorService {
         n
     }
 
-    /// The notice describing the coordinator's current boundary state.
-    fn notice_now(&self) -> EpochNotice {
-        let (_, running, completed) = self.coord.job_counts();
-        EpochNotice {
-            epoch: self.coord.epoch_count(),
-            time: self.coord.time(),
-            active: running,
-            completed,
-        }
-    }
-
     fn broadcast(&mut self) {
-        let notice = self.notice_now();
+        // The coordinator appended this epoch's notice at the boundary;
+        // broadcasting the retained entry keeps the live stream and the
+        // subscribe-time history byte-for-byte the same source of truth.
+        let Some(&notice) = self.coord.epoch_notices().last() else {
+            return;
+        };
         self.subscribers.retain(|s| s.send(notice).is_ok());
     }
 
@@ -385,11 +368,12 @@ mod tests {
     }
 
     #[test]
-    fn fresh_subscribers_get_a_catch_up_notice_after_recovery() {
+    fn fresh_subscribers_get_the_full_notice_history_after_recovery() {
         // Satellite: a subscriber joining a recovered service missed
-        // every pre-crash broadcast; it must receive one synthetic
-        // notice for the last recovered epoch immediately, then live
-        // notices from the next boundary on.
+        // every pre-crash broadcast; it must receive the complete
+        // per-epoch history (persisted in the snapshot, extended by WAL
+        // replay) immediately, then live notices from the next boundary
+        // on — no epoch is ever missing from its stream.
         let tmp = TempDir::new("svc-catchup");
         let mut g = crate::testkit::Gen::from_seed(41);
         let templates = sim::random_churn_templates(&mut g, 6, 12.0);
@@ -404,22 +388,31 @@ mod tests {
         for _ in 0..5 {
             coord.step_epoch();
         }
+        let pre_crash: Vec<EpochNotice> = coord.epoch_notices().to_vec();
         drop(coord); // the crash
 
         let revived = Coordinator::recover_state(tmp.path()).unwrap();
         let (_pending, running, completed) = revived.job_counts();
+        assert_eq!(
+            revived.epoch_notices(),
+            &pre_crash[..],
+            "recovery rebuilds the notice history exactly"
+        );
         let (mut svc, _tx) = CoordinatorService::new(revived);
         let rx = svc.subscribe();
-        let catch_up = rx.try_recv().expect("catch-up notice queued at subscribe time");
-        assert_eq!(catch_up.epoch, 5, "reports the last recovered epoch");
-        assert_eq!(catch_up.time, 10.0);
-        assert_eq!(catch_up.active, running);
-        assert_eq!(catch_up.completed, completed);
+        let history: Vec<EpochNotice> = rx.try_iter().collect();
+        assert_eq!(history.len(), 5, "one catch-up notice per recovered epoch");
+        for (i, n) in history.iter().enumerate() {
+            assert_eq!(n.epoch, i + 1, "epochs in order, none missing");
+            assert_eq!(n.time, (i + 1) as f64 * 2.0);
+        }
+        assert_eq!(history.last().unwrap().active, running);
+        assert_eq!(history.last().unwrap().completed, completed);
 
         svc.step_epoch();
         let live = rx.try_recv().expect("live notice after the next epoch");
         assert_eq!(live.epoch, 6);
-        assert!(rx.try_recv().is_err(), "exactly one catch-up, no duplicates");
+        assert!(rx.try_recv().is_err(), "exactly one live notice, no duplicates");
 
         // A pre-epoch subscriber on a fresh coordinator still gets
         // nothing until the first boundary.
@@ -427,5 +420,39 @@ mod tests {
         let (mut svc, _tx) = CoordinatorService::new(coord);
         let rx = svc.subscribe();
         assert!(rx.try_recv().is_err(), "no catch-up before any epoch");
+    }
+
+    #[test]
+    fn reattaching_subscriber_misses_no_epochs() {
+        // A subscriber that detaches mid-run and re-attaches later sees,
+        // across its two receivers, every epoch exactly once at the
+        // re-attach point: the catch-up history covers the gap.
+        let mut g = crate::testkit::Gen::from_seed(77);
+        let templates = sim::random_churn_templates(&mut g, 6, 12.0);
+        let coord = Coordinator::new(small_cfg(1), policy_by_name("slaq-det").unwrap());
+        let (mut svc, tx) = CoordinatorService::new(coord);
+        for (spec, source) in submit_events(&templates, 17) {
+            tx.send(JobEvent::Submit { spec, source }).unwrap();
+        }
+        let first = svc.subscribe();
+        for _ in 0..3 {
+            svc.step_epoch();
+        }
+        let seen_live: Vec<EpochNotice> = first.try_iter().collect();
+        assert_eq!(seen_live.len(), 3);
+        drop(first); // detach (pruned on the next broadcast)
+        for _ in 0..4 {
+            svc.step_epoch();
+        }
+        let second = svc.subscribe();
+        let catch_up: Vec<EpochNotice> = second.try_iter().collect();
+        assert_eq!(catch_up.len(), 7, "full history, including the missed gap");
+        for (i, n) in catch_up.iter().enumerate() {
+            assert_eq!(n.epoch, i + 1);
+        }
+        assert_eq!(&catch_up[..3], &seen_live[..], "prefix replays the live stream verbatim");
+        svc.step_epoch();
+        let live = second.try_recv().expect("live notice resumes after catch-up");
+        assert_eq!(live.epoch, 8);
     }
 }

@@ -52,6 +52,11 @@ pub struct EpochRecord {
     /// Cumulative count of epochs in which at least one displaced job
     /// could not be re-placed (monotone across the trace; 0 fault-free).
     pub failed_epochs: u32,
+    /// Jobs charged a voluntary checkpoint restart this epoch — shrunk
+    /// below the cores they held, or migrated onto a wider rack span,
+    /// under a non-free [`crate::cluster::TransitionModel`]. Always 0
+    /// with the default free model.
+    pub voluntary_restarts: u32,
     /// Per-job grants.
     pub entries: Vec<EpochEntry>,
 }
@@ -72,6 +77,7 @@ impl EpochRecord {
         e.put_u32(self.lost_cores);
         e.put_u32(self.replacements);
         e.put_u32(self.failed_epochs);
+        e.put_u32(self.voluntary_restarts);
         e.put_usize(self.entries.len());
         for en in &self.entries {
             e.put_u64(en.job);
@@ -94,6 +100,7 @@ impl EpochRecord {
         let lost_cores = d.u32()?;
         let replacements = d.u32()?;
         let failed_epochs = d.u32()?;
+        let voluntary_restarts = d.u32()?;
         let n = d.usize_()?;
         let mut entries = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
@@ -116,6 +123,7 @@ impl EpochRecord {
             lost_cores,
             replacements,
             failed_epochs,
+            voluntary_restarts,
             entries,
         })
     }
@@ -242,6 +250,7 @@ impl Trace {
                     ("lost_cores", Value::Num(e.lost_cores as f64)),
                     ("replacements", Value::Num(e.replacements as f64)),
                     ("failed_epochs", Value::Num(e.failed_epochs as f64)),
+                    ("voluntary_restarts", Value::Num(e.voluntary_restarts as f64)),
                     (
                         "entries",
                         Value::Arr(
@@ -368,6 +377,7 @@ mod tests {
                 lost_cores: 4,
                 replacements: 1,
                 failed_epochs: 0,
+                voluntary_restarts: 0,
                 entries: vec![EpochEntry { job: 1, cores: 4, loss: 2.5, rack_span: 2 }],
             }],
             jobs: vec![jt()],
@@ -404,6 +414,7 @@ mod tests {
             lost_cores: 0,
             replacements: 0,
             failed_epochs: 0,
+            voluntary_restarts: 0,
             entries: vec![
                 EpochEntry { job: 1, cores: 4, loss: 1.0, rack_span: 1 },
                 EpochEntry { job: 2, cores: 8, loss: 1.0, rack_span: 3 },
@@ -424,6 +435,7 @@ mod tests {
             lost_cores: 0,
             replacements: 0,
             failed_epochs: 0,
+            voluntary_restarts: 0,
             entries: vec![],
         };
         assert_eq!(empty.mean_rack_span(), 0.0);
@@ -446,6 +458,7 @@ mod tests {
             lost_cores: 0,
             replacements: 0,
             failed_epochs: 0,
+            voluntary_restarts: 0,
             entries: vec![],
         });
         t.epochs.push(EpochRecord {
@@ -460,6 +473,7 @@ mod tests {
             lost_cores: 0,
             replacements: 0,
             failed_epochs: 0,
+            voluntary_restarts: 0,
             entries: vec![],
         });
         assert!((t.mean_sched_millis() - 3.0).abs() < 1e-12);

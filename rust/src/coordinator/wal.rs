@@ -35,7 +35,8 @@ use super::job::JobSpec;
 use super::ledger::JobLedger;
 use super::source::SourceDescriptor;
 use super::trace::EpochRecord;
-use crate::cluster::{ClusterSpec, FaultSpec, LocalityModel, TopologySpec};
+use super::epoch::EpochNotice;
+use crate::cluster::{ClusterSpec, FaultSpec, LocalityModel, TopologySpec, TransitionModel};
 use crate::util::codec::{corrupt, fnv1a64, Dec, Enc};
 use std::fs::{File, OpenOptions};
 use std::io::{self, Write};
@@ -51,8 +52,11 @@ const SNAP_MAGIC: u32 = 0x534C_4151;
 /// Snapshot format version. v2: fault schedule + checkpoint cadence in
 /// the config, restart debt in the job codec, quarantine counters in the
 /// predictor codec, fault counters in the epoch record, parked set and
-/// degraded-transition counter in the snapshot body.
-const SNAP_VERSION: u32 = 2;
+/// degraded-transition counter in the snapshot body. v3: transition
+/// model + pricing flag in the config, elastic events in the job spec
+/// codec (applied counter in the job state), voluntary-restart counter
+/// in the epoch record, notice history in the snapshot body.
+const SNAP_VERSION: u32 = 3;
 
 /// Frame header size: `u32` length + `u64` checksum.
 const FRAME_HEADER: usize = 12;
@@ -128,6 +132,10 @@ pub(crate) fn encode_config(cfg: &CoordinatorConfig, e: &mut Enc) {
     e.put_usize(cfg.broker_epochs);
     e.put_usize(cfg.checkpoint_epochs);
     cfg.faults.encode(e);
+    e.put_f64(cfg.transition.checkpoint_write_iters);
+    e.put_u32(cfg.transition.restore_iters);
+    e.put_f64(cfg.transition.warmup_iters_per_state_sec);
+    e.put_bool(cfg.price_transitions);
 }
 
 /// Inverse of [`encode_config`].
@@ -156,6 +164,12 @@ pub(crate) fn decode_config(d: &mut Dec) -> io::Result<CoordinatorConfig> {
         broker_epochs: d.usize_()?,
         checkpoint_epochs: d.usize_()?,
         faults: FaultSpec::decode(d)?,
+        transition: TransitionModel {
+            checkpoint_write_iters: d.f64()?,
+            restore_iters: d.u32()?,
+            warmup_iters_per_state_sec: d.f64()?,
+        },
+        price_transitions: d.bool()?,
     })
 }
 
@@ -396,6 +410,9 @@ pub(crate) struct SnapshotView<'a> {
     pub degraded: Vec<u64>,
     /// Healthy→degraded gain-oracle transitions so far.
     pub degraded_transitions: u64,
+    /// Per-epoch notice history (one entry per completed epoch) — so a
+    /// subscriber attaching to a recovered service misses no epochs.
+    pub notices: &'a [EpochNotice],
 }
 
 fn encode_grants(grants: &[(u64, u32)], e: &mut Enc) {
@@ -455,6 +472,13 @@ impl SnapshotView<'_> {
             e.put_u64(id);
         }
         e.put_u64(self.degraded_transitions);
+        e.put_usize(self.notices.len());
+        for n in self.notices {
+            e.put_usize(n.epoch);
+            e.put_f64(n.time);
+            e.put_usize(n.active);
+            e.put_usize(n.completed);
+        }
         Ok(())
     }
 
@@ -510,6 +534,8 @@ pub(crate) struct Snapshot {
     pub degraded: Vec<u64>,
     /// Healthy→degraded gain-oracle transitions so far.
     pub degraded_transitions: u64,
+    /// Per-epoch notice history up to the boundary.
+    pub notices: Vec<EpochNotice>,
 }
 
 /// Read `dir`'s snapshot if one exists (`Ok(None)` when the file is
@@ -581,6 +607,16 @@ pub(crate) fn read_snapshot(dir: &Path) -> io::Result<Option<Snapshot>> {
         degraded.push(d.u64()?);
     }
     let degraded_transitions = d.u64()?;
+    let n = d.usize_()?;
+    let mut notices = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        notices.push(EpochNotice {
+            epoch: d.usize_()?,
+            time: d.f64()?,
+            active: d.usize_()?,
+            completed: d.usize_()?,
+        });
+    }
     d.finish()?;
     Ok(Some(Snapshot {
         cfg,
@@ -597,6 +633,7 @@ pub(crate) fn read_snapshot(dir: &Path) -> io::Result<Option<Snapshot>> {
         parked,
         degraded,
         degraded_transitions,
+        notices,
     }))
 }
 
@@ -652,6 +689,7 @@ mod tests {
                     lost_cores: 8,
                     replacements: 1,
                     failed_epochs: 2,
+                    voluntary_restarts: 1,
                     entries: vec![super::super::trace::EpochEntry {
                         job: 9,
                         cores: 5,

@@ -1,0 +1,310 @@
+//! Elastic-reallocation experiment: does pricing the transition pay?
+//!
+//! Every trial runs one seeded churn workload whose jobs adapt
+//! mid-training (scheduled [`crate::coordinator::ElasticSpec`] cap
+//! changes and batch-size work ramps) under the *same* non-free
+//! [`TransitionModel`] twice:
+//!
+//! * **aggressive** — `price_transitions: false`: the planner chases raw
+//!   marginal gain and reallocates freely, but the simulator still
+//!   charges every shrink and cross-rack move (rewind to the last
+//!   checkpoint plus restore/warmup iterations);
+//! * **hysteretic** — `price_transitions: true`: the same physics, but
+//!   the gain oracle sees `net_gain(prev, cores)` so the planner only
+//!   moves a job when the gain from moving beats the restart debt.
+//!
+//! The fidelity assertion is that pricing restarts never loses: over the
+//! trial aggregate, the hysteretic arm's mean normalized loss and mean
+//! time-to-90%-reduction are no worse than the aggressive arm's (small
+//! slack for ties). Every run executes twice and must be bitwise
+//! identical ([`assert_trace_eq`]), pool invariants are audited per
+//! epoch, and trial 0 re-proves the zero-cost contract: with
+//! `TransitionModel::default()` the voluntary-restart machinery is
+//! provably off — flipping the price flag or the checkpoint cadence
+//! cannot move a bit, and no restart is ever charged.
+//!
+//! The bench harness republishes the aggregate as `elastic_*` count
+//! entries in `BENCH_sched.json`.
+
+use super::report::{render_table, ExpOutput};
+use crate::cluster::{ClusterSpec, TopologySpec, TransitionModel};
+use crate::coordinator::{Coordinator, CoordinatorConfig, Trace};
+use crate::sched::policy_by_name;
+use crate::testkit::crash::assert_trace_eq;
+use crate::testkit::{sim, Gen};
+use crate::util::csv::Csv;
+use crate::workload::JobTemplate;
+
+/// Epochs per run.
+const EPOCHS: usize = 16;
+/// Jobs in each seeded churn workload.
+const JOBS: usize = 12;
+/// Arrival horizon in simulated seconds.
+const HORIZON: f64 = 20.0;
+/// Additive slack on mean normalized loss — tolerates ties and seed
+/// jitter, not systematic losses.
+const LOSS_SLACK: f64 = 0.03;
+/// Multiplicative / additive slack on mean time-to-90%.
+const T90_REL_SLACK: f64 = 1.15;
+const T90_ABS_SLACK: f64 = 2.0;
+
+/// The non-free transition model both arms run under: a checkpoint
+/// write costs one iteration of budget, a restore burns three, and
+/// warmup re-does ~25 iterations per second of per-iteration serial
+/// state — calibrated so one careless shrink costs a noticeable slice
+/// of a 16-epoch run.
+pub fn churny_transition() -> TransitionModel {
+    TransitionModel {
+        checkpoint_write_iters: 1.0,
+        restore_iters: 3,
+        warmup_iters_per_state_sec: 25.0,
+    }
+}
+
+fn elastic_cfg(threads: usize, sharded: bool, priced: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        cluster: ClusterSpec { nodes: 8, cores_per_node: 8 },
+        topology: if sharded {
+            TopologySpec::Uniform { zones: 4, racks_per_zone: 1 }
+        } else {
+            TopologySpec::Flat
+        },
+        epoch_secs: 2.0,
+        threads,
+        sharded,
+        transition: churny_transition(),
+        price_transitions: priced,
+        ..Default::default()
+    }
+}
+
+/// Quality counters for one arm of one trial.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArmStats {
+    /// Voluntary (reallocation-induced) restarts charged, summed over epochs.
+    pub voluntary_restarts: u64,
+    /// Sum of final normalized losses over all jobs (lower is better).
+    pub loss_sum: f64,
+    /// Jobs in the workload.
+    pub jobs: usize,
+    /// Sum of time-to-90%-reduction over the jobs that reached it.
+    pub t90_sum: f64,
+    /// Jobs that reached 90% of their achievable loss reduction.
+    pub reached: usize,
+    /// Jobs that reached their quality target.
+    pub completed: usize,
+}
+
+impl ArmStats {
+    fn add(&mut self, o: &ArmStats) {
+        self.voluntary_restarts += o.voluntary_restarts;
+        self.loss_sum += o.loss_sum;
+        self.jobs += o.jobs;
+        self.t90_sum += o.t90_sum;
+        self.reached += o.reached;
+        self.completed += o.completed;
+    }
+
+    /// Mean final normalized loss across all jobs.
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.jobs.max(1) as f64
+    }
+
+    /// Mean time-to-90% across the jobs that reached it (NaN if none).
+    pub fn mean_t90(&self) -> f64 {
+        if self.reached == 0 {
+            f64::NAN
+        } else {
+            self.t90_sum / self.reached as f64
+        }
+    }
+}
+
+/// One trial: both arms on one seeded elastic workload.
+pub struct ElasticCell {
+    /// Trial index.
+    pub trial: usize,
+    /// `price_transitions: false` — plans blind, pays anyway.
+    pub aggressive: ArmStats,
+    /// `price_transitions: true` — plans around the restart debt.
+    pub priced: ArmStats,
+}
+
+fn run_arm(
+    cfg: &CoordinatorConfig,
+    templates: &[JobTemplate],
+    source_seed: u64,
+) -> (Trace, u64) {
+    let policy = policy_by_name("slaq-det").expect("slaq-det registered");
+    let mut c = Coordinator::new(cfg.clone(), policy);
+    sim::submit_templates(&mut c, templates, source_seed);
+    for _ in 0..EPOCHS {
+        c.step_epoch();
+        c.pool().check_invariants();
+    }
+    let t = c.into_trace();
+    let restarts = t.epochs.iter().map(|e| u64::from(e.voluntary_restarts)).sum();
+    (t, restarts)
+}
+
+fn quality(t: &Trace, restarts: u64) -> ArmStats {
+    let mut s = ArmStats { voluntary_restarts: restarts, jobs: t.jobs.len(), ..Default::default() };
+    for j in &t.jobs {
+        let last = j.samples.last().map(|&(_, _, loss)| loss).unwrap_or(j.initial_loss);
+        s.loss_sum += j.norm_loss(last);
+        if let Some(t90) = j.time_to_reduction(0.9) {
+            s.t90_sum += t90;
+            s.reached += 1;
+        }
+        if j.completion.is_some() {
+            s.completed += 1;
+        }
+    }
+    s
+}
+
+/// Run one trial: seeded elastic workload, aggressive and hysteretic
+/// arms, each executed twice with a bitwise determinism check and
+/// per-epoch pool-invariant audits. Trial 0 additionally re-proves the
+/// zero-cost inertness contract.
+pub fn elastic_cell(threads: usize, sharded: bool, trial: usize, seed: u64) -> ElasticCell {
+    let mut g = Gen::from_seed(seed ^ ((trial as u64) << 32) ^ 0xe1a5);
+    let mut templates = sim::random_churn_templates(&mut g, JOBS, HORIZON);
+    sim::attach_elastic_events(&mut g, &mut templates);
+    let source_seed = g.u64();
+
+    let arm = |priced: bool| {
+        let cfg = elastic_cfg(threads, sharded, priced);
+        let (a, restarts) = run_arm(&cfg, &templates, source_seed);
+        let (b, _) = run_arm(&cfg, &templates, source_seed);
+        assert_trace_eq(&a, &b, &format!("elastic priced={priced} trial={trial}"));
+        quality(&a, restarts)
+    };
+    let aggressive = arm(false);
+    let priced = arm(true);
+
+    if trial == 0 {
+        // Inertness: with the free transition model the whole
+        // voluntary-restart path is gated off, so the price flag and
+        // the checkpoint cadence cannot move a bit and no restart is
+        // ever charged — the same contract the chaos sweep proves for
+        // the fault-only knobs.
+        let mut base = elastic_cfg(threads, sharded, true);
+        base.transition = TransitionModel::default();
+        let (x, charged) = run_arm(&base, &templates, source_seed);
+        assert_eq!(charged, 0, "free transitions must never charge a restart");
+        let mut variant = base.clone();
+        variant.price_transitions = false;
+        variant.checkpoint_epochs = 1;
+        let (y, _) = run_arm(&variant, &templates, source_seed);
+        assert_trace_eq(&x, &y, &format!("elastic inertness trial={trial}"));
+    }
+
+    ElasticCell { trial, aggressive, priced }
+}
+
+/// Run the aggressive-vs-hysteretic sweep and enforce the fidelity
+/// gate. `threads` follows the usual convention (0 = auto, 1 = serial
+/// reference); `sharded` switches to the 4-zone sharded coordinator;
+/// each trial derives its elastic workload from `seed`.
+///
+/// Panics if, over the trial aggregate, pricing restarts *loses* —
+/// higher mean normalized loss (beyond [`LOSS_SLACK`]) or slower mean
+/// time-to-90% (beyond the slack pair) than planning blind.
+pub fn elastic_reallocation(
+    threads: usize,
+    sharded: bool,
+    trials: usize,
+    seed: u64,
+) -> ExpOutput {
+    let mut csv = Csv::new(&[
+        "trial",
+        "restarts_aggressive",
+        "restarts_priced",
+        "mean_loss_aggressive",
+        "mean_loss_priced",
+        "t90_aggressive",
+        "t90_priced",
+        "reached_aggressive",
+        "reached_priced",
+        "completed_aggressive",
+        "completed_priced",
+    ]);
+    let mut rows = Vec::new();
+    let mut total_a = ArmStats::default();
+    let mut total_p = ArmStats::default();
+    for trial in 0..trials {
+        let cell = elastic_cell(threads, sharded, trial, seed);
+        let (a, p) = (&cell.aggressive, &cell.priced);
+        csv.row_f64(&[
+            trial as f64,
+            a.voluntary_restarts as f64,
+            p.voluntary_restarts as f64,
+            a.mean_loss(),
+            p.mean_loss(),
+            a.mean_t90(),
+            p.mean_t90(),
+            a.reached as f64,
+            p.reached as f64,
+            a.completed as f64,
+            p.completed as f64,
+        ]);
+        rows.push(vec![
+            trial.to_string(),
+            format!("{} / {}", a.voluntary_restarts, p.voluntary_restarts),
+            format!("{:.4} / {:.4}", a.mean_loss(), p.mean_loss()),
+            format!("{:.2} / {:.2}", a.mean_t90(), p.mean_t90()),
+            format!("{} / {}", a.reached, p.reached),
+            format!("{} / {}", a.completed, p.completed),
+        ]);
+        total_a.add(a);
+        total_p.add(p);
+    }
+
+    // The fidelity gate, on the aggregate: pricing restarts never loses.
+    assert!(
+        total_p.mean_loss() <= total_a.mean_loss() + LOSS_SLACK,
+        "pricing transitions lost on quality: priced mean norm loss {:.4} vs \
+         aggressive {:.4} (+{LOSS_SLACK} slack)",
+        total_p.mean_loss(),
+        total_a.mean_loss(),
+    );
+    if total_a.reached > 0 && total_p.reached > 0 {
+        assert!(
+            total_p.mean_t90() <= total_a.mean_t90() * T90_REL_SLACK + T90_ABS_SLACK,
+            "pricing transitions lost on speed: priced mean t90 {:.2}s vs \
+             aggressive {:.2}s",
+            total_p.mean_t90(),
+            total_a.mean_t90(),
+        );
+    }
+
+    let summary = format!(
+        "Elastic — aggressive vs hysteretic reallocation under priced transitions \
+         (threads={threads}, sharded={sharded}, {trials} trials, {JOBS} elastic \
+         jobs/trial, {EPOCHS} epochs; cells as aggressive / priced; every run \
+         bitwise-deterministic, fidelity gate: pricing never loses)\n{}",
+        render_table(
+            &["trial", "restarts", "mean norm loss", "t90 (s)", "reached 90%", "completed"],
+            &rows
+        )
+    );
+    ExpOutput { id: "elastic".into(), csv, summary }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_sweep_smoke() {
+        // One trial, serial flat config — the assertions inside the
+        // driver (bitwise determinism per arm, zero-cost inertness,
+        // pool invariants, the pricing-never-loses fidelity gate) are
+        // the test.
+        let out = elastic_reallocation(1, false, 1, 20818);
+        assert_eq!(out.id, "elastic");
+        assert_eq!(out.csv.len(), 1);
+        assert!(out.summary.contains("hysteretic"));
+    }
+}

@@ -16,6 +16,7 @@
 //! | [`recovery_replay`] | durability — WAL replay cost vs epochs since snapshot |
 //! | [`run_tournament`]  | policy tournament — all six schedulers × 3 workload cells |
 //! | [`chaos_resilience`] | robustness — scheduler behaviour vs node-failure rate |
+//! | [`elastic_reallocation`] | transition pricing — aggressive vs hysteretic reallocation |
 //!
 //! Real-execution drivers (Figs 1, 2, prediction) run the actual AOT
 //! training artifacts through PJRT; scheduling drivers (Figs 3–5) replay
@@ -32,6 +33,7 @@
 
 mod ablations;
 mod chaos;
+mod elastic;
 mod locality;
 mod real_runs;
 mod recovery;
@@ -42,6 +44,7 @@ mod tournament;
 
 pub use ablations::{ablate_epoch_length, ablate_floor_and_cold_start, ablate_hints};
 pub use chaos::{chaos_cell, chaos_resilience, ChaosCell, FAIL_PROBS};
+pub use elastic::{churny_transition, elastic_cell, elastic_reallocation, ArmStats, ElasticCell};
 pub use locality::{
     locality_cost, locality_fidelity, locality_placement, LocalityConfig, LocalityCost,
     LocalityReport,

@@ -48,7 +48,7 @@ pub fn time_decision(jobs: usize, cores: u32, reps: usize, seed: u64) -> (f64, u
     let requests: Vec<JobRequest<'_>> = gains
         .iter()
         .enumerate()
-        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+        .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
         .collect();
 
     let mut policy = SlaqPolicy::new();
@@ -186,7 +186,7 @@ pub fn churn_decision_cost(cfg: &ChurnConfig, warm: bool) -> ChurnCost {
     {
         let requests: Vec<JobRequest<'_>> = pop
             .iter()
-            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, gain: &j.gain })
+            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, prev_cores: 0, gain: &j.gain })
             .collect();
         let alloc = policy.allocate(&requests, cfg.cores);
         ctx.record(&requests, &alloc);
@@ -208,7 +208,7 @@ pub fn churn_decision_cost(cfg: &ChurnConfig, warm: bool) -> ChurnCost {
 
         let requests: Vec<JobRequest<'_>> = pop
             .iter()
-            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, gain: &j.gain })
+            .map(|j| JobRequest { id: j.id, max_cores: j.max_cores, prev_cores: 0, gain: &j.gain })
             .collect();
         if warm {
             // Keep the model cold so the matched-fraction prior decides
@@ -484,6 +484,7 @@ pub(crate) fn churn_sim_job(rng: &mut Rng, id: u64, arrival: f64, short_lived: b
         target_fraction: 0.999,
         max_iterations: if short_lived { rng.range_u64(3, 12) } else { 1_000_000 },
         target_hint: None,
+        elastic: Vec::new(),
     };
     JobTemplate { spec, curve, noise: 0.005 }
 }

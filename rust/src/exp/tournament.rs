@@ -569,6 +569,7 @@ mod tests {
             lost_cores: 0,
             replacements: 0,
             failed_epochs: 0,
+            voluntary_restarts: 0,
             entries: grants
                 .iter()
                 .map(|&(id, cores)| EpochEntry { job: id, cores, loss: 1.0, rack_span: 1 })

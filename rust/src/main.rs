@@ -3,7 +3,7 @@
 //! Subcommands:
 //!
 //! ```text
-//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|chaos|pred|all> [flags]
+//! slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|chaos|elastic|pred|all> [flags]
 //!     regenerate paper figures (CSV under --out, summary to stdout)
 //! slaq train --algo <name> [--iters N] [--variant small|base]
 //!     run one real training job through the PJRT runtime
@@ -56,7 +56,7 @@ fn print_usage() {
     println!(
         "slaq — quality-driven scheduling for distributed ML (SoCC'17 reproduction)\n\n\
          usage:\n  \
-         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|chaos|pred|all> [--out DIR] [...]\n  \
+         slaq exp <fig1|fig2|fig3|fig4|fig5|fig6|churn|locality|recovery|tournament|chaos|elastic|pred|all> [--out DIR] [...]\n  \
          slaq train --algo <name> [--iters N] [--variant small|base]\n  \
          slaq run [--policy P] [--jobs N] [--duration S]\n  \
          slaq check\n\n\
@@ -94,6 +94,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .flag("locality-epochs", "12", "measured epochs for the locality scenario")
         .flag("recovery-trials", "5", "kill-and-recover trials per WAL-tail length")
         .flag("chaos-trials", "3", "audited fault-injection trials per failure rate")
+        .flag("elastic-trials", "3", "aggressive-vs-priced reallocation trials")
         .flag("tournament-jobs", "24", "jobs per workload cell in the policy tournament")
         .flag("tournament-duration", "420", "simulated seconds per tournament run")
         .flag("threads", "0", "epoch-pipeline worker threads (0 = auto, 1 = serial reference)")
@@ -214,6 +215,16 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
             parsed.switch("sharded"),
             parsed.get_as::<usize>("chaos-trials").map_err(|e| anyhow!(e))?,
+            parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
+        ));
+    }
+
+    if wants("elastic") {
+        log::info!("elastic: aggressive vs hysteretic reallocation under priced transitions…");
+        outputs.push(exp::elastic_reallocation(
+            parsed.get_as::<usize>("threads").map_err(|e| anyhow!(e))?,
+            parsed.switch("sharded"),
+            parsed.get_as::<usize>("elastic-trials").map_err(|e| anyhow!(e))?,
             parsed.get_as::<u64>("seed").map_err(|e| anyhow!(e))?,
         ));
     }

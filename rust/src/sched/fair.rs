@@ -89,7 +89,7 @@ mod tests {
         gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect()
     }
 

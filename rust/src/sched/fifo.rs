@@ -45,9 +45,9 @@ mod tests {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         // Deliberately out-of-order ids in the slice.
         let rs = vec![
-            JobRequest { id: 2, max_cores: 10, gain: &g },
-            JobRequest { id: 0, max_cores: 10, gain: &g },
-            JobRequest { id: 1, max_cores: 10, gain: &g },
+            JobRequest { id: 2, max_cores: 10, prev_cores: 0, gain: &g },
+            JobRequest { id: 0, max_cores: 10, prev_cores: 0, gain: &g },
+            JobRequest { id: 1, max_cores: 10, prev_cores: 0, gain: &g },
         ];
         let a = FifoPolicy::new().allocate(&rs, 15);
         check_invariants(&rs, 15, &a);
@@ -59,8 +59,8 @@ mod tests {
     fn all_fit_when_capacity_ample() {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 3, gain: &g },
-            JobRequest { id: 1, max_cores: 4, gain: &g },
+            JobRequest { id: 0, max_cores: 3, prev_cores: 0, gain: &g },
+            JobRequest { id: 1, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         let a = FifoPolicy::new().allocate(&rs, 100);
         assert_eq!(a.cores, vec![3, 4]);

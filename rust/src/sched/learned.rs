@@ -262,7 +262,7 @@ impl Policy for LearnedPolicy {
         let mut out = Allocation::default();
         self.allocate_with(
             requests,
-            |i, c| requests[i].gain.gain(c),
+            |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
             |_| None,
             capacity,
             &mut out.cores,
@@ -301,7 +301,7 @@ impl Policy for LearnedPolicy {
         } else {
             self.allocate_with(
                 requests,
-                |i, c| requests[i].gain.gain(c),
+                |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
                 |i| ctx.prev_grant(requests[i].id),
                 capacity,
                 &mut out.cores,
@@ -324,7 +324,7 @@ mod tests {
         gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect()
     }
 
@@ -333,7 +333,7 @@ mod tests {
         let mut p = LearnedPolicy::new();
         assert_eq!(p.allocate(&[], 10).cores.len(), 0);
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
-        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        let r = [JobRequest { id: 0, max_cores: 4, prev_cores: 0, gain: &g }];
         assert_eq!(p.allocate(&r, 0).total(), 0);
         // Even a zero-capacity epoch trains on the visible history.
         assert_eq!(p.tracked_jobs(), 1);
@@ -366,7 +366,7 @@ mod tests {
         // training call the ridge least squares must reproduce it to
         // numerical precision across the whole range.
         let g = ConcaveGain { scale: 3.0, rate: 1.0 };
-        let rs = vec![JobRequest { id: 7, max_cores: 16, gain: &g }];
+        let rs = vec![JobRequest { id: 7, max_cores: 16, prev_cores: 0, gain: &g }];
         let mut p = LearnedPolicy::new();
         let _ = p.allocate(&rs, 16);
         for c in [1u32, 2, 5, 16] {
@@ -384,8 +384,8 @@ mod tests {
         let lo = ConcaveGain { scale: 0.5, rate: 1.0 };
         let hi = ConcaveGain { scale: 10.0, rate: 1.0 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 32, gain: &lo },
-            JobRequest { id: 1, max_cores: 32, gain: &hi },
+            JobRequest { id: 0, max_cores: 32, prev_cores: 0, gain: &lo },
+            JobRequest { id: 1, max_cores: 32, prev_cores: 0, gain: &hi },
         ];
         let mut p = LearnedPolicy::new();
         let mut last = Allocation::default();
@@ -403,15 +403,15 @@ mod tests {
     fn departed_jobs_are_pruned() {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         let ab = vec![
-            JobRequest { id: 1, max_cores: 4, gain: &g },
-            JobRequest { id: 2, max_cores: 4, gain: &g },
+            JobRequest { id: 1, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         let mut p = LearnedPolicy::new();
         let _ = p.allocate(&ab, 8);
         assert_eq!(p.tracked_jobs(), 2);
         let bc = vec![
-            JobRequest { id: 2, max_cores: 4, gain: &g },
-            JobRequest { id: 3, max_cores: 4, gain: &g },
+            JobRequest { id: 2, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 3, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         let _ = p.allocate(&bc, 8);
         assert_eq!(p.tracked_jobs(), 2);

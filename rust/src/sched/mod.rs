@@ -37,6 +37,33 @@
 //!   [`SchedContext::gain_table`]; allocations computed from the table
 //!   are bit-identical to the direct-oracle path.
 //!
+//! ## Transition pricing (net gain)
+//!
+//! Reallocation is not free: shrinking a job (or migrating it across
+//! racks) rewinds it to its last checkpoint and burns restart/warmup
+//! iterations (see `cluster::TransitionModel`). Every gain-driven search
+//! therefore reads gains through [`GainModel::net_gain`]`(prev, a)`
+//! rather than `gain(a)`: for the epoch's [`JobRequest::prev_cores`]
+//! (the grant the job holds entering the epoch), a candidate grant that
+//! would force a restart is charged the job's transition penalty. The
+//! coordinator materializes the penalty once per job per epoch, and the
+//! default `net_gain` is exactly `gain` — policies and tests that never
+//! price transitions are bit-for-bit unchanged.
+//!
+//! *Lazy-CELF validity.* The penalty makes the per-job curve
+//! non-concave at one point (a downward step for `a < prev`), which is
+//! safe for the lazy heap searches used here: for a **fixed** `prev`,
+//! `net_gain(prev, ·)` restricted to the grow direction (`a ≥ prev`) is
+//! the unpenalized concave curve shifted by a constant, so marginals
+//! remain non-increasing there and greedy/CELF arguments carry over
+//! unchanged. Below `prev` the step only *lowers* candidate marginals,
+//! and every search in this module re-evaluates stale heap entries at
+//! the current allocation before granting (each pop is checked against
+//! its staleness stamp and re-pushed if outdated), so a stale,
+//! too-optimistic marginal is never acted on. The exchange repair's
+//! termination argument is untouched: each accepted move strictly
+//! increases the bounded total net gain.
+//!
 //! Policies implemented:
 //! * [`SlaqPolicy`] — the paper's greedy marginal-gain allocator, with the
 //!   warm-start path described above.
@@ -122,6 +149,19 @@ impl Ord for MarginalEntry {
 pub trait GainModel {
     /// Predicted normalized loss reduction with `cores` cores this epoch.
     fn gain(&self, cores: u32) -> f64;
+
+    /// Transition-priced gain: the predicted reduction with `cores`
+    /// cores, net of any restart penalty the move from `prev_cores`
+    /// (the grant held entering the epoch) would incur. The default
+    /// ignores `prev_cores` and returns [`GainModel::gain`] unchanged —
+    /// oracles that never price transitions are bit-for-bit unaffected.
+    /// The coordinator's `JobGain` overrides this with a per-epoch
+    /// checkpoint-rewind penalty (see the module docs for why the lazy
+    /// heap searches stay valid under the non-concave step).
+    fn net_gain(&self, prev_cores: u32, cores: u32) -> f64 {
+        let _ = prev_cores;
+        self.gain(cores)
+    }
 }
 
 impl<F: Fn(u32) -> f64> GainModel for F {
@@ -138,6 +178,11 @@ pub struct JobRequest<'a> {
     /// Maximum cores the job can exploit (e.g. its number of data
     /// partitions). The allocator never exceeds this.
     pub max_cores: u32,
+    /// Cores the job holds entering this epoch (0 for arrivals): the
+    /// reference point for transition pricing via
+    /// [`GainModel::net_gain`]. Policies that ignore gains ignore this
+    /// too.
+    pub prev_cores: u32,
     /// Predicted-gain oracle for this job.
     pub gain: &'a dyn GainModel,
 }
@@ -363,11 +408,13 @@ impl DecisionStats {
 }
 
 /// Materialized gain table: every request's predicted-quality-gain curve
-/// evaluated once per epoch into a flat, contiguous structure-of-arrays
-/// arena — one `f64` row per job, indexed by core count up to the job's
-/// cap — so the allocator's innermost loops (the warm-start exchange
-/// repair and the from-scratch CELF heap) do O(1) array lookups instead
-/// of repeated predictor/curve evaluations through a virtual oracle.
+/// — transition-priced via [`GainModel::net_gain`] against the request's
+/// prior grant — evaluated once per epoch into a flat, contiguous
+/// structure-of-arrays arena — one `f64` row per job, indexed by core
+/// count up to the job's cap — so the allocator's innermost loops (the
+/// warm-start exchange repair and the from-scratch CELF heap) do O(1)
+/// array lookups instead of repeated predictor/curve evaluations through
+/// a virtual oracle.
 ///
 /// Layout: row `i` (request order) occupies
 /// `values[offsets[i] .. offsets[i + 1]]`, entry `k` holding the gain at
@@ -385,8 +432,8 @@ impl DecisionStats {
 ///
 /// let g = |cores: u32| (cores as f64).sqrt();
 /// let requests = vec![
-///     JobRequest { id: 7, max_cores: 3, gain: &g },
-///     JobRequest { id: 9, max_cores: 2, gain: &g },
+///     JobRequest { id: 7, max_cores: 3, prev_cores: 0, gain: &g },
+///     JobRequest { id: 9, max_cores: 2, prev_cores: 0, gain: &g },
 /// ];
 /// let mut table = GainTable::new();
 /// table.build(&requests);
@@ -405,6 +452,11 @@ pub struct GainTable {
     /// so a ready table can never be misread against a different request
     /// vector that happens to have the same length.
     ids: Vec<u64>,
+    /// Prior grant per row at layout time. Materialized values are *net*
+    /// gains relative to this reference point, so [`GainTable::matches`]
+    /// must reject a request vector whose `prev_cores` drifted — the
+    /// same ids with different prior grants price to different surfaces.
+    prevs: Vec<u32>,
     /// True once every row holds this epoch's values.
     ready: bool,
 }
@@ -446,19 +498,21 @@ impl GainTable {
         self.ready = false;
     }
 
-    /// Lay out one row per `(job id, cap)` pair (in request order),
-    /// reusing the arena allocation. The table is not ready until the
-    /// rows are filled and [`GainTable::mark_ready`] is called.
-    pub fn reset(&mut self, jobs: impl IntoIterator<Item = (u64, u32)>) {
+    /// Lay out one row per `(job id, cap, prev grant)` triple (in request
+    /// order), reusing the arena allocation. The table is not ready until
+    /// the rows are filled and [`GainTable::mark_ready`] is called.
+    pub fn reset(&mut self, jobs: impl IntoIterator<Item = (u64, u32, u32)>) {
         self.ready = false;
         self.offsets.clear();
         self.offsets.push(0);
         self.ids.clear();
+        self.prevs.clear();
         let mut total = 0usize;
-        for (id, cap) in jobs {
+        for (id, cap, prev) in jobs {
             total += cap as usize;
             self.offsets.push(total);
             self.ids.push(id);
+            self.prevs.push(prev);
         }
         self.values.clear();
         self.values.resize(total, 0.0);
@@ -470,22 +524,26 @@ impl GainTable {
     }
 
     /// True when this table is a ready snapshot for exactly this request
-    /// vector: same length, same job ids row for row, and every row at
-    /// least as long as the request's cap. This is the staleness guard a
-    /// policy must check before trusting lookups — a row count alone
-    /// would let a table built for a different, equal-length request set
-    /// be silently misread.
+    /// vector: same length, same job ids and prior grants row for row,
+    /// and every row at least as long as the request's cap. This is the
+    /// staleness guard a policy must check before trusting lookups — a
+    /// row count alone would let a table built for a different,
+    /// equal-length request set be silently misread, and since rows hold
+    /// *net* gains the prior grant is part of the identity too.
     pub fn matches(&self, requests: &[JobRequest<'_>]) -> bool {
         self.ready
             && self.ids.len() == requests.len()
-            && requests
-                .iter()
-                .enumerate()
-                .all(|(i, r)| self.ids[i] == r.id && self.row_len(i) >= r.max_cores as usize)
+            && requests.iter().enumerate().all(|(i, r)| {
+                self.ids[i] == r.id
+                    && self.prevs[i] == r.prev_cores
+                    && self.row_len(i) >= r.max_cores as usize
+            })
     }
 
-    /// O(1) lookup: the gain of request `row` at `cores` cores. Panics on
-    /// a lookup beyond the row's cap — reading a neighboring job's row
+    /// O(1) lookup: the net gain of request `row` at `cores` cores
+    /// (relative to the prior grant the row was laid out with — the
+    /// plain gain when no transition penalty applies). Panics on a
+    /// lookup beyond the row's cap — reading a neighboring job's row
     /// must never succeed silently.
     #[inline]
     pub fn gain(&self, row: usize, cores: u32) -> f64 {
@@ -541,14 +599,14 @@ impl GainTable {
     /// `requests[i].max_cores`). The parallel epoch pipeline performs the
     /// same fill sharded across workers via [`GainTable::shards_mut`].
     pub fn build(&mut self, requests: &[JobRequest<'_>]) {
-        self.reset(requests.iter().map(|r| (r.id, r.max_cores)));
+        self.reset(requests.iter().map(|r| (r.id, r.max_cores, r.prev_cores)));
         let rows = self.offsets.len().saturating_sub(1);
         let offsets = &self.offsets;
         Self::fill_shard(
             0..rows,
             &mut self.values,
             |r| offsets[r + 1] - offsets[r],
-            |r, c| requests[r].gain.gain(c),
+            |r, c| requests[r].gain.net_gain(requests[r].prev_cores, c),
         );
         self.ready = true;
     }
@@ -604,8 +662,8 @@ impl GainTable {
 ///
 /// let gain = |cores: u32| cores as f64;
 /// let requests = vec![
-///     JobRequest { id: 3, max_cores: 4, gain: &gain },
-///     JobRequest { id: 5, max_cores: 4, gain: &gain },
+///     JobRequest { id: 3, max_cores: 4, prev_cores: 0, gain: &gain },
+///     JobRequest { id: 5, max_cores: 4, prev_cores: 0, gain: &gain },
 /// ];
 /// let mut ctx = SchedContext::new();
 /// ctx.record(&requests, &Allocation { cores: vec![3, 1] });
@@ -766,8 +824,8 @@ pub trait Policy: Send {
     /// let fast = |cores: u32| 2.0 * (1.0 - 1.0 / (1.0 + 0.5 * cores as f64));
     /// let slow = |cores: u32| 0.5 * (1.0 - 1.0 / (1.0 + 0.5 * cores as f64));
     /// let requests = vec![
-    ///     JobRequest { id: 7, max_cores: 8, gain: &fast },
-    ///     JobRequest { id: 9, max_cores: 8, gain: &slow },
+    ///     JobRequest { id: 7, max_cores: 8, prev_cores: 0, gain: &fast },
+    ///     JobRequest { id: 9, max_cores: 8, prev_cores: 0, gain: &slow },
     /// ];
     ///
     /// let mut policy = SlaqPolicy::new();
@@ -869,6 +927,29 @@ pub(crate) mod test_support {
         }
     }
 
+    /// [`ConcaveGain`] with a flat restart penalty charged on any grant
+    /// below the prior one — the same branch shape as the coordinator's
+    /// `JobGain`, for driving the transition-priced (non-concave) net
+    /// view through policy properties.
+    pub struct PenalizedGain {
+        pub inner: ConcaveGain,
+        pub penalty: f64,
+    }
+
+    impl GainModel for PenalizedGain {
+        fn gain(&self, cores: u32) -> f64 {
+            self.inner.gain(cores)
+        }
+
+        fn net_gain(&self, prev_cores: u32, cores: u32) -> f64 {
+            let g = self.gain(cores);
+            if self.penalty == 0.0 || prev_cores == 0 || cores == 0 || cores >= prev_cores {
+                return g;
+            }
+            g - self.penalty
+        }
+    }
+
     /// Check the three allocation invariants shared by all policies.
     pub fn check_invariants(reqs: &[JobRequest<'_>], capacity: u32, alloc: &Allocation) {
         assert_eq!(alloc.cores.len(), reqs.len());
@@ -928,8 +1009,8 @@ mod tests {
         assert_eq!(ctx.epoch(), 0);
         let g = |_: u32| 0.0;
         let reqs = vec![
-            JobRequest { id: 7, max_cores: 4, gain: &g },
-            JobRequest { id: 9, max_cores: 4, gain: &g },
+            JobRequest { id: 7, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 9, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         ctx.record(&reqs, &Allocation { cores: vec![3, 1] });
         assert_eq!(ctx.epoch(), 1);
@@ -940,7 +1021,7 @@ mod tests {
         ctx.forget(7);
         assert_eq!(ctx.prev_grant(7), None);
         // Re-recording replaces the whole grant set.
-        let reqs2 = vec![JobRequest { id: 11, max_cores: 4, gain: &g }];
+        let reqs2 = vec![JobRequest { id: 11, max_cores: 4, prev_cores: 0, gain: &g }];
         ctx.record(&reqs2, &Allocation { cores: vec![2] });
         assert_eq!(ctx.len(), 1);
         assert_eq!(ctx.prev_grant(9), None);
@@ -1062,9 +1143,9 @@ mod tests {
     fn gain_table_layout_and_lookup() {
         let g = |cores: u32| cores as f64 * 1.5;
         let reqs = vec![
-            JobRequest { id: 0, max_cores: 3, gain: &g },
-            JobRequest { id: 1, max_cores: 0, gain: &g },
-            JobRequest { id: 2, max_cores: 2, gain: &g },
+            JobRequest { id: 0, max_cores: 3, prev_cores: 0, gain: &g },
+            JobRequest { id: 1, max_cores: 0, prev_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 2, prev_cores: 0, gain: &g },
         ];
         let mut t = GainTable::new();
         assert!(t.is_empty());
@@ -1091,7 +1172,7 @@ mod tests {
         let reqs: Vec<JobRequest<'_>> = caps
             .iter()
             .enumerate()
-            .map(|(i, &c)| JobRequest { id: i as u64, max_cores: c, gain: &g })
+            .map(|(i, &c)| JobRequest { id: i as u64, max_cores: c, prev_cores: 0, gain: &g })
             .collect();
         // Reference: the serial build.
         let mut serial = GainTable::new();
@@ -1099,7 +1180,7 @@ mod tests {
 
         for shards in [1usize, 2, 3, 16] {
             let mut t = GainTable::new();
-            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c)));
+            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c, 0)));
             let pieces = t.shards_mut(shards);
             assert!(pieces.len() <= shards.max(1));
             // The ranges must partition the rows in order, and each slice
@@ -1133,7 +1214,7 @@ mod tests {
         // the balanced chunk target.
         let check = |caps: &[u32], shards: usize| {
             let mut t = GainTable::new();
-            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c)));
+            t.reset(caps.iter().enumerate().map(|(i, &c)| (i as u64, c, 0)));
             let pieces = t.shards_mut(shards);
             if caps.is_empty() {
                 assert!(pieces.is_empty(), "0 rows must yield 0 shards");
@@ -1170,22 +1251,22 @@ mod tests {
     fn gain_table_identity_stamp_rejects_mismatched_requests() {
         let g = |cores: u32| cores as f64;
         let reqs = vec![
-            JobRequest { id: 1, max_cores: 3, gain: &g },
-            JobRequest { id: 2, max_cores: 2, gain: &g },
+            JobRequest { id: 1, max_cores: 3, prev_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 2, prev_cores: 0, gain: &g },
         ];
         let mut t = GainTable::new();
         t.build(&reqs);
         assert!(t.matches(&reqs));
         // Same length, different id: rejected.
         let swapped = vec![
-            JobRequest { id: 1, max_cores: 3, gain: &g },
-            JobRequest { id: 7, max_cores: 2, gain: &g },
+            JobRequest { id: 1, max_cores: 3, prev_cores: 0, gain: &g },
+            JobRequest { id: 7, max_cores: 2, prev_cores: 0, gain: &g },
         ];
         assert!(!t.matches(&swapped), "equal-length id mismatch must be rejected");
         // Same ids but a grown cap: the row cannot cover every lookup.
         let grown = vec![
-            JobRequest { id: 1, max_cores: 4, gain: &g },
-            JobRequest { id: 2, max_cores: 2, gain: &g },
+            JobRequest { id: 1, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 2, prev_cores: 0, gain: &g },
         ];
         assert!(!t.matches(&grown), "a row shorter than the cap must be rejected");
         // Different length: rejected.
@@ -1200,8 +1281,8 @@ mod tests {
     fn gain_table_lookup_beyond_cap_panics() {
         let g = |cores: u32| cores as f64;
         let reqs = vec![
-            JobRequest { id: 0, max_cores: 2, gain: &g },
-            JobRequest { id: 1, max_cores: 2, gain: &g },
+            JobRequest { id: 0, max_cores: 2, prev_cores: 0, gain: &g },
+            JobRequest { id: 1, max_cores: 2, prev_cores: 0, gain: &g },
         ];
         let mut t = GainTable::new();
         t.build(&reqs);
@@ -1213,7 +1294,7 @@ mod tests {
     #[test]
     fn context_gain_table_lifecycle() {
         let g = |cores: u32| cores as f64;
-        let reqs = vec![JobRequest { id: 3, max_cores: 4, gain: &g }];
+        let reqs = vec![JobRequest { id: 3, max_cores: 4, prev_cores: 0, gain: &g }];
         let mut ctx = SchedContext::new();
         assert!(ctx.gain_table().is_none(), "no table before the driver builds one");
         ctx.gain_table_mut().build(&reqs);
@@ -1228,7 +1309,7 @@ mod tests {
     #[test]
     fn default_allocate_ctx_ignores_context() {
         let g = |a: u32| a as f64;
-        let reqs = vec![JobRequest { id: 0, max_cores: 8, gain: &g }];
+        let reqs = vec![JobRequest { id: 0, max_cores: 8, prev_cores: 0, gain: &g }];
         let ctx = SchedContext::from_grants([(0, 5)]);
         let mut p = FairPolicy::new();
         let a = p.allocate_ctx(&ctx, &reqs, 3);

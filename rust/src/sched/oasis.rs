@@ -254,7 +254,12 @@ impl Policy for OasisPolicy {
 
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
         let mut out = Allocation::default();
-        self.allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity, &mut out.cores);
+        self.allocate_with(
+            requests,
+            |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
+            capacity,
+            &mut out.cores,
+        );
         out
     }
 
@@ -284,7 +289,7 @@ impl Policy for OasisPolicy {
         } else {
             self.allocate_with(
                 requests,
-                |i, c| requests[i].gain.gain(c),
+                |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
                 capacity,
                 &mut out.cores,
             )
@@ -306,7 +311,7 @@ mod tests {
         gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect()
     }
 
@@ -315,7 +320,7 @@ mod tests {
         let mut p = OasisPolicy::new();
         assert_eq!(p.allocate(&[], 10).cores.len(), 0);
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
-        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        let r = [JobRequest { id: 0, max_cores: 4, prev_cores: 0, gain: &g }];
         assert_eq!(p.allocate(&r, 0).total(), 0);
         assert_eq!(p.price(), 0.0, "no demand observed yet");
     }
@@ -353,8 +358,8 @@ mod tests {
         let lo = ConcaveGain { scale: 0.1, rate: 0.5 };
         let hi = ConcaveGain { scale: 10.0, rate: 0.5 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 16, gain: &lo },
-            JobRequest { id: 1, max_cores: 16, gain: &hi },
+            JobRequest { id: 0, max_cores: 16, prev_cores: 0, gain: &lo },
+            JobRequest { id: 1, max_cores: 16, prev_cores: 0, gain: &hi },
         ];
         let mut p = OasisPolicy::new();
         let a = p.allocate(&rs, 8);
@@ -406,7 +411,7 @@ mod tests {
         let rs: Vec<JobRequest<'_>> = gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: 8, gain: *g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: 8, prev_cores: 0, gain: *g })
             .collect();
         let mut p = OasisPolicy::new();
         let mut last = Allocation::default();

@@ -11,7 +11,7 @@
 //!   through [`GainTable`] rows are *bitwise* identical to allocations
 //!   read through the oracles the rows were evaluated from.
 
-use super::test_support::{check_invariants, check_work_conserving, ConcaveGain};
+use super::test_support::{check_invariants, check_work_conserving, ConcaveGain, PenalizedGain};
 use super::*;
 use crate::testkit::{forall, Gen};
 
@@ -25,7 +25,7 @@ fn build<'a>(gains: &'a [ConcaveGain], caps: &[u32]) -> Vec<JobRequest<'a>> {
     gains
         .iter()
         .enumerate()
-        .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], gain: gm })
+        .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: gm })
         .collect()
 }
 
@@ -50,6 +50,35 @@ fn all_policies_uphold_invariants() {
             let mut p = policy_by_name(name).unwrap();
             let a = p.allocate(&reqs, capacity);
             check_invariants(&reqs, capacity, &a);
+        }
+
+        // Transition-priced variant: nonzero prior grants and restart
+        // penalties turn the per-job curve non-concave (a downward step
+        // below `prev_cores`). The safety invariants are unconditional
+        // on the net view too — whatever the penalty steers a policy
+        // toward, it can never overcommit capacity or a job's cap.
+        let priced: Vec<PenalizedGain> = (0..n)
+            .map(|_| PenalizedGain {
+                inner: ConcaveGain { scale: g.f64_in(0.0, 8.0), rate: g.f64_in(0.02, 1.0) },
+                penalty: g.f64_in(0.0, 4.0),
+            })
+            .collect();
+        let priced_reqs: Vec<JobRequest<'_>> = priced
+            .iter()
+            .enumerate()
+            .map(|(i, gm)| JobRequest {
+                id: i as u64,
+                max_cores: caps[i],
+                prev_cores: g.usize_in(0, 17) as u32,
+                gain: gm,
+            })
+            .collect();
+        for name in
+            ["slaq", "slaq-det", "fair", "fifo", "static", "oasis", "shockwave", "learned"]
+        {
+            let mut p = policy_by_name(name).unwrap();
+            let a = p.allocate(&priced_reqs, capacity);
+            check_invariants(&priced_reqs, capacity, &a);
         }
     });
 }
@@ -179,7 +208,12 @@ fn warm_start_equivalence_survives_sequences_of_epochs() {
             let reqs: Vec<JobRequest<'_>> = gains
                 .iter()
                 .enumerate()
-                .map(|(i, gm)| JobRequest { id: ids[i], max_cores: caps[i], gain: gm })
+                .map(|(i, gm)| JobRequest {
+                    id: ids[i],
+                    max_cores: caps[i],
+                    prev_cores: 0,
+                    gain: gm,
+                })
                 .collect();
             let aw = warm.allocate_ctx(&ctx, &reqs, capacity);
             check_invariants(&reqs, capacity, &aw);

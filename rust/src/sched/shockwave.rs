@@ -199,7 +199,12 @@ impl Policy for ShockwavePolicy {
 
     fn allocate(&mut self, requests: &[JobRequest<'_>], capacity: u32) -> Allocation {
         let mut out = Allocation::default();
-        self.allocate_with(requests, |i, c| requests[i].gain.gain(c), capacity, &mut out.cores);
+        self.allocate_with(
+            requests,
+            |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
+            capacity,
+            &mut out.cores,
+        );
         out
     }
 
@@ -228,7 +233,7 @@ impl Policy for ShockwavePolicy {
         } else {
             self.allocate_with(
                 requests,
-                |i, c| requests[i].gain.gain(c),
+                |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
                 capacity,
                 &mut out.cores,
             )
@@ -250,7 +255,7 @@ mod tests {
         gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect()
     }
 
@@ -259,7 +264,7 @@ mod tests {
         let mut p = ShockwavePolicy::new();
         assert_eq!(p.allocate(&[], 10).cores.len(), 0);
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
-        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        let r = [JobRequest { id: 0, max_cores: 4, prev_cores: 0, gain: &g }];
         assert_eq!(p.allocate(&r, 0).total(), 0);
         // Zero-capacity epochs still track the active set.
         assert_eq!(p.tracked_jobs(), 1);
@@ -290,7 +295,7 @@ mod tests {
     fn lagging_arrival_gets_the_bulk_of_the_cores() {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         // Epoch 1: only job 0 runs and banks progress.
-        let solo = vec![JobRequest { id: 0, max_cores: 8, gain: &g }];
+        let solo = vec![JobRequest { id: 0, max_cores: 8, prev_cores: 0, gain: &g }];
         let mut p = ShockwavePolicy::new();
         let a = p.allocate(&solo, 8);
         assert_eq!(a.cores, vec![8]);
@@ -298,8 +303,8 @@ mod tests {
         // Epoch 2: job 1 arrives with an empty account — the water-fill
         // must pour the spare cores into the laggard.
         let both = vec![
-            JobRequest { id: 0, max_cores: 8, gain: &g },
-            JobRequest { id: 1, max_cores: 8, gain: &g },
+            JobRequest { id: 0, max_cores: 8, prev_cores: 0, gain: &g },
+            JobRequest { id: 1, max_cores: 8, prev_cores: 0, gain: &g },
         ];
         let b = p.allocate(&both, 8);
         check_work_conserving(&both, 8, &b);
@@ -311,8 +316,8 @@ mod tests {
         let g0 = ConcaveGain { scale: 2.0, rate: 0.4 };
         let g1 = ConcaveGain { scale: 2.0, rate: 0.4 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 16, gain: &g0 },
-            JobRequest { id: 1, max_cores: 16, gain: &g1 },
+            JobRequest { id: 0, max_cores: 16, prev_cores: 0, gain: &g0 },
+            JobRequest { id: 1, max_cores: 16, prev_cores: 0, gain: &g1 },
         ];
         let mut p = ShockwavePolicy::new();
         let a = p.allocate(&rs, 8);
@@ -324,7 +329,7 @@ mod tests {
     fn scarce_floor_goes_to_the_furthest_behind() {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         let rs: Vec<JobRequest<'_>> =
-            (0..4).map(|i| JobRequest { id: i as u64, max_cores: 4, gain: &g }).collect();
+            (0..4).map(|i| JobRequest { id: i as u64, max_cores: 4, prev_cores: 0, gain: &g }).collect();
         let mut p = ShockwavePolicy::new();
         // Several full epochs bank progress for everyone...
         for _ in 0..2 {
@@ -335,7 +340,7 @@ mod tests {
         // epoch (2 cores, 5 jobs): it must be among the floored.
         let mut with_new: Vec<JobRequest<'_>> = rs;
         let g9 = ConcaveGain { scale: 1.0, rate: 0.5 };
-        with_new.push(JobRequest { id: 9, max_cores: 4, gain: &g9 });
+        with_new.push(JobRequest { id: 9, max_cores: 4, prev_cores: 0, gain: &g9 });
         let a = p.allocate(&with_new, 2);
         assert_eq!(a.total(), 2);
         assert_eq!(a.cores[4], 1, "fresh laggard must be floored: {:?}", a.cores);
@@ -349,8 +354,8 @@ mod tests {
         let fast = ConcaveGain { scale: 4.0, rate: 0.5 };
         let slow = ConcaveGain { scale: 1.0, rate: 0.5 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 24, gain: &fast },
-            JobRequest { id: 1, max_cores: 24, gain: &slow },
+            JobRequest { id: 0, max_cores: 24, prev_cores: 0, gain: &fast },
+            JobRequest { id: 1, max_cores: 24, prev_cores: 0, gain: &slow },
         ];
         let mut p = ShockwavePolicy::new();
         for _ in 0..12 {
@@ -370,15 +375,15 @@ mod tests {
     fn departed_jobs_are_pruned_from_the_ledger() {
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
         let ab = vec![
-            JobRequest { id: 1, max_cores: 4, gain: &g },
-            JobRequest { id: 2, max_cores: 4, gain: &g },
+            JobRequest { id: 1, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 2, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         let mut p = ShockwavePolicy::new();
         let _ = p.allocate(&ab, 8);
         assert_eq!(p.tracked_jobs(), 2);
         let bc = vec![
-            JobRequest { id: 2, max_cores: 4, gain: &g },
-            JobRequest { id: 3, max_cores: 4, gain: &g },
+            JobRequest { id: 2, max_cores: 4, prev_cores: 0, gain: &g },
+            JobRequest { id: 3, max_cores: 4, prev_cores: 0, gain: &g },
         ];
         let _ = p.allocate(&bc, 8);
         assert_eq!(p.tracked_jobs(), 2);

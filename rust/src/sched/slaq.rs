@@ -572,7 +572,7 @@ impl Policy for SlaqPolicy {
         let mut out = Allocation::default();
         self.scratch_allocate_with(
             requests,
-            |i, c| requests[i].gain.gain(c),
+            |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
             capacity,
             &mut out.cores,
         );
@@ -608,7 +608,7 @@ impl Policy for SlaqPolicy {
             self.allocate_ctx_with(
                 ctx,
                 requests,
-                |i, c| requests[i].gain.gain(c),
+                |i, c| requests[i].gain.net_gain(requests[i].prev_cores, c),
                 capacity,
                 &mut out.cores,
             )
@@ -634,7 +634,7 @@ mod tests {
         gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: g })
             .collect()
     }
 
@@ -673,7 +673,7 @@ mod tests {
         let mut p = SlaqPolicy::new();
         assert_eq!(p.allocate(&[], 10).cores.len(), 0);
         let g = ConcaveGain { scale: 1.0, rate: 0.5 };
-        let r = [JobRequest { id: 0, max_cores: 4, gain: &g }];
+        let r = [JobRequest { id: 0, max_cores: 4, prev_cores: 0, gain: &g }];
         assert_eq!(p.allocate(&r, 0).total(), 0);
     }
 
@@ -697,9 +697,9 @@ mod tests {
         let lo = ConcaveGain { scale: 0.1, rate: 0.5 };
         let hi = ConcaveGain { scale: 10.0, rate: 0.5 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 4, gain: &lo },
-            JobRequest { id: 1, max_cores: 4, gain: &hi },
-            JobRequest { id: 2, max_cores: 4, gain: &lo },
+            JobRequest { id: 0, max_cores: 4, prev_cores: 0, gain: &lo },
+            JobRequest { id: 1, max_cores: 4, prev_cores: 0, gain: &hi },
+            JobRequest { id: 2, max_cores: 4, prev_cores: 0, gain: &lo },
         ];
         let mut p = SlaqPolicy::new();
         let a = p.allocate(&rs, 2); // can't give everyone a floor
@@ -714,8 +714,8 @@ mod tests {
         let lo = ConcaveGain { scale: 1.0, rate: 0.3 };
         let hi = ConcaveGain { scale: 10.0, rate: 0.3 };
         let rs = vec![
-            JobRequest { id: 0, max_cores: 64, gain: &lo },
-            JobRequest { id: 1, max_cores: 64, gain: &hi },
+            JobRequest { id: 0, max_cores: 64, prev_cores: 0, gain: &lo },
+            JobRequest { id: 1, max_cores: 64, prev_cores: 0, gain: &hi },
         ];
         let mut p = SlaqPolicy::new();
         let a = p.allocate(&rs, 32);
@@ -728,8 +728,8 @@ mod tests {
         let active = ConcaveGain { scale: 5.0, rate: 0.4 };
         let done = ConcaveGain { scale: 0.0, rate: 0.4 }; // no gain at all
         let rs = vec![
-            JobRequest { id: 0, max_cores: 32, gain: &active },
-            JobRequest { id: 1, max_cores: 32, gain: &done },
+            JobRequest { id: 0, max_cores: 32, prev_cores: 0, gain: &active },
+            JobRequest { id: 1, max_cores: 32, prev_cores: 0, gain: &done },
         ];
         let mut p = SlaqPolicy::new();
         let a = p.allocate(&rs, 16);
@@ -751,7 +751,7 @@ mod tests {
             let rs: Vec<JobRequest<'_>> = gains
                 .iter()
                 .enumerate()
-                .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], gain: gm })
+                .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: gm })
                 .collect();
             let cap_total: u32 = caps.iter().sum();
             let capacity = (n as u32).max(g.usize_in(n, (cap_total + 2) as usize) as u32);
@@ -787,7 +787,7 @@ mod tests {
             let rs: Vec<JobRequest<'_>> = gains
                 .iter()
                 .enumerate()
-                .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], gain: gm })
+                .map(|(i, gm)| JobRequest { id: i as u64, max_cores: caps[i], prev_cores: 0, gain: gm })
                 .collect();
             let capacity = g.usize_in(0, 80) as u32;
             let mut p = SlaqPolicy::new();
@@ -867,7 +867,7 @@ mod tests {
         let old_rs: Vec<JobRequest<'_>> = old_gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: i as u64, max_cores: old_caps[i], gain: g })
+            .map(|(i, g)| JobRequest { id: i as u64, max_cores: old_caps[i], prev_cores: 0, gain: g })
             .collect();
         let mut scratch = SlaqPolicy::new();
         let old_alloc = scratch.allocate(&old_rs, 200);
@@ -880,7 +880,7 @@ mod tests {
         let new_rs: Vec<JobRequest<'_>> = new_gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: (i + 8) as u64, max_cores: 8, gain: g })
+            .map(|(i, g)| JobRequest { id: (i + 8) as u64, max_cores: 8, prev_cores: 0, gain: g })
             .collect();
 
         let mut warm = SlaqPolicy::new();
@@ -930,7 +930,7 @@ mod tests {
         let rs: Vec<JobRequest<'_>> = gains
             .iter()
             .enumerate()
-            .map(|(i, g)| JobRequest { id: (i + 1000) as u64, max_cores: 8, gain: g })
+            .map(|(i, g)| JobRequest { id: (i + 1000) as u64, max_cores: 8, prev_cores: 0, gain: g })
             .collect();
         // Context knows only ids 0..10 — zero overlap with ids 1000+.
         let ctx = SchedContext::from_grants((0..10).map(|i| (i, 4)));

@@ -21,7 +21,8 @@ use crate::sched::policy_by_name;
 /// Assert two traces are bitwise-identical up to wall-clock timing.
 ///
 /// Epochs compare `time`, `refits`, `dirty_jobs`, `active_jobs`,
-/// `cross_rack_moves` and every entry (`job`, `cores`, `loss` bits,
+/// `cross_rack_moves`, `voluntary_restarts` and every entry (`job`,
+/// `cores`, `loss` bits,
 /// `rack_span`); jobs (sorted by id — ledger iteration order is not
 /// deterministic) compare spec fields, activation/completion times, the
 /// rack-span high-water mark and the full loss-sample history.
@@ -35,6 +36,10 @@ pub fn assert_trace_eq(a: &Trace, b: &Trace, what: &str) {
         assert_eq!(
             ea.cross_rack_moves, eb.cross_rack_moves,
             "{what}: epoch {i} cross-rack moves"
+        );
+        assert_eq!(
+            ea.voluntary_restarts, eb.voluntary_restarts,
+            "{what}: epoch {i} voluntary restarts"
         );
         assert_eq!(ea.entries.len(), eb.entries.len(), "{what}: epoch {i} entries");
         for (xa, xb) in ea.entries.iter().zip(&eb.entries) {
@@ -128,6 +133,11 @@ pub struct CrashSuite {
     /// run, before the next one. Exercises Cancel records through WAL
     /// replay; cancels of already-finished jobs are deterministic no-ops.
     pub cancels: Vec<(usize, u64)>,
+    /// Decorate the workload with mid-training [`crate::coordinator::ElasticSpec`]
+    /// adaptation events ([`sim::attach_elastic_events`]) — pair with a
+    /// non-free `cfg.transition` to put voluntary restarts, rewinds and
+    /// the elastic applied-prefix counter under the kill grid.
+    pub elastic: bool,
     /// Workload seed.
     pub seed: u64,
     /// Label for temp dirs and assertion messages.
@@ -144,6 +154,7 @@ impl Default for CrashSuite {
             horizon: 16.0,
             epochs: 10,
             cancels: vec![(3, 2), (6, 5)],
+            elastic: false,
             seed: 0xC0FF_EE00,
             label: "crash",
         }
@@ -169,7 +180,10 @@ impl CrashSuite {
     /// against the uninterrupted reference.
     pub fn run(&self) {
         let mut g = Gen::from_seed(self.seed);
-        let templates = sim::random_churn_templates(&mut g, self.jobs, self.horizon);
+        let mut templates = sim::random_churn_templates(&mut g, self.jobs, self.horizon);
+        if self.elastic {
+            sim::attach_elastic_events(&mut g, &mut templates);
+        }
         let source_seed = g.u64();
 
         // Reference: plain in-memory run, no durability.
@@ -258,7 +272,7 @@ impl CrashSuite {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{ClusterSpec, TopologySpec};
+    use crate::cluster::{ClusterSpec, TopologySpec, TransitionModel};
     use crate::coordinator::wal;
 
     fn flat_cfg(threads: usize) -> CoordinatorConfig {
@@ -309,6 +323,39 @@ mod tests {
             cfg: sharded_cfg(4),
             jobs: 12,
             label: "shard8-t4",
+            ..Default::default()
+        }
+        .run();
+    }
+
+    #[test]
+    fn kill_and_recover_elastic_priced_transitions_flat() {
+        // The ISSUE acceptance bar: a mid-run kill of an elastic run
+        // under a non-free transition model recovers bitwise — the
+        // voluntary-restart counters, rewound checkpoints and the
+        // elastic applied-prefix all ride the WAL/snapshot path.
+        let mut cfg = flat_cfg(1);
+        cfg.transition = TransitionModel {
+            checkpoint_write_iters: 1.0,
+            restore_iters: 3,
+            warmup_iters_per_state_sec: 25.0,
+        };
+        CrashSuite { cfg, elastic: true, label: "elastic-t1", ..Default::default() }.run();
+    }
+
+    #[test]
+    fn kill_and_recover_elastic_priced_transitions_sharded() {
+        let mut cfg = sharded_cfg(4);
+        cfg.transition = TransitionModel {
+            checkpoint_write_iters: 1.0,
+            restore_iters: 3,
+            warmup_iters_per_state_sec: 25.0,
+        };
+        CrashSuite {
+            cfg,
+            jobs: 12,
+            elastic: true,
+            label: "elastic-shard8-t4",
             ..Default::default()
         }
         .run();

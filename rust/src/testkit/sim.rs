@@ -44,6 +44,7 @@ pub fn random_job(g: &mut Gen, id: u64, arrival: f64) -> JobTemplate {
         target_fraction: g.f64_in(0.9, 0.99),
         max_iterations: if short_lived { g.usize_in(3, 15) as u64 } else { 10_000 },
         target_hint: None,
+        elastic: Vec::new(),
     };
     JobTemplate { spec, curve, noise: 0.005 }
 }
@@ -57,6 +58,37 @@ pub fn random_churn_templates(g: &mut Gen, jobs: usize, horizon: f64) -> Vec<Job
             random_job(g, id as u64, arrival)
         })
         .collect()
+}
+
+/// Decorate a churn workload with mid-training adaptation: most jobs
+/// get an early cap-widening batch ramp (more cores wanted, more work
+/// per iteration) and/or a later shrink (the job caps itself below its
+/// partition count and hands cores back). Both shapes force the
+/// scheduler to reallocate — exactly the churn a non-free
+/// [`crate::cluster::TransitionModel`] prices.
+pub fn attach_elastic_events(g: &mut Gen, templates: &mut [JobTemplate]) {
+    use crate::coordinator::ElasticSpec;
+    for t in templates.iter_mut() {
+        let base = t.spec.max_cores;
+        let mut elastic = Vec::new();
+        if g.bool(0.8) {
+            let grow = g.f64_in(1.3, 2.0);
+            elastic.push(ElasticSpec {
+                at_iteration: g.usize_in(2, 9) as u64,
+                max_cores: ((base as f64 * grow) as u32).max(base + 1),
+                work_scale: g.f64_in(1.05, 1.5),
+            });
+        }
+        if g.bool(0.8) {
+            elastic.push(ElasticSpec {
+                at_iteration: g.usize_in(10, 31) as u64,
+                max_cores: ((base as f64 * g.f64_in(0.25, 0.6)) as u32).max(1),
+                work_scale: g.f64_in(0.8, 1.0),
+            });
+        }
+        elastic.sort_by_key(|e| e.at_iteration);
+        t.spec.elastic = elastic;
+    }
 }
 
 /// Submit every template with loss sources forked from one RNG seeded at

@@ -12,4 +12,4 @@ mod generator;
 mod zoo;
 
 pub use generator::{paper_trace, poisson_arrivals, scale_population, TraceConfig};
-pub use zoo::{sample_job, JobTemplate, SyntheticGain};
+pub use zoo::{sample_elastic_job, sample_job, JobTemplate, SyntheticGain};

@@ -6,7 +6,7 @@
 //! several orders of magnitude.
 
 use crate::cluster::CostModel;
-use crate::coordinator::{JobSpec, LossSource, SyntheticSource};
+use crate::coordinator::{ElasticSpec, JobSpec, LossSource, SyntheticSource};
 use crate::predictor::{CurveKind, CurveModel};
 use crate::sched::GainModel;
 use crate::util::rng::Rng;
@@ -80,8 +80,54 @@ pub fn sample_job(id: u64, arrival: f64, rng: &mut Rng) -> JobTemplate {
         target_fraction: rng.range_f64(0.993, 0.999),
         max_iterations: 100_000,
         target_hint: None,
+        elastic: Vec::new(),
     };
     JobTemplate { spec, curve, noise: 0.005 }
+}
+
+/// Sample a diversified job that additionally adapts mid-training: one
+/// or two scheduled [`ElasticSpec`] events, drawn from the two shapes
+/// practitioners actually run —
+///
+/// * a **batch-size ramp** early in training (wider core cap, each
+///   iteration does proportionally more work), and/or
+/// * a **late-phase shrink** once past the steep descent (the job caps
+///   itself well below its partition count and gives cores back).
+///
+/// Every event changes the job's effective demand, so under a non-free
+/// [`crate::cluster::TransitionModel`] these populations keep the
+/// scheduler paying (or pricing) reallocation churn — the `exp::elastic`
+/// scenario's workload.
+pub fn sample_elastic_job(id: u64, arrival: f64, rng: &mut Rng) -> JobTemplate {
+    let mut t = sample_job(id, arrival, rng);
+    let base = t.spec.max_cores;
+    let mut elastic = Vec::new();
+    if rng.bool(0.7) {
+        // Ramp within the first ~40 iterations: cap grows 1.25–2×,
+        // per-iteration work grows with it (same direction, smaller
+        // factor, so the ramp is still worth granting).
+        let at = rng.range_u64(8, 40);
+        let grow = rng.range_f64(1.25, 2.0);
+        elastic.push(ElasticSpec {
+            at_iteration: at,
+            max_cores: ((base as f64 * grow) as u32).max(base + 1),
+            work_scale: rng.range_f64(1.05, grow.max(1.1)),
+        });
+    }
+    if rng.bool(0.7) {
+        // Late-phase shrink: cap drops to 25–60% of the partition
+        // count, work per iteration eases off too.
+        let at = rng.range_u64(60, 160);
+        let shrink = rng.range_f64(0.25, 0.6);
+        elastic.push(ElasticSpec {
+            at_iteration: at,
+            max_cores: ((base as f64 * shrink) as u32).max(1),
+            work_scale: rng.range_f64(0.8, 1.0),
+        });
+    }
+    elastic.sort_by_key(|e| e.at_iteration);
+    t.spec.elastic = elastic;
+    t
 }
 
 /// A closed-form concave gain curve used by the Fig 6 scalability
@@ -137,6 +183,28 @@ mod tests {
         let min = starts.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = starts.iter().cloned().fold(0.0f64, f64::max);
         assert!(max / min > 50.0, "magnitude span {}", max / min);
+    }
+
+    #[test]
+    fn elastic_jobs_carry_sorted_in_bounds_events() {
+        let mut rng = Rng::new(9);
+        let mut with_events = 0usize;
+        for id in 0..300 {
+            let t = sample_elastic_job(id, 0.0, &mut rng);
+            assert!(t.spec.elastic.len() <= 2);
+            let mut prev_at = 0u64;
+            for e in &t.spec.elastic {
+                assert!(e.at_iteration >= prev_at, "events must be sorted");
+                prev_at = e.at_iteration;
+                assert!(e.max_cores >= 1);
+                assert!(e.work_scale > 0.0 && e.work_scale <= 2.0);
+            }
+            if !t.spec.elastic.is_empty() {
+                with_events += 1;
+            }
+        }
+        // P(no event) = 0.09, so nearly all jobs adapt at least once.
+        assert!(with_events > 240, "only {with_events}/300 elastic");
     }
 
     #[test]

@@ -9,9 +9,9 @@
 //! `UNMEASURED`), so a silent regression to a blank-but-plausible file
 //! fails CI. The same rule covers the bench families a measured
 //! snapshot must include: a run on the pinned machine emits the
-//! `tournament_*` quality entries and the `chaos_*` fault-injection
-//! counts alongside the latency sweeps, so a measured snapshot without
-//! them is stale.
+//! `tournament_*` quality entries, the `chaos_*` fault-injection
+//! counts and the `elastic_*` transition-pricing comparison alongside
+//! the latency sweeps, so a measured snapshot without them is stale.
 
 use std::path::Path;
 
@@ -111,6 +111,24 @@ fn measured_snapshots_carry_the_chaos_family() {
     assert!(
         doc.contains("\"name\":\"chaos_"),
         "{name} was measured (host = {host:?}) but carries no chaos_* \
+         entries; regenerate it with `cargo bench --bench sched_scalability` \
+         on the pinned machine"
+    );
+}
+
+#[test]
+fn measured_snapshots_carry_the_elastic_family() {
+    let (doc, name) = snapshot();
+    let host = string_field(&doc, "host").unwrap_or_default();
+    if host.starts_with("UNMEASURED") {
+        return;
+    }
+    // A measured run emits the elastic transition-pricing comparison
+    // unconditionally; a measured snapshot that lacks it predates
+    // checkpoint-aware reallocation pricing and must be regenerated.
+    assert!(
+        doc.contains("\"name\":\"elastic_"),
+        "{name} was measured (host = {host:?}) but carries no elastic_* \
          entries; regenerate it with `cargo bench --bench sched_scalability` \
          on the pinned machine"
     );

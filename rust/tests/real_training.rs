@@ -126,6 +126,7 @@ fn slaq_coordinator_schedules_real_jobs_end_to_end() {
                 target_fraction: 0.95,
                 max_iterations: 120,
                 target_hint: None,
+                elastic: Vec::new(),
             },
             Box::new(ExecSource::new(sess)),
         );
